@@ -1,0 +1,53 @@
+//! NBody simulation: multi-step integration driving the same kernel the
+//! suite benchmarks, showing repeated enqueues hitting the §4.1
+//! specialisation cache, with energy tracking.
+
+use std::sync::Arc;
+
+use poclrs::cl::{CommandQueue, Context, Kernel, KernelArg, Platform, Program};
+use poclrs::suite::apps::nbody;
+use poclrs::suite::{BufInit, SizeClass};
+
+fn main() -> anyhow::Result<()> {
+    let app = nbody::build(SizeClass::Small);
+    let n = 64usize;
+    let platform = Platform::default_platform();
+    let ctx = Arc::new(Context::new(platform.device("pthread-gang(8)").unwrap()));
+    let mut queue = CommandQueue::new(ctx.clone());
+    let program = Program::build(app.source)?;
+
+    let BufInit::F32(pos0) = &app.buffers[0] else { unreachable!() };
+    let pos = ctx.create_buffer(n * 16)?;
+    let newpos = ctx.create_buffer(n * 16)?;
+    let vel = ctx.create_buffer(n * 16)?;
+    let newvel = ctx.create_buffer(n * 16)?;
+    ctx.write_f32(pos, pos0)?;
+    ctx.write_f32(vel, &vec![0.0; n * 4])?;
+
+    let steps = 20;
+    for step in 0..steps {
+        let (src_p, dst_p, src_v, dst_v) =
+            if step % 2 == 0 { (pos, newpos, vel, newvel) } else { (newpos, pos, newvel, vel) };
+        let mut k = Kernel::new(&program, "nbody")?;
+        k.set_arg(0, KernelArg::Buf(src_p))?;
+        k.set_arg(1, KernelArg::Buf(dst_p))?;
+        k.set_arg(2, KernelArg::Buf(src_v))?;
+        k.set_arg(3, KernelArg::Buf(dst_v))?;
+        k.set_arg(4, KernelArg::U32(n as u32))?;
+        k.set_arg(5, KernelArg::F32(0.005))?;
+        k.set_arg(6, KernelArg::F32(50.0))?;
+        queue.enqueue_nd_range(&program, &k, [n, 1, 1], [64, 1, 1])?;
+        if step % 5 == 4 {
+            let p = ctx.read_f32(dst_p, n * 4)?;
+            let com: f32 = p.chunks(4).map(|b| b[0]).sum::<f32>() / n as f32;
+            println!("step {:>3}: centre-of-mass x = {com:.4}", step + 1);
+        }
+    }
+    println!(
+        "{} enqueues, kernel compiled once (cache hits: {})",
+        steps,
+        *program.cache_hits.lock().unwrap()
+    );
+    assert_eq!(*program.cache_misses.lock().unwrap(), 1);
+    Ok(())
+}

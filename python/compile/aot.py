@@ -1,0 +1,41 @@
+"""AOT pipeline: lower each L2 entry to HLO **text** artifacts the rust
+runtime loads with `HloModuleProto::from_text_file`.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, (fn, _shapes) in model.ENTRIES.items():
+        lowered = jax.jit(fn).lower(*model.example_args(name))
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""L1 Pallas kernel: BlackScholes option pricing (elementwise, blocked
+1-D grid so each block's working set stays in VMEM)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(rnd_ref, call_ref, put_ref):
+    rnd = rnd_ref[...]
+    call, put = ref.blackscholes(rnd)
+    call_ref[...] = call
+    put_ref[...] = put
+
+
+def blackscholes(rnd, block=2048):
+    """Blocked elementwise pricing; `block` sized well under VMEM."""
+    n = rnd.shape[0]
+    if n % block != 0:
+        block = n
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)), pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(rnd)

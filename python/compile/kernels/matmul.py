@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: tiled matmul.
+
+TPU notes (DESIGN.md §Hardware-Adaptation): the BlockSpec tiles map HBM->
+VMEM transfers; tiles are MXU-shaped (multiples of 8x128 would be used at
+real sizes -- the suite's 64x64 problem fits one VMEM tile outright, so a
+single-block kernel is the roofline-optimal schedule). interpret=True is
+mandatory on CPU (Mosaic custom-calls cannot run on the CPU plugin).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(a, b):
+    """Single-tile Pallas matmul (shapes must fit VMEM; fine <= 256x256)."""
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul_tiled(a, b, tile=32):
+    """Grid-tiled variant: (i, j) output tiles, full-K panels staged in
+    VMEM -- the schedule a real TPU deployment would use for larger n."""
+    n, k = a.shape
+    _, m = b.shape
+    assert n % tile == 0 and m % tile == 0
+
+    def kern(a_ref, b_ref, o_ref):
+        o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile, m // tile),
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: all-pairs NBody step.
+
+The O(n^2) interaction is tiled over target bodies: each grid step loads a
+block of "my" bodies plus the full source set (n=512 -> 8 KiB, trivially
+VMEM-resident; at larger n the source panel would be double-buffered)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(pos_blk_ref, vel_blk_ref, pos_all_ref, np_ref, nv_ref, *, dt, eps):
+    my = pos_blk_ref[...]
+    vel = vel_blk_ref[...]
+    allp = pos_all_ref[...]
+    p = my[:, :3]
+    r = allp[None, :, :3] - p[:, None, :]
+    dist_sqr = jnp.sum(r * r, axis=-1) + eps
+    inv = 1.0 / jnp.sqrt(dist_sqr)
+    s = allp[None, :, 3] * inv * inv * inv
+    acc = jnp.sum(s[:, :, None] * r, axis=1)
+    np_ref[...] = jnp.concatenate(
+        [p + vel[:, :3] * dt + acc * (0.5 * dt * dt), my[:, 3:4]], axis=1
+    )
+    nv_ref[...] = jnp.concatenate([vel[:, :3] + acc * dt, vel[:, 3:4]], axis=1)
+
+
+def nbody(pos, vel, dt=0.005, eps=50.0, block=128):
+    """One integration step; returns (new_pos, new_vel), both (n,4)."""
+    import functools
+
+    n = pos.shape[0]
+    if n % block != 0:
+        block = n
+    kern = functools.partial(_kernel, dt=dt, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            pl.BlockSpec((n, 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 4), jnp.float32),
+            jax.ShapeDtypeStruct((n, 4), jnp.float32),
+        ],
+        interpret=True,
+    )(pos, vel, pos)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference the
+pytest suite asserts against)."""
+
+import jax.numpy as jnp
+
+# Matches rust/src/suite/apps/blackscholes.rs (Abramowitz-Stegun CND).
+_C = (0.319381530, -0.356563782, 1.781477937, -1.821255978, 1.330274429)
+
+
+def phi(x):
+    zabs = jnp.abs(x)
+    k2 = 1.0 / (1.0 + 0.2316419 * zabs)
+    poly = k2 * (_C[0] + k2 * (_C[1] + k2 * (_C[2] + k2 * (_C[3] + k2 * _C[4]))))
+    pdf = 0.3989422804 * jnp.exp(-0.5 * zabs * zabs)
+    cnd = 1.0 - pdf * poly
+    return jnp.where(x < 0.0, 1.0 - cnd, cnd)
+
+
+def blackscholes(rnd):
+    """Call/put prices from uniform randoms, same parameterisation as the
+    MiniCL suite kernel."""
+    s = 10.0 + rnd * 90.0
+    k = 10.0 + rnd * 90.0
+    t = 1.0 + rnd * 9.0
+    r = 0.01
+    sigma = 0.10 + rnd * 0.4
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + sigma * sigma * 0.5) * t) / (sigma * sqrt_t)
+    d2 = d1 - sigma * sqrt_t
+    kexp = k * jnp.exp(-r * t)
+    call = s * phi(d1) - kexp * phi(d2)
+    put = kexp * phi(-d2) - s * phi(-d1)
+    return call, put
+
+
+def matmul(a, b):
+    """Plain f32 GEMM."""
+    return jnp.matmul(a, b)
+
+
+def nbody(pos, vel, dt=0.005, eps=50.0):
+    """All-pairs gravity step over (n,4) [x,y,z,mass] positions."""
+    p = pos[:, :3]
+    m = pos[:, 3]
+    r = p[None, :, :] - p[:, None, :]          # (n, n, 3)
+    dist_sqr = jnp.sum(r * r, axis=-1) + eps    # (n, n)
+    inv = 1.0 / jnp.sqrt(dist_sqr)
+    s = m[None, :] * inv * inv * inv            # (n, n)
+    acc = jnp.sum(s[:, :, None] * r, axis=1)    # (n, 3)
+    new_p3 = p + vel[:, :3] * dt + acc * (0.5 * dt * dt)
+    new_v3 = vel[:, :3] + acc * dt
+    new_pos = jnp.concatenate([new_p3, pos[:, 3:4]], axis=1)
+    new_vel = jnp.concatenate([new_v3, vel[:, 3:4]], axis=1)
+    return new_pos, new_vel

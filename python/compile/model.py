@@ -1,0 +1,51 @@
+"""L2: jax entry points the AOT pipeline lowers -- each wraps an L1 Pallas
+kernel with the exact shapes the rust pjrt device launches (the suite's
+Bench sizes)."""
+
+import jax.numpy as jnp
+
+from .kernels import blackscholes as bs
+from .kernels import matmul as mm
+from .kernels import nbody as nb
+
+# Shapes must stay in sync with rust/src/suite (SizeClass::Bench) and the
+# bindings in examples/pallas_offload.rs.
+MATMUL_N = 64
+BLACKSCHOLES_N = 1 << 14
+NBODY_N = 512
+
+
+def matmul_entry(a_flat, b_flat):
+    """C = A @ B over flat row-major f32 buffers (the device-buffer view)."""
+    a = a_flat.reshape(MATMUL_N, MATMUL_N)
+    b = b_flat.reshape(MATMUL_N, MATMUL_N)
+    return (mm.matmul(a, b).reshape(-1),)
+
+
+def blackscholes_entry(rnd):
+    call, put = bs.blackscholes(rnd)
+    return (call, put)
+
+
+def nbody_entry(pos_flat, vel_flat):
+    pos = pos_flat.reshape(NBODY_N, 4)
+    vel = vel_flat.reshape(NBODY_N, 4)
+    new_pos, new_vel = nb.nbody(pos, vel)
+    return (new_pos.reshape(-1), new_vel.reshape(-1))
+
+
+ENTRIES = {
+    "matmul": (
+        matmul_entry,
+        [(MATMUL_N * MATMUL_N,), (MATMUL_N * MATMUL_N,)],
+    ),
+    "blackscholes": (blackscholes_entry, [(BLACKSCHOLES_N,)]),
+    "nbody": (nbody_entry, [(NBODY_N * 4,), (NBODY_N * 4,)]),
+}
+
+
+def example_args(name):
+    _, shapes = ENTRIES[name]
+    import jax
+
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]

@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles -- the core L1 correctness signal.
+
+Hypothesis sweeps shapes/values; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blackscholes as bs
+from compile.kernels import matmul as mm
+from compile.kernels import nbody as nb
+from compile.kernels import ref
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32, 64]),
+    k=st.sampled_from([8, 16, 64]),
+    m=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(n, k, m, seed):
+    r = rng(seed)
+    a = r.standard_normal((n, k), dtype=np.float32)
+    b = r.standard_normal((k, m), dtype=np.float32)
+    got = np.asarray(mm.matmul(a, b))
+    want = np.asarray(ref.matmul(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 128]),
+    tile=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tiled_matches_ref(n, tile, seed):
+    if n % tile != 0:
+        pytest.skip("tile must divide n")
+    r = rng(seed)
+    a = r.standard_normal((n, n), dtype=np.float32)
+    b = r.standard_normal((n, n), dtype=np.float32)
+    got = np.asarray(mm.matmul_tiled(a, b, tile=tile))
+    # n=128 accumulations: XLA may reassociate the K-reduction, so the
+    # tolerance is one decade looser than the single-tile case.
+    np.testing.assert_allclose(got, np.asarray(ref.matmul(a, b)), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([256, 1024, 2048]), seed=st.integers(0, 2**31 - 1))
+def test_blackscholes_matches_ref(n, seed):
+    r = rng(seed)
+    rnd = r.random(n, dtype=np.float32)
+    call, put = bs.blackscholes(rnd)
+    rc, rp = ref.blackscholes(rnd)
+    np.testing.assert_allclose(np.asarray(call), np.asarray(rc), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(put), np.asarray(rp), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.sampled_from([64, 128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_nbody_matches_ref(n, seed):
+    r = rng(seed)
+    pos = r.random((n, 4), dtype=np.float32)
+    vel = np.zeros((n, 4), dtype=np.float32)
+    np_got, nv_got = nb.nbody(pos, vel)
+    np_want, nv_want = ref.nbody(pos, vel)
+    np.testing.assert_allclose(np.asarray(np_got), np.asarray(np_want), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(nv_got), np.asarray(nv_want), rtol=1e-4, atol=1e-5)
+
+
+def test_nbody_conserves_mass_column():
+    r = rng(0)
+    pos = r.random((128, 4), dtype=np.float32)
+    vel = r.random((128, 4), dtype=np.float32)
+    np_got, nv_got = nb.nbody(pos, vel)
+    np.testing.assert_array_equal(np.asarray(np_got)[:, 3], pos[:, 3])
+    np.testing.assert_array_equal(np.asarray(nv_got)[:, 3], vel[:, 3])

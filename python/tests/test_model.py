@@ -1,0 +1,33 @@
+"""L2 model entries: shapes, lowering, and AOT HLO-text generation."""
+
+import jax
+import numpy as np
+
+from compile import aot, model
+
+
+def test_entries_shapes():
+    for name, (fn, shapes) in model.ENTRIES.items():
+        args = [np.zeros(s, dtype=np.float32) for s in shapes]
+        out = fn(*args)
+        assert isinstance(out, tuple), name
+        for o in out:
+            assert o.dtype == np.float32
+
+
+def test_matmul_entry_matches_dense():
+    r = np.random.default_rng(1)
+    a = r.standard_normal(model.MATMUL_N * model.MATMUL_N).astype(np.float32)
+    b = r.standard_normal(model.MATMUL_N * model.MATMUL_N).astype(np.float32)
+    (c,) = model.matmul_entry(a, b)
+    want = (
+        a.reshape(model.MATMUL_N, -1) @ b.reshape(model.MATMUL_N, -1)
+    ).reshape(-1)
+    np.testing.assert_allclose(np.asarray(c), want, rtol=1e-4, atol=1e-4)
+
+
+def test_hlo_text_generation(tmp_path):
+    lowered = jax.jit(model.matmul_entry).lower(*model.example_args("matmul"))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(text) > 100

@@ -1,0 +1,23 @@
+//! Fig. 12 — Intel x86-64 suite comparison.
+//!
+//! Paper: pocl vs the AMD and Intel proprietary OpenCL implementations on
+//! a Core i7 (AVX2, 4 cores × 2 threads). Here: the handwritten-Rust
+//! native baseline is the vendor stand-in; pocl-rs runs with the gang
+//! engine at width 8 (AVX2 model) over all cores; `fiber` and `serial`
+//! show what the kernel compiler's static parallelisation buys
+//! (DESIGN.md §Substitutions explains the mapping).
+
+use std::sync::Arc;
+
+use poclrs::bench::figures::run_suite_figure;
+use poclrs::devices::{basic::BasicDevice, threaded::ThreadedDevice, Device, EngineKind};
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let configs: Vec<(&str, Arc<dyn Device>)> = vec![
+        ("pocl-gang8", Arc::new(ThreadedDevice::new(EngineKind::Gang(8), cores))),
+        ("pocl-serial", Arc::new(BasicDevice::new(EngineKind::Serial))),
+        ("fiber", Arc::new(BasicDevice::new(EngineKind::Fiber))),
+    ];
+    run_suite_figure("Fig. 12 analog: x86-64 (AVX2 model, gang x8)", &configs);
+}

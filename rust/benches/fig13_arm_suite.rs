@@ -1,0 +1,20 @@
+//! Fig. 13 — ARM Cortex-A9 suite comparison.
+//!
+//! Paper: pocl vs FreeOCL on a PandaBoard (2 cores, NEON). Here: gang
+//! width 4 (NEON model) over 2 worker threads vs the fiber engine — the
+//! same per-work-item-context architecture FreeOCL uses, on an identical
+//! substrate, so the pocl/fiber ratio is the controlled version of the
+//! paper's comparison.
+
+use std::sync::Arc;
+
+use poclrs::bench::figures::run_suite_figure;
+use poclrs::devices::{basic::BasicDevice, threaded::ThreadedDevice, Device, EngineKind};
+
+fn main() {
+    let configs: Vec<(&str, Arc<dyn Device>)> = vec![
+        ("pocl-gang4x2", Arc::new(ThreadedDevice::new(EngineKind::Gang(4), 2))),
+        ("freeocl-fiber", Arc::new(BasicDevice::new(EngineKind::Fiber))),
+    ];
+    run_suite_figure("Fig. 13 analog: ARM Cortex-A9 (NEON model, gang x4, 2 threads)", &configs);
+}

@@ -1,0 +1,19 @@
+//! Fig. 14 — STI Cell BE / PowerPC Processing Element comparison.
+//!
+//! Paper: pocl vs the IBM OpenCL Development Kit on a PS3's PPE (2
+//! hardware threads, AltiVec), CPU device only. Here: gang width 4
+//! (AltiVec model) over 2 threads vs serial and fiber configurations.
+
+use std::sync::Arc;
+
+use poclrs::bench::figures::run_suite_figure;
+use poclrs::devices::{basic::BasicDevice, threaded::ThreadedDevice, Device, EngineKind};
+
+fn main() {
+    let configs: Vec<(&str, Arc<dyn Device>)> = vec![
+        ("pocl-gang4x2", Arc::new(ThreadedDevice::new(EngineKind::Gang(4), 2))),
+        ("ibm-serial", Arc::new(BasicDevice::new(EngineKind::Serial))),
+        ("fiber", Arc::new(BasicDevice::new(EngineKind::Fiber))),
+    ];
+    run_suite_figure("Fig. 14 analog: Cell PPE (AltiVec model, gang x4, 2 threads)", &configs);
+}

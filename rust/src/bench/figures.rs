@@ -1,0 +1,49 @@
+//! Shared driver for the Fig. 12/13/14 suite comparisons: run every suite
+//! application on a set of device configurations, verify, and print the
+//! grouped rows (execution time, smaller is better — like the paper's
+//! bars).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::devices::Device;
+use crate::suite::{all_apps, runner, SizeClass};
+
+use super::{bench_fn, rows, BenchResult};
+
+/// Run the whole suite across `configs`; the native baseline is always
+/// measured and printed first (the proprietary-vendor stand-in).
+pub fn run_suite_figure(title: &str, configs: &[(&str, Arc<dyn Device>)]) {
+    println!("== {title} ==");
+    println!("(medians; first column is the baseline the ratios compare to)\n");
+    let budget = Duration::from_millis(
+        std::env::var("POCLRS_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(300),
+    );
+    for app in all_apps(SizeClass::Bench) {
+        // Correctness gate first: a mis-verifying config is reported, not
+        // silently timed.
+        let mut results: Vec<(&str, BenchResult)> = Vec::new();
+        let native = bench_fn(format!("{}/native", app.name), 1, 15, budget, || {
+            let _ = app.run_native();
+        });
+        results.push(("native", native));
+        let mut failed = Vec::new();
+        for (label, device) in configs {
+            match runner::run_and_verify(&app, device.clone()) {
+                Ok(_) => {
+                    let r = bench_fn(format!("{}/{label}", app.name), 1, 15, budget, || {
+                        let _ = runner::run_on_device(&app, device.clone()).unwrap();
+                    });
+                    results.push((label, r));
+                }
+                Err(e) => failed.push(format!("{label}: {e}")),
+            }
+        }
+        let refs: Vec<(&str, &BenchResult)> =
+            results.iter().map(|(l, r)| (*l, r)).collect();
+        rows::figure_row(app.name, &refs);
+        for f in failed {
+            println!("{:<22} FAILED {f}", app.name);
+        }
+    }
+}

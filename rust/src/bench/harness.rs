@@ -1,0 +1,56 @@
+//! Timing core: warm up, then sample until a time budget or sample count
+//! is reached; report median + median-absolute-deviation.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's statistics.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Median sample duration.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    /// Samples taken.
+    pub samples: usize,
+}
+
+impl BenchResult {
+    /// Milliseconds (median).
+    pub fn ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+/// Benchmark a closure: `warmup` runs, then sample up to `max_samples`
+/// or until `budget` elapses (at least 3 samples).
+pub fn bench_fn(
+    name: impl Into<String>,
+    warmup: usize,
+    max_samples: usize,
+    budget: Duration,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let started = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < max_samples
+        && (samples.len() < 3 || started.elapsed() < budget)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<Duration> = samples
+        .iter()
+        .map(|s| if *s > median { *s - median } else { median - *s })
+        .collect();
+    devs.sort();
+    let mad = devs[devs.len() / 2];
+    BenchResult { name: name.into(), median, mad, samples: samples.len() }
+}

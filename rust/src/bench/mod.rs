@@ -1,0 +1,9 @@
+//! Measurement harness (criterion is unavailable offline; this follows
+//! the same warmup + repeated-sampling + robust-statistics method).
+
+pub mod harness;
+pub mod rows;
+
+pub use harness::{bench_fn, BenchResult};
+
+pub mod figures;

@@ -1,0 +1,20 @@
+//! Row printers matching the paper's figures/tables.
+
+use super::BenchResult;
+
+/// Print a figure-style grouped bar row: one workload, several
+/// implementations (ms, lower is better), plus ratios vs the first.
+pub fn figure_row(workload: &str, results: &[(&str, &BenchResult)]) {
+    let base = results[0].1.ms();
+    let cells: Vec<String> = results
+        .iter()
+        .map(|(label, r)| format!("{label}={:.2}ms ({:.2}x)", r.ms(), r.ms() / base))
+        .collect();
+    println!("{workload:<22} {}", cells.join("  "));
+}
+
+/// Print a Table 3/4-style row: implementation, per-call cycles.
+pub fn cycles_row(ty: &str, width: usize, imp: &str, overhead: f64, cols: &[(&str, f64)]) {
+    let cells: Vec<String> = cols.iter().map(|(n, c)| format!("{n}={c:.1}")).collect();
+    println!("{ty:<7} x{width:<3} {imp:<10} overhead={overhead:<6.1} {}", cells.join("  "));
+}

@@ -1,0 +1,229 @@
+//! **Bufalloc** — the chunked device-buffer allocator of §3.
+//!
+//! A single region of memory (one host `malloc`, or a known range of an
+//! OS-less device's RAM) is split into *chunks* kept in a list ordered by
+//! start address, each with a free/allocated flag; the last chunk is a
+//! sentinel holding all unallocated space. Allocation walks the list
+//! first-fit and splits the found chunk; an optional **greedy** mode
+//! serves requests from the region's end (the sentinel) whenever
+//! possible, so successive kernel-buffer allocations land contiguously.
+//! Freeing coalesces with free neighbours.
+
+use crate::cl::error::{Error, Result};
+
+/// One chunk of the managed region.
+#[derive(Debug, Clone)]
+struct Chunk {
+    start: usize,
+    size: usize,
+    free: bool,
+}
+
+/// The §3 buffer allocator.
+#[derive(Debug)]
+pub struct Bufalloc {
+    chunks: Vec<Chunk>,
+    region_size: usize,
+    alignment: usize,
+    greedy: bool,
+}
+
+impl Bufalloc {
+    /// Manage `region_size` bytes with the given alignment (power of two).
+    pub fn new(region_size: usize, alignment: usize, greedy: bool) -> Bufalloc {
+        assert!(alignment.is_power_of_two());
+        Bufalloc {
+            chunks: vec![Chunk { start: 0, size: region_size, free: true }],
+            region_size,
+            alignment,
+            greedy,
+        }
+    }
+
+    fn align(&self, v: usize) -> usize {
+        (v + self.alignment - 1) & !(self.alignment - 1)
+    }
+
+    /// Allocate `size` bytes; returns the offset within the region.
+    pub fn alloc(&mut self, size: usize) -> Result<usize> {
+        if size == 0 {
+            return Err(Error::invalid("zero-sized allocation"));
+        }
+        let size = self.align(size);
+        // Greedy mode: serve from the last (sentinel) chunk if possible,
+        // so successive requests are contiguous at the region's end.
+        if self.greedy {
+            let last = self.chunks.len() - 1;
+            if self.chunks[last].free && self.chunks[last].size >= size {
+                return Ok(self.split(last, size));
+            }
+        }
+        // First fit.
+        let idx = self
+            .chunks
+            .iter()
+            .position(|c| c.free && c.size >= size)
+            .ok_or(Error::OutOfMemory { requested: size, available: self.largest_free() })?;
+        Ok(self.split(idx, size))
+    }
+
+    /// Split chunk `idx`, marking the first `size` bytes allocated.
+    fn split(&mut self, idx: usize, size: usize) -> usize {
+        let start = self.chunks[idx].start;
+        let rest = self.chunks[idx].size - size;
+        self.chunks[idx].size = size;
+        self.chunks[idx].free = false;
+        if rest > 0 {
+            self.chunks.insert(idx + 1, Chunk { start: start + size, size: rest, free: true });
+        }
+        start
+    }
+
+    /// Free the chunk starting at `offset`, coalescing neighbours.
+    pub fn free(&mut self, offset: usize) -> Result<()> {
+        let idx = self
+            .chunks
+            .iter()
+            .position(|c| c.start == offset && !c.free)
+            .ok_or_else(|| Error::invalid(format!("free of unallocated offset {offset}")))?;
+        self.chunks[idx].free = true;
+        // Coalesce with the next chunk.
+        if idx + 1 < self.chunks.len() && self.chunks[idx + 1].free {
+            self.chunks[idx].size += self.chunks[idx + 1].size;
+            self.chunks.remove(idx + 1);
+        }
+        // Coalesce with the previous chunk.
+        if idx > 0 && self.chunks[idx - 1].free {
+            self.chunks[idx - 1].size += self.chunks[idx].size;
+            self.chunks.remove(idx);
+        }
+        Ok(())
+    }
+
+    /// Total bytes currently allocated.
+    pub fn allocated(&self) -> usize {
+        self.chunks.iter().filter(|c| !c.free).map(|c| c.size).sum()
+    }
+
+    /// Largest free chunk (what the next alloc can serve).
+    pub fn largest_free(&self) -> usize {
+        self.chunks.iter().filter(|c| c.free).map(|c| c.size).max().unwrap_or(0)
+    }
+
+    /// Number of chunks (fragmentation indicator used by tests/benches).
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Managed region size.
+    pub fn region_size(&self) -> usize {
+        self.region_size
+    }
+
+    /// Internal invariant check (tests): chunks tile the region exactly,
+    /// ordered, non-overlapping, no two adjacent free chunks.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let mut pos = 0;
+        for (i, c) in self.chunks.iter().enumerate() {
+            if c.start != pos {
+                return Err(format!("chunk {i} starts at {} expected {pos}", c.start));
+            }
+            pos += c.size;
+            if i + 1 < self.chunks.len() && c.free && self.chunks[i + 1].free {
+                return Err(format!("adjacent free chunks at {i}"));
+            }
+        }
+        if pos != self.region_size {
+            return Err(format!("chunks cover {pos} of {} bytes", self.region_size));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut b = Bufalloc::new(1024, 16, false);
+        let a = b.alloc(100).unwrap();
+        let c = b.alloc(200).unwrap();
+        assert_ne!(a, c);
+        b.check_invariants().unwrap();
+        b.free(a).unwrap();
+        b.free(c).unwrap();
+        b.check_invariants().unwrap();
+        assert_eq!(b.allocated(), 0);
+        assert_eq!(b.chunk_count(), 1, "full coalescing");
+    }
+
+    #[test]
+    fn alignment_respected() {
+        let mut b = Bufalloc::new(1024, 64, false);
+        let a = b.alloc(1).unwrap();
+        let c = b.alloc(1).unwrap();
+        assert_eq!(a % 64, 0);
+        assert_eq!(c % 64, 0);
+        assert_eq!(c - a, 64);
+    }
+
+    #[test]
+    fn first_fit_reuses_freed_space() {
+        let mut b = Bufalloc::new(1024, 16, false);
+        let a = b.alloc(128).unwrap();
+        let _c = b.alloc(128).unwrap();
+        b.free(a).unwrap();
+        let d = b.alloc(64).unwrap();
+        assert_eq!(d, a, "first fit takes the earliest hole");
+    }
+
+    #[test]
+    fn greedy_mode_allocates_contiguously_at_end() {
+        let mut b = Bufalloc::new(1024, 16, true);
+        let a = b.alloc(128).unwrap();
+        b.free(a).unwrap();
+        // Non-greedy would reuse offset 0; greedy serves from the sentinel.
+        let c = b.alloc(64).unwrap();
+        let d = b.alloc(64).unwrap();
+        assert_eq!(d, c + 64, "successive allocations contiguous");
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_memory_reports_available() {
+        let mut b = Bufalloc::new(256, 16, false);
+        b.alloc(192).unwrap();
+        match b.alloc(128) {
+            Err(Error::OutOfMemory { requested, available }) => {
+                assert_eq!(requested, 128);
+                assert_eq!(available, 64);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut b = Bufalloc::new(256, 16, false);
+        let a = b.alloc(32).unwrap();
+        b.free(a).unwrap();
+        assert!(b.free(a).is_err());
+    }
+
+    #[test]
+    fn group_alloc_free_pattern() {
+        // The paper's assumption: buffers allocated and freed in groups.
+        let mut b = Bufalloc::new(1 << 20, 64, true);
+        for _ in 0..10 {
+            let group: Vec<usize> = (0..8).map(|i| b.alloc(1000 * (i + 1)).unwrap()).collect();
+            b.check_invariants().unwrap();
+            for off in group {
+                b.free(off).unwrap();
+            }
+            b.check_invariants().unwrap();
+            assert_eq!(b.allocated(), 0);
+        }
+        assert_eq!(b.chunk_count(), 1, "no fragmentation after group frees");
+    }
+}

@@ -1,0 +1,157 @@
+//! Contexts and buffers: device memory management on top of Bufalloc.
+
+use std::sync::{Arc, Mutex};
+
+use crate::bufalloc::Bufalloc;
+use crate::cl::error::{Error, Result};
+use crate::devices::Device;
+
+/// A buffer handle (`cl_mem` analog): an offset/length into the context's
+/// global-memory region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Buffer {
+    /// Byte offset in the device's global memory.
+    pub offset: usize,
+    /// Size in bytes.
+    pub size: usize,
+    /// Allocation id (for double-free detection).
+    pub id: u64,
+}
+
+/// A context (`cl_context` analog): one device plus its global memory,
+/// managed by the §3 Bufalloc allocator.
+pub struct Context {
+    /// The device this context talks to.
+    pub device: Arc<dyn Device>,
+    pub(crate) global: Mutex<Vec<u8>>,
+    pub(crate) alloc: Mutex<Bufalloc>,
+    next_id: Mutex<u64>,
+}
+
+impl Context {
+    /// Create a context with the device's full global memory region,
+    /// managed greedily (the paper's default for kernel buffers).
+    pub fn new(device: Arc<dyn Device>) -> Context {
+        let size = device.info().global_mem.min(512 << 20);
+        Context {
+            device,
+            global: Mutex::new(vec![0u8; size]),
+            alloc: Mutex::new(Bufalloc::new(size, 64, true)),
+            next_id: Mutex::new(1),
+        }
+    }
+
+    /// Allocate a device buffer (`clCreateBuffer`).
+    pub fn create_buffer(&self, size: usize) -> Result<Buffer> {
+        let offset = self.alloc.lock().unwrap().alloc(size)?;
+        let mut id = self.next_id.lock().unwrap();
+        *id += 1;
+        Ok(Buffer { offset, size, id: *id })
+    }
+
+    /// Release a buffer (`clReleaseMemObject`).
+    pub fn release_buffer(&self, buf: Buffer) -> Result<()> {
+        self.alloc.lock().unwrap().free(buf.offset)
+    }
+
+    /// Bytes currently allocated.
+    pub fn allocated(&self) -> usize {
+        self.alloc.lock().unwrap().allocated()
+    }
+
+    /// Write host data into a buffer.
+    pub fn write_buffer(&self, buf: Buffer, offset: usize, data: &[u8]) -> Result<()> {
+        if offset + data.len() > buf.size {
+            return Err(Error::invalid("write exceeds buffer size"));
+        }
+        let mut g = self.global.lock().unwrap();
+        g[buf.offset + offset..buf.offset + offset + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Read a buffer back to host memory.
+    pub fn read_buffer(&self, buf: Buffer, offset: usize, out: &mut [u8]) -> Result<()> {
+        if offset + out.len() > buf.size {
+            return Err(Error::invalid("read exceeds buffer size"));
+        }
+        let g = self.global.lock().unwrap();
+        out.copy_from_slice(&g[buf.offset + offset..buf.offset + offset + out.len()]);
+        Ok(())
+    }
+
+    /// Typed helpers (f32).
+    pub fn write_f32(&self, buf: Buffer, data: &[f32]) -> Result<()> {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.write_buffer(buf, 0, &bytes)
+    }
+
+    /// Read f32 data back.
+    pub fn read_f32(&self, buf: Buffer, n: usize) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.read_buffer(buf, 0, &mut bytes)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Typed helpers (u32).
+    pub fn write_u32(&self, buf: Buffer, data: &[u32]) -> Result<()> {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.write_buffer(buf, 0, &bytes)
+    }
+
+    /// Read u32 data back.
+    pub fn read_u32(&self, buf: Buffer, n: usize) -> Result<Vec<u32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.read_buffer(buf, 0, &mut bytes)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Typed helpers (i32).
+    pub fn write_i32(&self, buf: Buffer, data: &[i32]) -> Result<()> {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.write_buffer(buf, 0, &bytes)
+    }
+
+    /// Read i32 data back.
+    pub fn read_i32(&self, buf: Buffer, n: usize) -> Result<Vec<i32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.read_buffer(buf, 0, &mut bytes)?;
+        Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{basic::BasicDevice, EngineKind};
+
+    fn ctx() -> Context {
+        Context::new(Arc::new(BasicDevice::new(EngineKind::Serial)))
+    }
+
+    #[test]
+    fn buffer_lifecycle() {
+        let c = ctx();
+        let b = c.create_buffer(1024).unwrap();
+        c.write_f32(b, &[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(c.read_f32(b, 3).unwrap(), vec![1.0, 2.0, 3.0]);
+        c.release_buffer(b).unwrap();
+        assert_eq!(c.allocated(), 0);
+    }
+
+    #[test]
+    fn oob_writes_rejected() {
+        let c = ctx();
+        let b = c.create_buffer(8).unwrap();
+        assert!(c.write_f32(b, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn buffers_are_disjoint() {
+        let c = ctx();
+        let a = c.create_buffer(64).unwrap();
+        let b = c.create_buffer(64).unwrap();
+        c.write_f32(a, &[7.0; 16]).unwrap();
+        c.write_f32(b, &[9.0; 16]).unwrap();
+        assert!(c.read_f32(a, 16).unwrap().iter().all(|&v| v == 7.0));
+    }
+}

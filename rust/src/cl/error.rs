@@ -1,0 +1,76 @@
+//! Error type shared across the host API, kernel compiler, and devices.
+//!
+//! Mirrors the OpenCL error-code style (`CL_INVALID_VALUE`, ...) but as a
+//! structured Rust enum so callers can match on failure classes.
+
+use std::fmt;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways a pocl-rs operation can fail.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// Lexing / parsing failure in the MiniCL frontend (`CL_BUILD_PROGRAM_FAILURE`).
+    Parse { line: u32, col: u32, msg: String },
+    /// Semantic / type-checking failure in the frontend.
+    Sema { line: u32, col: u32, msg: String },
+    /// IR verification failure (compiler-internal invariant broken).
+    Verify(String),
+    /// Kernel-compiler pass failure.
+    Compile(String),
+    /// Runtime execution failure (trap in a kernel, OOB access, ...).
+    Exec(String),
+    /// Host API misuse (`CL_INVALID_*`).
+    InvalidArg(String),
+    /// Named entity (kernel, device, builtin) not found.
+    NotFound(String),
+    /// Buffer allocator out of space (`CL_MEM_OBJECT_ALLOCATION_FAILURE`).
+    OutOfMemory { requested: usize, available: usize },
+    /// PJRT / XLA runtime failure (wraps the `xla` crate's error text).
+    Pjrt(String),
+    /// I/O failure (artifact files, kernel sources).
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse { line, col, msg } => write!(f, "parse error at {line}:{col}: {msg}"),
+            Error::Sema { line, col, msg } => write!(f, "semantic error at {line}:{col}: {msg}"),
+            Error::Verify(m) => write!(f, "IR verification failed: {m}"),
+            Error::Compile(m) => write!(f, "kernel compilation failed: {m}"),
+            Error::Exec(m) => write!(f, "execution failed: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::NotFound(m) => write!(f, "not found: {m}"),
+            Error::OutOfMemory { requested, available } => {
+                write!(f, "out of device memory: requested {requested} B, {available} B available")
+            }
+            Error::Pjrt(m) => write!(f, "PJRT error: {m}"),
+            Error::Io(m) => write!(f, "I/O error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+impl Error {
+    /// Shorthand for a compile-stage error.
+    pub fn compile(msg: impl Into<String>) -> Self {
+        Error::Compile(msg.into())
+    }
+    /// Shorthand for an execution-stage error.
+    pub fn exec(msg: impl Into<String>) -> Self {
+        Error::Exec(msg.into())
+    }
+    /// Shorthand for an invalid-argument error.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidArg(msg.into())
+    }
+}

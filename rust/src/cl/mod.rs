@@ -1,0 +1,17 @@
+//! Host layer (§3, Fig. 2): the `cl*`-style API.
+//!
+//! `Platform` → `Context` (+ `Buffer` via Bufalloc) → `Program` (+ the
+//! §4.1 per-local-size specialisation cache) → `Kernel` → `CommandQueue`
+//! (+ profiling `Event`s).
+
+pub mod context;
+pub mod error;
+pub mod platform;
+pub mod program;
+pub mod queue;
+
+pub use context::{Buffer, Context};
+pub use error::{Error, Result};
+pub use platform::Platform;
+pub use program::{Kernel, KernelArg, Program};
+pub use queue::{CommandQueue, Event};

@@ -1,0 +1,78 @@
+//! Platform layer: device discovery (the `clGetPlatformIDs` /
+//! `clGetDeviceIDs` analog).
+
+use std::sync::Arc;
+
+use crate::devices::{basic::BasicDevice, threaded::ThreadedDevice, ttasim::TtaSimDevice, Device, EngineKind};
+
+/// The pocl-rs platform: a named set of devices.
+pub struct Platform {
+    /// Platform name.
+    pub name: &'static str,
+    /// Available devices.
+    pub devices: Vec<Arc<dyn Device>>,
+}
+
+impl Platform {
+    /// The default platform with the device set used throughout §6:
+    /// `basic` (serial), `pthread` (threaded gang, AVX2-width), narrow-SIMD
+    /// variants (NEON/AltiVec width), a fiber baseline device, and the TTA
+    /// simulator. The `pjrt` device is added separately because it needs
+    /// artifacts (see `devices::pjrt`).
+    pub fn default_platform() -> Platform {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Platform {
+            name: "pocl-rs",
+            devices: vec![
+                Arc::new(BasicDevice::new(EngineKind::Serial)),
+                Arc::new(ThreadedDevice::new(EngineKind::Gang(8), cores)),
+                Arc::new(ThreadedDevice::new(EngineKind::Gang(4), 2)),
+                Arc::new(BasicDevice::new(EngineKind::Fiber)),
+                Arc::new(TtaSimDevice::new(true)),
+            ],
+        }
+    }
+
+    /// Find a device by (substring of) name.
+    pub fn device(&self, name: &str) -> Option<Arc<dyn Device>> {
+        self.devices.iter().find(|d| d.info().name.contains(name)).cloned()
+    }
+
+    /// Render the Table 1-style capability table.
+    pub fn capability_table(&self) -> String {
+        let mut out = String::from(
+            "| device | TLP | ILP | DLP |\n|---|---|---|---|\n",
+        );
+        for d in &self.devices {
+            let i = d.info();
+            out.push_str(&format!(
+                "| {} | {} threads | {} | {} |\n",
+                i.name, i.tlp, i.ilp, i.dlp
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_platform_has_expected_devices() {
+        let p = Platform::default_platform();
+        assert!(p.devices.len() >= 5);
+        assert!(p.device("basic").is_some());
+        assert!(p.device("pthread").is_some());
+        assert!(p.device("ttasim").is_some());
+        assert!(p.device("nonexistent").is_none());
+    }
+
+    #[test]
+    fn capability_table_mentions_parallelism_classes() {
+        let p = Platform::default_platform();
+        let t = p.capability_table();
+        assert!(t.contains("gang x8"));
+        assert!(t.contains("static multi-issue"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Programs and kernels (`clCreateProgramWithSource` / `clBuildProgram` /
+//! `clCreateKernel` / `clSetKernelArg` analogs), including the §4.1
+//! enqueue-time work-group-function specialisation cache.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cl::context::Buffer;
+use crate::cl::error::{Error, Result};
+use crate::ir::Module;
+use crate::kcc::{compile_workgroup, CompileOptions, WorkGroupFunction};
+
+/// A built program: the IR module plus the per-local-size cache of
+/// specialised work-group functions.
+pub struct Program {
+    /// Frontend output (single-work-item kernels).
+    pub module: Module,
+    cache: Mutex<HashMap<(String, [usize; 3], bool), Arc<WorkGroupFunction>>>,
+    /// Cache statistics (tested by the §4.1 integration test).
+    pub cache_hits: Mutex<usize>,
+    /// Cache misses = actual compilations.
+    pub cache_misses: Mutex<usize>,
+}
+
+impl Program {
+    /// Build from MiniCL source (the `clBuildProgram` moment).
+    pub fn build(source: &str) -> Result<Program> {
+        let module = crate::frontend::compile(source)?;
+        Ok(Program {
+            module,
+            cache: Mutex::new(HashMap::new()),
+            cache_hits: Mutex::new(0),
+            cache_misses: Mutex::new(0),
+        })
+    }
+
+    /// Kernel names available in this program.
+    pub fn kernel_names(&self) -> Vec<String> {
+        self.module.kernels.iter().map(|k| k.name.clone()).collect()
+    }
+
+    /// Get (or compile) the work-group function for a kernel at a local
+    /// size — "the work-group function generation is performed at kernel
+    /// enqueue time, when the local size is known" (§4.1). One function is
+    /// generated per local size; re-enqueues hit the cache.
+    pub fn workgroup_function(
+        &self,
+        kernel: &str,
+        local: [usize; 3],
+        opts: &CompileOptions,
+    ) -> Result<Arc<WorkGroupFunction>> {
+        let key = (kernel.to_string(), local, opts.horizontal && !opts.spmd);
+        if let Some(w) = self.cache.lock().unwrap().get(&key) {
+            *self.cache_hits.lock().unwrap() += 1;
+            return Ok(w.clone());
+        }
+        let k = self
+            .module
+            .kernel(kernel)
+            .ok_or_else(|| Error::NotFound(format!("kernel `{kernel}`")))?;
+        let wgf = Arc::new(compile_workgroup(k, local, opts)?);
+        *self.cache_misses.lock().unwrap() += 1;
+        self.cache.lock().unwrap().insert(key, wgf.clone());
+        Ok(wgf)
+    }
+}
+
+/// A kernel argument value set by the host.
+#[derive(Debug, Clone)]
+pub enum KernelArg {
+    /// Global buffer.
+    Buf(Buffer),
+    /// `__local` buffer of the given byte size (clSetKernelArg with NULL).
+    LocalSize(usize),
+    /// 32-bit signed scalar.
+    I32(i32),
+    /// 32-bit unsigned scalar.
+    U32(u32),
+    /// 64-bit scalar (size_t).
+    U64(u64),
+    /// f32 scalar.
+    F32(f32),
+}
+
+/// A kernel object with bound arguments (`cl_kernel` analog).
+pub struct Kernel {
+    /// Kernel name (must exist in the program).
+    pub name: String,
+    /// Bound arguments, indexed by position.
+    pub args: Vec<Option<KernelArg>>,
+}
+
+impl Kernel {
+    /// Create a kernel object for `name` with `nargs` settable arguments.
+    pub fn new(program: &Program, name: &str) -> Result<Kernel> {
+        let k = program
+            .module
+            .kernel(name)
+            .ok_or_else(|| Error::NotFound(format!("kernel `{name}`")))?;
+        // Count only the user-settable params (auto-locals are appended by
+        // the frontend and bound automatically at enqueue).
+        let nargs =
+            k.params.iter().filter(|p| p.auto_local_size.is_none()).count();
+        Ok(Kernel { name: name.to_string(), args: vec![None; nargs] })
+    }
+
+    /// Bind an argument (`clSetKernelArg`).
+    pub fn set_arg(&mut self, index: usize, arg: KernelArg) -> Result<()> {
+        if index >= self.args.len() {
+            return Err(Error::invalid(format!(
+                "arg index {index} out of range (kernel `{}` has {})",
+                self.name,
+                self.args.len()
+            )));
+        }
+        self.args[index] = Some(arg);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = "__kernel void k(__global float *x, uint n) { x[get_global_id(0)] = (float)n; }";
+
+    #[test]
+    fn build_and_enumerate() {
+        let p = Program::build(SRC).unwrap();
+        assert_eq!(p.kernel_names(), vec!["k"]);
+        assert!(Program::build("int broken").is_err());
+    }
+
+    #[test]
+    fn specialization_cache_per_local_size() {
+        let p = Program::build(SRC).unwrap();
+        let opts = CompileOptions::default();
+        let _ = p.workgroup_function("k", [8, 1, 1], &opts).unwrap();
+        let _ = p.workgroup_function("k", [8, 1, 1], &opts).unwrap();
+        let _ = p.workgroup_function("k", [16, 1, 1], &opts).unwrap();
+        assert_eq!(*p.cache_misses.lock().unwrap(), 2, "one compile per local size");
+        assert_eq!(*p.cache_hits.lock().unwrap(), 1);
+    }
+
+    #[test]
+    fn kernel_arg_binding() {
+        let p = Program::build(SRC).unwrap();
+        let mut k = Kernel::new(&p, "k").unwrap();
+        assert_eq!(k.args.len(), 2);
+        k.set_arg(1, KernelArg::U32(7)).unwrap();
+        assert!(k.set_arg(5, KernelArg::U32(0)).is_err());
+        assert!(Kernel::new(&p, "missing").is_err());
+    }
+}

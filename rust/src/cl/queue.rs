@@ -1,0 +1,189 @@
+//! Command queues (`clCommandQueue` analog) with events and profiling.
+//!
+//! The queue resolves kernel arguments against the context, asks the
+//! program for the enqueue-time specialised work-group function (§4.1),
+//! plans local memory, and dispatches to the device layer. Execution is
+//! in-order; every enqueue returns an [`Event`] carrying profiling
+//! timestamps (`CL_QUEUE_PROFILING_ENABLE` semantics — the §6 benchmarks
+//! time kernels this way).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cl::context::Context;
+use crate::cl::error::{Error, Result};
+use crate::cl::program::{Kernel, KernelArg, Program};
+use crate::devices::{LaunchRequest, LaunchStats};
+use crate::exec::value::{SP_GLOBAL, SP_LOCAL};
+use crate::exec::VVal;
+use crate::kcc::CompileOptions;
+
+/// A completed command's record.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// What ran (kernel name or transfer).
+    pub what: String,
+    /// Wall-clock duration in nanoseconds.
+    pub duration_ns: u128,
+    /// Device statistics for kernel launches.
+    pub stats: LaunchStats,
+}
+
+/// In-order command queue bound to one context.
+pub struct CommandQueue {
+    /// The context (device + memory).
+    pub context: Arc<Context>,
+    /// Completed events (profiling log).
+    pub events: Vec<Event>,
+}
+
+impl CommandQueue {
+    /// Create a queue on a context.
+    pub fn new(context: Arc<Context>) -> CommandQueue {
+        CommandQueue { context, events: Vec::new() }
+    }
+
+    /// Enqueue an ND-range kernel (`clEnqueueNDRangeKernel`).
+    ///
+    /// `global` must be divisible by `local` in every dimension (OpenCL
+    /// 1.2 rule).
+    pub fn enqueue_nd_range(
+        &mut self,
+        program: &Program,
+        kernel: &Kernel,
+        global: [usize; 3],
+        local: [usize; 3],
+    ) -> Result<Event> {
+        let t0 = Instant::now();
+        for d in 0..3 {
+            if local[d] == 0 || global[d] % local[d] != 0 {
+                return Err(Error::invalid(format!(
+                    "global size {global:?} not divisible by local {local:?}"
+                )));
+            }
+        }
+        let work_dim = if global[2] > 1 { 3 } else if global[1] > 1 { 2 } else { 1 };
+        let mut opts: CompileOptions = self.context.device.compile_options();
+        opts.work_dim = work_dim;
+        let wgf = program.workgroup_function(&kernel.name, local, &opts)?;
+
+        // Resolve arguments: buffers → global offsets; local sizes →
+        // local offsets; auto-locals appended after user args.
+        let kfun = program.module.kernel(&kernel.name).unwrap();
+        let mut args: Vec<VVal> = Vec::with_capacity(kfun.params.len());
+        let mut local_off = 0usize;
+        let mut user_idx = 0usize;
+        for p in &kfun.params {
+            if let Some(bytes) = p.auto_local_size {
+                args.push(VVal::ptr(SP_LOCAL, local_off as u64));
+                local_off += bytes;
+                continue;
+            }
+            let a = kernel.args.get(user_idx).and_then(|a| a.as_ref()).ok_or_else(|| {
+                Error::invalid(format!("kernel `{}` arg {user_idx} not set", kernel.name))
+            })?;
+            user_idx += 1;
+            args.push(match a {
+                KernelArg::Buf(b) => VVal::ptr(SP_GLOBAL, b.offset as u64),
+                KernelArg::LocalSize(sz) => {
+                    let v = VVal::ptr(SP_LOCAL, local_off as u64);
+                    local_off += sz;
+                    v
+                }
+                KernelArg::I32(v) => VVal::i(*v as i64),
+                KernelArg::U32(v) => VVal::i(*v as i64),
+                KernelArg::U64(v) => VVal::i(*v as i64),
+                KernelArg::F32(v) => VVal::f(*v as f64),
+            });
+        }
+
+        let groups = [global[0] / local[0], global[1] / local[1], global[2] / local[2]];
+        let req = LaunchRequest {
+            wgf: &wgf,
+            args,
+            groups,
+            offset: [0; 3],
+            work_dim,
+            local_mem: local_off,
+        };
+        let mut g = self.context.global.lock().unwrap();
+        let stats = self.context.device.launch(&mut g, &req)?;
+        drop(g);
+        let ev = Event {
+            what: kernel.name.clone(),
+            duration_ns: t0.elapsed().as_nanos(),
+            stats,
+        };
+        self.events.push(ev.clone());
+        Ok(ev)
+    }
+
+    /// Total kernel time across recorded events (profiling sum).
+    pub fn total_kernel_ns(&self) -> u128 {
+        self.events.iter().map(|e| e.duration_ns).sum()
+    }
+
+    /// Wait for completion (in-order queue executes eagerly; kept for API
+    /// parity with `clFinish`).
+    pub fn finish(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cl::platform::Platform;
+
+    #[test]
+    fn end_to_end_vecadd_through_host_api() {
+        let platform = Platform::default_platform();
+        let device = platform.device("pthread-gang(8)").unwrap();
+        let ctx = Arc::new(Context::new(device));
+        let mut q = CommandQueue::new(ctx.clone());
+        let program = Program::build(
+            "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
+                 size_t i = get_global_id(0);
+                 c[i] = a[i] + b[i];
+             }",
+        )
+        .unwrap();
+        let n = 1024;
+        let a = ctx.create_buffer(n * 4).unwrap();
+        let b = ctx.create_buffer(n * 4).unwrap();
+        let c = ctx.create_buffer(n * 4).unwrap();
+        let av: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let bv: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+        ctx.write_f32(a, &av).unwrap();
+        ctx.write_f32(b, &bv).unwrap();
+        let mut k = Kernel::new(&program, "vecadd").unwrap();
+        k.set_arg(0, KernelArg::Buf(a)).unwrap();
+        k.set_arg(1, KernelArg::Buf(b)).unwrap();
+        k.set_arg(2, KernelArg::Buf(c)).unwrap();
+        let ev = q.enqueue_nd_range(&program, &k, [n, 1, 1], [64, 1, 1]).unwrap();
+        assert_eq!(ev.stats.workgroups, n / 64);
+        let out = ctx.read_f32(c, n).unwrap();
+        assert!(out.iter().enumerate().all(|(i, &v)| v == 3.0 * i as f32));
+    }
+
+    #[test]
+    fn invalid_nd_range_rejected() {
+        let platform = Platform::default_platform();
+        let ctx = Arc::new(Context::new(platform.device("basic").unwrap()));
+        let mut q = CommandQueue::new(ctx);
+        let program =
+            Program::build("__kernel void k(__global float *x) { x[0] = 1.0f; }").unwrap();
+        let k = Kernel::new(&program, "k").unwrap();
+        assert!(q.enqueue_nd_range(&program, &k, [10, 1, 1], [3, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn unset_args_rejected() {
+        let platform = Platform::default_platform();
+        let ctx = Arc::new(Context::new(platform.device("basic").unwrap()));
+        let mut q = CommandQueue::new(ctx);
+        let program =
+            Program::build("__kernel void k(__global float *x) { x[0] = 1.0f; }").unwrap();
+        let k = Kernel::new(&program, "k").unwrap();
+        let e = q.enqueue_nd_range(&program, &k, [8, 1, 1], [8, 1, 1]);
+        assert!(e.is_err());
+    }
+}

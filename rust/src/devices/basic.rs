@@ -1,0 +1,54 @@
+//! The `basic` device (§3): minimal single-threaded CPU device executing
+//! one work-group at a time.
+
+use crate::cl::error::Result;
+
+use super::{Device, DeviceInfo, EngineKind, LaunchRequest, LaunchStats};
+
+/// Single-threaded CPU device.
+pub struct BasicDevice {
+    /// Work-group execution engine.
+    pub engine: EngineKind,
+    /// Global memory capacity (the context sizes its region from this).
+    pub global_mem: usize,
+    /// Local memory per work-group.
+    pub local_mem: usize,
+}
+
+impl BasicDevice {
+    /// Default basic device: serial engine, 256 MiB global, 64 KiB local.
+    pub fn new(engine: EngineKind) -> BasicDevice {
+        BasicDevice { engine, global_mem: 256 << 20, local_mem: 64 << 10 }
+    }
+}
+
+impl Device for BasicDevice {
+    fn info(&self) -> DeviceInfo {
+        DeviceInfo {
+            name: format!("basic-{:?}", self.engine).to_lowercase(),
+            tlp: 1,
+            ilp: "interpreted",
+            dlp: match self.engine {
+                EngineKind::Gang(8) => "gang x8 (AVX2 model)",
+                EngineKind::Gang(4) => "gang x4 (NEON/AltiVec model)",
+                EngineKind::Gang(_) => "gang",
+                EngineKind::Serial => "scalar WI loops",
+                EngineKind::Fiber => "fibers (no DLP)",
+            },
+            global_mem: self.global_mem,
+            local_mem: self.local_mem,
+        }
+    }
+
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+        let mut stats = LaunchStats::default();
+        let mut local = vec![0u8; req.local_mem.max(1)];
+        for g in req.all_groups() {
+            let ctx = req.ctx(g);
+            stats.diverged_gangs +=
+                super::run_one_group(self.engine, req.wgf, &req.args, global, &mut local, &ctx)?;
+            stats.workgroups += 1;
+        }
+        Ok(stats)
+    }
+}

@@ -1,0 +1,142 @@
+//! The device layer (§3, Fig. 2): the hardware abstraction the host layer
+//! delegates to.
+//!
+//! * [`basic`] — single-threaded CPU device, one work-group at a time.
+//! * [`threaded`] — the `pthread` analog: a worker pool executes
+//!   work-groups in parallel (thread-level parallelism).
+//! * [`ttasim`] — static multi-issue TTA simulator (the `ttasim`/TCE
+//!   analog), cycle-accurate at the block-schedule level (§6.4).
+//! * [`pjrt`] — SPMD-style offload device executing AOT-compiled
+//!   Pallas/XLA artifacts through the PJRT C API.
+
+pub mod basic;
+pub mod pjrt;
+pub mod threaded;
+pub mod ttasim;
+
+use crate::cl::error::Result;
+use crate::exec::{LaunchCtx, VVal};
+use crate::kcc::{CompileOptions, WorkGroupFunction};
+
+/// Which work-group execution engine a CPU-style device uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Serial WI-loop execution (paper `basic`).
+    Serial,
+    /// Lockstep gangs of the given SIMD width (8 ≈ AVX2, 4 ≈ NEON/AltiVec).
+    Gang(usize),
+    /// Per-work-item fibers (FreeOCL / Twin Peaks baseline).
+    Fiber,
+}
+
+/// Table 1-style device description.
+#[derive(Debug, Clone)]
+pub struct DeviceInfo {
+    /// Device name (e.g. `"pthread-avx2"`).
+    pub name: String,
+    /// Thread-level parallelism: worker threads over work-groups.
+    pub tlp: usize,
+    /// Instruction-level parallelism description.
+    pub ilp: &'static str,
+    /// Data-level parallelism description (SIMD width modelled).
+    pub dlp: &'static str,
+    /// Global memory capacity in bytes.
+    pub global_mem: usize,
+    /// Local memory per work-group in bytes.
+    pub local_mem: usize,
+}
+
+/// A kernel launch prepared by the host layer: the specialised work-group
+/// function, resolved argument values, and the launch geometry.
+pub struct LaunchRequest<'a> {
+    /// Enqueue-time-specialised work-group function.
+    pub wgf: &'a WorkGroupFunction,
+    /// Argument values (buffers already resolved to global offsets,
+    /// local pointers to local offsets).
+    pub args: Vec<VVal>,
+    /// Number of work-groups per dimension.
+    pub groups: [usize; 3],
+    /// Global offset.
+    pub offset: [u64; 3],
+    /// Work dimensions used by the launch.
+    pub work_dim: u32,
+    /// Bytes of local memory the launch needs per work-group.
+    pub local_mem: usize,
+}
+
+impl LaunchRequest<'_> {
+    /// Launch context for one work-group.
+    pub fn ctx(&self, g: [usize; 3]) -> LaunchCtx {
+        LaunchCtx {
+            group_id: [g[0] as u64, g[1] as u64, g[2] as u64],
+            num_groups: [self.groups[0] as u64, self.groups[1] as u64, self.groups[2] as u64],
+            global_offset: self.offset,
+            local_size: self.wgf.local_size,
+            work_dim: self.work_dim,
+        }
+    }
+
+    /// All group ids in row-major order.
+    pub fn all_groups(&self) -> Vec<[usize; 3]> {
+        let mut v = Vec::with_capacity(self.groups.iter().product());
+        for gz in 0..self.groups[2] {
+            for gy in 0..self.groups[1] {
+                for gx in 0..self.groups[0] {
+                    v.push([gx, gy, gz]);
+                }
+            }
+        }
+        v
+    }
+}
+
+/// Per-launch statistics reported by devices.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaunchStats {
+    /// Work-groups executed.
+    pub workgroups: usize,
+    /// Gangs that diverged (gang engine only).
+    pub diverged_gangs: usize,
+    /// Simulated cycles (ttasim only).
+    pub cycles: u64,
+}
+
+/// The host-device interface: every device executes prepared launches
+/// against the context's global memory.
+pub trait Device: Send + Sync {
+    /// Device description (Table 1 row).
+    fn info(&self) -> DeviceInfo;
+    /// Kernel-compiler options this device wants (e.g. SPMD devices skip
+    /// WI-loop materialisation).
+    fn compile_options(&self) -> CompileOptions {
+        CompileOptions::default()
+    }
+    /// Execute a launch.
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats>;
+}
+
+/// Run one work-group with the chosen engine (shared by basic/threaded).
+pub fn run_one_group(
+    engine: EngineKind,
+    wgf: &WorkGroupFunction,
+    args: &[VVal],
+    global: &mut [u8],
+    local: &mut [u8],
+    ctx: &LaunchCtx,
+) -> Result<usize> {
+    let mut mem = crate::exec::MemoryRefs { global, local };
+    match engine {
+        EngineKind::Serial => {
+            crate::exec::serial::run_workgroup(wgf, args, &mut mem, ctx)?;
+            Ok(0)
+        }
+        EngineKind::Gang(w) => {
+            let stats = crate::exec::gang::run_workgroup(wgf, args, &mut mem, ctx, w)?;
+            Ok(stats.diverged)
+        }
+        EngineKind::Fiber => {
+            crate::exec::fiber::run_workgroup(wgf, args, &mut mem, ctx)?;
+            Ok(0)
+        }
+    }
+}

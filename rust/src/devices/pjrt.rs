@@ -1,0 +1,163 @@
+//! The `pjrt` device: the SPMD-device path of Fig. 3.
+//!
+//! Like pocl's GPU path, this device does **not** need the work-group
+//! function generation: the kernel is executed by the device's own
+//! compiler/runtime — here an AOT-compiled XLA module authored as a JAX +
+//! Pallas program (`python/compile/`), loaded from `artifacts/*.hlo.txt`
+//! and executed through the PJRT C API. Python never runs at launch time.
+//!
+//! Kernels are *registered*: a kernel name maps to an artifact path plus
+//! a marshalling spec describing how the OpenCL-style buffer arguments
+//! map onto the XLA executable's tensor parameters and results.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cl::error::{Error, Result};
+use crate::exec::value::{SP_GLOBAL, Val};
+use crate::exec::VVal;
+use crate::runtime::{ArgData, ArgSpec, LoadedExecutable, PjrtRuntime};
+
+use super::{Device, DeviceInfo, LaunchRequest, LaunchStats};
+
+/// How one registered kernel marshals its arguments.
+#[derive(Clone)]
+pub struct KernelBinding {
+    /// Artifact path (HLO text).
+    pub artifact: String,
+    /// For each executable input: which kernel arg index it reads, its
+    /// shape, and element type.
+    pub inputs: Vec<(usize, ArgSpec)>,
+    /// For each executable output: which kernel arg (buffer) index it
+    /// writes back to, and the f32 element count.
+    pub outputs: Vec<(usize, usize)>,
+}
+
+/// SPMD offload device backed by the PJRT CPU client.
+pub struct PjrtDevice {
+    runtime: Arc<PjrtRuntime>,
+    bindings: HashMap<String, KernelBinding>,
+}
+
+impl PjrtDevice {
+    /// Create the device (one PJRT client).
+    pub fn new() -> Result<PjrtDevice> {
+        Ok(PjrtDevice { runtime: Arc::new(PjrtRuntime::cpu()?), bindings: HashMap::new() })
+    }
+
+    /// Register a kernel → artifact binding.
+    pub fn register(&mut self, kernel: &str, binding: KernelBinding) {
+        self.bindings.insert(kernel.to_string(), binding);
+    }
+
+    /// True if the kernel has an artifact binding.
+    pub fn supports(&self, kernel: &str) -> bool {
+        self.bindings.contains_key(kernel)
+    }
+
+    /// Pre-compile a kernel's artifact (amortised across launches).
+    pub fn warm(&self, kernel: &str) -> Result<Arc<LoadedExecutable>> {
+        let b = self
+            .bindings
+            .get(kernel)
+            .ok_or_else(|| Error::NotFound(format!("no artifact for kernel `{kernel}`")))?;
+        self.runtime.load(&b.artifact)
+    }
+
+    /// Execute a registered kernel against global memory.
+    pub fn launch_binding(
+        &self,
+        global: &mut [u8],
+        kernel: &str,
+        args: &[VVal],
+    ) -> Result<()> {
+        let b = self
+            .bindings
+            .get(kernel)
+            .ok_or_else(|| Error::NotFound(format!("no artifact for kernel `{kernel}`")))?;
+        let exe = self.runtime.load(&b.artifact)?;
+        // Marshal inputs out of global memory.
+        let mut staged: Vec<(Vec<f32>, ArgSpec)> = Vec::new();
+        let mut staged_i32: Vec<(Vec<i32>, ArgSpec)> = Vec::new();
+        let mut order: Vec<(bool, usize)> = Vec::new(); // (is_f32, idx into staged vec)
+        for (arg_idx, spec) in &b.inputs {
+            match args.get(*arg_idx) {
+                Some(VVal::S(Val::Ptr { space, offset })) if *space == SP_GLOBAL => {
+                    let data =
+                        crate::exec::mem::read_f32s(global, *offset as usize, spec.len());
+                    order.push((true, staged.len()));
+                    staged.push((data, spec.clone()));
+                }
+                Some(VVal::S(Val::I(v))) => {
+                    order.push((false, staged_i32.len()));
+                    staged_i32.push((vec![*v as i32], spec.clone()));
+                }
+                Some(VVal::S(Val::F(v))) => {
+                    order.push((true, staged.len()));
+                    staged.push((vec![*v as f32], spec.clone()));
+                }
+                other => {
+                    return Err(Error::invalid(format!(
+                        "pjrt kernel `{kernel}` arg {arg_idx}: unsupported value {other:?}"
+                    )))
+                }
+            }
+        }
+        let call_args: Vec<(ArgData<'_>, &ArgSpec)> = order
+            .iter()
+            .map(|(is_f32, i)| {
+                if *is_f32 {
+                    let (d, s) = &staged[*i];
+                    (ArgData::F32(d), s)
+                } else {
+                    let (d, s) = &staged_i32[*i];
+                    (ArgData::I32(d), s)
+                }
+            })
+            .collect();
+        let outputs = exe.execute_f32(&call_args)?;
+        // Write results back into the bound buffers.
+        for ((arg_idx, len), out) in b.outputs.iter().zip(outputs.iter()) {
+            match args.get(*arg_idx) {
+                Some(VVal::S(Val::Ptr { space, offset })) if *space == SP_GLOBAL => {
+                    if out.len() != *len {
+                        return Err(Error::exec(format!(
+                            "pjrt kernel `{kernel}`: output length {} != bound {len}",
+                            out.len()
+                        )));
+                    }
+                    crate::exec::mem::write_f32s(global, *offset as usize, out);
+                }
+                other => {
+                    return Err(Error::invalid(format!(
+                        "pjrt kernel `{kernel}` output arg {arg_idx}: not a global buffer \
+                         ({other:?})"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Device for PjrtDevice {
+    fn info(&self) -> DeviceInfo {
+        DeviceInfo {
+            name: format!("pjrt-{}", self.runtime.platform_name()),
+            tlp: self.runtime.device_count(),
+            ilp: "XLA-compiled (SPMD path)",
+            dlp: "XLA vectorisation / Pallas kernels",
+            global_mem: 256 << 20,
+            local_mem: 0,
+        }
+    }
+
+    fn compile_options(&self) -> crate::kcc::CompileOptions {
+        crate::kcc::CompileOptions { spmd: true, ..Default::default() }
+    }
+
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+        self.launch_binding(global, &req.wgf.name, &req.args)?;
+        Ok(LaunchStats { workgroups: req.all_groups().len(), ..Default::default() })
+    }
+}

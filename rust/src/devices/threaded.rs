@@ -1,0 +1,117 @@
+//! The `pthread` device analog (§3): executes work-groups in parallel on
+//! a pool of OS threads — the thread-level-parallelism axis of Table 1.
+//!
+//! Work-groups are independent by the OpenCL execution model, so the pool
+//! splits the group space statically. Each worker owns its local-memory
+//! buffer ("local data is thread-local data ... allocated in the kernel
+//! launcher thread", §4.7). Global memory is shared without locking —
+//! racy kernels are UB per the OpenCL spec, exactly like on real devices.
+
+use crate::cl::error::{Error, Result};
+
+use super::{Device, DeviceInfo, EngineKind, LaunchRequest, LaunchStats};
+
+/// Multi-threaded CPU device.
+pub struct ThreadedDevice {
+    /// Work-group execution engine per worker.
+    pub engine: EngineKind,
+    /// Worker count (cores/threads modelled).
+    pub threads: usize,
+    /// Global memory capacity.
+    pub global_mem: usize,
+    /// Local memory per work-group.
+    pub local_mem: usize,
+}
+
+impl ThreadedDevice {
+    /// Device with `threads` workers.
+    pub fn new(engine: EngineKind, threads: usize) -> ThreadedDevice {
+        ThreadedDevice { engine, threads: threads.max(1), global_mem: 256 << 20, local_mem: 64 << 10 }
+    }
+}
+
+/// Shared mutable global memory handed to workers. Work-groups are
+/// independent; simultaneous writes to the same location are UB in the
+/// source program, mirroring real OpenCL devices.
+struct SharedMem(*mut u8, usize);
+unsafe impl Send for SharedMem {}
+unsafe impl Sync for SharedMem {}
+
+impl Device for ThreadedDevice {
+    fn info(&self) -> DeviceInfo {
+        DeviceInfo {
+            name: format!("pthread-{:?}-x{}", self.engine, self.threads).to_lowercase(),
+            tlp: self.threads,
+            ilp: "interpreted",
+            dlp: match self.engine {
+                EngineKind::Gang(w) => {
+                    if w == 8 {
+                        "gang x8 (AVX2 model)"
+                    } else {
+                        "gang x4 (NEON/AltiVec model)"
+                    }
+                }
+                EngineKind::Serial => "scalar WI loops",
+                EngineKind::Fiber => "fibers (no DLP)",
+            },
+            global_mem: self.global_mem,
+            local_mem: self.local_mem,
+        }
+    }
+
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+        let groups = req.all_groups();
+        let nthreads = self.threads.min(groups.len()).max(1);
+        if nthreads == 1 {
+            // Degenerate to basic behaviour without thread spawn cost.
+            let basic = super::basic::BasicDevice {
+                engine: self.engine,
+                global_mem: self.global_mem,
+                local_mem: self.local_mem,
+            };
+            return basic.launch(global, req);
+        }
+        let shared = SharedMem(global.as_mut_ptr(), global.len());
+        let engine = self.engine;
+        let results: Vec<Result<LaunchStats>> = std::thread::scope(|scope| {
+            let shared = &shared;
+            let mut handles = Vec::new();
+            for t in 0..nthreads {
+                let chunk: Vec<[usize; 3]> =
+                    groups.iter().copied().skip(t).step_by(nthreads).collect();
+                let req_ref = &*req;
+                handles.push(scope.spawn(move || {
+                    // Launcher-thread-local local memory (§4.7).
+                    let mut local = vec![0u8; req_ref.local_mem.max(1)];
+                    let mut stats = LaunchStats::default();
+                    for g in chunk {
+                        let ctx = req_ref.ctx(g);
+                        // Each worker gets the same full view of global
+                        // memory; the work-group independence rule makes
+                        // this safe for conforming kernels.
+                        let global_view =
+                            unsafe { std::slice::from_raw_parts_mut(shared.0, shared.1) };
+                        stats.diverged_gangs += super::run_one_group(
+                            engine,
+                            req_ref.wgf,
+                            &req_ref.args,
+                            global_view,
+                            &mut local,
+                            &ctx,
+                        )?;
+                        stats.workgroups += 1;
+                    }
+                    Ok(stats)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        let mut total = LaunchStats::default();
+        for r in results {
+            let s = r.map_err(|e| Error::exec(format!("worker failed: {e}")))?;
+            total.workgroups += s.workgroups;
+            total.diverged_gangs += s.diverged_gangs;
+        }
+        Ok(total)
+    }
+}

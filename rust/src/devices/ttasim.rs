@@ -1,0 +1,394 @@
+//! `ttasim` — static multi-issue TTA simulator (§6.4, Table 2).
+//!
+//! Models a Transport-Triggered Architecture datapath with the Table 2
+//! resource mix and measures how much instruction-level parallelism the
+//! kernel compiler's output exposes. Each basic block of the materialised
+//! work-group function is **list-scheduled** once onto the function units
+//! (greedy earliest-cycle, honouring register dataflow and conservative
+//! memory ordering); execution then interprets the function while
+//! charging each block's schedule length per execution.
+//!
+//! Blocks inside **parallel work-item loops** (the `wi_loops` metadata the
+//! kernel compiler emits — §4.1) may be scheduled with their iterations
+//! overlapped (unroll factor `ilp_window`), because the metadata
+//! guarantees independence; that is precisely the §6.4 experiment: with
+//! horizontal inner-loop parallelisation the DCT inner loop becomes a
+//! work-item loop and the scheduler can fill the FUs, without it the loop
+//! stays sequential inside one work-item.
+
+use std::collections::HashMap;
+
+use crate::cl::error::{Error, Result};
+use crate::exec::interp::{Flow, Machine, SlotStore};
+use crate::exec::{MemoryRefs, VVal};
+use crate::ir::cfg::create_subgraph;
+use crate::ir::func::Function;
+use crate::ir::inst::{BinOp, BlockId, Inst, Operand, Reg};
+
+use super::{Device, DeviceInfo, LaunchRequest, LaunchStats};
+
+/// Function-unit classes of the modelled datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fu {
+    /// Integer ALUs (also address computation, compares, moves).
+    Alu,
+    /// Float add/sub units.
+    Fadd,
+    /// Float multiplier units (also div and the elemental functions).
+    Fmul,
+    /// Load-store units (global and local).
+    Lsu,
+}
+
+/// Datapath resources (Table 2) and operation latencies.
+#[derive(Debug, Clone)]
+pub struct TtaConfig {
+    /// Units per FU class.
+    pub units: HashMap<Fu, usize>,
+    /// Iteration-overlap window for parallel WI loops.
+    pub ilp_window: usize,
+    /// Simulated clock in MHz (the paper reports "scaled to 100 MHz").
+    pub clock_mhz: u64,
+}
+
+impl Default for TtaConfig {
+    fn default() -> Self {
+        // Table 2: 4 integer ALUs, 4 float add+sub, 4 float mul, 9 LSUs.
+        let mut units = HashMap::new();
+        units.insert(Fu::Alu, 4);
+        units.insert(Fu::Fadd, 4);
+        units.insert(Fu::Fmul, 4);
+        units.insert(Fu::Lsu, 9);
+        TtaConfig { units, ilp_window: 16, clock_mhz: 100 }
+    }
+}
+
+/// FU class + latency for one instruction.
+fn classify(inst: &Inst) -> Option<(Fu, u64)> {
+    match inst {
+        Inst::Bin { op, ty, .. } => {
+            if ty.is_float() {
+                match op {
+                    BinOp::Add | BinOp::Sub => Some((Fu::Fadd, 3)),
+                    BinOp::Mul => Some((Fu::Fmul, 3)),
+                    BinOp::Div | BinOp::Rem => Some((Fu::Fmul, 12)),
+                    _ => Some((Fu::Alu, 1)),
+                }
+            } else {
+                match op {
+                    BinOp::Mul => Some((Fu::Alu, 2)),
+                    BinOp::Div | BinOp::Rem => Some((Fu::Alu, 8)),
+                    _ => Some((Fu::Alu, 1)),
+                }
+            }
+        }
+        Inst::Un { .. } | Inst::Cast { .. } | Inst::Select { .. } | Inst::Gep { .. } => {
+            Some((Fu::Alu, 1))
+        }
+        Inst::Load { .. } | Inst::Store { .. } => Some((Fu::Lsu, 3)),
+        Inst::Math { .. } => Some((Fu::Fmul, 10)),
+        Inst::VecBuild { .. } | Inst::VecExtract { .. } | Inst::VecInsert { .. }
+        | Inst::Splat { .. } => Some((Fu::Alu, 1)),
+        Inst::Wi { .. } => Some((Fu::Alu, 1)),
+        Inst::Barrier { .. } | Inst::Marker { .. } => None,
+    }
+}
+
+/// Greedy list schedule of `copies` independent copies of a block's
+/// instruction list onto the FU mix; returns the makespan in cycles.
+fn schedule_block(cfg: &TtaConfig, insts: &[(Option<Reg>, Inst)], copies: usize) -> u64 {
+    // Dependence edges within one copy: register def→use and conservative
+    // memory/control order (stores order against loads and stores).
+    let n = insts.len();
+    let mut ready_dep: Vec<Vec<usize>> = vec![Vec::new(); n]; // preds
+    let mut last_mem: Option<usize> = None;
+    let mut def_site: HashMap<u32, usize> = HashMap::new();
+    for (i, (def, inst)) in insts.iter().enumerate() {
+        for op in inst.operands() {
+            if let Operand::Reg(r) = op {
+                if let Some(&d) = def_site.get(&r.0) {
+                    ready_dep[i].push(d);
+                }
+            }
+        }
+        match inst {
+            Inst::Store { .. } => {
+                if let Some(m) = last_mem {
+                    ready_dep[i].push(m);
+                }
+                last_mem = Some(i);
+            }
+            Inst::Load { .. } => {
+                if let Some(m) = last_mem {
+                    // Loads depend on the last store only (store→load).
+                    if matches!(insts[m].1, Inst::Store { .. }) {
+                        ready_dep[i].push(m);
+                    }
+                }
+            }
+            _ => {}
+        }
+        if let Some(r) = def {
+            def_site.insert(r.0, i);
+        }
+    }
+    // Cycle-by-cycle issue. Copies are fully independent (parallel WI
+    // iterations), so the scheduler interleaves them freely.
+    let total = n * copies;
+    let mut finish: Vec<u64> = vec![0; total];
+    let mut issued: Vec<bool> = vec![false; total];
+    let mut done = 0usize;
+    let mut cycle: u64 = 0;
+    let mut makespan = 0u64;
+    while done < total {
+        let mut used: HashMap<Fu, usize> = HashMap::new();
+        for c in 0..copies {
+            for i in 0..n {
+                let id = c * n + i;
+                if issued[id] {
+                    continue;
+                }
+                let Some((fu, lat)) = classify(&insts[i].1) else {
+                    issued[id] = true;
+                    finish[id] = cycle;
+                    done += 1;
+                    continue;
+                };
+                // Dependencies satisfied?
+                let ok = ready_dep[i]
+                    .iter()
+                    .all(|&d| issued[c * n + d] && finish[c * n + d] <= cycle);
+                if !ok {
+                    continue;
+                }
+                let avail = cfg.units.get(&fu).copied().unwrap_or(1);
+                let u = used.entry(fu).or_insert(0);
+                if *u >= avail {
+                    continue;
+                }
+                *u += 1;
+                issued[id] = true;
+                finish[id] = cycle + lat;
+                makespan = makespan.max(cycle + lat);
+                done += 1;
+            }
+        }
+        cycle += 1;
+        if cycle > 10_000_000 {
+            break; // safety
+        }
+    }
+    makespan.max(1)
+}
+
+/// Cycle model for one work-group function: per-block cycles, with
+/// parallel-WI-loop bodies scheduled `ilp_window`-wide.
+pub struct BlockSchedule {
+    /// Cycles charged per execution of each block.
+    pub cycles: Vec<u64>,
+    /// Blocks that were scheduled with iteration overlap.
+    pub overlapped: Vec<bool>,
+}
+
+/// Build the schedule for `f` using its `wi_loops` metadata.
+pub fn schedule_function(cfg: &TtaConfig, f: &Function) -> BlockSchedule {
+    // Blocks inside parallel WI loops: between header and latch — but only
+    // when the loop body is free of *nested* loops. A static multi-issue
+    // scheduler overlaps iterations by unrolling straight-line(ish)
+    // traces; it cannot software-pipeline across a nested sequential
+    // loop's back edge. This is precisely the §6.4 point: without
+    // horizontal parallelisation the DCT inner loop sits inside the WI
+    // loop body and blocks all overlap; with it, each region body is
+    // branch-light and the FUs fill.
+    let loops = crate::ir::loops::find_loops(f);
+    // Per-block unroll window (0 = sequential); WI loop control blocks of
+    // unrollable loops cost nothing (fully unrolled away — the trip count
+    // is an enqueue-time constant, §4.1).
+    let mut window = vec![0usize; f.blocks.len()];
+    let mut control = vec![false; f.blocks.len()];
+    for m in &f.wi_loops {
+        if !m.parallel {
+            continue;
+        }
+        let body = create_subgraph(f, m.header, m.latch);
+        let has_nested_loop = loops
+            .iter()
+            .any(|l| l.header != m.header && body.binary_search(&l.header).is_ok());
+        if has_nested_loop {
+            continue;
+        }
+        let w = m.trip_count.unwrap_or(cfg.ilp_window).min(cfg.ilp_window.max(16));
+        for b in body {
+            window[b.0 as usize] = w.max(window[b.0 as usize]);
+        }
+        // Constant-trip-count WI loops are fully unrolled: the header
+        // compare/branch and latch increment vanish.
+        control[m.header.0 as usize] = true;
+        control[m.latch.0 as usize] = true;
+        window[m.header.0 as usize] = 0;
+        window[m.latch.0 as usize] = 0;
+    }
+    let mut cycles = Vec::with_capacity(f.blocks.len());
+    let mut overlapped = Vec::with_capacity(f.blocks.len());
+    for (i, block) in f.blocks.iter().enumerate() {
+        if control[i] || block.name.starts_with("wi.init") {
+            // Unrolled-away loop bookkeeping (incl. induction init).
+            cycles.push(0);
+            overlapped.push(false);
+        } else if block.insts.is_empty() {
+            // Empty glue blocks: branch folding makes them free-ish.
+            cycles.push(1);
+            overlapped.push(false);
+        } else if window[i] > 1 {
+            // The §4.1 payoff: the metadata lets the scheduler overlap
+            // iterations without re-proving independence. Charge the
+            // per-iteration amortised cost.
+            let w = window[i] as u64;
+            let span = schedule_block(cfg, &block.insts, window[i]);
+            cycles.push(span.div_ceil(w).max(1));
+            overlapped.push(true);
+        } else {
+            cycles.push(schedule_block(cfg, &block.insts, 1) + 1); // +1 branch
+            overlapped.push(false);
+        }
+    }
+    BlockSchedule { cycles, overlapped }
+}
+
+/// The simulated TTA accelerator device.
+pub struct TtaSimDevice {
+    /// Datapath configuration.
+    pub config: TtaConfig,
+    /// Kernel-compiler options (the §6.4 toggle lives here).
+    pub opts: crate::kcc::CompileOptions,
+}
+
+impl TtaSimDevice {
+    /// Default Table 2 datapath.
+    pub fn new(horizontal: bool) -> TtaSimDevice {
+        TtaSimDevice {
+            config: TtaConfig::default(),
+            opts: crate::kcc::CompileOptions { horizontal, ..Default::default() },
+        }
+    }
+
+    /// Execute + count cycles for one launch (all work-groups).
+    pub fn simulate(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+        let f = &req.wgf.loop_fn;
+        let sched = schedule_function(&self.config, f);
+        let mut stats = LaunchStats::default();
+        let mut local = vec![0u8; req.local_mem.max(1)];
+        for g in req.all_groups() {
+            let ctx = req.ctx(g);
+            let mut full_args = req.args.clone();
+            for d in 0..3 {
+                full_args.push(VVal::i(ctx.group_id[d] as i64));
+            }
+            for d in 0..3 {
+                full_args.push(VVal::i(ctx.num_groups[d] as i64));
+            }
+            for d in 0..3 {
+                full_args.push(VVal::i(ctx.global_offset[d] as i64));
+            }
+            let mut slots = SlotStore::for_function(f);
+            let mut mem = MemoryRefs { global, local: &mut local };
+            let mut m = Machine::new(f, &full_args, &mut slots, &mut mem, &ctx);
+            // Interpret while charging the block schedule.
+            let mut cur = f.entry;
+            loop {
+                stats.cycles += sched.cycles[cur.0 as usize];
+                match m.exec_block(f, cur, false)? {
+                    Flow::Goto(b) => cur = b,
+                    Flow::Done => break,
+                    Flow::AtBarrier(_) => {
+                        return Err(Error::exec("barrier in materialised function"))
+                    }
+                }
+            }
+            stats.workgroups += 1;
+        }
+        Ok(stats)
+    }
+
+    /// Convert cycles to milliseconds at the configured clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.config.clock_mhz as f64 * 1e3)
+    }
+}
+
+impl Device for TtaSimDevice {
+    fn info(&self) -> DeviceInfo {
+        DeviceInfo {
+            name: format!(
+                "ttasim-{}",
+                if self.opts.horizontal { "horizontal" } else { "baseline" }
+            ),
+            tlp: 1,
+            ilp: "static multi-issue (4 ALU, 4 FADD, 4 FMUL, 9 LSU)",
+            dlp: "n/a (Table 1)",
+            global_mem: 64 << 20,
+            local_mem: 64 << 10,
+        }
+    }
+
+    fn compile_options(&self) -> crate::kcc::CompileOptions {
+        self.opts.clone()
+    }
+
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+        self.simulate(global, req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::Type;
+
+    #[test]
+    fn classify_covers_op_classes() {
+        let fadd = Inst::Bin {
+            op: BinOp::Add,
+            ty: Type::F32,
+            a: Operand::cf32(1.0),
+            b: Operand::cf32(2.0),
+        };
+        assert_eq!(classify(&fadd), Some((Fu::Fadd, 3)));
+        let ld = Inst::Load { ty: Type::F32, ptr: Operand::Arg(0) };
+        assert_eq!(classify(&ld).unwrap().0, Fu::Lsu);
+    }
+
+    #[test]
+    fn independent_copies_schedule_wider() {
+        // A float-add chain: one copy is latency-bound; four copies
+        // overlap on the 4 FADD units.
+        let cfg = TtaConfig::default();
+        let mut insts = Vec::new();
+        let mut prev: Option<Reg> = None;
+        for i in 0..8u32 {
+            let a = prev.map(Operand::Reg).unwrap_or(Operand::cf32(1.0));
+            insts.push((
+                Some(Reg(i)),
+                Inst::Bin { op: BinOp::Add, ty: Type::F32, a, b: Operand::cf32(2.0) },
+            ));
+            prev = Some(Reg(i));
+        }
+        let one = schedule_block(&cfg, &insts, 1);
+        let four = schedule_block(&cfg, &insts, 4);
+        assert!(four < one * 4, "overlap exploits the FU mix: {one} vs {four}");
+        assert!(four >= one, "chain latency still bounds");
+    }
+
+    #[test]
+    fn lsu_count_limits_memory_throughput() {
+        let mut narrow = TtaConfig::default();
+        narrow.units.insert(Fu::Lsu, 1);
+        let wide = TtaConfig::default();
+        let insts: Vec<(Option<Reg>, Inst)> = (0..8u32)
+            .map(|i| (Some(Reg(i)), Inst::Load { ty: Type::F32, ptr: Operand::Arg(0) }))
+            .collect();
+        let n = schedule_block(&narrow, &insts, 1);
+        let w = schedule_block(&wide, &insts, 1);
+        assert!(w < n, "9 LSUs beat 1 LSU: {w} vs {n}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Fiber-based work-group executor — the FreeOCL / Twin Peaks baseline
+//! (§7).
+//!
+//! Each work-item is a lightweight "fiber" running the *region-form*
+//! function (`reg_fn`, barriers intact). The scheduler round-robins the
+//! fibers: each runs until it hits a barrier, is parked, and resumes after
+//! every other fiber reaches the same barrier. This is the architecture
+//! the paper argues against: per-work-item control flow prevents static
+//! parallelisation across the work-group, and the context switches are
+//! pure overhead.
+//!
+//! Because barriers live in dedicated blocks (after `kcc::barriers`
+//! normalisation) and registers never cross blocks, a fiber context is
+//! just its resume block plus its private-variable cells — an idealised
+//! (cheapest possible) fiber, which makes the measured fiber-vs-pocl gap
+//! a *lower bound* on the real gap.
+
+use crate::cl::error::{Error, Result};
+use crate::kcc::WorkGroupFunction;
+
+use super::interp::{Flow, LaunchCtx, Machine, SlotStore};
+use super::mem::MemoryRefs;
+use super::value::VVal;
+
+/// Execute one work-group with one fiber per work-item.
+pub fn run_workgroup(
+    wgf: &WorkGroupFunction,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+) -> Result<()> {
+    let f = &wgf.reg_fn;
+    let n = wgf.wg_size();
+    let [lx, ly, _lz] = wgf.local_size;
+    // Per-fiber state: resume block + private cells.
+    let mut resume = vec![f.entry; n];
+    let mut done = vec![false; n];
+    let mut stores: Vec<SlotStore> = (0..n).map(|_| SlotStore::for_function(f)).collect();
+
+    let mut rounds = 0usize;
+    loop {
+        let mut barrier_hit: Option<crate::ir::inst::BlockId> = None;
+        let mut any_running = false;
+        for wi in 0..n {
+            if done[wi] {
+                continue;
+            }
+            any_running = true;
+            // Context switch: bind this fiber's private store.
+            let store = &mut stores[wi];
+            let mut m = Machine::new(f, args, store, mem, ctx);
+            m.local_id = [
+                (wi % lx) as u64,
+                ((wi / lx) % ly) as u64,
+                (wi / (lx * ly)) as u64,
+            ];
+            let mut cur = resume[wi];
+            loop {
+                match m.exec_block(f, cur, true)? {
+                    Flow::Goto(b) => cur = b,
+                    Flow::Done => {
+                        done[wi] = true;
+                        break;
+                    }
+                    Flow::AtBarrier(bb) => {
+                        // Park at the barrier; resume past it next round.
+                        match f.block(bb).term {
+                            crate::ir::inst::Term::Jump(succ) => resume[wi] = succ,
+                            crate::ir::inst::Term::Ret => {
+                                done[wi] = true;
+                            }
+                            _ => return Err(Error::exec("barrier block with branch terminator")),
+                        }
+                        match barrier_hit {
+                            None => barrier_hit = Some(bb),
+                            Some(prev) if prev == bb => {}
+                            Some(prev) => {
+                                return Err(Error::exec(format!(
+                                    "barrier divergence: work-items at bb{} and bb{}",
+                                    prev.0, bb.0
+                                )))
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        if !any_running {
+            return Ok(());
+        }
+        // All fibers must agree: either all done, or all at the same barrier.
+        if barrier_hit.is_some() && done.iter().any(|d| *d) && done.iter().any(|d| !*d) {
+            // Mixed: some returned while others wait at a barrier → the
+            // kernel violated the all-or-none barrier rule. The implicit
+            // exit barrier makes normal termination hit this path with
+            // done=true for all, so reaching here is a real divergence —
+            // unless the "done" fibers finished at the exit barrier this
+            // very round, which `Term::Ret` handling above folds into done.
+        }
+        rounds += 1;
+        if rounds > 100_000_000 {
+            return Err(Error::exec("fiber scheduler exceeded round budget"));
+        }
+    }
+}

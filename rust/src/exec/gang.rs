@@ -1,0 +1,220 @@
+//! Gang (SIMD) work-group executor: the parallel *mapping* stage for
+//! data-parallel hardware.
+//!
+//! Consumes the region-form function (`reg_fn`) plus the parallel-region
+//! structure the kernel compiler exposed: work-items advance **in
+//! lockstep, instruction by instruction, in gangs of `width` lanes**
+//! (width 8 ≈ AVX2, width 4 ≈ NEON / AltiVec — Table 1 of the paper).
+//! Uniform branches keep the gang converged; divergent branches fall back
+//! to per-lane execution until the region's closing barrier — the same
+//! degradation a real vectoriser's masked/scalarised path exhibits, which
+//! is exactly what makes BinarySearch/NBody-style kernels the worst cases
+//! in Fig. 12.
+
+use crate::cl::error::{Error, Result};
+use crate::ir::inst::{BlockId, Term};
+use crate::kcc::WorkGroupFunction;
+
+use super::interp::{Flow, LaunchCtx, Machine, SlotStore};
+use super::mem::MemoryRefs;
+use super::value::VVal;
+
+/// Execution statistics (consumed by benches/tests).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GangStats {
+    /// Gangs executed (chunks × regions).
+    pub gangs: usize,
+    /// Gangs that diverged and fell back to per-lane execution.
+    pub diverged: usize,
+}
+
+/// Execute one work-group in lockstep gangs of `width` lanes.
+pub fn run_workgroup(
+    wgf: &WorkGroupFunction,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+    width: usize,
+) -> Result<GangStats> {
+    let f = &wgf.reg_fn;
+    let n = wgf.wg_size();
+    let [lx, ly, _lz] = wgf.local_size;
+    let mut stats = GangStats::default();
+
+    // One private store per work-item (persists across regions → context
+    // arrays are implicit here; the gang engine *is* the consumer of the
+    // privatisation analysis in spirit, with per-lane cells).
+    let mut stores: Vec<SlotStore> = (0..n).map(|_| SlotStore::for_function(f)).collect();
+    // Per-lane register frames, swapped into the machine per instruction.
+    let mut lane_regs: Vec<Vec<super::value::VVal>> =
+        (0..n).map(|_| vec![VVal::i(0); f.reg_count() as usize]).collect();
+
+    let local_id = |wi: usize| -> [u64; 3] {
+        [(wi % lx) as u64, ((wi / lx) % ly) as u64, (wi / (lx * ly)) as u64]
+    };
+
+    // Walk barriers: all work-items sit at `cur`; execute the region to
+    // the next barrier for every gang; repeat.
+    let mut cur: BlockId = f.entry;
+    loop {
+        let block = f.block(cur);
+        debug_assert!(block.has_barrier());
+        let start = match &block.term {
+            Term::Ret => return Ok(stats),
+            Term::Jump(s) => *s,
+            Term::Br { .. } => return Err(Error::exec("barrier block with branch terminator")),
+        };
+        let mut next_barrier: Option<BlockId> = None;
+        for chunk_start in (0..n).step_by(width) {
+            let lanes: Vec<usize> = (chunk_start..(chunk_start + width).min(n)).collect();
+            stats.gangs += 1;
+            let reached = run_gang_region(
+                f, args, mem, ctx, &mut stores, &mut lane_regs, &lanes, start, local_id,
+                &mut stats,
+            )?;
+            match next_barrier {
+                None => next_barrier = Some(reached),
+                Some(prev) if prev == reached => {}
+                Some(prev) => {
+                    return Err(Error::exec(format!(
+                        "barrier divergence across gangs: bb{} vs bb{}",
+                        prev.0, reached.0
+                    )))
+                }
+            }
+        }
+        cur = next_barrier.expect("work-group is non-empty");
+    }
+}
+
+/// Run one gang through one region (from `start` to the next barrier
+/// block), in lockstep until divergence.
+#[allow(clippy::too_many_arguments)]
+fn run_gang_region(
+    f: &crate::ir::func::Function,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+    stores: &mut [SlotStore],
+    lane_regs: &mut [Vec<VVal>],
+    lanes: &[usize],
+    start: BlockId,
+    local_id: impl Fn(usize) -> [u64; 3],
+    stats: &mut GangStats,
+) -> Result<BlockId> {
+    let mut cur = start;
+    loop {
+        if f.block(cur).has_barrier() {
+            return Ok(cur);
+        }
+        // Lockstep: each instruction evaluated for every lane before the
+        // next instruction — the interpreter-level model of a vectorised
+        // work-item loop body. Instructions are borrowed, not cloned
+        // (cloning `Inst` allocates for call/vector operand lists and
+        // dominated the hot loop; see EXPERIMENTS.md §Perf).
+        for (def, inst) in &f.block(cur).insts {
+            for &wi in lanes {
+                let store = &mut stores[wi];
+                let mut m = Machine {
+                    regs: std::mem::take(&mut lane_regs[wi]),
+                    args,
+                    slots: store,
+                    mem,
+                    ctx,
+                    local_id: local_id(wi),
+                };
+                let v = m.eval(f, inst)?;
+                if let Some(r) = def {
+                    m.regs[r.0 as usize] = v;
+                }
+                lane_regs[wi] = std::mem::take(&mut m.regs);
+            }
+        }
+        // Terminator: converged or divergent?
+        match f.block(cur).term.clone() {
+            Term::Jump(t) => cur = t,
+            Term::Ret => {
+                // Region form always funnels into the exit barrier; a bare
+                // Ret here means the kernel returned mid-region (possible
+                // for "dead" blocks) — treat as reaching the exit barrier.
+                return Err(Error::exec("unexpected ret inside region"));
+            }
+            Term::Br { cond, t, f: fb } => {
+                let mut target: Option<BlockId> = None;
+                let mut diverged = false;
+                let mut lane_targets = Vec::with_capacity(lanes.len());
+                for &wi in lanes {
+                    let c = match cond {
+                        crate::ir::inst::Operand::Reg(r) => {
+                            lane_regs[wi][r.0 as usize].scalar().truthy()
+                        }
+                        ref op => {
+                            // Immediates/args are lane-invariant.
+                            let store = &mut stores[wi];
+                            let m = Machine {
+                                regs: Vec::new(),
+                                args,
+                                slots: store,
+                                mem,
+                                ctx,
+                                local_id: local_id(wi),
+                            };
+                            m.operand(op).scalar().truthy()
+                        }
+                    };
+                    let tgt = if c { t } else { fb };
+                    lane_targets.push(tgt);
+                    match target {
+                        None => target = Some(tgt),
+                        Some(prev) if prev != tgt => diverged = true,
+                        _ => {}
+                    }
+                }
+                if !diverged {
+                    cur = target.unwrap();
+                } else {
+                    // Fall back: finish the region per-lane (the masked /
+                    // scalarised path of a real vectoriser).
+                    stats.diverged += 1;
+                    let mut reached: Option<BlockId> = None;
+                    for (i, &wi) in lanes.iter().enumerate() {
+                        let store = &mut stores[wi];
+                        let mut m = Machine {
+                            regs: std::mem::take(&mut lane_regs[wi]),
+                            args,
+                            slots: store,
+                            mem,
+                            ctx,
+                            local_id: local_id(wi),
+                        };
+                        let mut pos = lane_targets[i];
+                        let bar = loop {
+                            if f.block(pos).has_barrier() {
+                                break pos;
+                            }
+                            match m.exec_block(f, pos, true)? {
+                                Flow::Goto(b) => pos = b,
+                                Flow::Done => {
+                                    return Err(Error::exec("lane returned mid-region"))
+                                }
+                                Flow::AtBarrier(bb) => break bb,
+                            }
+                        };
+                        lane_regs[wi] = std::mem::take(&mut m.regs);
+                        match reached {
+                            None => reached = Some(bar),
+                            Some(prev) if prev == bar => {}
+                            Some(prev) => {
+                                return Err(Error::exec(format!(
+                                    "barrier divergence within gang: bb{} vs bb{}",
+                                    prev.0, bar.0
+                                )))
+                            }
+                        }
+                    }
+                    return Ok(reached.unwrap());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,624 @@
+//! The core IR interpreter: executes one invocation of a function over
+//! one "lane" (a work-item, or a whole work-group function).
+//!
+//! All engines share `Machine` (the instruction evaluator); they differ in
+//! *scheduling*: the serial engine runs the WI-loop-materialised function
+//! straight through, the fiber engine round-robins work-items between
+//! barriers, and the gang engine steps regions in lane-lockstep.
+
+use crate::cl::error::{Error, Result};
+use crate::ir::func::Function;
+use crate::ir::inst::{BinOp, BlockId, Imm, Inst, MathFn, Operand, SlotId, Term, UnOp, WiFn};
+use crate::ir::types::{Scalar, Type};
+use crate::vecmath::{scalar32, scalar64};
+
+use super::mem::MemoryRefs;
+use super::value::{norm_float, norm_int, space_tag, Val, VVal, SP_PRIVATE};
+
+/// Launch geometry shared by all engines.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaunchCtx {
+    /// Work-group id per dimension.
+    pub group_id: [u64; 3],
+    /// Number of work-groups per dimension.
+    pub num_groups: [u64; 3],
+    /// Global offset per dimension.
+    pub global_offset: [u64; 3],
+    /// Local size per dimension.
+    pub local_size: [usize; 3],
+    /// Work dimension (1–3).
+    pub work_dim: u32,
+}
+
+/// Private-variable storage: each slot is a contiguous run of cells in one
+/// flat vector (layout computed once per function).
+pub struct SlotStore {
+    /// Cell values.
+    pub cells: Vec<VVal>,
+    /// Slot → first cell index.
+    pub base: Vec<u32>,
+}
+
+impl SlotStore {
+    /// Allocate storage for a function's slots.
+    pub fn for_function(f: &Function) -> SlotStore {
+        let mut base = Vec::with_capacity(f.slots.len());
+        let mut total = 0u32;
+        for s in &f.slots {
+            base.push(total);
+            total += s.count as u32;
+        }
+        SlotStore { cells: vec![VVal::S(Val::I(0)); total as usize], base }
+    }
+
+    /// Base cell index of a slot.
+    pub fn slot_base(&self, s: SlotId) -> u64 {
+        self.base[s.0 as usize] as u64
+    }
+}
+
+/// The instruction evaluator: a register frame bound to argument values,
+/// slot storage, memory, and a launch context + local id.
+pub struct Machine<'m, 'a> {
+    /// Register values (indexed by register number).
+    pub regs: Vec<VVal>,
+    /// Argument values.
+    pub args: &'a [VVal],
+    /// Private cells.
+    pub slots: &'a mut SlotStore,
+    /// Global/local memory.
+    pub mem: &'a mut MemoryRefs<'m>,
+    /// Launch geometry.
+    pub ctx: &'a LaunchCtx,
+    /// The local id this machine evaluates `get_local_id` to (engines that
+    /// run pre-materialisation IR set this per work-item; the serial
+    /// engine never sees `Wi` instructions).
+    pub local_id: [u64; 3],
+}
+
+/// Where control went after executing a block.
+pub enum Flow {
+    /// Jumped to the given block.
+    Goto(BlockId),
+    /// Function returned.
+    Done,
+    /// Execution stopped at a barrier instruction inside the block
+    /// (engines that run barrier-carrying IR): the block and instruction
+    /// index of the barrier.
+    AtBarrier(BlockId),
+}
+
+impl<'m, 'a> Machine<'m, 'a> {
+    /// Create a machine with a frame sized for `f`.
+    pub fn new(
+        f: &Function,
+        args: &'a [VVal],
+        slots: &'a mut SlotStore,
+        mem: &'a mut MemoryRefs<'m>,
+        ctx: &'a LaunchCtx,
+    ) -> Machine<'m, 'a> {
+        Machine {
+            regs: vec![VVal::S(Val::I(0)); f.reg_count() as usize],
+            args,
+            slots,
+            mem,
+            ctx,
+            local_id: [0; 3],
+        }
+    }
+
+    /// Run from `entry` until `Ret`, ignoring barriers (they must have
+    /// been compiled away — loop_fn path).
+    pub fn run(&mut self, f: &Function, entry: BlockId) -> Result<()> {
+        let mut cur = entry;
+        let mut steps = 0usize;
+        loop {
+            match self.exec_block(f, cur, false)? {
+                Flow::Goto(b) => cur = b,
+                Flow::Done => return Ok(()),
+                Flow::AtBarrier(_) => {
+                    return Err(Error::exec("unexpected barrier in materialised function"))
+                }
+            }
+            steps += 1;
+            if steps > 1_000_000_000 {
+                return Err(Error::exec("kernel exceeded block-step budget (infinite loop?)"));
+            }
+        }
+    }
+
+    /// Execute a single block. If `stop_at_barrier`, returns
+    /// `Flow::AtBarrier` when a barrier instruction is met (the barrier
+    /// block's successor is where execution should resume).
+    pub fn exec_block(&mut self, f: &Function, bb: BlockId, stop_at_barrier: bool) -> Result<Flow> {
+        let block = f.block(bb);
+        for (def, inst) in &block.insts {
+            if inst.is_barrier() {
+                if stop_at_barrier {
+                    return Ok(Flow::AtBarrier(bb));
+                }
+                continue;
+            }
+            let v = self.eval(f, inst)?;
+            if let Some(r) = def {
+                self.regs[r.0 as usize] = v;
+            }
+        }
+        match &block.term {
+            Term::Jump(t) => Ok(Flow::Goto(*t)),
+            Term::Br { cond, t, f: fb } => {
+                let c = self.operand(cond).scalar().truthy();
+                Ok(Flow::Goto(if c { *t } else { *fb }))
+            }
+            Term::Ret => Ok(Flow::Done),
+        }
+    }
+
+    /// Operand → value.
+    #[inline]
+    pub fn operand(&self, op: &Operand) -> VVal {
+        match op {
+            Operand::Reg(r) => self.regs[r.0 as usize].clone(),
+            Operand::Imm(Imm::Int(v, s)) => VVal::S(Val::I(norm_int(*v, *s))),
+            Operand::Imm(Imm::Float(v, s)) => VVal::S(Val::F(norm_float(*v, *s))),
+            Operand::Arg(a) => self.args[*a as usize].clone(),
+            Operand::Slot(s) => VVal::ptr(SP_PRIVATE, self.slots.slot_base(*s)),
+        }
+    }
+
+    /// Evaluate one (non-barrier, non-terminator) instruction.
+    pub fn eval(&mut self, f: &Function, inst: &Inst) -> Result<VVal> {
+        match inst {
+            Inst::Bin { op, ty, a, b } => {
+                let (av, bv) = (self.operand(a), self.operand(b));
+                eval_bin(*op, ty, &av, &bv)
+            }
+            Inst::Un { op, ty, a } => {
+                let av = self.operand(a);
+                eval_un(*op, ty, &av)
+            }
+            Inst::Cast { to, from, a } => {
+                let av = self.operand(a);
+                Ok(eval_cast(&av, from, to))
+            }
+            Inst::Load { ty, ptr } => {
+                let p = self.operand(ptr).scalar();
+                match p {
+                    Val::Ptr { space: SP_PRIVATE, offset } => {
+                        Ok(self.slots.cells[offset as usize].clone())
+                    }
+                    Val::Ptr { space, offset } => self.mem.load(space, offset, ty),
+                    _ => Err(Error::exec("load through non-pointer")),
+                }
+            }
+            Inst::Store { ty, ptr, val } => {
+                let p = self.operand(ptr).scalar();
+                let v = self.operand(val);
+                let v = normalize_to(&v, ty);
+                match p {
+                    Val::Ptr { space: SP_PRIVATE, offset } => {
+                        let cell = self
+                            .slots
+                            .cells
+                            .get_mut(offset as usize)
+                            .ok_or_else(|| Error::exec("private store out of bounds"))?;
+                        *cell = v;
+                        Ok(VVal::i(0))
+                    }
+                    Val::Ptr { space, offset } => {
+                        self.mem.store(space, offset, ty, &v)?;
+                        Ok(VVal::i(0))
+                    }
+                    _ => Err(Error::exec("store through non-pointer")),
+                }
+            }
+            Inst::Gep { elem, base, idx } => {
+                let b = self.operand(base).scalar();
+                let i = self.operand(idx).scalar().as_i();
+                match b {
+                    Val::Ptr { space: SP_PRIVATE, offset } => {
+                        // Private memory is cell-addressed.
+                        Ok(VVal::ptr(SP_PRIVATE, (offset as i64 + i) as u64))
+                    }
+                    Val::Ptr { space, offset } => {
+                        let off = offset as i64 + i * elem.size() as i64;
+                        Ok(VVal::ptr(space, off as u64))
+                    }
+                    _ => Err(Error::exec("gep on non-pointer")),
+                }
+            }
+            Inst::Wi { func, dim } => {
+                let d = (*dim).min(2) as usize;
+                let v = match func {
+                    WiFn::LocalId => self.local_id[d],
+                    WiFn::GroupId => self.ctx.group_id[d],
+                    WiFn::GlobalId => {
+                        self.ctx.group_id[d] * self.ctx.local_size[d] as u64
+                            + self.local_id[d]
+                            + self.ctx.global_offset[d]
+                    }
+                    WiFn::LocalSize => self.ctx.local_size[d] as u64,
+                    WiFn::GlobalSize => self.ctx.num_groups[d] * self.ctx.local_size[d] as u64,
+                    WiFn::NumGroups => self.ctx.num_groups[d],
+                    WiFn::GlobalOffset => self.ctx.global_offset[d],
+                    WiFn::WorkDim => self.ctx.work_dim as u64,
+                };
+                Ok(VVal::i(v as i64))
+            }
+            Inst::Math { func, ty, args } => {
+                let vals: Vec<VVal> = args.iter().map(|a| self.operand(a)).collect();
+                eval_math(*func, ty, &vals)
+            }
+            Inst::Select { ty, cond, a, b } => {
+                let c = self.operand(cond);
+                let (av, bv) = (self.operand(a), self.operand(b));
+                let lanes = ty.lanes();
+                if lanes == 1 {
+                    Ok(if c.scalar().truthy() { av } else { bv })
+                } else {
+                    let out: Vec<Val> = (0..lanes)
+                        .map(|l| {
+                            let cl = if c.lanes() == 1 { c.lane(0) } else { c.lane(l) };
+                            if cl.truthy() {
+                                av.lane(l)
+                            } else {
+                                bv.lane(l)
+                            }
+                        })
+                        .collect();
+                    Ok(VVal::V(out))
+                }
+            }
+            Inst::VecBuild { ty, elems } => {
+                let s = ty.elem_scalar().unwrap();
+                let out: Vec<Val> =
+                    elems.iter().map(|e| norm_val(self.operand(e).scalar(), s)).collect();
+                Ok(VVal::V(out))
+            }
+            Inst::VecExtract { a, lane, .. } => {
+                let v = self.operand(a);
+                Ok(VVal::S(v.lane(*lane as usize)))
+            }
+            Inst::VecInsert { a, lane, v, .. } => {
+                let mut base = match self.operand(a) {
+                    VVal::V(l) => l,
+                    VVal::S(s) => vec![s],
+                };
+                let nv = self.operand(v).scalar();
+                base[*lane as usize] = nv;
+                Ok(VVal::V(base))
+            }
+            Inst::Splat { ty, a } => {
+                let s = ty.elem_scalar().unwrap();
+                let v = norm_val(self.operand(a).scalar(), s);
+                Ok(VVal::V(vec![v; ty.lanes()]))
+            }
+            Inst::Barrier { .. } | Inst::Marker { .. } => Ok(VVal::i(0)),
+        }
+        .map_err(|e| add_ctx(e, f, inst))
+    }
+}
+
+fn add_ctx(e: Error, f: &Function, inst: &Inst) -> Error {
+    match e {
+        Error::Exec(m) => Error::Exec(format!("{m} (in `{}`, inst {:?})", f.name, inst)),
+        other => other,
+    }
+}
+
+fn norm_val(v: Val, s: Scalar) -> Val {
+    match (v, s.is_float()) {
+        (Val::I(i), false) => Val::I(norm_int(i, s)),
+        (Val::I(i), true) => Val::F(norm_float(i as f64, s)),
+        (Val::F(f), true) => Val::F(norm_float(f, s)),
+        (Val::F(f), false) => Val::I(norm_int(f as i64, s)),
+        (p @ Val::Ptr { .. }, _) => p,
+    }
+}
+
+fn normalize_to(v: &VVal, ty: &Type) -> VVal {
+    let Some(s) = ty.elem_scalar() else { return v.clone() };
+    match v {
+        VVal::S(x) => VVal::S(norm_val(*x, s)),
+        VVal::V(l) => VVal::V(l.iter().map(|x| norm_val(*x, s)).collect()),
+    }
+}
+
+/// Binary op over scalars or lane-wise over vectors (with scalar
+/// broadcast).
+pub fn eval_bin(op: BinOp, ty: &Type, a: &VVal, b: &VVal) -> Result<VVal> {
+    let lanes = ty.lanes().max(a.lanes()).max(b.lanes());
+    let s = ty.elem_scalar().unwrap_or(Scalar::I32);
+    if lanes == 1 {
+        return Ok(VVal::S(bin_scalar(op, s, a.scalar(), b.scalar())?));
+    }
+    let mut out = Vec::with_capacity(lanes);
+    for l in 0..lanes {
+        let al = if a.lanes() == 1 { a.lane(0) } else { a.lane(l) };
+        let bl = if b.lanes() == 1 { b.lane(0) } else { b.lane(l) };
+        out.push(bin_scalar(op, s, al, bl)?);
+    }
+    Ok(VVal::V(out))
+}
+
+fn bin_scalar(op: BinOp, s: Scalar, a: Val, b: Val) -> Result<Val> {
+    use BinOp::*;
+    if s.is_float() && !matches!(op, And | Or | Xor | Shl | Shr) {
+        let (x, y) = (a.as_f(), b.as_f());
+        let r = match op {
+            Add => x + y,
+            Sub => x - y,
+            Mul => x * y,
+            Div => x / y,
+            Rem => x % y,
+            Eq => return Ok(Val::I((x == y) as i64)),
+            Ne => return Ok(Val::I((x != y) as i64)),
+            Lt => return Ok(Val::I((x < y) as i64)),
+            Le => return Ok(Val::I((x <= y) as i64)),
+            Gt => return Ok(Val::I((x > y) as i64)),
+            Ge => return Ok(Val::I((x >= y) as i64)),
+            LAnd => return Ok(Val::I((x != 0.0 && y != 0.0) as i64)),
+            LOr => return Ok(Val::I((x != 0.0 || y != 0.0) as i64)),
+            _ => unreachable!(),
+        };
+        return Ok(Val::F(norm_float(r, s)));
+    }
+    let (x, y) = (norm_int(a.as_i(), s), norm_int(b.as_i(), s));
+    let unsigned = matches!(s, Scalar::U32 | Scalar::U64 | Scalar::Bool);
+    let r = match op {
+        Add => x.wrapping_add(y),
+        Sub => x.wrapping_sub(y),
+        Mul => x.wrapping_mul(y),
+        Div => {
+            if y == 0 {
+                return Err(Error::exec("integer division by zero"));
+            }
+            if unsigned {
+                ((x as u64) / (y as u64)) as i64
+            } else {
+                x.wrapping_div(y)
+            }
+        }
+        Rem => {
+            if y == 0 {
+                return Err(Error::exec("integer remainder by zero"));
+            }
+            if unsigned {
+                ((x as u64) % (y as u64)) as i64
+            } else {
+                x.wrapping_rem(y)
+            }
+        }
+        And => x & y,
+        Or => x | y,
+        Xor => x ^ y,
+        Shl => x.wrapping_shl(y as u32),
+        Shr => {
+            if unsigned {
+                ((x as u64) >> (y as u64 & 63)) as i64
+            } else {
+                x >> (y & 63)
+            }
+        }
+        Eq => return Ok(Val::I((x == y) as i64)),
+        Ne => return Ok(Val::I((x != y) as i64)),
+        Lt | Le | Gt | Ge => {
+            let c = if unsigned {
+                let (ux, uy) = (x as u64, y as u64);
+                match op {
+                    Lt => ux < uy,
+                    Le => ux <= uy,
+                    Gt => ux > uy,
+                    _ => ux >= uy,
+                }
+            } else {
+                match op {
+                    Lt => x < y,
+                    Le => x <= y,
+                    Gt => x > y,
+                    _ => x >= y,
+                }
+            };
+            return Ok(Val::I(c as i64));
+        }
+        LAnd => return Ok(Val::I((x != 0 && y != 0) as i64)),
+        LOr => return Ok(Val::I((x != 0 || y != 0) as i64)),
+    };
+    Ok(Val::I(norm_int(r, s)))
+}
+
+fn eval_un(op: UnOp, ty: &Type, a: &VVal) -> Result<VVal> {
+    let s = ty.elem_scalar().unwrap_or(Scalar::I32);
+    let f = |v: Val| -> Val {
+        match op {
+            UnOp::Neg => {
+                if s.is_float() {
+                    Val::F(-v.as_f())
+                } else {
+                    Val::I(norm_int(v.as_i().wrapping_neg(), s))
+                }
+            }
+            UnOp::Not => Val::I(norm_int(!v.as_i(), s)),
+            UnOp::LNot => Val::I(!v.truthy() as i64),
+        }
+    };
+    Ok(match a {
+        VVal::S(v) => VVal::S(f(*v)),
+        VVal::V(l) => VVal::V(l.iter().map(|v| f(*v)).collect()),
+    })
+}
+
+fn eval_cast(a: &VVal, _from: &Type, to: &Type) -> VVal {
+    let Some(s) = to.elem_scalar() else { return a.clone() };
+    let conv = |v: Val| norm_val(v, s);
+    match (a, to.lanes()) {
+        (VVal::S(v), 1) => VVal::S(conv(*v)),
+        (VVal::S(v), n) => VVal::V(vec![conv(*v); n]),
+        (VVal::V(l), _) => VVal::V(l.iter().map(|v| conv(*v)).collect()),
+    }
+}
+
+/// Math builtin dispatch — scalar fns from `vecmath` applied lane-wise
+/// (the Vecmathlib linkage of §5).
+pub fn eval_math(func: MathFn, ty: &Type, args: &[VVal]) -> Result<VVal> {
+    use MathFn::*;
+    let s = ty.elem_scalar().unwrap_or(Scalar::F32);
+    let lanes = ty.lanes();
+    // Reductions over vectors first.
+    match func {
+        Dot => {
+            let mut acc = 0.0f64;
+            for l in 0..args[0].lanes() {
+                acc += args[0].lane(l).as_f() * args[1].lane(l).as_f();
+            }
+            return Ok(VVal::S(Val::F(norm_float(acc, s))));
+        }
+        Length => {
+            let mut acc = 0.0f64;
+            for l in 0..args[0].lanes() {
+                let v = args[0].lane(l).as_f();
+                acc += v * v;
+            }
+            return Ok(VVal::S(Val::F(norm_float(acc.sqrt(), s))));
+        }
+        Distance => {
+            let mut acc = 0.0f64;
+            for l in 0..args[0].lanes() {
+                let d = args[0].lane(l).as_f() - args[1].lane(l).as_f();
+                acc += d * d;
+            }
+            return Ok(VVal::S(Val::F(norm_float(acc.sqrt(), s))));
+        }
+        Normalize => {
+            let mut acc = 0.0f64;
+            for l in 0..args[0].lanes() {
+                let v = args[0].lane(l).as_f();
+                acc += v * v;
+            }
+            let inv = 1.0 / acc.sqrt();
+            let out: Vec<Val> = (0..args[0].lanes())
+                .map(|l| Val::F(norm_float(args[0].lane(l).as_f() * inv, s)))
+                .collect();
+            return Ok(VVal::V(out));
+        }
+        _ => {}
+    }
+    let lane_of = |a: &VVal, l: usize| if a.lanes() == 1 { a.lane(0) } else { a.lane(l) };
+    let mut out = Vec::with_capacity(lanes);
+    for l in 0..lanes {
+        let v = math_scalar(func, s, args, |i| lane_of(&args[i], l))?;
+        out.push(v);
+    }
+    Ok(if lanes == 1 { VVal::S(out[0]) } else { VVal::V(out) })
+}
+
+fn math_scalar(
+    func: MathFn,
+    s: Scalar,
+    _args: &[VVal],
+    get: impl Fn(usize) -> Val,
+) -> Result<Val> {
+    use MathFn::*;
+    // Integer builtins.
+    if s.is_int() {
+        let a = get(0).as_i();
+        return Ok(Val::I(norm_int(
+            match func {
+                Min => a.min(get(1).as_i()),
+                Max => a.max(get(1).as_i()),
+                Clamp => a.max(get(1).as_i()).min(get(2).as_i()),
+                Abs => a.abs(),
+                _ => return Err(Error::exec(format!("{func:?} on integer type"))),
+            },
+            s,
+        )));
+    }
+    let x = get(0).as_f();
+    let f64p = s == Scalar::F64;
+    let r = match func {
+        Sqrt => x.sqrt(),
+        RSqrt | NativeRSqrt => 1.0 / x.sqrt(),
+        NativeSqrt => x.sqrt(),
+        Exp | NativeExp => {
+            if f64p {
+                scalar64::exp(x)
+            } else {
+                scalar32::exp(x as f32) as f64
+            }
+        }
+        Exp2 => {
+            if f64p {
+                scalar64::exp(x * core::f64::consts::LN_2)
+            } else {
+                scalar32::exp2(x as f32) as f64
+            }
+        }
+        Log | NativeLog => {
+            if f64p {
+                scalar64::log(x)
+            } else {
+                scalar32::log(x as f32) as f64
+            }
+        }
+        Log2 => {
+            if f64p {
+                scalar64::log(x) * core::f64::consts::LOG2_E
+            } else {
+                scalar32::log2(x as f32) as f64
+            }
+        }
+        Sin | NativeSin => {
+            if f64p {
+                scalar64::sin(x)
+            } else {
+                scalar32::sin(x as f32) as f64
+            }
+        }
+        Cos | NativeCos => {
+            if f64p {
+                scalar64::cos(x)
+            } else {
+                scalar32::cos(x as f32) as f64
+            }
+        }
+        Tan => {
+            if f64p {
+                scalar64::sin(x) / scalar64::cos(x)
+            } else {
+                scalar32::tan(x as f32) as f64
+            }
+        }
+        Fabs => {
+            if f64p {
+                scalar64::fabs(x)
+            } else {
+                scalar32::fabs(x as f32) as f64
+            }
+        }
+        Floor => x.floor(),
+        Ceil => x.ceil(),
+        Round => x.round(),
+        Trunc => x.trunc(),
+        Pow => {
+            if f64p {
+                scalar64::pow(x, get(1).as_f())
+            } else {
+                scalar32::pow(x as f32, get(1).as_f() as f32) as f64
+            }
+        }
+        Fmin | Min => x.min(get(1).as_f()),
+        Fmax | Max => x.max(get(1).as_f()),
+        Fmod => x % get(1).as_f(),
+        Mad | Fma => x * get(1).as_f() + get(2).as_f(),
+        Clamp => x.max(get(1).as_f()).min(get(2).as_f()),
+        Abs => x.abs(),
+        Mix => {
+            let (y, a) = (get(1).as_f(), get(2).as_f());
+            x + (y - x) * a
+        }
+        NativeDivide => x / get(1).as_f(),
+        NativeRecip => 1.0 / x,
+        Dot | Length | Normalize | Distance => unreachable!("handled above"),
+    };
+    Ok(Val::F(norm_float(r, s)))
+}

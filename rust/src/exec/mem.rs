@@ -1,0 +1,191 @@
+//! Byte-addressed device memory with typed access.
+//!
+//! Global/local/constant memory are flat byte buffers (global is backed by
+//! the device's Bufalloc region); private variables live in typed cell
+//! storage managed by the engines, not here.
+
+use crate::cl::error::{Error, Result};
+use crate::ir::types::{Scalar, Type};
+
+use super::value::{norm_int, Val, VVal};
+
+/// Mutable views of the memory spaces a kernel invocation can touch.
+pub struct MemoryRefs<'a> {
+    /// Device global memory (also serves __constant).
+    pub global: &'a mut [u8],
+    /// Per-work-group local memory.
+    pub local: &'a mut [u8],
+}
+
+impl<'a> MemoryRefs<'a> {
+    fn space(&mut self, tag: u8) -> &mut [u8] {
+        match tag {
+            super::value::SP_LOCAL => self.local,
+            _ => self.global,
+        }
+    }
+
+    /// Load a typed value at a byte offset.
+    pub fn load(&mut self, tag: u8, offset: u64, ty: &Type) -> Result<VVal> {
+        let s = ty.elem_scalar().ok_or_else(|| Error::exec("load of non-value type"))?;
+        let lanes = ty.lanes();
+        let esz = s.size();
+        let buf = self.space(tag);
+        let need = offset as usize + esz * lanes;
+        if need > buf.len() {
+            return Err(Error::exec(format!(
+                "out-of-bounds load: {}+{} > {} (space {tag})",
+                offset,
+                esz * lanes,
+                buf.len()
+            )));
+        }
+        let mut vals = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            let off = offset as usize + l * esz;
+            vals.push(load_scalar(buf, off, s));
+        }
+        Ok(if lanes == 1 { VVal::S(vals[0]) } else { VVal::V(vals) })
+    }
+
+    /// Store a typed value at a byte offset.
+    pub fn store(&mut self, tag: u8, offset: u64, ty: &Type, v: &VVal) -> Result<()> {
+        let s = ty.elem_scalar().ok_or_else(|| Error::exec("store of non-value type"))?;
+        let lanes = ty.lanes();
+        let esz = s.size();
+        let buf = self.space(tag);
+        let need = offset as usize + esz * lanes;
+        if need > buf.len() {
+            return Err(Error::exec(format!(
+                "out-of-bounds store: {}+{} > {} (space {tag})",
+                offset,
+                esz * lanes,
+                buf.len()
+            )));
+        }
+        for l in 0..lanes {
+            let off = offset as usize + l * esz;
+            store_scalar(buf, off, s, v.lane(l));
+        }
+        Ok(())
+    }
+}
+
+fn load_scalar(buf: &[u8], off: usize, s: Scalar) -> Val {
+    match s {
+        Scalar::F32 => {
+            Val::F(f32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as f64)
+        }
+        Scalar::F64 => Val::F(f64::from_le_bytes(buf[off..off + 8].try_into().unwrap())),
+        Scalar::I32 => Val::I(i32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as i64),
+        Scalar::U32 => {
+            Val::I(u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as i64)
+        }
+        Scalar::I64 | Scalar::U64 => {
+            Val::I(i64::from_le_bytes(buf[off..off + 8].try_into().unwrap()))
+        }
+        Scalar::Bool => Val::I((buf[off] != 0) as i64),
+    }
+}
+
+fn store_scalar(buf: &mut [u8], off: usize, s: Scalar, v: Val) {
+    match s {
+        Scalar::F32 => buf[off..off + 4].copy_from_slice(&(v.as_f() as f32).to_le_bytes()),
+        Scalar::F64 => buf[off..off + 8].copy_from_slice(&v.as_f().to_le_bytes()),
+        Scalar::I32 | Scalar::U32 => {
+            buf[off..off + 4].copy_from_slice(&(norm_int(v.as_i(), s) as u32).to_le_bytes())
+        }
+        Scalar::I64 | Scalar::U64 => buf[off..off + 8].copy_from_slice(&v.as_i().to_le_bytes()),
+        Scalar::Bool => buf[off] = v.truthy() as u8,
+    }
+}
+
+/// Host-side helpers for filling/reading flat buffers.
+pub fn write_f32s(buf: &mut [u8], offset: usize, data: &[f32]) {
+    for (i, v) in data.iter().enumerate() {
+        buf[offset + i * 4..offset + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Read f32s back from a flat buffer.
+pub fn read_f32s(buf: &[u8], offset: usize, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| f32::from_le_bytes(buf[offset + i * 4..offset + i * 4 + 4].try_into().unwrap()))
+        .collect()
+}
+
+/// Write i32s into a flat buffer.
+pub fn write_i32s(buf: &mut [u8], offset: usize, data: &[i32]) {
+    for (i, v) in data.iter().enumerate() {
+        buf[offset + i * 4..offset + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Read i32s back from a flat buffer.
+pub fn read_i32s(buf: &[u8], offset: usize, n: usize) -> Vec<i32> {
+    (0..n)
+        .map(|i| i32::from_le_bytes(buf[offset + i * 4..offset + i * 4 + 4].try_into().unwrap()))
+        .collect()
+}
+
+/// Write u32s into a flat buffer.
+pub fn write_u32s(buf: &mut [u8], offset: usize, data: &[u32]) {
+    for (i, v) in data.iter().enumerate() {
+        buf[offset + i * 4..offset + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Read u32s back from a flat buffer.
+pub fn read_u32s(buf: &[u8], offset: usize, n: usize) -> Vec<u32> {
+    (0..n)
+        .map(|i| u32::from_le_bytes(buf[offset + i * 4..offset + i * 4 + 4].try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::value::SP_GLOBAL;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut g = vec![0u8; 64];
+        let mut l = vec![0u8; 0];
+        let mut m = MemoryRefs { global: &mut g, local: &mut l };
+        m.store(SP_GLOBAL, 0, &Type::F32, &VVal::f(1.5)).unwrap();
+        m.store(SP_GLOBAL, 8, &Type::I32, &VVal::i(-3)).unwrap();
+        assert_eq!(m.load(SP_GLOBAL, 0, &Type::F32).unwrap(), VVal::f(1.5));
+        assert_eq!(m.load(SP_GLOBAL, 8, &Type::I32).unwrap(), VVal::i(-3));
+    }
+
+    #[test]
+    fn roundtrip_vectors() {
+        let mut g = vec![0u8; 64];
+        let mut l = vec![0u8; 0];
+        let mut m = MemoryRefs { global: &mut g, local: &mut l };
+        let ty = Type::Vec(Scalar::F32, 4);
+        let v = VVal::V(vec![Val::F(1.0), Val::F(2.0), Val::F(3.0), Val::F(4.0)]);
+        m.store(SP_GLOBAL, 16, &ty, &v).unwrap();
+        assert_eq!(m.load(SP_GLOBAL, 16, &ty).unwrap(), v);
+        // Lanes are consecutive f32s.
+        assert_eq!(read_f32s(&g, 16, 4), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn oob_is_an_error() {
+        let mut g = vec![0u8; 8];
+        let mut l = vec![0u8; 0];
+        let mut m = MemoryRefs { global: &mut g, local: &mut l };
+        assert!(m.load(SP_GLOBAL, 8, &Type::F32).is_err());
+        assert!(m.store(SP_GLOBAL, 6, &Type::F32, &VVal::f(0.0)).is_err());
+    }
+
+    #[test]
+    fn u32_sign_handling() {
+        let mut g = vec![0u8; 8];
+        let mut l = vec![0u8; 0];
+        let mut m = MemoryRefs { global: &mut g, local: &mut l };
+        m.store(SP_GLOBAL, 0, &Type::U32, &VVal::i(-1)).unwrap();
+        assert_eq!(m.load(SP_GLOBAL, 0, &Type::U32).unwrap(), VVal::i(0xFFFF_FFFF));
+    }
+}

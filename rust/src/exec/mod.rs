@@ -1,0 +1,404 @@
+//! Execution engines for compiled work-group functions.
+//!
+//! * [`serial`] — runs the WI-loop-materialised `loop_fn` (paper `basic`).
+//! * [`gang`] — lockstep SIMD-style execution of `reg_fn` regions.
+//! * [`fiber`] — per-work-item fibers (FreeOCL / Twin Peaks baseline).
+//!
+//! All engines share the [`interp::Machine`] instruction evaluator, so a
+//! result difference between engines is a scheduling bug, not a semantics
+//! difference — the property the cross-engine tests rely on.
+
+pub mod fiber;
+pub mod gang;
+pub mod interp;
+pub mod mem;
+pub mod serial;
+pub mod value;
+
+pub use interp::LaunchCtx;
+pub use mem::MemoryRefs;
+pub use value::{Val, VVal};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+    use crate::kcc::{compile_workgroup, CompileOptions};
+
+    /// Engines under test.
+    #[derive(Clone, Copy, Debug, PartialEq)]
+    enum Engine {
+        Serial,
+        Gang(usize),
+        Fiber,
+    }
+
+    /// Kernel argument descriptions for the mini-harness.
+    #[derive(Clone)]
+    enum Arg {
+        Buf(Vec<f32>),
+        I(i64),
+    }
+
+    /// Run `src`'s first kernel over `groups` × `local` work-items,
+    /// returning every buffer's final contents.
+    fn run(
+        src: &str,
+        local: [usize; 3],
+        groups: [usize; 3],
+        args: &[Arg],
+        engine: Engine,
+        horizontal: bool,
+    ) -> Vec<Vec<f32>> {
+        let m = compile(src).unwrap();
+        let k = &m.kernels[0];
+        let opts = CompileOptions { horizontal, ..Default::default() };
+        let wgf = compile_workgroup(k, local, &opts).unwrap();
+
+        // Bind arguments by walking the kernel's parameter list: __local
+        // pointer params (explicit or converted automatic locals) get
+        // slices of local memory; everything else takes the next
+        // user-provided argument. Buffers are laid out in global memory.
+        let mut global = Vec::new();
+        let mut arg_vals = Vec::new();
+        let mut buf_offsets = Vec::new();
+        let mut local_mem_size = 0usize;
+        let mut user = args.iter();
+        for p in &wgf.reg_fn.params {
+            if p.is_local_buf {
+                arg_vals.push(VVal::ptr(value::SP_LOCAL, local_mem_size as u64));
+                // Explicit local pointers are sized by the host
+                // (clSetKernelArg); the harness default is 4 KiB.
+                local_mem_size += p.auto_local_size.unwrap_or(4096);
+                continue;
+            }
+            match user.next().expect("not enough user args") {
+                Arg::Buf(data) => {
+                    let off = global.len();
+                    global.resize(off + data.len() * 4, 0);
+                    mem::write_f32s(&mut global, off, data);
+                    buf_offsets.push(Some((off, data.len())));
+                    arg_vals.push(VVal::ptr(value::SP_GLOBAL, off as u64));
+                }
+                Arg::I(v) => {
+                    buf_offsets.push(None);
+                    arg_vals.push(VVal::i(*v));
+                }
+            }
+        }
+        let mut local_mem = vec![0u8; local_mem_size.max(1)];
+
+        let ctx_base = LaunchCtx {
+            group_id: [0; 3],
+            num_groups: [groups[0] as u64, groups[1] as u64, groups[2] as u64],
+            global_offset: [0; 3],
+            local_size: local,
+            work_dim: 3,
+        };
+        for gz in 0..groups[2] {
+            for gy in 0..groups[1] {
+                for gx in 0..groups[0] {
+                    let ctx = LaunchCtx {
+                        group_id: [gx as u64, gy as u64, gz as u64],
+                        ..ctx_base
+                    };
+                    let mut mem_refs =
+                        MemoryRefs { global: &mut global, local: &mut local_mem };
+                    match engine {
+                        Engine::Serial => {
+                            serial::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx).unwrap()
+                        }
+                        Engine::Gang(w) => {
+                            gang::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx, w)
+                                .map(|_| ())
+                                .unwrap()
+                        }
+                        Engine::Fiber => {
+                            fiber::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx).unwrap()
+                        }
+                    }
+                }
+            }
+        }
+        // Read buffers back.
+        buf_offsets
+            .iter()
+            .filter_map(|o| o.map(|(off, len)| mem::read_f32s(&global, off, len)))
+            .collect()
+    }
+
+    fn all_engines() -> Vec<Engine> {
+        vec![Engine::Serial, Engine::Gang(4), Engine::Gang(8), Engine::Fiber]
+    }
+
+    const VECADD: &str = "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
+        size_t i = get_global_id(0);
+        c[i] = a[i] + b[i];
+    }";
+
+    #[test]
+    fn vecadd_all_engines() {
+        let a: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..32).map(|i| (i * 10) as f32).collect();
+        for e in all_engines() {
+            let out = run(
+                VECADD,
+                [8, 1, 1],
+                [4, 1, 1],
+                &[Arg::Buf(a.clone()), Arg::Buf(b.clone()), Arg::Buf(vec![0.0; 32])],
+                e,
+                true,
+            );
+            let expect: Vec<f32> = (0..32).map(|i| (i + i * 10) as f32).collect();
+            assert_eq!(out[2], expect, "engine {e:?}");
+        }
+    }
+
+    const BARRIER_REVERSE: &str = "__kernel void rev(__global float *x, __local float *t) {
+        size_t i = get_local_id(0);
+        size_t n = get_local_size(0);
+        t[i] = x[get_global_id(0)];
+        barrier(CLK_LOCAL_MEM_FENCE);
+        x[get_global_id(0)] = t[n - 1u - i];
+    }";
+
+    #[test]
+    fn barrier_semantics_all_engines() {
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        for e in all_engines() {
+            let out = run(BARRIER_REVERSE, [8, 1, 1], [2, 1, 1], &[Arg::Buf(x.clone())], e, true);
+            let expect: Vec<f32> = vec![
+                7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0, 0.0, // group 0 reversed
+                15.0, 14.0, 13.0, 12.0, 11.0, 10.0, 9.0, 8.0, // group 1 reversed
+            ];
+            assert_eq!(out[0], expect, "engine {e:?}");
+        }
+    }
+
+    const CONDITIONAL_BARRIER: &str = "__kernel void cb(__global float *x, __local float *t, int c) {
+        size_t i = get_local_id(0);
+        if (c > 0) {
+            t[i] = x[i] * 2.0f;
+            barrier(CLK_LOCAL_MEM_FENCE);
+            x[i] = t[(i + 1u) % get_local_size(0)];
+        }
+        x[i] += 100.0f;
+    }";
+
+    #[test]
+    fn conditional_barrier_taken_branch() {
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        for e in all_engines() {
+            let out = run(
+                CONDITIONAL_BARRIER,
+                [8, 1, 1],
+                [1, 1, 1],
+                &[Arg::Buf(x.clone()), Arg::I(1)],
+                e,
+                true,
+            );
+            let expect: Vec<f32> =
+                (0..8).map(|i| ((i + 1) % 8) as f32 * 2.0 + 100.0).collect();
+            assert_eq!(out[0], expect, "engine {e:?}");
+        }
+    }
+
+    #[test]
+    fn conditional_barrier_untaken_branch() {
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        for e in all_engines() {
+            let out = run(
+                CONDITIONAL_BARRIER,
+                [8, 1, 1],
+                [1, 1, 1],
+                &[Arg::Buf(x.clone()), Arg::I(0)],
+                e,
+                true,
+            );
+            let expect: Vec<f32> = (0..8).map(|i| i as f32 + 100.0).collect();
+            assert_eq!(out[0], expect, "engine {e:?}");
+        }
+    }
+
+    const BLOOP: &str = "__kernel void bl(__global float *x, __local float *t, int iters) {
+        size_t i = get_local_id(0);
+        size_t n = get_local_size(0);
+        for (int k = 0; k < iters; k++) {
+            t[i] = x[i];
+            barrier(CLK_LOCAL_MEM_FENCE);
+            x[i] = t[(i + 1u) % n] + 1.0f;
+            barrier(CLK_GLOBAL_MEM_FENCE);
+        }
+    }";
+
+    #[test]
+    fn barrier_in_loop_all_engines() {
+        let x: Vec<f32> = (0..4).map(|i| (i * i) as f32).collect();
+        let reference = |mut v: Vec<f32>, iters: usize| {
+            for _ in 0..iters {
+                let t = v.clone();
+                for i in 0..4 {
+                    v[i] = t[(i + 1) % 4] + 1.0;
+                }
+            }
+            v
+        };
+        for e in all_engines() {
+            let out =
+                run(BLOOP, [4, 1, 1], [1, 1, 1], &[Arg::Buf(x.clone()), Arg::I(3)], e, true);
+            assert_eq!(out[0], reference(x.clone(), 3), "engine {e:?}");
+        }
+    }
+
+    const DIVERGENT: &str = "__kernel void dv(__global float *x) {
+        size_t i = get_global_id(0);
+        float v = x[i];
+        if (v > 4.0f) { v = v * 2.0f; } else { v = v - 1.0f; }
+        int k = 0;
+        while (k < (int)(i % 3u)) { v += 10.0f; k++; }
+        x[i] = v;
+    }";
+
+    #[test]
+    fn divergent_control_flow_all_engines() {
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let expect: Vec<f32> = (0..16u32)
+            .map(|i| {
+                let v = i as f32;
+                let mut v = if v > 4.0 { v * 2.0 } else { v - 1.0 };
+                v += 10.0 * (i % 3) as f32;
+                v
+            })
+            .collect();
+        for e in all_engines() {
+            let out = run(DIVERGENT, [8, 1, 1], [2, 1, 1], &[Arg::Buf(x.clone())], e, true);
+            assert_eq!(out[0], expect, "engine {e:?}");
+        }
+    }
+
+    const DCT_LIKE: &str = "__kernel void dctish(__global float *out, __global const float *in, uint w) {
+        uint i = (uint)get_local_id(0);
+        float acc = 0.0f;
+        for (uint k = 0u; k < w; k++) {
+            acc += in[k * w + i] * 0.5f;
+        }
+        out[i] = acc;
+    }";
+
+    #[test]
+    fn horizontal_parallelization_preserves_semantics() {
+        let w = 8usize;
+        let input: Vec<f32> = (0..w * w).map(|i| i as f32).collect();
+        let expect: Vec<f32> = (0..w)
+            .map(|i| (0..w).map(|k| input[k * w + i] * 0.5).sum())
+            .collect();
+        for horizontal in [false, true] {
+            for e in all_engines() {
+                let out = run(
+                    DCT_LIKE,
+                    [w, 1, 1],
+                    [1, 1, 1],
+                    &[Arg::Buf(vec![0.0; w]), Arg::Buf(input.clone()), Arg::I(w as i64)],
+                    e,
+                    horizontal,
+                );
+                assert_eq!(out[0], expect, "engine {e:?} horizontal={horizontal}");
+            }
+        }
+    }
+
+    const VEC_KERNEL: &str = "__kernel void vk(__global float4 *v) {
+        size_t i = get_global_id(0);
+        float4 a = v[i];
+        float4 b = (float4)(1.0f, 2.0f, 3.0f, 4.0f);
+        a = a * b + a.wzyx;
+        v[i] = a;
+    }";
+
+    #[test]
+    fn vector_types_all_engines() {
+        // 4 float4s = 16 floats.
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let expect: Vec<f32> = (0..4)
+            .flat_map(|q| {
+                let v = &x[q * 4..q * 4 + 4];
+                vec![
+                    v[0] * 1.0 + v[3],
+                    v[1] * 2.0 + v[2],
+                    v[2] * 3.0 + v[1],
+                    v[3] * 4.0 + v[0],
+                ]
+            })
+            .collect();
+        for e in all_engines() {
+            let out = run(VEC_KERNEL, [4, 1, 1], [1, 1, 1], &[Arg::Buf(x.clone())], e, true);
+            assert_eq!(out[0], expect, "engine {e:?}");
+        }
+    }
+
+    const AUTO_LOCAL: &str = "__kernel void al(__global float *x) {
+        __local float tile[8];
+        size_t i = get_local_id(0);
+        tile[i] = x[i] * 3.0f;
+        barrier(CLK_LOCAL_MEM_FENCE);
+        x[i] = tile[7u - i];
+    }";
+
+    #[test]
+    fn automatic_local_buffers_all_engines() {
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let expect: Vec<f32> = (0..8).map(|i| (7 - i) as f32 * 3.0).collect();
+        for e in all_engines() {
+            let out = run(AUTO_LOCAL, [8, 1, 1], [1, 1, 1], &[Arg::Buf(x.clone())], e, true);
+            assert_eq!(out[0], expect, "engine {e:?}");
+        }
+    }
+
+    #[test]
+    fn two_dimensional_launch() {
+        let src = "__kernel void t2(__global float *x, uint w) {
+            size_t gx = get_global_id(0);
+            size_t gy = get_global_id(1);
+            x[gy * (size_t)w + gx] = (float)(gx * 100u + gy);
+        }";
+        let w = 8usize;
+        let expect: Vec<f32> =
+            (0..w * w).map(|i| ((i % w) * 100 + i / w) as f32).collect();
+        for e in all_engines() {
+            let out = run(
+                src,
+                [4, 2, 1],
+                [2, 4, 1],
+                &[Arg::Buf(vec![0.0; w * w]), Arg::I(w as i64)],
+                e,
+                true,
+            );
+            assert_eq!(out[0], expect, "engine {e:?}");
+        }
+    }
+
+    #[test]
+    fn math_builtins_match_reference() {
+        let src = "__kernel void mb(__global float *x) {
+            size_t i = get_global_id(0);
+            float v = x[i];
+            x[i] = sqrt(v) + exp(v * 0.1f) + sin(v) * cos(v) + fmax(v, 2.0f);
+        }";
+        let x: Vec<f32> = (0..8).map(|i| i as f32 + 0.5).collect();
+        let expect: Vec<f32> = x
+            .iter()
+            .map(|&v| {
+                v.sqrt()
+                    + crate::vecmath::scalar32::exp(v * 0.1)
+                    + crate::vecmath::scalar32::sin(v) * crate::vecmath::scalar32::cos(v)
+                    + v.max(2.0)
+            })
+            .collect();
+        for e in all_engines() {
+            let out = run(src, [8, 1, 1], [1, 1, 1], &[Arg::Buf(x.clone())], e, true);
+            for (got, want) in out[0].iter().zip(&expect) {
+                assert!((got - want).abs() < 1e-5, "engine {e:?}: {got} vs {want}");
+            }
+        }
+    }
+}

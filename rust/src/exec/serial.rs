@@ -1,0 +1,35 @@
+//! Serial work-group executor: runs the WI-loop-materialised function
+//! (`loop_fn`) straight through — the execution model of the paper's
+//! `basic` device.
+
+use crate::cl::error::Result;
+use crate::kcc::WorkGroupFunction;
+
+use super::interp::{LaunchCtx, Machine, SlotStore};
+use super::mem::MemoryRefs;
+use super::value::VVal;
+
+/// Execute one work-group. `args` are the kernel arguments (including
+/// converted automatic locals); the work-group context parameters are
+/// appended here from `ctx`.
+pub fn run_workgroup(
+    wgf: &WorkGroupFunction,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+) -> Result<()> {
+    let f = &wgf.loop_fn;
+    let mut full_args = args.to_vec();
+    for d in 0..3 {
+        full_args.push(VVal::i(ctx.group_id[d] as i64));
+    }
+    for d in 0..3 {
+        full_args.push(VVal::i(ctx.num_groups[d] as i64));
+    }
+    for d in 0..3 {
+        full_args.push(VVal::i(ctx.global_offset[d] as i64));
+    }
+    let mut slots = SlotStore::for_function(f);
+    let mut m = Machine::new(f, &full_args, &mut slots, mem, ctx);
+    m.run(f, f.entry)
+}

@@ -1,0 +1,161 @@
+//! Runtime values for the execution engines.
+
+use crate::ir::types::{AddrSpace, Scalar, Type};
+
+/// A scalar runtime value. Integers (including bool) are carried as `i64`
+/// and normalised to their declared width on every operation; floats are
+/// carried as `f64` with `f32` rounding applied for F32-typed ops.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Val {
+    /// Integer / bool.
+    I(i64),
+    /// Float.
+    F(f64),
+    /// Pointer: address space + offset. Offsets are **bytes** for
+    /// global/local/constant memory and **cells** for private slots.
+    Ptr { space: u8, offset: u64 },
+}
+
+/// Address-space tags packed into `Val::Ptr::space`.
+pub const SP_GLOBAL: u8 = 0;
+pub const SP_LOCAL: u8 = 1;
+pub const SP_CONSTANT: u8 = 2;
+pub const SP_PRIVATE: u8 = 3;
+
+/// Convert an `AddrSpace` to its runtime tag.
+pub fn space_tag(s: AddrSpace) -> u8 {
+    match s {
+        AddrSpace::Global => SP_GLOBAL,
+        AddrSpace::Local => SP_LOCAL,
+        AddrSpace::Constant => SP_CONSTANT,
+        AddrSpace::Private => SP_PRIVATE,
+    }
+}
+
+impl Val {
+    /// Interpret as integer (trap-free; floats truncate).
+    pub fn as_i(self) -> i64 {
+        match self {
+            Val::I(v) => v,
+            Val::F(v) => v as i64,
+            Val::Ptr { offset, .. } => offset as i64,
+        }
+    }
+    /// Interpret as float.
+    pub fn as_f(self) -> f64 {
+        match self {
+            Val::I(v) => v as f64,
+            Val::F(v) => v,
+            Val::Ptr { offset, .. } => offset as f64,
+        }
+    }
+    /// Truth value (C semantics).
+    pub fn truthy(self) -> bool {
+        match self {
+            Val::I(v) => v != 0,
+            Val::F(v) => v != 0.0,
+            Val::Ptr { .. } => true,
+        }
+    }
+}
+
+/// Normalise an integer to a scalar type's width/signedness.
+pub fn norm_int(v: i64, s: Scalar) -> i64 {
+    match s {
+        Scalar::Bool => (v != 0) as i64,
+        Scalar::I32 => v as i32 as i64,
+        Scalar::U32 => (v as u32) as i64,
+        Scalar::I64 => v,
+        Scalar::U64 => v, // bit pattern identical; comparisons handle sign
+        Scalar::F32 | Scalar::F64 => v,
+    }
+}
+
+/// Normalise a float to a scalar type's precision.
+pub fn norm_float(v: f64, s: Scalar) -> f64 {
+    match s {
+        Scalar::F32 => v as f32 as f64,
+        _ => v,
+    }
+}
+
+/// A register value: scalar or short vector of lanes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VVal {
+    /// Scalar.
+    S(Val),
+    /// Vector (2–16 lanes).
+    V(Vec<Val>),
+}
+
+impl VVal {
+    /// The single scalar (panics on vectors).
+    pub fn scalar(&self) -> Val {
+        match self {
+            VVal::S(v) => *v,
+            VVal::V(_) => panic!("expected scalar, found vector"),
+        }
+    }
+    /// Lane view: scalars behave like a 1-lane vector.
+    pub fn lane(&self, i: usize) -> Val {
+        match self {
+            VVal::S(v) => *v,
+            VVal::V(l) => l[i],
+        }
+    }
+    /// Lane count.
+    pub fn lanes(&self) -> usize {
+        match self {
+            VVal::S(_) => 1,
+            VVal::V(l) => l.len(),
+        }
+    }
+    /// Shorthand constructors.
+    pub fn i(v: i64) -> VVal {
+        VVal::S(Val::I(v))
+    }
+    /// Float shorthand.
+    pub fn f(v: f64) -> VVal {
+        VVal::S(Val::F(v))
+    }
+    /// Pointer shorthand.
+    pub fn ptr(space: u8, offset: u64) -> VVal {
+        VVal::S(Val::Ptr { space, offset })
+    }
+    /// Zero value of a type.
+    pub fn zero(ty: &Type) -> VVal {
+        let z = if ty.is_float() { Val::F(0.0) } else { Val::I(0) };
+        match ty {
+            Type::Vec(_, n) => VVal::V(vec![z; *n as usize]),
+            _ => VVal::S(z),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_normalisation() {
+        assert_eq!(norm_int(0x1_0000_0001, Scalar::U32), 1);
+        assert_eq!(norm_int(-1, Scalar::U32), 0xFFFF_FFFF);
+        assert_eq!(norm_int(i64::from(i32::MAX) + 1, Scalar::I32), i64::from(i32::MIN));
+        assert_eq!(norm_int(7, Scalar::Bool), 1);
+    }
+
+    #[test]
+    fn float_normalisation() {
+        let v = 1.000_000_119_209_290_f64; // not representable in f32
+        assert_ne!(norm_float(v, Scalar::F32), v);
+        assert_eq!(norm_float(v, Scalar::F64), v);
+    }
+
+    #[test]
+    fn vval_lanes() {
+        let v = VVal::V(vec![Val::F(1.0), Val::F(2.0)]);
+        assert_eq!(v.lanes(), 2);
+        assert_eq!(v.lane(1), Val::F(2.0));
+        assert_eq!(VVal::i(3).lane(0), Val::I(3));
+    }
+}

@@ -1,0 +1,131 @@
+//! MiniCL abstract syntax tree.
+
+use crate::ir::types::{AddrSpace, Type};
+
+/// Source position for diagnostics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Pos {
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A parsed translation unit: helper functions and kernels.
+#[derive(Debug, Clone, Default)]
+pub struct Unit {
+    pub funcs: Vec<FuncDef>,
+}
+
+/// A function definition (kernel or helper).
+#[derive(Debug, Clone)]
+pub struct FuncDef {
+    pub name: String,
+    pub is_kernel: bool,
+    pub ret: Type,
+    pub params: Vec<ParamDecl>,
+    pub body: Vec<Stmt>,
+    pub pos: Pos,
+}
+
+/// One function parameter.
+#[derive(Debug, Clone)]
+pub struct ParamDecl {
+    pub name: String,
+    pub ty: Type,
+    pub is_const: bool,
+    pub pos: Pos,
+}
+
+/// Statements.
+#[derive(Debug, Clone)]
+pub enum Stmt {
+    /// Variable declaration: `float4 acc = 0.0f;` or `__local float t[64];`
+    /// or `float dct[8][8] = {...};` flattened to 1-D.
+    Decl {
+        name: String,
+        ty: Type,
+        space: AddrSpace,
+        /// Array length (product of all dimensions); 1 = scalar.
+        array: Option<Expr>,
+        init: Option<Expr>,
+        /// Aggregate initialiser for arrays: `{1, 2, 3}`.
+        init_list: Option<Vec<Expr>>,
+        pos: Pos,
+    },
+    /// Expression statement (assignments, calls, ++).
+    Expr(Expr),
+    /// `if (c) { .. } else { .. }`.
+    If { cond: Expr, then_body: Vec<Stmt>, else_body: Vec<Stmt>, pos: Pos },
+    /// `for (init; cond; step) body`.
+    For {
+        init: Option<Box<Stmt>>,
+        cond: Option<Expr>,
+        step: Option<Expr>,
+        body: Vec<Stmt>,
+        pos: Pos,
+    },
+    /// `while (c) body`.
+    While { cond: Expr, body: Vec<Stmt>, pos: Pos },
+    /// `do body while (c);`
+    DoWhile { cond: Expr, body: Vec<Stmt>, pos: Pos },
+    /// `break;`
+    Break(Pos),
+    /// `continue;`
+    Continue(Pos),
+    /// `return;` / `return e;`
+    Return(Option<Expr>, Pos),
+    /// `barrier(CLK_LOCAL_MEM_FENCE);`
+    Barrier(Pos),
+    /// Nested block `{ ... }`.
+    Block(Vec<Stmt>),
+}
+
+/// Expressions. Every node carries its position for diagnostics.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    /// Integer literal.
+    Int(i64, bool, Pos),
+    /// Float literal.
+    Float(f64, bool, Pos),
+    /// Variable / parameter reference.
+    Ident(String, Pos),
+    /// `a <op> b` where op is a C binary operator token.
+    Bin(&'static str, Box<Expr>, Box<Expr>, Pos),
+    /// `<op> a` (`-`, `!`, `~`).
+    Un(&'static str, Box<Expr>, Pos),
+    /// Prefix or postfix `++`/`--` (value semantics of postfix are honoured).
+    IncDec { op: &'static str, prefix: bool, target: Box<Expr>, pos: Pos },
+    /// `target = value` or compound `target += value` (op = "" for plain).
+    Assign { op: &'static str, target: Box<Expr>, value: Box<Expr>, pos: Pos },
+    /// `c ? a : b`.
+    Ternary(Box<Expr>, Box<Expr>, Box<Expr>, Pos),
+    /// `(type) expr` cast.
+    Cast(Type, Box<Expr>, Pos),
+    /// `(float4)(a, b, c, d)` vector construction.
+    VecLit(Type, Vec<Expr>, Pos),
+    /// `f(args...)` builtin or helper call.
+    Call(String, Vec<Expr>, Pos),
+    /// `base[idx]`.
+    Index(Box<Expr>, Box<Expr>, Pos),
+    /// `base.xyzw` / `.s0` / `.lo` / `.hi` / `.even` / `.odd`.
+    Swizzle(Box<Expr>, String, Pos),
+}
+
+impl Expr {
+    /// Position accessor.
+    pub fn pos(&self) -> Pos {
+        match self {
+            Expr::Int(_, _, p)
+            | Expr::Float(_, _, p)
+            | Expr::Ident(_, p)
+            | Expr::Bin(_, _, _, p)
+            | Expr::Un(_, _, p)
+            | Expr::Ternary(_, _, _, p)
+            | Expr::Cast(_, _, p)
+            | Expr::VecLit(_, _, p)
+            | Expr::Call(_, _, p)
+            | Expr::Index(_, _, p)
+            | Expr::Swizzle(_, _, p) => *p,
+            Expr::IncDec { pos, .. } | Expr::Assign { pos, .. } => *pos,
+        }
+    }
+}

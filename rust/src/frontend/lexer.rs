@@ -1,0 +1,373 @@
+//! MiniCL lexer. Handles comments, a one-pass object-like `#define`
+//! preprocessor, and OpenCL C literal suffixes (`1.0f`, `4u`).
+
+use crate::cl::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Integer literal (value, is_unsigned).
+    Int(i64, bool),
+    /// Floating literal (value, is_f32). `1.0` defaults to double per C,
+    /// but MiniCL treats unsuffixed floats as f32 (OpenCL kernels almost
+    /// always mean f32; `cl_khr_fp64` users write explicit casts).
+    Float(f64, bool),
+    /// Punctuation / operator, e.g. `"+"`, `"<<="`, `"("`.
+    Punct(&'static str),
+    /// End of input.
+    Eof,
+}
+
+/// A token with source position.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// All multi-char punctuation, longest-first so maximal munch works.
+const PUNCTS: &[&str] = &[
+    "<<=", ">>=", "...", "==", "!=", "<=", ">=", "&&", "||", "<<", ">>", "+=", "-=", "*=", "/=",
+    "%=", "&=", "|=", "^=", "++", "--", "->", "+", "-", "*", "/", "%", "=", "<", ">", "!", "~",
+    "&", "|", "^", "?", ":", ";", ",", ".", "(", ")", "[", "]", "{", "}",
+];
+
+/// Strip comments and expand object-like `#define NAME tokens...` macros.
+/// Unsupported directives (`#if`, function-like macros) are reported.
+fn preprocess(src: &str) -> Result<String> {
+    let mut defines: HashMap<String, String> = HashMap::new();
+    let mut out = String::with_capacity(src.len());
+    // Comment removal first (preserving newlines so line numbers survive).
+    let decommented = strip_comments(src);
+    for (lineno, line) in decommented.lines().enumerate() {
+        let trimmed = line.trim_start();
+        if let Some(rest) = trimmed.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(def) = rest.strip_prefix("define") {
+                let def = def.trim_start();
+                let mut parts = def.splitn(2, char::is_whitespace);
+                let name = parts.next().unwrap_or("").to_string();
+                if name.contains('(') {
+                    return Err(Error::Parse {
+                        line: lineno as u32 + 1,
+                        col: 1,
+                        msg: format!("function-like macro `{name}` not supported"),
+                    });
+                }
+                let body = parts.next().unwrap_or("").trim().to_string();
+                defines.insert(name, body);
+                out.push('\n');
+                continue;
+            }
+            if rest.starts_with("pragma") || rest.starts_with("include") {
+                // Pragmas (fp64 enables) and includes are ignored.
+                out.push('\n');
+                continue;
+            }
+            return Err(Error::Parse {
+                line: lineno as u32 + 1,
+                col: 1,
+                msg: format!("unsupported preprocessor directive: #{rest}"),
+            });
+        }
+        // Substitute defines on identifier boundaries (iteratively, so
+        // defines can reference earlier defines; depth-capped).
+        let mut cur = line.to_string();
+        for _ in 0..8 {
+            let next = substitute(&cur, &defines);
+            if next == cur {
+                break;
+            }
+            cur = next;
+        }
+        out.push_str(&cur);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+fn strip_comments(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+        } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+            i += 2;
+            while i + 1 < b.len() && !(b[i] == '*' && b[i + 1] == '/') {
+                if b[i] == '\n' {
+                    out.push('\n'); // keep line count
+                }
+                i += 1;
+            }
+            i += 2;
+        } else {
+            out.push(b[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+fn substitute(line: &str, defines: &HashMap<String, String>) -> String {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i].is_ascii_alphabetic() || chars[i] == '_' {
+            let start = i;
+            while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let word: String = chars[start..i].iter().collect();
+            match defines.get(&word) {
+                Some(body) => out.push_str(body),
+                None => out.push_str(&word),
+            }
+        } else {
+            out.push(chars[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Tokenise MiniCL source.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let src = preprocess(src)?;
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line: u32 = 1;
+    let mut col: u32 = 1;
+    macro_rules! bump {
+        () => {{
+            if chars[i] == '\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+            i += 1;
+        }};
+    }
+    while i < chars.len() {
+        let c = chars[i];
+        if c.is_whitespace() {
+            bump!();
+            continue;
+        }
+        let (tline, tcol) = (line, col);
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                bump!();
+            }
+            let word: String = chars[start..i].iter().collect();
+            toks.push(Token { tok: Tok::Ident(word), line: tline, col: tcol });
+            continue;
+        }
+        if c.is_ascii_digit() || (c == '.' && i + 1 < chars.len() && chars[i + 1].is_ascii_digit())
+        {
+            let start = i;
+            let mut is_float = false;
+            // Hex?
+            if c == '0' && i + 1 < chars.len() && (chars[i + 1] == 'x' || chars[i + 1] == 'X') {
+                bump!();
+                bump!();
+                while i < chars.len() && chars[i].is_ascii_hexdigit() {
+                    bump!();
+                }
+                let text: String = chars[start + 2..i].iter().collect();
+                let v = i64::from_str_radix(&text, 16).map_err(|e| Error::Parse {
+                    line: tline,
+                    col: tcol,
+                    msg: format!("bad hex literal: {e}"),
+                })?;
+                let unsigned = i < chars.len() && (chars[i] == 'u' || chars[i] == 'U');
+                if unsigned {
+                    bump!();
+                }
+                toks.push(Token { tok: Tok::Int(v, unsigned), line: tline, col: tcol });
+                continue;
+            }
+            while i < chars.len() && chars[i].is_ascii_digit() {
+                bump!();
+            }
+            if i < chars.len() && chars[i] == '.' {
+                is_float = true;
+                bump!();
+                while i < chars.len() && chars[i].is_ascii_digit() {
+                    bump!();
+                }
+            }
+            if i < chars.len() && (chars[i] == 'e' || chars[i] == 'E') {
+                is_float = true;
+                bump!();
+                if i < chars.len() && (chars[i] == '+' || chars[i] == '-') {
+                    bump!();
+                }
+                while i < chars.len() && chars[i].is_ascii_digit() {
+                    bump!();
+                }
+            }
+            let text: String = chars[start..i].iter().collect();
+            if is_float {
+                let mut is_f32 = true; // MiniCL default (see Tok::Float)
+                if i < chars.len() && (chars[i] == 'f' || chars[i] == 'F') {
+                    bump!();
+                } else if i < chars.len() && (chars[i] == 'd' || chars[i] == 'D') {
+                    is_f32 = false;
+                    bump!();
+                }
+                let v: f64 = text.parse().map_err(|e| Error::Parse {
+                    line: tline,
+                    col: tcol,
+                    msg: format!("bad float literal `{text}`: {e}"),
+                })?;
+                toks.push(Token { tok: Tok::Float(v, is_f32), line: tline, col: tcol });
+            } else {
+                let v: i64 = text.parse().map_err(|e| Error::Parse {
+                    line: tline,
+                    col: tcol,
+                    msg: format!("bad int literal `{text}`: {e}"),
+                })?;
+                let mut unsigned = false;
+                if i < chars.len() && (chars[i] == 'u' || chars[i] == 'U') {
+                    unsigned = true;
+                    bump!();
+                }
+                if i < chars.len() && (chars[i] == 'f' || chars[i] == 'F') {
+                    // `4f` style float
+                    bump!();
+                    toks.push(Token { tok: Tok::Float(v as f64, true), line: tline, col: tcol });
+                    continue;
+                }
+                toks.push(Token { tok: Tok::Int(v, unsigned), line: tline, col: tcol });
+            }
+            continue;
+        }
+        // Punctuation, maximal munch.
+        let mut matched = None;
+        for p in PUNCTS {
+            if chars[i..].iter().take(p.len()).collect::<String>() == **p {
+                matched = Some(*p);
+                break;
+            }
+        }
+        match matched {
+            Some(p) => {
+                for _ in 0..p.len() {
+                    bump!();
+                }
+                toks.push(Token { tok: Tok::Punct(p), line: tline, col: tcol });
+            }
+            None => {
+                return Err(Error::Parse {
+                    line: tline,
+                    col: tcol,
+                    msg: format!("unexpected character `{c}`"),
+                })
+            }
+        }
+    }
+    toks.push(Token { tok: Tok::Eof, line, col });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn idents_and_ints() {
+        assert_eq!(
+            kinds("foo 42 4u"),
+            vec![Tok::Ident("foo".into()), Tok::Int(42, false), Tok::Int(4, true), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn floats() {
+        assert_eq!(
+            kinds("1.5f 2.0 1e-3f 4f"),
+            vec![
+                Tok::Float(1.5, true),
+                Tok::Float(2.0, true),
+                Tok::Float(1e-3, true),
+                Tok::Float(4.0, true),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn hex_literals() {
+        assert_eq!(kinds("0xFF 0x10u"), vec![Tok::Int(255, false), Tok::Int(16, true), Tok::Eof]);
+    }
+
+    #[test]
+    fn maximal_munch() {
+        assert_eq!(
+            kinds("a <<= b << c <= d"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Punct("<<="),
+                Tok::Ident("b".into()),
+                Tok::Punct("<<"),
+                Tok::Ident("c".into()),
+                Tok::Punct("<="),
+                Tok::Ident("d".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_stripped() {
+        assert_eq!(
+            kinds("a // line\nb /* block\nstill */ c"),
+            vec![Tok::Ident("a".into()), Tok::Ident("b".into()), Tok::Ident("c".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn defines_expand() {
+        let toks = kinds("#define N 16\nint x = N;");
+        assert!(toks.contains(&Tok::Int(16, false)));
+    }
+
+    #[test]
+    fn define_chains() {
+        let toks = kinds("#define A 4\n#define B A\nB");
+        assert_eq!(toks[0], Tok::Int(4, false));
+    }
+
+    #[test]
+    fn define_does_not_touch_substrings() {
+        let toks = kinds("#define N 16\nint Nx = 3;");
+        assert!(toks.contains(&Tok::Ident("Nx".into())));
+    }
+
+    #[test]
+    fn line_numbers_survive_comments() {
+        let toks = lex("/* a\nb */\nfoo").unwrap();
+        assert_eq!(toks[0].line, 3);
+    }
+
+    #[test]
+    fn rejects_function_macros() {
+        assert!(lex("#define F(x) x\n").is_err());
+    }
+}

@@ -1,0 +1,1396 @@
+//! AST → IR lowering with type checking (the "sema" stage).
+//!
+//! Lowering decisions that matter to the rest of the stack:
+//!
+//! * Every local variable (and every scalar parameter) becomes an alloca
+//!   **slot**; expression temporaries stay in block-local registers. This
+//!   establishes the IR invariant the kernel compiler's privatisation
+//!   relies on (only slots cross parallel regions).
+//! * Automatic `__local` variables are converted to appended kernel
+//!   parameters (§4.7 / Fig. 3 of the paper) with a recorded byte size, so
+//!   host- and kernel-allocated local buffers are handled uniformly.
+//! * Helper functions are inlined at the call site (pocl inlines all
+//!   built-ins and callees into the kernel, §8).
+//! * `&&`/`||` lower to short-circuit control flow; ternaries lower to
+//!   `select` when both arms are pure, otherwise to control flow.
+
+use std::collections::HashMap;
+
+use super::ast::*;
+use crate::cl::error::{Error, Result};
+use crate::ir::func::{Function, Module, Param};
+use crate::ir::inst::{BarrierKind, BinOp, BlockId, Imm, Inst, MathFn, Operand, SlotId, Term, UnOp, WiFn};
+use crate::ir::types::{AddrSpace, Scalar, Type};
+
+/// Lower a parsed unit into an IR module (kernels only; helpers inline).
+pub fn lower_unit(unit: &Unit) -> Result<Module> {
+    let helpers: HashMap<&str, &FuncDef> =
+        unit.funcs.iter().filter(|f| !f.is_kernel).map(|f| (f.name.as_str(), f)).collect();
+    let mut module = Module::default();
+    for def in unit.funcs.iter().filter(|f| f.is_kernel) {
+        let mut lw = Lowerer::new(def, &helpers)?;
+        lw.lower_body(&def.body)?;
+        // Fall-through return.
+        lw.func.set_term(lw.cur, Term::Ret);
+        crate::ir::verify::verify(&lw.func).map_err(|e| {
+            Error::Compile(format!("internal: lowering of `{}` produced invalid IR: {e}", def.name))
+        })?;
+        module.kernels.push(lw.func);
+    }
+    if module.kernels.is_empty() {
+        return Err(Error::compile("no __kernel function in source"));
+    }
+    Ok(module)
+}
+
+#[derive(Debug, Clone)]
+enum Binding {
+    /// Private variable slot (element type, array length).
+    Slot { slot: SlotId, ty: Type, count: usize },
+    /// Pointer parameter used directly (not assignable).
+    ParamPtr { index: u32, ty: Type },
+    /// Pointer value captured at helper-inline time. Only block-position-
+    /// independent operands (`Arg`, `Slot`) are allowed here — a register
+    /// would violate the block-locality invariant inside multi-block
+    /// helper bodies.
+    PtrValue { val: Operand, ty: Type },
+}
+
+/// An lvalue resolved to a memory location.
+enum LValue {
+    /// Whole object at `ptr` (pointer operand + element type + space).
+    Mem { ptr: Operand, ty: Type, space: AddrSpace },
+    /// One lane of a vector stored at `ptr`.
+    Lane { ptr: Operand, vec_ty: Type, lane: u32, space: AddrSpace },
+}
+
+struct InlineCtx {
+    ret_slot: Option<(SlotId, Type)>,
+    join: BlockId,
+}
+
+struct Lowerer<'a> {
+    func: Function,
+    cur: BlockId,
+    scopes: Vec<HashMap<String, Binding>>,
+    /// (continue target, break target)
+    loops: Vec<(BlockId, BlockId)>,
+    helpers: &'a HashMap<&'a str, &'a FuncDef>,
+    inline_stack: Vec<InlineCtx>,
+    blk_counter: u32,
+}
+
+impl<'a> Lowerer<'a> {
+    fn new(def: &FuncDef, helpers: &'a HashMap<&'a str, &'a FuncDef>) -> Result<Lowerer<'a>> {
+        let mut func = Function::new(def.name.clone());
+        let cur = func.entry;
+        let mut lw = Lowerer {
+            func,
+            cur,
+            scopes: vec![HashMap::new()],
+            loops: Vec::new(),
+            helpers,
+            inline_stack: Vec::new(),
+            blk_counter: 0,
+        };
+        for (i, p) in def.params.iter().enumerate() {
+            let index = i as u32;
+            lw.func.params.push(Param {
+                name: p.name.clone(),
+                ty: p.ty.clone(),
+                is_local_buf: matches!(&p.ty, Type::Ptr(_, AddrSpace::Local)),
+                auto_local_size: None,
+            });
+            match &p.ty {
+                Type::Ptr(..) => {
+                    lw.bind(p.name.clone(), Binding::ParamPtr { index, ty: p.ty.clone() });
+                }
+                ty => {
+                    // Scalar params are copied into slots so kernels may
+                    // assign to them; the entry-block store from an Arg is
+                    // what the uniformity analysis recognises as a uniform
+                    // root (§4.6).
+                    let slot = lw.func.add_slot(p.name.clone(), ty.clone(), 1);
+                    lw.func.block_mut(cur).insts.push((
+                        None,
+                        Inst::Store { ty: ty.clone(), ptr: Operand::Slot(slot), val: Operand::Arg(index) },
+                    ));
+                    lw.bind(p.name.clone(), Binding::Slot { slot, ty: ty.clone(), count: 1 });
+                }
+            }
+        }
+        Ok(lw)
+    }
+
+    fn bind(&mut self, name: String, b: Binding) {
+        self.scopes.last_mut().unwrap().insert(name, b);
+    }
+
+    fn lookup(&self, name: &str) -> Option<&Binding> {
+        self.scopes.iter().rev().find_map(|s| s.get(name))
+    }
+
+    fn err<T>(&self, pos: Pos, msg: impl Into<String>) -> Result<T> {
+        Err(Error::Sema { line: pos.line, col: pos.col, msg: msg.into() })
+    }
+
+    fn new_block(&mut self, tag: &str) -> BlockId {
+        self.blk_counter += 1;
+        self.func.add_block(format!("{}{}", tag, self.blk_counter))
+    }
+
+    fn push(&mut self, inst: Inst) -> Option<Operand> {
+        self.func.push(self.cur, inst).map(Operand::Reg)
+    }
+
+    fn push_val(&mut self, inst: Inst) -> Operand {
+        Operand::Reg(self.func.push_val(self.cur, inst))
+    }
+
+    // ---- statements ------------------------------------------------------
+
+    fn lower_body(&mut self, stmts: &[Stmt]) -> Result<()> {
+        self.scopes.push(HashMap::new());
+        for s in stmts {
+            self.lower_stmt(s)?;
+        }
+        self.scopes.pop();
+        Ok(())
+    }
+
+    fn lower_stmt(&mut self, stmt: &Stmt) -> Result<()> {
+        match stmt {
+            Stmt::Block(body) => self.lower_body(body),
+            Stmt::Decl { name, ty, space, array, init, init_list, pos } => {
+                self.lower_decl(name, ty, *space, array, init, init_list, *pos)
+            }
+            Stmt::Expr(e) => {
+                self.lower_expr(e)?;
+                Ok(())
+            }
+            Stmt::Barrier(_) => {
+                self.push(Inst::Barrier { kind: BarrierKind::Explicit });
+                Ok(())
+            }
+            Stmt::If { cond, then_body, else_body, .. } => {
+                let (c, cty) = self.lower_expr(cond)?;
+                let c = self.to_bool(c, &cty);
+                let then_bb = self.new_block("then");
+                let join = self.new_block("ifjoin");
+                let else_bb = if else_body.is_empty() { join } else { self.new_block("else") };
+                self.func.set_term(self.cur, Term::Br { cond: c, t: then_bb, f: else_bb });
+                self.cur = then_bb;
+                self.lower_body(then_body)?;
+                self.func.set_term(self.cur, Term::Jump(join));
+                if !else_body.is_empty() {
+                    self.cur = else_bb;
+                    self.lower_body(else_body)?;
+                    self.func.set_term(self.cur, Term::Jump(join));
+                }
+                self.cur = join;
+                Ok(())
+            }
+            Stmt::For { init, cond, step, body, .. } => {
+                self.scopes.push(HashMap::new());
+                if let Some(i) = init {
+                    self.lower_stmt(i)?;
+                }
+                let header = self.new_block("for.h");
+                let body_bb = self.new_block("for.body");
+                let step_bb = self.new_block("for.step");
+                let join = self.new_block("for.end");
+                self.func.set_term(self.cur, Term::Jump(header));
+                self.cur = header;
+                match cond {
+                    Some(c) => {
+                        let (cv, cty) = self.lower_expr(c)?;
+                        let cv = self.to_bool(cv, &cty);
+                        self.func.set_term(self.cur, Term::Br { cond: cv, t: body_bb, f: join });
+                    }
+                    None => self.func.set_term(self.cur, Term::Jump(body_bb)),
+                }
+                self.loops.push((step_bb, join));
+                self.cur = body_bb;
+                self.lower_body(body)?;
+                self.func.set_term(self.cur, Term::Jump(step_bb));
+                self.loops.pop();
+                self.cur = step_bb;
+                if let Some(s) = step {
+                    self.lower_expr(s)?;
+                }
+                self.func.set_term(self.cur, Term::Jump(header));
+                self.cur = join;
+                self.scopes.pop();
+                Ok(())
+            }
+            Stmt::While { cond, body, .. } => {
+                let header = self.new_block("wh.h");
+                let body_bb = self.new_block("wh.body");
+                let join = self.new_block("wh.end");
+                self.func.set_term(self.cur, Term::Jump(header));
+                self.cur = header;
+                let (cv, cty) = self.lower_expr(cond)?;
+                let cv = self.to_bool(cv, &cty);
+                self.func.set_term(self.cur, Term::Br { cond: cv, t: body_bb, f: join });
+                self.loops.push((header, join));
+                self.cur = body_bb;
+                self.lower_body(body)?;
+                self.func.set_term(self.cur, Term::Jump(header));
+                self.loops.pop();
+                self.cur = join;
+                Ok(())
+            }
+            Stmt::DoWhile { cond, body, .. } => {
+                let body_bb = self.new_block("do.body");
+                let cond_bb = self.new_block("do.cond");
+                let join = self.new_block("do.end");
+                self.func.set_term(self.cur, Term::Jump(body_bb));
+                self.loops.push((cond_bb, join));
+                self.cur = body_bb;
+                self.lower_body(body)?;
+                self.func.set_term(self.cur, Term::Jump(cond_bb));
+                self.loops.pop();
+                self.cur = cond_bb;
+                let (cv, cty) = self.lower_expr(cond)?;
+                let cv = self.to_bool(cv, &cty);
+                self.func.set_term(self.cur, Term::Br { cond: cv, t: body_bb, f: join });
+                self.cur = join;
+                Ok(())
+            }
+            Stmt::Break(pos) => {
+                match self.loops.last() {
+                    Some(&(_, brk)) => {
+                        self.func.set_term(self.cur, Term::Jump(brk));
+                        self.cur = self.new_block("dead");
+                        Ok(())
+                    }
+                    None => self.err(*pos, "break outside loop"),
+                }
+            }
+            Stmt::Continue(pos) => {
+                match self.loops.last() {
+                    Some(&(cont, _)) => {
+                        self.func.set_term(self.cur, Term::Jump(cont));
+                        self.cur = self.new_block("dead");
+                        Ok(())
+                    }
+                    None => self.err(*pos, "continue outside loop"),
+                }
+            }
+            Stmt::Return(val, pos) => {
+                if let Some(ctx) = self.inline_stack.last() {
+                    let join = ctx.join;
+                    let ret_slot = ctx.ret_slot.clone();
+                    if let Some((slot, ty)) = ret_slot {
+                        let v = match val {
+                            Some(e) => {
+                                let (v, vt) = self.lower_expr(e)?;
+                                self.coerce(v, &vt, &ty, *pos)?
+                            }
+                            None => return self.err(*pos, "missing return value"),
+                        };
+                        self.push(Inst::Store { ty, ptr: Operand::Slot(slot), val: v });
+                    }
+                    self.func.set_term(self.cur, Term::Jump(join));
+                    self.cur = self.new_block("dead");
+                    return Ok(());
+                }
+                if val.is_some() {
+                    return self.err(*pos, "kernels return void");
+                }
+                self.func.set_term(self.cur, Term::Ret);
+                self.cur = self.new_block("dead");
+                Ok(())
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn lower_decl(
+        &mut self,
+        name: &str,
+        ty: &Type,
+        space: AddrSpace,
+        array: &Option<Expr>,
+        init: &Option<Expr>,
+        init_list: &Option<Vec<Expr>>,
+        pos: Pos,
+    ) -> Result<()> {
+        let count = match array {
+            Some(e) => self.const_eval_usize(e, pos)?,
+            None => 1,
+        };
+        if space == AddrSpace::Local {
+            // Automatic local → appended parameter (§4.7).
+            let index = self.func.params.len() as u32;
+            let bytes = ty.size() * count;
+            self.func.params.push(Param {
+                name: format!("{name}.auto_local"),
+                ty: ty.clone().ptr(AddrSpace::Local),
+                is_local_buf: true,
+                auto_local_size: Some(bytes),
+            });
+            self.bind(
+                name.to_string(),
+                Binding::ParamPtr { index, ty: ty.clone().ptr(AddrSpace::Local) },
+            );
+            if init.is_some() || init_list.is_some() {
+                return self.err(pos, "local variables cannot have initialisers");
+            }
+            return Ok(());
+        }
+        let slot = self.func.add_slot(name, ty.clone(), count);
+        self.bind(name.to_string(), Binding::Slot { slot, ty: ty.clone(), count });
+        if let Some(e) = init {
+            let (v, vt) = self.lower_expr(e)?;
+            let v = self.coerce(v, &vt, ty, pos)?;
+            self.push(Inst::Store { ty: ty.clone(), ptr: Operand::Slot(slot), val: v });
+        }
+        if let Some(elems) = init_list {
+            if elems.len() > count {
+                return self.err(pos, format!("too many initialisers ({} > {count})", elems.len()));
+            }
+            for (i, e) in elems.iter().enumerate() {
+                let (v, vt) = self.lower_expr(e)?;
+                let v = self.coerce(v, &vt, ty, pos)?;
+                let ptr = self.push_val(Inst::Gep {
+                    elem: ty.clone(),
+                    base: Operand::Slot(slot),
+                    idx: Operand::cu64(i as u64),
+                });
+                self.push(Inst::Store { ty: ty.clone(), ptr, val: v });
+            }
+        }
+        Ok(())
+    }
+
+    /// Constant-evaluate small integer expressions (array sizes).
+    fn const_eval_usize(&self, e: &Expr, pos: Pos) -> Result<usize> {
+        fn eval(e: &Expr) -> Option<i64> {
+            match e {
+                Expr::Int(v, _, _) => Some(*v),
+                Expr::Bin(op, a, b, _) => {
+                    let (a, b) = (eval(a)?, eval(b)?);
+                    Some(match *op {
+                        "+" => a + b,
+                        "-" => a - b,
+                        "*" => a * b,
+                        "/" => a / b,
+                        "<<" => a << b,
+                        ">>" => a >> b,
+                        _ => return None,
+                    })
+                }
+                Expr::Un("-", a, _) => Some(-eval(a)?),
+                Expr::Cast(_, a, _) => eval(a),
+                _ => None,
+            }
+        }
+        match eval(e) {
+            Some(v) if v > 0 => Ok(v as usize),
+            _ => self.err(pos, "array size must be a positive integer constant"),
+        }
+    }
+
+    // ---- expressions -----------------------------------------------------
+
+    fn lower_expr(&mut self, e: &Expr) -> Result<(Operand, Type)> {
+        match e {
+            Expr::Int(v, unsigned, _) => {
+                let s = if *unsigned { Scalar::U32 } else { Scalar::I32 };
+                Ok((Operand::Imm(Imm::Int(*v, s)), Type::Scalar(s)))
+            }
+            Expr::Float(v, is_f32, _) => {
+                let s = if *is_f32 { Scalar::F32 } else { Scalar::F64 };
+                Ok((Operand::Imm(Imm::Float(*v, s)), Type::Scalar(s)))
+            }
+            Expr::Ident(name, pos) => match self.lookup(name) {
+                Some(Binding::Slot { slot, ty, count }) => {
+                    if *count > 1 {
+                        // Array decays to a pointer (private space).
+                        Ok((Operand::Slot(*slot), ty.clone().ptr(AddrSpace::Private)))
+                    } else {
+                        let ty = ty.clone();
+                        let slot = *slot;
+                        let v = self.push_val(Inst::Load { ty: ty.clone(), ptr: Operand::Slot(slot) });
+                        Ok((v, ty))
+                    }
+                }
+                Some(Binding::ParamPtr { index, ty }) => Ok((Operand::Arg(*index), ty.clone())),
+                Some(Binding::PtrValue { val, ty }) => Ok((*val, ty.clone())),
+                None => self.err(*pos, format!("unknown identifier `{name}`")),
+            },
+            Expr::Bin(op, a, b, pos) => self.lower_binop(op, a, b, *pos),
+            Expr::Un(op, a, pos) => {
+                let (v, ty) = self.lower_expr(a)?;
+                match *op {
+                    "-" => {
+                        let r = self.push_val(Inst::Un { op: UnOp::Neg, ty: ty.clone(), a: v });
+                        Ok((r, ty))
+                    }
+                    "~" => {
+                        if !ty.is_int() {
+                            return self.err(*pos, "~ requires an integer operand");
+                        }
+                        let r = self.push_val(Inst::Un { op: UnOp::Not, ty: ty.clone(), a: v });
+                        Ok((r, ty))
+                    }
+                    "!" => {
+                        let bv = self.to_bool(v, &ty);
+                        let r = self.push_val(Inst::Un { op: UnOp::LNot, ty: Type::BOOL, a: bv });
+                        Ok((r, Type::BOOL))
+                    }
+                    _ => self.err(*pos, format!("unsupported unary `{op}`")),
+                }
+            }
+            Expr::IncDec { op, prefix, target, pos } => {
+                let lv = self.lower_lvalue(target, *pos)?;
+                let (old, ty) = self.load_lvalue(&lv);
+                let binop = if *op == "+" { BinOp::Add } else { BinOp::Sub };
+                let one = if ty.is_float() { Operand::cf32(1.0) } else { Operand::ci32(1) };
+                let one = self.coerce(one, &one_ty(one), &ty, *pos)?;
+                let newv = self.push_val(Inst::Bin { op: binop, ty: ty.clone(), a: old, b: one });
+                self.store_lvalue(&lv, newv);
+                Ok((if *prefix { newv } else { old }, ty))
+            }
+            Expr::Assign { op, target, value, pos } => {
+                // The value is evaluated first (C leaves the order
+                // unspecified); if resolving the target can change blocks
+                // (e.g. `x[getIdx(...)] = v`), the value is spilled so its
+                // register does not cross the inlined body.
+                let (rv0, rty) = self.lower_expr(value)?;
+                let staged = if expr_may_branch(target) && matches!(rv0, Operand::Reg(_)) {
+                    let slot = self.func.add_slot("spill", rty.clone(), 1);
+                    self.push(Inst::Store { ty: rty.clone(), ptr: Operand::Slot(slot), val: rv0 });
+                    Err(slot)
+                } else {
+                    Ok(rv0)
+                };
+                let lv = self.lower_lvalue(target, *pos)?;
+                let lty = lvalue_ty(&lv);
+                let rv = match staged {
+                    Ok(v) => v,
+                    Err(slot) => {
+                        self.push_val(Inst::Load { ty: rty.clone(), ptr: Operand::Slot(slot) })
+                    }
+                };
+                let newv = if op.is_empty() {
+                    self.coerce(rv, &rty, &lty, *pos)?
+                } else {
+                    let (old, _) = self.load_lvalue(&lv);
+                    let binop = binop_from_str(op)
+                        .ok_or_else(|| Error::Sema {
+                            line: pos.line,
+                            col: pos.col,
+                            msg: format!("bad compound op `{op}`"),
+                        })?;
+                    let (a, b, opty) = self.usual_conversions(old, &lty, rv, &rty, *pos)?;
+                    let r = self.push_val(Inst::Bin { op: binop, ty: opty.clone(), a, b });
+                    self.coerce(r, &opty, &lty, *pos)?
+                };
+                self.store_lvalue(&lv, newv);
+                Ok((newv, lty))
+            }
+            Expr::Ternary(c, a, b, pos) => {
+                let pure = expr_is_pure(a) && expr_is_pure(b);
+                let (cv, cty) = self.lower_expr(c)?;
+                let cv = self.to_bool(cv, &cty);
+                if pure {
+                    let (av, aty) = self.lower_expr(a)?;
+                    let (bv, bty) = self.lower_expr(b)?;
+                    let (av, bv, ty) = self.usual_conversions(av, &aty, bv, &bty, *pos)?;
+                    let r = self.push_val(Inst::Select { ty: ty.clone(), cond: cv, a: av, b: bv });
+                    Ok((r, ty))
+                } else {
+                    // Control-flow lowering with a temp slot. Type is
+                    // resolved by lowering arm `a` first into the slot's type.
+                    let then_bb = self.new_block("sel.t");
+                    let else_bb = self.new_block("sel.f");
+                    let join = self.new_block("sel.j");
+                    self.func.set_term(self.cur, Term::Br { cond: cv, t: then_bb, f: else_bb });
+                    self.cur = then_bb;
+                    let (av, aty) = self.lower_expr(a)?;
+                    let slot = self.func.add_slot("ternary.tmp", aty.clone(), 1);
+                    self.push(Inst::Store { ty: aty.clone(), ptr: Operand::Slot(slot), val: av });
+                    self.func.set_term(self.cur, Term::Jump(join));
+                    self.cur = else_bb;
+                    let (bv, bty) = self.lower_expr(b)?;
+                    let bv = self.coerce(bv, &bty, &aty, *pos)?;
+                    self.push(Inst::Store { ty: aty.clone(), ptr: Operand::Slot(slot), val: bv });
+                    self.func.set_term(self.cur, Term::Jump(join));
+                    self.cur = join;
+                    let v = self.push_val(Inst::Load { ty: aty.clone(), ptr: Operand::Slot(slot) });
+                    Ok((v, aty))
+                }
+            }
+            Expr::Cast(ty, inner, pos) => {
+                let (v, vt) = self.lower_expr(inner)?;
+                let r = self.coerce(v, &vt, ty, *pos)?;
+                Ok((r, ty.clone()))
+            }
+            Expr::VecLit(ty, elems, pos) => self.lower_veclit(ty, elems, *pos),
+            Expr::Call(name, args, pos) => self.lower_call(name, args, *pos),
+            Expr::Index(base, idx, pos) => {
+                let lv = self.lower_index_lvalue(base, idx, *pos)?;
+                Ok(self.load_lvalue(&lv))
+            }
+            Expr::Swizzle(base, field, pos) => {
+                let (v, ty) = self.lower_expr(base)?;
+                let (elem_s, n) = match &ty {
+                    Type::Vec(s, n) => (*s, *n as usize),
+                    _ => return self.err(*pos, format!("swizzle on non-vector type {ty}")),
+                };
+                let lanes = swizzle_lanes(field, n)
+                    .ok_or_else(|| Error::Sema {
+                        line: pos.line,
+                        col: pos.col,
+                        msg: format!("bad swizzle `.{field}` on {ty}"),
+                    })?;
+                if lanes.len() == 1 {
+                    let r = self.push_val(Inst::VecExtract {
+                        elem: Type::Scalar(elem_s),
+                        a: v,
+                        lane: lanes[0],
+                    });
+                    Ok((r, Type::Scalar(elem_s)))
+                } else {
+                    let mut parts = Vec::new();
+                    for &l in &lanes {
+                        parts.push(self.push_val(Inst::VecExtract {
+                            elem: Type::Scalar(elem_s),
+                            a: v,
+                            lane: l,
+                        }));
+                    }
+                    let vty = Type::Vec(elem_s, lanes.len() as u8);
+                    let r = self.push_val(Inst::VecBuild { ty: vty.clone(), elems: parts });
+                    Ok((r, vty))
+                }
+            }
+        }
+    }
+
+    fn lower_binop(&mut self, op: &str, a: &Expr, b: &Expr, pos: Pos) -> Result<(Operand, Type)> {
+        // Short-circuit logical ops get control-flow lowering.
+        if op == "&&" || op == "||" {
+            let slot = self.func.add_slot("sc.tmp", Type::BOOL, 1);
+            let (av, aty) = self.lower_expr(a)?;
+            let av = self.to_bool(av, &aty);
+            self.push(Inst::Store { ty: Type::BOOL, ptr: Operand::Slot(slot), val: av });
+            let rhs_bb = self.new_block("sc.rhs");
+            let join = self.new_block("sc.join");
+            let term = if op == "&&" {
+                Term::Br { cond: av, t: rhs_bb, f: join }
+            } else {
+                Term::Br { cond: av, t: join, f: rhs_bb }
+            };
+            self.func.set_term(self.cur, term);
+            self.cur = rhs_bb;
+            let (bv, bty) = self.lower_expr(b)?;
+            let bv = self.to_bool(bv, &bty);
+            self.push(Inst::Store { ty: Type::BOOL, ptr: Operand::Slot(slot), val: bv });
+            self.func.set_term(self.cur, Term::Jump(join));
+            self.cur = join;
+            let v = self.push_val(Inst::Load { ty: Type::BOOL, ptr: Operand::Slot(slot) });
+            return Ok((v, Type::BOOL));
+        }
+        let mut vals = self.lower_siblings(&[a, b])?;
+        let (bv, bty) = vals.pop().unwrap();
+        let (av, aty) = vals.pop().unwrap();
+        // Pointer arithmetic: p + i.
+        if let Type::Ptr(elem, space) = &aty {
+            if op == "+" || op == "-" {
+                let idx = if op == "-" {
+                    self.push_val(Inst::Un { op: UnOp::Neg, ty: bty.clone(), a: bv })
+                } else {
+                    bv
+                };
+                let r = self.push_val(Inst::Gep { elem: (**elem).clone(), base: av, idx });
+                return Ok((r, (**elem).clone().ptr(*space)));
+            }
+            return self.err(pos, format!("unsupported pointer op `{op}`"));
+        }
+        let binop = binop_from_str(op)
+            .ok_or_else(|| Error::Sema { line: pos.line, col: pos.col, msg: format!("bad op `{op}`") })?;
+        let (av, bv, opty) = self.usual_conversions(av, &aty, bv, &bty, pos)?;
+        if binop.is_cmp() {
+            let r = self.push_val(Inst::Bin { op: binop, ty: opty.clone(), a: av, b: bv });
+            Ok((r, opty.with_elem(Scalar::Bool)))
+        } else {
+            let r = self.push_val(Inst::Bin { op: binop, ty: opty.clone(), a: av, b: bv });
+            Ok((r, opty))
+        }
+    }
+
+    fn lower_veclit(&mut self, ty: &Type, elems: &[Expr], pos: Pos) -> Result<(Operand, Type)> {
+        let (elem_s, n) = match ty {
+            Type::Vec(s, n) => (*s, *n as usize),
+            _ => return self.err(pos, "vector literal requires vector type"),
+        };
+        let mut lanes: Vec<Operand> = Vec::new();
+        for e in elems {
+            let (v, vt) = self.lower_expr(e)?;
+            match &vt {
+                Type::Vec(s, m) => {
+                    // Flatten a subvector into scalar lanes.
+                    for l in 0..*m {
+                        let x = self.push_val(Inst::VecExtract {
+                            elem: Type::Scalar(*s),
+                            a: v,
+                            lane: l as u32,
+                        });
+                        let x = self.coerce(x, &Type::Scalar(*s), &Type::Scalar(elem_s), pos)?;
+                        lanes.push(x);
+                    }
+                }
+                _ => {
+                    let x = self.coerce(v, &vt, &Type::Scalar(elem_s), pos)?;
+                    lanes.push(x);
+                }
+            }
+        }
+        if lanes.len() == 1 {
+            // Broadcast form: (float4)(x).
+            let r = self.push_val(Inst::Splat { ty: ty.clone(), a: lanes[0] });
+            return Ok((r, ty.clone()));
+        }
+        if lanes.len() != n {
+            return self.err(pos, format!("vector literal has {} lanes, needs {n}", lanes.len()));
+        }
+        let r = self.push_val(Inst::VecBuild { ty: ty.clone(), elems: lanes });
+        Ok((r, ty.clone()))
+    }
+
+    fn lower_call(&mut self, name: &str, args: &[Expr], pos: Pos) -> Result<(Operand, Type)> {
+        // Work-item geometry builtins.
+        let wi = match name {
+            "get_global_id" => Some(WiFn::GlobalId),
+            "get_local_id" => Some(WiFn::LocalId),
+            "get_group_id" => Some(WiFn::GroupId),
+            "get_global_size" => Some(WiFn::GlobalSize),
+            "get_local_size" => Some(WiFn::LocalSize),
+            "get_num_groups" => Some(WiFn::NumGroups),
+            "get_work_dim" => Some(WiFn::WorkDim),
+            "get_global_offset" => Some(WiFn::GlobalOffset),
+            _ => None,
+        };
+        if let Some(func) = wi {
+            let dim = match args.first() {
+                Some(Expr::Int(v, _, _)) => *v as u32,
+                None if func == WiFn::WorkDim => 0,
+                _ => return self.err(pos, "work-item builtins need a literal dimension"),
+            };
+            let v = self.push_val(Inst::Wi { func, dim });
+            return Ok((v, Type::U64));
+        }
+        // convert_<type>() family.
+        if let Some(rest) = name.strip_prefix("convert_") {
+            if let Some(ty) = super::parser::type_from_name(rest) {
+                let (v, vt) = self.lower_expr(&args[0])?;
+                let r = self.coerce(v, &vt, &ty, pos)?;
+                return Ok((r, ty));
+            }
+        }
+        // OpenCL select(a, b, c) = c ? b : a (lane-wise).
+        if name == "select" {
+            if args.len() != 3 {
+                return self.err(pos, "select takes 3 arguments");
+            }
+            let refs: Vec<&Expr> = args.iter().collect();
+            let mut vals = self.lower_siblings(&refs)?;
+            let (c, cty) = vals.pop().unwrap();
+            let (b, bty) = vals.pop().unwrap();
+            let (a, aty) = vals.pop().unwrap();
+            let (a, b, ty) = self.usual_conversions(a, &aty, b, &bty, pos)?;
+            let cond = self.to_bool_shaped(c, &cty, &ty);
+            let r = self.push_val(Inst::Select { ty: ty.clone(), cond, a: b, b: a });
+            return Ok((r, ty));
+        }
+        // Math builtins.
+        if let Some((func, int_ok)) = mathfn_from_name(name) {
+            if args.len() != func.arity() {
+                return self.err(pos, format!("{name} takes {} arguments", func.arity()));
+            }
+            let refs: Vec<&Expr> = args.iter().collect();
+            let lowered = self.lower_siblings(&refs)?;
+            let mut vals = Vec::new();
+            let mut types = Vec::new();
+            for (v, t) in lowered {
+                vals.push(v);
+                types.push(t);
+            }
+            // Common type across args (float-promote unless int function).
+            let mut ty = types[0].clone();
+            for t in &types[1..] {
+                ty = common_type(&ty, t);
+            }
+            if !int_ok && !ty.is_float() {
+                ty = ty.with_elem(Scalar::F32);
+            }
+            for (v, t) in vals.iter_mut().zip(&types) {
+                *v = self.coerce(*v, t, &ty, pos)?;
+            }
+            let ret_ty = match func {
+                MathFn::Dot | MathFn::Length | MathFn::Distance => {
+                    Type::Scalar(ty.elem_scalar().unwrap_or(Scalar::F32))
+                }
+                _ => ty.clone(),
+            };
+            let r = self.push_val(Inst::Math { func, ty, args: vals });
+            return Ok((r, ret_ty));
+        }
+        // Helper function inline expansion.
+        if let Some(def) = self.helpers.get(name).copied() {
+            if self.inline_stack.len() > 16 {
+                return self.err(pos, format!("inline depth exceeded calling `{name}` (recursion?)"));
+            }
+            if args.len() != def.params.len() {
+                return self.err(pos, format!("`{name}` takes {} args", def.params.len()));
+            }
+            // Bind arguments into fresh slots in a fresh scope (lowered
+            // spill-safely: argument expressions may themselves inline
+            // helpers).
+            let refs: Vec<&Expr> = args.iter().collect();
+            let lowered = self.lower_siblings(&refs)?;
+            let mut frame = HashMap::new();
+            for (p, (v, vt)) in def.params.iter().zip(lowered) {
+                match &p.ty {
+                    Type::Ptr(..) => {
+                        // Pointers are captured by value. Only block-
+                        // position-independent operands may be captured
+                        // (the helper body can span blocks).
+                        let ty = if matches!(vt, Type::Ptr(..)) { vt.clone() } else { p.ty.clone() };
+                        match v {
+                            Operand::Arg(i) => {
+                                frame.insert(p.name.clone(), Binding::ParamPtr { index: i, ty });
+                            }
+                            Operand::Slot(_) => {
+                                frame.insert(p.name.clone(), Binding::PtrValue { val: v, ty });
+                            }
+                            _ => {
+                                return self.err(
+                                    pos,
+                                    format!(
+                                        "pointer argument to `{name}` must be a parameter or \
+                                         private array, not a computed pointer"
+                                    ),
+                                )
+                            }
+                        }
+                    }
+                    ty => {
+                        let slot = self.func.add_slot(format!("{name}.{}", p.name), ty.clone(), 1);
+                        let v = self.coerce(v, &vt, ty, pos)?;
+                        self.push(Inst::Store { ty: ty.clone(), ptr: Operand::Slot(slot), val: v });
+                        frame.insert(
+                            p.name.clone(),
+                            Binding::Slot { slot, ty: ty.clone(), count: 1 },
+                        );
+                    }
+                }
+            }
+            let join = self.new_block("inl.join");
+            let ret_slot = if def.ret == Type::Void {
+                None
+            } else {
+                Some((self.func.add_slot(format!("{name}.ret"), def.ret.clone(), 1), def.ret.clone()))
+            };
+            self.inline_stack.push(InlineCtx { ret_slot: ret_slot.clone(), join });
+            self.scopes.push(frame);
+            for s in &def.body {
+                self.lower_stmt(s)?;
+            }
+            self.scopes.pop();
+            self.inline_stack.pop();
+            self.func.set_term(self.cur, Term::Jump(join));
+            self.cur = join;
+            match ret_slot {
+                Some((slot, ty)) => {
+                    let v = self.push_val(Inst::Load { ty: ty.clone(), ptr: Operand::Slot(slot) });
+                    Ok((v, ty))
+                }
+                None => Ok((Operand::ci32(0), Type::Void)),
+            }
+        } else {
+            self.err(pos, format!("unknown function `{name}`"))
+        }
+    }
+
+    /// Lower sibling expressions left-to-right, spilling earlier register
+    /// results to slots whenever a *later* sibling can change the current
+    /// block (helper inlining, short-circuit). This preserves the
+    /// block-local-registers invariant across multi-block subexpressions.
+    fn lower_siblings(&mut self, exprs: &[&Expr]) -> Result<Vec<(Operand, Type)>> {
+        enum Staged {
+            Direct(Operand, Type),
+            Spilled(SlotId, Type),
+        }
+        let branchy: Vec<bool> = exprs.iter().map(|e| expr_may_branch(e)).collect();
+        let mut staged = Vec::with_capacity(exprs.len());
+        for (i, e) in exprs.iter().enumerate() {
+            let (v, t) = self.lower_expr(e)?;
+            let later_branches = branchy[i + 1..].iter().any(|b| *b);
+            if later_branches && matches!(v, Operand::Reg(_)) {
+                let slot = self.func.add_slot("spill", t.clone(), 1);
+                self.push(Inst::Store { ty: t.clone(), ptr: Operand::Slot(slot), val: v });
+                staged.push(Staged::Spilled(slot, t));
+            } else {
+                staged.push(Staged::Direct(v, t));
+            }
+        }
+        let mut out = Vec::with_capacity(staged.len());
+        for s in staged {
+            out.push(match s {
+                Staged::Direct(v, t) => (v, t),
+                Staged::Spilled(slot, t) => {
+                    let v = self.push_val(Inst::Load { ty: t.clone(), ptr: Operand::Slot(slot) });
+                    (v, t)
+                }
+            });
+        }
+        Ok(out)
+    }
+
+    // ---- lvalues ---------------------------------------------------------
+
+    fn lower_lvalue(&mut self, e: &Expr, pos: Pos) -> Result<LValue> {
+        match e {
+            Expr::Ident(name, _) => match self.lookup(name).cloned() {
+                Some(Binding::Slot { slot, ty, count }) => {
+                    if count > 1 {
+                        return self.err(pos, format!("array `{name}` is not assignable"));
+                    }
+                    Ok(LValue::Mem { ptr: Operand::Slot(slot), ty, space: AddrSpace::Private })
+                }
+                Some(Binding::ParamPtr { .. }) | Some(Binding::PtrValue { .. }) => {
+                    self.err(pos, format!("pointer `{name}` is not assignable"))
+                }
+                None => self.err(pos, format!("unknown identifier `{name}`")),
+            },
+            Expr::Index(base, idx, pos) => self.lower_index_lvalue(base, idx, *pos),
+            Expr::Swizzle(base, field, pos) => {
+                let lv = self.lower_lvalue(base, *pos)?;
+                let (ptr, vec_ty, space) = match lv {
+                    LValue::Mem { ptr, ty, space } => (ptr, ty, space),
+                    LValue::Lane { .. } => return self.err(*pos, "nested swizzle lvalue"),
+                };
+                let n = vec_ty.lanes();
+                let lanes = swizzle_lanes(field, n).ok_or_else(|| Error::Sema {
+                    line: pos.line,
+                    col: pos.col,
+                    msg: format!("bad swizzle `.{field}`"),
+                })?;
+                if lanes.len() != 1 {
+                    return self.err(*pos, "multi-lane swizzle assignment unsupported");
+                }
+                Ok(LValue::Lane { ptr, vec_ty, lane: lanes[0], space })
+            }
+            _ => self.err(pos, "expression is not assignable"),
+        }
+    }
+
+    fn lower_index_lvalue(&mut self, base: &Expr, idx: &Expr, pos: Pos) -> Result<LValue> {
+        let mut vals = self.lower_siblings(&[base, idx])?;
+        let (iv, _ity) = vals.pop().unwrap();
+        let (bv, bty) = vals.pop().unwrap();
+        match bty {
+            Type::Ptr(elem, space) => {
+                let ptr = self.push_val(Inst::Gep { elem: (*elem).clone(), base: bv, idx: iv });
+                Ok(LValue::Mem { ptr, ty: *elem, space })
+            }
+            _ => self.err(pos, format!("cannot index non-pointer type {bty}")),
+        }
+    }
+
+    fn load_lvalue(&mut self, lv: &LValue) -> (Operand, Type) {
+        match lv {
+            LValue::Mem { ptr, ty, .. } => {
+                let v = self.push_val(Inst::Load { ty: ty.clone(), ptr: *ptr });
+                (v, ty.clone())
+            }
+            LValue::Lane { ptr, vec_ty, lane, .. } => {
+                let v = self.push_val(Inst::Load { ty: vec_ty.clone(), ptr: *ptr });
+                let elem = Type::Scalar(vec_ty.elem_scalar().unwrap());
+                let x = self.push_val(Inst::VecExtract { elem: elem.clone(), a: v, lane: *lane });
+                (x, elem)
+            }
+        }
+    }
+
+    fn store_lvalue(&mut self, lv: &LValue, val: Operand) {
+        match lv {
+            LValue::Mem { ptr, ty, .. } => {
+                self.push(Inst::Store { ty: ty.clone(), ptr: *ptr, val });
+            }
+            LValue::Lane { ptr, vec_ty, lane, .. } => {
+                let old = self.push_val(Inst::Load { ty: vec_ty.clone(), ptr: *ptr });
+                let newv = self.push_val(Inst::VecInsert {
+                    ty: vec_ty.clone(),
+                    a: old,
+                    lane: *lane,
+                    v: val,
+                });
+                self.push(Inst::Store { ty: vec_ty.clone(), ptr: *ptr, val: newv });
+            }
+        }
+    }
+
+    // ---- conversions -----------------------------------------------------
+
+    /// Convert `v : from` to type `to`, emitting a Cast if needed.
+    fn coerce(&mut self, v: Operand, from: &Type, to: &Type, pos: Pos) -> Result<Operand> {
+        if from == to {
+            return Ok(v);
+        }
+        match (from, to) {
+            (Type::Scalar(_), Type::Scalar(_)) => {
+                // Fold immediates.
+                if let Operand::Imm(imm) = v {
+                    if let Some(folded) = fold_imm(imm, to) {
+                        return Ok(Operand::Imm(folded));
+                    }
+                }
+                Ok(self.push_val(Inst::Cast { to: to.clone(), from: from.clone(), a: v }))
+            }
+            (Type::Scalar(_), Type::Vec(s, _)) => {
+                let x = self.coerce(v, from, &Type::Scalar(*s), pos)?;
+                Ok(self.push_val(Inst::Splat { ty: to.clone(), a: x }))
+            }
+            (Type::Vec(_, n), Type::Vec(_, m)) if n == m => {
+                Ok(self.push_val(Inst::Cast { to: to.clone(), from: from.clone(), a: v }))
+            }
+            (Type::Ptr(_, _), Type::Ptr(_, sp)) => {
+                // Reinterpreting pointer casts keep the operand.
+                let _ = sp;
+                Ok(v)
+            }
+            _ => self.err(pos, format!("cannot convert {from} to {to}")),
+        }
+    }
+
+    /// C usual arithmetic conversions extended to vectors.
+    fn usual_conversions(
+        &mut self,
+        a: Operand,
+        aty: &Type,
+        b: Operand,
+        bty: &Type,
+        pos: Pos,
+    ) -> Result<(Operand, Operand, Type)> {
+        let ty = common_type(aty, bty);
+        let a = self.coerce(a, aty, &ty, pos)?;
+        let b = self.coerce(b, bty, &ty, pos)?;
+        Ok((a, b, ty))
+    }
+
+    /// Reduce a value to a scalar bool (compare != 0 unless already bool).
+    fn to_bool(&mut self, v: Operand, ty: &Type) -> Operand {
+        if *ty == Type::BOOL {
+            return v;
+        }
+        let zero = if ty.is_float() {
+            Operand::Imm(Imm::Float(0.0, ty.elem_scalar().unwrap()))
+        } else {
+            Operand::Imm(Imm::Int(0, ty.elem_scalar().unwrap_or(Scalar::I32)))
+        };
+        self.push_val(Inst::Bin { op: BinOp::Ne, ty: ty.clone(), a: v, b: zero })
+    }
+
+    /// Shape a select condition to match the value type's lanes.
+    fn to_bool_shaped(&mut self, c: Operand, cty: &Type, val_ty: &Type) -> Operand {
+        match (cty, val_ty) {
+            (Type::Vec(..), Type::Vec(..)) => {
+                // OpenCL vector select uses the MSB of each int lane.
+                let zero = Operand::Imm(Imm::Int(0, cty.elem_scalar().unwrap()));
+                self.push_val(Inst::Bin { op: BinOp::Lt, ty: cty.clone(), a: c, b: zero })
+            }
+            _ => self.to_bool(c, cty),
+        }
+    }
+}
+
+fn one_ty(op: Operand) -> Type {
+    match op {
+        Operand::Imm(i) => i.ty(),
+        _ => Type::I32,
+    }
+}
+
+fn lvalue_ty(lv: &LValue) -> Type {
+    match lv {
+        LValue::Mem { ty, .. } => ty.clone(),
+        LValue::Lane { vec_ty, .. } => Type::Scalar(vec_ty.elem_scalar().unwrap()),
+    }
+}
+
+fn fold_imm(imm: Imm, to: &Type) -> Option<Imm> {
+    let s = match to {
+        Type::Scalar(s) => *s,
+        _ => return None,
+    };
+    Some(match (imm, s) {
+        (Imm::Int(v, _), s) if s.is_int() => Imm::Int(v, s),
+        (Imm::Int(v, _), s) => Imm::Float(v as f64, s),
+        (Imm::Float(v, _), s) if s.is_float() => Imm::Float(v, s),
+        (Imm::Float(v, _), s) => Imm::Int(v as i64, s),
+    })
+}
+
+/// C usual-arithmetic-conversions result type, extended lane-wise.
+fn common_type(a: &Type, b: &Type) -> Type {
+    use Scalar::*;
+    // Vector shape wins.
+    let lanes = a.lanes().max(b.lanes());
+    let (sa, sb) = match (a.elem_scalar(), b.elem_scalar()) {
+        (Some(x), Some(y)) => (x, y),
+        _ => return a.clone(),
+    };
+    fn rank(s: Scalar) -> u8 {
+        match s {
+            Bool => 0,
+            I32 => 1,
+            U32 => 2,
+            I64 => 3,
+            U64 => 4,
+            F32 => 5,
+            F64 => 6,
+        }
+    }
+    let s = if rank(sa) >= rank(sb) { sa } else { sb };
+    // bool arithmetic promotes to int.
+    let s = if s == Bool { I32 } else { s };
+    if lanes > 1 {
+        Type::Vec(s, lanes as u8)
+    } else {
+        Type::Scalar(s)
+    }
+}
+
+fn binop_from_str(op: &str) -> Option<BinOp> {
+    Some(match op {
+        "+" => BinOp::Add,
+        "-" => BinOp::Sub,
+        "*" => BinOp::Mul,
+        "/" => BinOp::Div,
+        "%" => BinOp::Rem,
+        "&" => BinOp::And,
+        "|" => BinOp::Or,
+        "^" => BinOp::Xor,
+        "<<" => BinOp::Shl,
+        ">>" => BinOp::Shr,
+        "==" => BinOp::Eq,
+        "!=" => BinOp::Ne,
+        "<" => BinOp::Lt,
+        "<=" => BinOp::Le,
+        ">" => BinOp::Gt,
+        ">=" => BinOp::Ge,
+        _ => return None,
+    })
+}
+
+/// Map OpenCL builtin names to MathFn; bool = integer types permitted.
+fn mathfn_from_name(name: &str) -> Option<(MathFn, bool)> {
+    use MathFn::*;
+    Some(match name {
+        "sqrt" => (Sqrt, false),
+        "rsqrt" => (RSqrt, false),
+        "exp" => (Exp, false),
+        "exp2" => (Exp2, false),
+        "log" => (Log, false),
+        "log2" => (Log2, false),
+        "sin" => (Sin, false),
+        "cos" => (Cos, false),
+        "tan" => (Tan, false),
+        "fabs" => (Fabs, false),
+        "floor" => (Floor, false),
+        "ceil" => (Ceil, false),
+        "round" => (Round, false),
+        "trunc" => (Trunc, false),
+        "pow" => (Pow, false),
+        "fmin" => (Fmin, false),
+        "fmax" => (Fmax, false),
+        "fmod" => (Fmod, false),
+        "mad" => (Mad, false),
+        "fma" => (Fma, false),
+        "min" => (Min, true),
+        "max" => (Max, true),
+        "clamp" => (Clamp, true),
+        "abs" => (Abs, true),
+        "mix" => (Mix, false),
+        "dot" => (Dot, false),
+        "length" => (Length, false),
+        "normalize" => (Normalize, false),
+        "distance" => (Distance, false),
+        "native_sqrt" => (NativeSqrt, false),
+        "native_rsqrt" => (NativeRSqrt, false),
+        "native_exp" => (NativeExp, false),
+        "native_log" => (NativeLog, false),
+        "native_sin" => (NativeSin, false),
+        "native_cos" => (NativeCos, false),
+        "native_divide" => (NativeDivide, false),
+        "native_recip" => (NativeRecip, false),
+        "half_sqrt" => (NativeSqrt, false),
+        "half_exp" => (NativeExp, false),
+        _ => return None,
+    })
+}
+
+/// Lanes selected by a swizzle suffix, or None if invalid.
+fn swizzle_lanes(field: &str, n: usize) -> Option<Vec<u32>> {
+    match field {
+        "lo" => return Some((0..n as u32 / 2).collect()),
+        "hi" => return Some((n as u32 / 2..n as u32).collect()),
+        "even" => return Some((0..n as u32).step_by(2).collect()),
+        "odd" => return Some((1..n as u32).step_by(2).collect()),
+        _ => {}
+    }
+    if let Some(rest) = field.strip_prefix('s') {
+        if !rest.is_empty() && rest.chars().all(|c| c.is_ascii_hexdigit()) {
+            let lanes: Vec<u32> =
+                rest.chars().map(|c| c.to_digit(16).unwrap()).collect();
+            if lanes.iter().all(|&l| (l as usize) < n) {
+                return Some(lanes);
+            }
+            return None;
+        }
+    }
+    let mut lanes = Vec::new();
+    for c in field.chars() {
+        let l = match c {
+            'x' => 0,
+            'y' => 1,
+            'z' => 2,
+            'w' => 3,
+            _ => return None,
+        };
+        if l >= n as u32 {
+            return None;
+        }
+        lanes.push(l);
+    }
+    if lanes.is_empty() {
+        None
+    } else {
+        Some(lanes)
+    }
+}
+
+/// Can lowering this expression change the current block (helper-call
+/// inlining, short-circuit ops, impure ternaries)? Used to decide when
+/// earlier register operands must be spilled to slots (registers are
+/// block-local).
+fn expr_may_branch(e: &Expr) -> bool {
+    match e {
+        Expr::Int(..) | Expr::Float(..) | Expr::Ident(..) => false,
+        Expr::Bin(op, a, b, _) => *op == "&&" || *op == "||" || expr_may_branch(a) || expr_may_branch(b),
+        Expr::Un(_, a, _) => expr_may_branch(a),
+        Expr::IncDec { target, .. } => expr_may_branch(target),
+        Expr::Assign { target, value, .. } => expr_may_branch(target) || expr_may_branch(value),
+        Expr::Ternary(c, a, b, _) => {
+            !(expr_is_pure(a) && expr_is_pure(b))
+                || expr_may_branch(c)
+                || expr_may_branch(a)
+                || expr_may_branch(b)
+        }
+        Expr::Cast(_, a, _) => expr_may_branch(a),
+        Expr::VecLit(_, es, _) => es.iter().any(expr_may_branch),
+        Expr::Call(name, args, _) => {
+            // Helper calls inline multi-block bodies; wi/math/convert
+            // builtins never branch.
+            let builtin = mathfn_from_name(name).is_some()
+                || name.starts_with("get_")
+                || name.starts_with("convert_")
+                || name == "select";
+            !builtin || args.iter().any(expr_may_branch)
+        }
+        Expr::Index(a, i, _) => expr_may_branch(a) || expr_may_branch(i),
+        Expr::Swizzle(a, _, _) => expr_may_branch(a),
+    }
+}
+
+/// Side-effect-free check for ternary → select lowering.
+fn expr_is_pure(e: &Expr) -> bool {
+    match e {
+        Expr::Int(..) | Expr::Float(..) | Expr::Ident(..) => true,
+        Expr::Bin(op, a, b, _) => *op != "&&" && *op != "||" && expr_is_pure(a) && expr_is_pure(b),
+        Expr::Un(_, a, _) => expr_is_pure(a),
+        Expr::Ternary(c, a, b, _) => expr_is_pure(c) && expr_is_pure(a) && expr_is_pure(b),
+        Expr::Cast(_, a, _) => expr_is_pure(a),
+        Expr::VecLit(_, es, _) => es.iter().all(expr_is_pure),
+        Expr::Index(a, i, _) => expr_is_pure(a) && expr_is_pure(i),
+        Expr::Swizzle(a, _, _) => expr_is_pure(a),
+        Expr::Call(name, args, _) => {
+            mathfn_from_name(name).is_some() && args.iter().all(expr_is_pure)
+        }
+        Expr::IncDec { .. } | Expr::Assign { .. } => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+    use crate::ir::verify::{barrier_count, verify};
+
+    #[test]
+    fn lowers_vecadd() {
+        let m = compile(
+            "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
+                 size_t i = get_global_id(0);
+                 c[i] = a[i] + b[i];
+             }",
+        )
+        .unwrap();
+        let k = m.kernel("vecadd").unwrap();
+        verify(k).unwrap();
+        assert_eq!(k.params.len(), 3);
+        assert_eq!(k.slots.len(), 1); // `i`
+    }
+
+    #[test]
+    fn scalar_params_become_slots() {
+        let m = compile(
+            "__kernel void k(__global float *x, uint n) { n >>= 1; x[0] = (float)n; }",
+        )
+        .unwrap();
+        let k = m.kernel("k").unwrap();
+        verify(k).unwrap();
+        assert!(k.slots.iter().any(|s| s.name == "n"));
+    }
+
+    #[test]
+    fn automatic_local_becomes_param() {
+        let m = compile(
+            "__kernel void k(__global float *x) {
+                 __local float tile[4][8];
+                 tile[get_local_id(0)][0] = x[0];
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[1] = tile[0][0];
+             }",
+        );
+        // 2-D local array indexing `tile[a][b]` needs pointer-to-pointer,
+        // which MiniCL flattens: `tile[a][b]` is unsupported — kernels in
+        // the suite use flat indexing. Check the conversion itself with a
+        // 1-D local instead.
+        assert!(m.is_err());
+        let m = compile(
+            "__kernel void k(__global float *x) {
+                 __local float tile[32];
+                 tile[get_local_id(0)] = x[0];
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[1] = tile[0];
+             }",
+        )
+        .unwrap();
+        let k = m.kernel("k").unwrap();
+        let lp = k.params.last().unwrap();
+        assert!(lp.is_local_buf);
+        assert_eq!(lp.auto_local_size, Some(32 * 4));
+        assert_eq!(barrier_count(k), 1);
+    }
+
+    #[test]
+    fn short_circuit_creates_blocks() {
+        let m = compile(
+            "__kernel void k(__global int *x, int n) {
+                 int i = (int)get_global_id(0);
+                 if (i < n && x[i] > 0) x[i] = 0;
+             }",
+        )
+        .unwrap();
+        let k = m.kernel("k").unwrap();
+        verify(k).unwrap();
+        assert!(k.blocks.len() >= 5, "short-circuit + if should create blocks");
+    }
+
+    #[test]
+    fn helper_inlining() {
+        let m = compile(
+            "uint getIdx(uint g, uint l, uint w) { return g * w + l; }
+             __kernel void k(__global float *x, uint w) {
+                 x[getIdx((uint)get_group_id(0), (uint)get_local_id(0), w)] = 1.0f;
+             }",
+        )
+        .unwrap();
+        let k = m.kernel("k").unwrap();
+        verify(k).unwrap();
+        // Inlined body: slots for helper params + ret.
+        assert!(k.slots.iter().any(|s| s.name.contains("getIdx")));
+    }
+
+    #[test]
+    fn vector_swizzle_assignment() {
+        let m = compile(
+            "__kernel void k(__global float4 *v) {
+                 float4 a = (float4)(1.0f, 2.0f, 3.0f, 4.0f);
+                 a.x = a.y;
+                 a.s2 = 7.0f;
+                 v[0] = a.wzyx;
+             }",
+        )
+        .unwrap();
+        verify(m.kernel("k").unwrap()).unwrap();
+    }
+
+    #[test]
+    fn loops_lower_to_cfg() {
+        let m = compile(
+            "__kernel void k(__global int *x, int n) {
+                 for (int i = 0; i < n; i++) {
+                     if (x[i] < 0) continue;
+                     x[i] += 1;
+                 }
+                 int j = 0;
+                 while (j < n) { j++; if (j == 3) break; }
+             }",
+        )
+        .unwrap();
+        let k = m.kernel("k").unwrap();
+        verify(k).unwrap();
+        let loops = crate::ir::loops::find_loops(k);
+        assert_eq!(loops.len(), 2);
+    }
+
+    #[test]
+    fn ternary_pure_becomes_select() {
+        let m = compile(
+            "__kernel void k(__global uint *x, uint n, uint inv) {
+                 uint i = (uint)get_global_id(0);
+                 x[i] = (inv) ? i * n : n * i;
+             }",
+        )
+        .unwrap();
+        let k = m.kernel("k").unwrap();
+        let has_select = k
+            .blocks
+            .iter()
+            .flat_map(|b| &b.insts)
+            .any(|(_, i)| matches!(i, Inst::Select { .. }));
+        assert!(has_select);
+        // Pure ternary: no extra control flow from the ternary itself.
+        assert_eq!(k.blocks.len(), 1);
+    }
+
+    #[test]
+    fn rejects_unknown_identifier_with_position() {
+        let e = compile("__kernel void k(__global int *x) {\n x[0] = y;\n }").unwrap_err();
+        match e {
+            Error::Sema { line, .. } => assert_eq!(line, 2),
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn math_builtins_and_conversions() {
+        let m = compile(
+            "__kernel void k(__global float *x) {
+                 size_t i = get_global_id(0);
+                 float a = sqrt(x[i]) + exp(x[i]) * sin(x[i]);
+                 float4 v = (float4)(a) * 2.0f;
+                 x[i] = mad(a, 2.0f, dot(v, v)) + fmax(a, 0.5f) + (float)max(1, 2);
+             }",
+        )
+        .unwrap();
+        verify(m.kernel("k").unwrap()).unwrap();
+    }
+}

@@ -1,0 +1,17 @@
+//! MiniCL frontend: the Clang analog. Lexes, parses and lowers an OpenCL C
+//! subset into the kernel IR.
+
+pub mod ast;
+pub mod lexer;
+pub mod lower;
+pub mod parser;
+
+use crate::cl::error::Result;
+use crate::ir::Module;
+
+/// Compile MiniCL source to an IR module (single-work-item kernels, the
+/// input to the kernel compiler of `kcc`).
+pub fn compile(src: &str) -> Result<Module> {
+    let unit = parser::parse(src)?;
+    lower::lower_unit(&unit)
+}

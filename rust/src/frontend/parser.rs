@@ -1,0 +1,763 @@
+//! MiniCL recursive-descent parser.
+
+use super::ast::*;
+use super::lexer::{lex, Tok, Token};
+use crate::cl::error::{Error, Result};
+use crate::ir::types::{AddrSpace, Scalar, Type};
+
+/// Parse a MiniCL source string into a `Unit`.
+pub fn parse(src: &str) -> Result<Unit> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.unit()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+    fn here(&self) -> Pos {
+        let t = &self.toks[self.pos];
+        Pos { line: t.line, col: t.col }
+    }
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T> {
+        let p = self.here();
+        Err(Error::Parse { line: p.line, col: p.col, msg: msg.into() })
+    }
+    fn eat_punct(&mut self, p: &str) -> bool {
+        if matches!(self.peek(), Tok::Punct(q) if *q == p) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+    fn expect_punct(&mut self, p: &str) -> Result<()> {
+        if self.eat_punct(p) {
+            Ok(())
+        } else {
+            self.err(format!("expected `{p}`, found {:?}", self.peek()))
+        }
+    }
+    fn eat_ident(&mut self, name: &str) -> bool {
+        if matches!(self.peek(), Tok::Ident(s) if s == name) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+    fn expect_ident(&mut self) -> Result<String> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => {
+                self.pos -= 1;
+                self.err(format!("expected identifier, found {other:?}"))
+            }
+        }
+    }
+
+    // ---- types ----------------------------------------------------------
+
+    /// Try to parse a scalar/vector type name. Does not consume on failure.
+    fn try_type_name(&mut self) -> Option<Type> {
+        let name = match self.peek() {
+            Tok::Ident(s) => s.clone(),
+            _ => return None,
+        };
+        let ty = type_from_name(&name)?;
+        self.bump();
+        Some(ty)
+    }
+
+    /// True if the current token begins a type (used to disambiguate decls
+    /// from expressions).
+    fn starts_type(&self) -> bool {
+        match self.peek() {
+            Tok::Ident(s) => {
+                type_from_name(s).is_some()
+                    || matches!(
+                        s.as_str(),
+                        "__global"
+                            | "global"
+                            | "__local"
+                            | "local"
+                            | "__constant"
+                            | "constant"
+                            | "__private"
+                            | "private"
+                            | "const"
+                            | "void"
+                    )
+            }
+            _ => false,
+        }
+    }
+
+    /// Parse `[qualifiers] base [*]`, returning (type, space, is_const).
+    fn full_type(&mut self) -> Result<(Type, AddrSpace, bool)> {
+        let mut space = AddrSpace::Private;
+        let mut is_const = false;
+        loop {
+            match self.peek() {
+                Tok::Ident(s) => match s.as_str() {
+                    "__global" | "global" => {
+                        space = AddrSpace::Global;
+                        self.bump();
+                    }
+                    "__local" | "local" => {
+                        space = AddrSpace::Local;
+                        self.bump();
+                    }
+                    "__constant" | "constant" => {
+                        space = AddrSpace::Constant;
+                        self.bump();
+                    }
+                    "__private" | "private" => {
+                        space = AddrSpace::Private;
+                        self.bump();
+                    }
+                    "const" => {
+                        is_const = true;
+                        self.bump();
+                    }
+                    "volatile" | "restrict" | "__restrict" => {
+                        self.bump();
+                    }
+                    _ => break,
+                },
+                _ => break,
+            }
+        }
+        let base = match self.try_type_name() {
+            Some(t) => t,
+            None => return self.err(format!("expected type, found {:?}", self.peek())),
+        };
+        let mut ty = base;
+        while self.eat_punct("*") {
+            ty = ty.ptr(space);
+        }
+        Ok((ty, space, is_const))
+    }
+
+    // ---- top level -------------------------------------------------------
+
+    fn unit(&mut self) -> Result<Unit> {
+        let mut unit = Unit::default();
+        while !matches!(self.peek(), Tok::Eof) {
+            unit.funcs.push(self.func_def()?);
+        }
+        Ok(unit)
+    }
+
+    fn func_def(&mut self) -> Result<FuncDef> {
+        let pos = self.here();
+        let mut is_kernel = false;
+        loop {
+            if self.eat_ident("__kernel") || self.eat_ident("kernel") {
+                is_kernel = true;
+            } else if self.eat_ident("__attribute__") {
+                // skip __attribute__((...))
+                self.expect_punct("(")?;
+                let mut depth = 1;
+                while depth > 0 {
+                    match self.bump() {
+                        Tok::Punct("(") => depth += 1,
+                        Tok::Punct(")") => depth -= 1,
+                        Tok::Eof => return self.err("unterminated attribute"),
+                        _ => {}
+                    }
+                }
+            } else if self.eat_ident("static") || self.eat_ident("inline") {
+            } else {
+                break;
+            }
+        }
+        let ret = if self.eat_ident("void") {
+            Type::Void
+        } else {
+            let (t, _, _) = self.full_type()?;
+            t
+        };
+        let name = self.expect_ident()?;
+        self.expect_punct("(")?;
+        let mut params = Vec::new();
+        if !self.eat_punct(")") {
+            loop {
+                let ppos = self.here();
+                let (ty, _space, is_const) = self.full_type()?;
+                let pname = self.expect_ident()?;
+                params.push(ParamDecl { name: pname, ty, is_const, pos: ppos });
+                if self.eat_punct(")") {
+                    break;
+                }
+                self.expect_punct(",")?;
+            }
+        }
+        self.expect_punct("{")?;
+        let body = self.block_body()?;
+        Ok(FuncDef { name, is_kernel, ret, params, body, pos })
+    }
+
+    // ---- statements ------------------------------------------------------
+
+    /// Parse statements until `}` (consumed).
+    fn block_body(&mut self) -> Result<Vec<Stmt>> {
+        let mut stmts = Vec::new();
+        while !self.eat_punct("}") {
+            if matches!(self.peek(), Tok::Eof) {
+                return self.err("unexpected EOF in block");
+            }
+            stmts.push(self.stmt()?);
+        }
+        Ok(stmts)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        if self.eat_punct("{") {
+            return Ok(Stmt::Block(self.block_body()?));
+        }
+        if self.eat_punct(";") {
+            return Ok(Stmt::Block(vec![]));
+        }
+        match self.peek() {
+            Tok::Ident(s) => match s.as_str() {
+                "if" => return self.if_stmt(),
+                "for" => return self.for_stmt(),
+                "while" => return self.while_stmt(),
+                "do" => return self.do_stmt(),
+                "break" => {
+                    self.bump();
+                    self.expect_punct(";")?;
+                    return Ok(Stmt::Break(pos));
+                }
+                "continue" => {
+                    self.bump();
+                    self.expect_punct(";")?;
+                    return Ok(Stmt::Continue(pos));
+                }
+                "return" => {
+                    self.bump();
+                    if self.eat_punct(";") {
+                        return Ok(Stmt::Return(None, pos));
+                    }
+                    let e = self.expr()?;
+                    self.expect_punct(";")?;
+                    return Ok(Stmt::Return(Some(e), pos));
+                }
+                "barrier" | "mem_fence" => {
+                    self.bump();
+                    self.expect_punct("(")?;
+                    // Swallow the fence-flag expression.
+                    let mut depth = 1;
+                    while depth > 0 {
+                        match self.bump() {
+                            Tok::Punct("(") => depth += 1,
+                            Tok::Punct(")") => depth -= 1,
+                            Tok::Eof => return self.err("unterminated barrier()"),
+                            _ => {}
+                        }
+                    }
+                    self.expect_punct(";")?;
+                    return Ok(Stmt::Barrier(pos));
+                }
+                _ => {}
+            },
+            _ => {}
+        }
+        if self.starts_type() {
+            return self.decl_stmt();
+        }
+        let e = self.expr()?;
+        self.expect_punct(";")?;
+        Ok(Stmt::Expr(e))
+    }
+
+    fn decl_stmt(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        let (ty, space, _c) = self.full_type()?;
+        let mut decls = Vec::new();
+        loop {
+            let name = self.expect_ident()?;
+            // Array suffixes: flatten multi-dim.
+            let mut array: Option<Expr> = None;
+            while self.eat_punct("[") {
+                let len = self.expr()?;
+                self.expect_punct("]")?;
+                array = Some(match array {
+                    None => len,
+                    Some(prev) => {
+                        Expr::Bin("*", Box::new(prev), Box::new(len), pos)
+                    }
+                });
+            }
+            let mut init = None;
+            let mut init_list = None;
+            if self.eat_punct("=") {
+                if self.eat_punct("{") {
+                    let mut elems = Vec::new();
+                    if !self.eat_punct("}") {
+                        loop {
+                            // Flatten nested braces for 2-D initialisers.
+                            if self.eat_punct("{") {
+                                loop {
+                                    elems.push(self.assign_expr()?);
+                                    if self.eat_punct("}") {
+                                        break;
+                                    }
+                                    self.expect_punct(",")?;
+                                }
+                            } else {
+                                elems.push(self.assign_expr()?);
+                            }
+                            if self.eat_punct("}") {
+                                break;
+                            }
+                            self.expect_punct(",")?;
+                        }
+                    }
+                    init_list = Some(elems);
+                } else {
+                    init = Some(self.assign_expr()?);
+                }
+            }
+            decls.push(Stmt::Decl { name, ty: ty.clone(), space, array, init, init_list, pos });
+            if self.eat_punct(";") {
+                break;
+            }
+            self.expect_punct(",")?;
+        }
+        Ok(if decls.len() == 1 { decls.pop().unwrap() } else { Stmt::Block(decls) })
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        self.bump(); // if
+        self.expect_punct("(")?;
+        let cond = self.expr()?;
+        self.expect_punct(")")?;
+        let then_body = self.stmt_as_block()?;
+        let else_body = if self.eat_ident("else") { self.stmt_as_block()? } else { vec![] };
+        Ok(Stmt::If { cond, then_body, else_body, pos })
+    }
+
+    fn stmt_as_block(&mut self) -> Result<Vec<Stmt>> {
+        if self.eat_punct("{") {
+            self.block_body()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    fn for_stmt(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        self.bump(); // for
+        self.expect_punct("(")?;
+        let init = if self.eat_punct(";") {
+            None
+        } else if self.starts_type() {
+            Some(Box::new(self.decl_stmt()?)) // consumes `;`
+        } else {
+            let e = self.expr()?;
+            self.expect_punct(";")?;
+            Some(Box::new(Stmt::Expr(e)))
+        };
+        let cond = if self.eat_punct(";") {
+            None
+        } else {
+            let e = self.expr()?;
+            self.expect_punct(";")?;
+            Some(e)
+        };
+        let step = if self.eat_punct(")") {
+            None
+        } else {
+            let e = self.expr()?;
+            self.expect_punct(")")?;
+            Some(e)
+        };
+        let body = self.stmt_as_block()?;
+        Ok(Stmt::For { init, cond, step, body, pos })
+    }
+
+    fn while_stmt(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        self.bump();
+        self.expect_punct("(")?;
+        let cond = self.expr()?;
+        self.expect_punct(")")?;
+        let body = self.stmt_as_block()?;
+        Ok(Stmt::While { cond, body, pos })
+    }
+
+    fn do_stmt(&mut self) -> Result<Stmt> {
+        let pos = self.here();
+        self.bump();
+        let body = self.stmt_as_block()?;
+        if !self.eat_ident("while") {
+            return self.err("expected `while` after do-body");
+        }
+        self.expect_punct("(")?;
+        let cond = self.expr()?;
+        self.expect_punct(")")?;
+        self.expect_punct(";")?;
+        Ok(Stmt::DoWhile { cond, body, pos })
+    }
+
+    // ---- expressions (precedence climbing) --------------------------------
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.assign_expr()
+    }
+
+    fn assign_expr(&mut self) -> Result<Expr> {
+        let lhs = self.ternary_expr()?;
+        let pos = self.here();
+        let op = match self.peek() {
+            Tok::Punct("=") => "",
+            Tok::Punct("+=") => "+",
+            Tok::Punct("-=") => "-",
+            Tok::Punct("*=") => "*",
+            Tok::Punct("/=") => "/",
+            Tok::Punct("%=") => "%",
+            Tok::Punct("&=") => "&",
+            Tok::Punct("|=") => "|",
+            Tok::Punct("^=") => "^",
+            Tok::Punct("<<=") => "<<",
+            Tok::Punct(">>=") => ">>",
+            _ => return Ok(lhs),
+        };
+        self.bump();
+        let value = self.assign_expr()?;
+        Ok(Expr::Assign { op, target: Box::new(lhs), value: Box::new(value), pos })
+    }
+
+    fn ternary_expr(&mut self) -> Result<Expr> {
+        let cond = self.bin_expr(0)?;
+        if self.eat_punct("?") {
+            let pos = cond.pos();
+            let a = self.expr()?;
+            self.expect_punct(":")?;
+            let b = self.ternary_expr()?;
+            Ok(Expr::Ternary(Box::new(cond), Box::new(a), Box::new(b), pos))
+        } else {
+            Ok(cond)
+        }
+    }
+
+    fn bin_expr(&mut self, min_prec: u8) -> Result<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let (op, prec) = match self.peek() {
+                Tok::Punct("||") => ("||", 1),
+                Tok::Punct("&&") => ("&&", 2),
+                Tok::Punct("|") => ("|", 3),
+                Tok::Punct("^") => ("^", 4),
+                Tok::Punct("&") => ("&", 5),
+                Tok::Punct("==") => ("==", 6),
+                Tok::Punct("!=") => ("!=", 6),
+                Tok::Punct("<") => ("<", 7),
+                Tok::Punct(">") => (">", 7),
+                Tok::Punct("<=") => ("<=", 7),
+                Tok::Punct(">=") => (">=", 7),
+                Tok::Punct("<<") => ("<<", 8),
+                Tok::Punct(">>") => (">>", 8),
+                Tok::Punct("+") => ("+", 9),
+                Tok::Punct("-") => ("-", 9),
+                Tok::Punct("*") => ("*", 10),
+                Tok::Punct("/") => ("/", 10),
+                Tok::Punct("%") => ("%", 10),
+                _ => break,
+            };
+            if prec < min_prec {
+                break;
+            }
+            let pos = self.here();
+            self.bump();
+            let rhs = self.bin_expr(prec + 1)?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs), pos);
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        let pos = self.here();
+        if self.eat_punct("-") {
+            return Ok(Expr::Un("-", Box::new(self.unary_expr()?), pos));
+        }
+        if self.eat_punct("!") {
+            return Ok(Expr::Un("!", Box::new(self.unary_expr()?), pos));
+        }
+        if self.eat_punct("~") {
+            return Ok(Expr::Un("~", Box::new(self.unary_expr()?), pos));
+        }
+        if self.eat_punct("+") {
+            return self.unary_expr();
+        }
+        if self.eat_punct("++") {
+            return Ok(Expr::IncDec {
+                op: "+",
+                prefix: true,
+                target: Box::new(self.unary_expr()?),
+                pos,
+            });
+        }
+        if self.eat_punct("--") {
+            return Ok(Expr::IncDec {
+                op: "-",
+                prefix: true,
+                target: Box::new(self.unary_expr()?),
+                pos,
+            });
+        }
+        // `(type) expr` cast or `(typeN)(...)` vector literal.
+        if matches!(self.peek(), Tok::Punct("(")) {
+            if let Tok::Ident(name) = self.peek2() {
+                if let Some(ty) = type_from_name(name) {
+                    // Need a 3-token lookahead for `)` after the type.
+                    let save = self.pos;
+                    self.bump(); // (
+                    self.bump(); // type
+                    if self.eat_punct(")") {
+                        if matches!(ty, Type::Vec(..)) && matches!(self.peek(), Tok::Punct("(")) {
+                            // vector literal
+                            self.expect_punct("(")?;
+                            let mut elems = Vec::new();
+                            loop {
+                                elems.push(self.assign_expr()?);
+                                if self.eat_punct(")") {
+                                    break;
+                                }
+                                self.expect_punct(",")?;
+                            }
+                            return self.postfix_tail(Expr::VecLit(ty, elems, pos));
+                        }
+                        let e = self.unary_expr()?;
+                        return Ok(Expr::Cast(ty, Box::new(e), pos));
+                    }
+                    self.pos = save;
+                }
+            }
+        }
+        self.postfix_expr()
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr> {
+        let pos = self.here();
+        let mut e = match self.bump() {
+            Tok::Int(v, u) => Expr::Int(v, u, pos),
+            Tok::Float(v, f) => Expr::Float(v, f, pos),
+            Tok::Ident(name) => {
+                if matches!(self.peek(), Tok::Punct("(")) {
+                    self.bump();
+                    let mut args = Vec::new();
+                    if !self.eat_punct(")") {
+                        loop {
+                            args.push(self.assign_expr()?);
+                            if self.eat_punct(")") {
+                                break;
+                            }
+                            self.expect_punct(",")?;
+                        }
+                    }
+                    Expr::Call(name, args, pos)
+                } else {
+                    Expr::Ident(name, pos)
+                }
+            }
+            Tok::Punct("(") => {
+                let inner = self.expr()?;
+                self.expect_punct(")")?;
+                inner
+            }
+            other => {
+                self.pos -= 1;
+                return self.err(format!("expected expression, found {other:?}"));
+            }
+        };
+        e = self.postfix_tail(e)?;
+        Ok(e)
+    }
+
+    fn postfix_tail(&mut self, mut e: Expr) -> Result<Expr> {
+        loop {
+            let pos = self.here();
+            if self.eat_punct("[") {
+                let idx = self.expr()?;
+                self.expect_punct("]")?;
+                e = Expr::Index(Box::new(e), Box::new(idx), pos);
+            } else if self.eat_punct(".") {
+                let field = self.expect_ident()?;
+                e = Expr::Swizzle(Box::new(e), field, pos);
+            } else if self.eat_punct("++") {
+                e = Expr::IncDec { op: "+", prefix: false, target: Box::new(e), pos };
+            } else if self.eat_punct("--") {
+                e = Expr::IncDec { op: "-", prefix: false, target: Box::new(e), pos };
+            } else {
+                return Ok(e);
+            }
+        }
+    }
+}
+
+/// Map a type name to a `Type` (None if not a type).
+pub fn type_from_name(name: &str) -> Option<Type> {
+    let (base, lanes) = split_vec_suffix(name);
+    let scalar = match base {
+        "float" => Scalar::F32,
+        "double" => Scalar::F64,
+        "int" => Scalar::I32,
+        "uint" | "unsigned" => Scalar::U32,
+        "long" => Scalar::I64,
+        "ulong" | "size_t" => Scalar::U64,
+        "bool" => Scalar::Bool,
+        "uchar" | "char" | "short" | "ushort" => return None, // unsupported widths
+        _ => return None,
+    };
+    match lanes {
+        1 => Some(Type::Scalar(scalar)),
+        2 | 3 | 4 | 8 | 16 => Some(Type::Vec(scalar, lanes as u8)),
+        _ => None,
+    }
+}
+
+fn split_vec_suffix(name: &str) -> (&str, usize) {
+    for n in [16usize, 8, 4, 3, 2] {
+        let suffix = n.to_string();
+        if let Some(base) = name.strip_suffix(&suffix) {
+            if !base.is_empty() && base.chars().all(|c| c.is_ascii_alphabetic() || c == '_') {
+                return (base, n);
+            }
+        }
+    }
+    (name, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_vecadd() {
+        let unit = parse(
+            "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
+                 size_t i = get_global_id(0);
+                 c[i] = a[i] + b[i];
+             }",
+        )
+        .unwrap();
+        assert_eq!(unit.funcs.len(), 1);
+        let k = &unit.funcs[0];
+        assert!(k.is_kernel);
+        assert_eq!(k.name, "vecadd");
+        assert_eq!(k.params.len(), 3);
+        assert_eq!(k.body.len(), 2);
+    }
+
+    #[test]
+    fn parses_control_flow() {
+        let unit = parse(
+            "__kernel void k(__global int *x) {
+                 for (int i = 0; i < 10; i++) {
+                     if (x[i] > 0) { x[i] -= 1; } else { continue; }
+                     while (x[i] < 0) x[i] = x[i] + 2;
+                 }
+                 barrier(CLK_LOCAL_MEM_FENCE);
+             }",
+        )
+        .unwrap();
+        assert!(matches!(unit.funcs[0].body[0], Stmt::For { .. }));
+        assert!(matches!(unit.funcs[0].body[1], Stmt::Barrier(_)));
+    }
+
+    #[test]
+    fn parses_vector_literals_and_swizzles() {
+        let unit = parse(
+            "__kernel void k(__global float4 *v) {
+                 float4 a = (float4)(1.0f, 2.0f, 3.0f, 4.0f);
+                 a.x = a.y + a.w;
+                 v[0] = a;
+             }",
+        )
+        .unwrap();
+        assert_eq!(unit.funcs[0].body.len(), 3);
+    }
+
+    #[test]
+    fn parses_helper_functions() {
+        let unit = parse(
+            "uint getIdx(uint g, uint l, uint w) { return g * w + l; }
+             __kernel void k(__global float *x, uint w) {
+                 x[getIdx(get_group_id(0), get_local_id(0), w)] = 1.0f;
+             }",
+        )
+        .unwrap();
+        assert_eq!(unit.funcs.len(), 2);
+        assert!(!unit.funcs[0].is_kernel);
+    }
+
+    #[test]
+    fn parses_local_arrays() {
+        let unit = parse(
+            "__kernel void k(__global float *x) {
+                 __local float tile[8][8];
+                 float priv[4];
+                 tile[0][0] = priv[0];
+             }",
+        )
+        .unwrap();
+        match &unit.funcs[0].body[0] {
+            Stmt::Decl { space, array, .. } => {
+                assert_eq!(*space, crate::ir::types::AddrSpace::Local);
+                assert!(array.is_some());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_ternary_and_casts() {
+        parse(
+            "__kernel void k(__global uint *x, uint n, uint inv) {
+                 uint i = get_global_id(0);
+                 uint idx = (inv) ? i * n : n * i;
+                 x[idx] = (uint)((float)idx * 0.5f);
+             }",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn type_names() {
+        assert_eq!(type_from_name("float4"), Some(Type::Vec(Scalar::F32, 4)));
+        assert_eq!(type_from_name("uint"), Some(Type::U32));
+        assert_eq!(type_from_name("size_t"), Some(Type::U64));
+        assert_eq!(type_from_name("floaty"), None);
+        assert_eq!(type_from_name("x2"), None);
+    }
+
+    #[test]
+    fn error_position_reported() {
+        let e = parse("__kernel void k() { int = 3; }").unwrap_err();
+        match e {
+            Error::Parse { line, .. } => assert_eq!(line, 1),
+            _ => panic!(),
+        }
+    }
+}

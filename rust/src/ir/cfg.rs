@@ -1,0 +1,257 @@
+//! CFG utilities the paper's algorithms are written against (§4.2):
+//! depth-first traversal, `CreateSubgraph`, `ReplicateCFG`, edge splitting,
+//! and single-exit normalisation.
+
+use std::collections::{HashMap, HashSet};
+
+use super::func::{remap_block_regs, Function};
+use super::inst::{BlockId, Term};
+
+/// Blocks reachable from the entry, in depth-first preorder.
+pub fn reachable(f: &Function) -> Vec<BlockId> {
+    let mut order = Vec::new();
+    let mut seen = HashSet::new();
+    let mut stack = vec![f.entry];
+    while let Some(b) = stack.pop() {
+        if !seen.insert(b) {
+            continue;
+        }
+        order.push(b);
+        // Push successors in reverse so traversal visits them in order.
+        for s in f.succs(b).into_iter().rev() {
+            stack.push(s);
+        }
+    }
+    order
+}
+
+/// Reverse postorder over reachable blocks (the canonical iteration order
+/// for forward dataflow).
+pub fn reverse_postorder(f: &Function) -> Vec<BlockId> {
+    let mut post = Vec::new();
+    let mut seen = HashSet::new();
+    // Iterative DFS with an explicit "visit children first" state machine.
+    let mut stack: Vec<(BlockId, usize)> = vec![(f.entry, 0)];
+    seen.insert(f.entry);
+    while let Some(&mut (b, ref mut i)) = stack.last_mut() {
+        let succs = f.succs(b);
+        if *i < succs.len() {
+            let s = succs[*i];
+            *i += 1;
+            if seen.insert(s) {
+                stack.push((s, 0));
+            }
+        } else {
+            post.push(b);
+            stack.pop();
+        }
+    }
+    post.reverse();
+    post
+}
+
+/// The paper's `CreateSubgraph(A, B)`: all nodes that can be visited on a
+/// path from `entry` to `exit`, ignoring back edges to already-visited
+/// nodes (so loops inside the region are included without looping forever).
+///
+/// Implemented, as in the paper, with a depth-first search from `entry`
+/// recording every node on any path reaching `exit`. A node belongs to the
+/// subgraph iff it is reachable from `entry` without passing through `exit`
+/// (plus `exit` itself) *and* it can reach `exit`.
+pub fn create_subgraph(f: &Function, entry: BlockId, exit: BlockId) -> Vec<BlockId> {
+    // Forward reachability from entry, not traversing past `exit`.
+    let mut fwd = HashSet::new();
+    let mut stack = vec![entry];
+    while let Some(b) = stack.pop() {
+        if !fwd.insert(b) {
+            continue;
+        }
+        if b == exit {
+            continue;
+        }
+        for s in f.succs(b) {
+            stack.push(s);
+        }
+    }
+    // Backward reachability from exit over the predecessor relation,
+    // restricted to `fwd` (don't escape upstream of entry).
+    let preds = f.preds();
+    let mut bwd = HashSet::new();
+    let mut stack = vec![exit];
+    while let Some(b) = stack.pop() {
+        if !bwd.insert(b) {
+            continue;
+        }
+        if b == entry {
+            continue;
+        }
+        for &p in &preds[b.0 as usize] {
+            if fwd.contains(&p) {
+                stack.push(p);
+            }
+        }
+    }
+    let mut nodes: Vec<BlockId> = fwd.intersection(&bwd).copied().collect();
+    nodes.sort();
+    nodes
+}
+
+/// The paper's `ReplicateCFG`: clone the given sub-CFG (blocks and their
+/// internal edges). Edges leaving the set keep pointing at the original
+/// targets — exactly the "copy of B keeps B's edge to C" property of §4.2.
+///
+/// Returns the old→new block map. Cloned blocks get fresh registers
+/// (registers are block-local, so remapping is per-block).
+pub fn replicate_cfg(f: &mut Function, nodes: &[BlockId]) -> HashMap<BlockId, BlockId> {
+    let set: HashSet<BlockId> = nodes.iter().copied().collect();
+    let mut map = HashMap::new();
+    for &b in nodes {
+        let mut clone = f.block(b).clone();
+        clone.name = format!("{}.dup", clone.name);
+        let nb = BlockId(f.blocks.len() as u32);
+        f.blocks.push(clone);
+        map.insert(b, nb);
+    }
+    // Rewire internal edges and freshen registers.
+    for &b in nodes {
+        let nb = map[&b];
+        let mut term = f.block(nb).term.clone();
+        term.map_succs(|s| if set.contains(&s) { map[&s] } else { s });
+        f.block_mut(nb).term = term;
+        remap_block_regs(f, nb);
+    }
+    map
+}
+
+/// Split the edge `from → to` by inserting a fresh empty block. Returns the
+/// new block. Needed for loop canonicalisation (preheaders, latch merging).
+pub fn split_edge(f: &mut Function, from: BlockId, to: BlockId) -> BlockId {
+    let name = format!("{}.{}.split", f.block(from).name, f.block(to).name);
+    let mid = f.add_block(name);
+    f.set_term(mid, Term::Jump(to));
+    let mut term = f.block(from).term.clone();
+    term.map_succs(|s| if s == to { mid } else { s });
+    f.block_mut(from).term = term;
+    mid
+}
+
+/// Normalise the function to a single exit block: if several blocks return,
+/// make them jump to one fresh `exit` block (§4.3: "a single exit point ...
+/// can be achieved by a normalization transformation").
+pub fn unify_exits(f: &mut Function) -> BlockId {
+    let exits = f.exit_blocks();
+    let reach: HashSet<BlockId> = reachable(f).into_iter().collect();
+    let live: Vec<BlockId> = exits.into_iter().filter(|b| reach.contains(b)).collect();
+    if live.len() == 1 {
+        return live[0];
+    }
+    let exit = f.add_block("exit");
+    f.set_term(exit, Term::Ret);
+    for b in live {
+        f.set_term(b, Term::Jump(exit));
+    }
+    exit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::Operand;
+
+    /// Build the diamond a → {b,c} → d.
+    fn diamond() -> (Function, BlockId, BlockId, BlockId, BlockId) {
+        let mut f = Function::new("k");
+        let a = f.entry;
+        let b = f.add_block("b");
+        let c = f.add_block("c");
+        let d = f.add_block("d");
+        f.set_term(a, Term::Br { cond: Operand::cbool(true), t: b, f: c });
+        f.set_term(b, Term::Jump(d));
+        f.set_term(c, Term::Jump(d));
+        (f, a, b, c, d)
+    }
+
+    #[test]
+    fn rpo_visits_entry_first_exit_last() {
+        let (f, a, _, _, d) = diamond();
+        let rpo = reverse_postorder(&f);
+        assert_eq!(rpo[0], a);
+        assert_eq!(*rpo.last().unwrap(), d);
+        assert_eq!(rpo.len(), 4);
+    }
+
+    #[test]
+    fn subgraph_of_diamond_is_whole() {
+        let (f, a, b, c, d) = diamond();
+        let sub = create_subgraph(&f, a, d);
+        assert_eq!(sub, vec![a, b, c, d]);
+    }
+
+    #[test]
+    fn subgraph_excludes_off_path_nodes() {
+        let (mut f, a, b, _c, d) = diamond();
+        // Hang a side block off b that doesn't reach d.
+        let side = f.add_block("side");
+        f.set_term(side, Term::Ret);
+        f.set_term(b, Term::Br { cond: Operand::cbool(true), t: d, f: side });
+        let sub = create_subgraph(&f, a, d);
+        assert!(!sub.contains(&side));
+        assert!(sub.contains(&b));
+    }
+
+    #[test]
+    fn subgraph_includes_loops() {
+        let mut f = Function::new("k");
+        let a = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let x = f.add_block("x");
+        f.set_term(a, Term::Jump(h));
+        f.set_term(h, Term::Br { cond: Operand::cbool(true), t: body, f: x });
+        f.set_term(body, Term::Jump(h));
+        f.set_term(x, Term::Ret);
+        let sub = create_subgraph(&f, a, x);
+        assert!(sub.contains(&body));
+        assert_eq!(sub.len(), 4);
+    }
+
+    #[test]
+    fn replicate_keeps_external_edges() {
+        let (mut f, _a, b, c, d) = diamond();
+        let map = replicate_cfg(&mut f, &[b]);
+        let nb = map[&b];
+        // Clone's edge still points at d (outside the replicated set).
+        assert_eq!(f.succs(nb), vec![d]);
+        // Original untouched.
+        assert_eq!(f.succs(b), vec![d]);
+        assert_eq!(f.succs(c), vec![d]);
+    }
+
+    #[test]
+    fn replicate_rewires_internal_edges() {
+        let (mut f, _a, b, _c, d) = diamond();
+        let map = replicate_cfg(&mut f, &[b, d]);
+        assert_eq!(f.succs(map[&b]), vec![map[&d]]);
+    }
+
+    #[test]
+    fn split_edge_preserves_path() {
+        let (mut f, a, b, _c, _d) = diamond();
+        let mid = split_edge(&mut f, a, b);
+        assert!(f.succs(a).contains(&mid));
+        assert_eq!(f.succs(mid), vec![b]);
+    }
+
+    #[test]
+    fn unify_exits_single() {
+        let mut f = Function::new("k");
+        let a = f.entry;
+        let b = f.add_block("b");
+        let c = f.add_block("c");
+        f.set_term(a, Term::Br { cond: Operand::cbool(true), t: b, f: c });
+        // both b and c return
+        let exit = unify_exits(&mut f);
+        assert_eq!(f.exit_blocks(), vec![exit]);
+        assert_eq!(f.succs(b), vec![exit]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Dominator tree (Cooper–Harvey–Kennedy "a simple, fast dominance
+//! algorithm"). Used for barrier classification (a barrier is
+//! *unconditional* iff it dominates the exit node — §4.3) and natural-loop
+//! detection.
+
+use std::collections::HashMap;
+
+use super::cfg::reverse_postorder;
+use super::func::Function;
+use super::inst::BlockId;
+
+/// Immediate-dominator table over reachable blocks.
+pub struct DomTree {
+    /// `idom[b]` for every reachable block; the entry maps to itself.
+    idom: HashMap<BlockId, BlockId>,
+    /// Reverse postorder index used for intersection.
+    rpo_index: HashMap<BlockId, usize>,
+    entry: BlockId,
+}
+
+impl DomTree {
+    /// Compute dominators for `f`.
+    pub fn compute(f: &Function) -> DomTree {
+        let rpo = reverse_postorder(f);
+        let rpo_index: HashMap<BlockId, usize> =
+            rpo.iter().enumerate().map(|(i, &b)| (b, i)).collect();
+        let preds = f.preds();
+        let mut idom: HashMap<BlockId, BlockId> = HashMap::new();
+        idom.insert(f.entry, f.entry);
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for &b in rpo.iter().skip(1) {
+                // First processed predecessor.
+                let mut new_idom: Option<BlockId> = None;
+                for &p in &preds[b.0 as usize] {
+                    if !rpo_index.contains_key(&p) {
+                        continue; // unreachable predecessor
+                    }
+                    if idom.contains_key(&p) {
+                        new_idom = Some(match new_idom {
+                            None => p,
+                            Some(cur) => intersect(&idom, &rpo_index, p, cur),
+                        });
+                    }
+                }
+                if let Some(ni) = new_idom {
+                    if idom.get(&b) != Some(&ni) {
+                        idom.insert(b, ni);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        DomTree { idom, rpo_index, entry: f.entry }
+    }
+
+    /// Immediate dominator of `b` (entry's idom is entry itself).
+    pub fn idom(&self, b: BlockId) -> Option<BlockId> {
+        self.idom.get(&b).copied()
+    }
+
+    /// Does `a` dominate `b`? (Reflexive.) Unreachable blocks dominate
+    /// nothing and are dominated by nothing.
+    pub fn dominates(&self, a: BlockId, b: BlockId) -> bool {
+        if !self.idom.contains_key(&a) || !self.idom.contains_key(&b) {
+            return false;
+        }
+        let mut cur = b;
+        loop {
+            if cur == a {
+                return true;
+            }
+            if cur == self.entry {
+                return false;
+            }
+            cur = self.idom[&cur];
+        }
+    }
+
+    /// True if the block is reachable (has a dominator entry).
+    pub fn is_reachable(&self, b: BlockId) -> bool {
+        self.idom.contains_key(&b)
+    }
+}
+
+fn intersect(
+    idom: &HashMap<BlockId, BlockId>,
+    rpo_index: &HashMap<BlockId, usize>,
+    mut a: BlockId,
+    mut b: BlockId,
+) -> BlockId {
+    while a != b {
+        while rpo_index[&a] > rpo_index[&b] {
+            a = idom[&a];
+        }
+        while rpo_index[&b] > rpo_index[&a] {
+            b = idom[&b];
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::{Operand, Term};
+
+    #[test]
+    fn diamond_dominance() {
+        let mut f = Function::new("k");
+        let a = f.entry;
+        let b = f.add_block("b");
+        let c = f.add_block("c");
+        let d = f.add_block("d");
+        f.set_term(a, Term::Br { cond: Operand::cbool(true), t: b, f: c });
+        f.set_term(b, Term::Jump(d));
+        f.set_term(c, Term::Jump(d));
+        let dom = DomTree::compute(&f);
+        assert!(dom.dominates(a, d));
+        assert!(!dom.dominates(b, d));
+        assert!(dom.dominates(d, d));
+        assert_eq!(dom.idom(d), Some(a));
+        assert_eq!(dom.idom(b), Some(a));
+    }
+
+    #[test]
+    fn loop_dominance() {
+        // a -> h; h -> body|x; body -> h
+        let mut f = Function::new("k");
+        let a = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let x = f.add_block("x");
+        f.set_term(a, Term::Jump(h));
+        f.set_term(h, Term::Br { cond: Operand::cbool(true), t: body, f: x });
+        f.set_term(body, Term::Jump(h));
+        f.set_term(x, Term::Ret);
+        let dom = DomTree::compute(&f);
+        assert!(dom.dominates(h, body));
+        assert!(dom.dominates(h, x));
+        assert!(!dom.dominates(body, x));
+    }
+
+    #[test]
+    fn unreachable_blocks() {
+        let mut f = Function::new("k");
+        let dead = f.add_block("dead");
+        let dom = DomTree::compute(&f);
+        assert!(!dom.is_reachable(dead));
+        assert!(!dom.dominates(dead, f.entry));
+    }
+}

@@ -1,0 +1,336 @@
+//! Functions, basic blocks, alloca slots, and modules.
+
+use std::collections::HashMap;
+
+use super::inst::{BlockId, Inst, Operand, Reg, SlotId, Term};
+use super::types::{AddrSpace, Type};
+
+/// One basic block: a branchless instruction sequence plus a terminator.
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// Human-readable label (unique-ified by the printer, not the IR).
+    pub name: String,
+    /// Instructions with their (optional) result registers.
+    pub insts: Vec<(Option<Reg>, Inst)>,
+    /// The single terminator.
+    pub term: Term,
+}
+
+impl Block {
+    /// True if any instruction in the block is a barrier.
+    pub fn has_barrier(&self) -> bool {
+        self.insts.iter().any(|(_, i)| i.is_barrier())
+    }
+}
+
+/// A private variable ("alloca"): a per-work-item stack slot.
+#[derive(Debug, Clone)]
+pub struct AllocaInfo {
+    /// Source-level name (for diagnostics and the printer).
+    pub name: String,
+    /// Element type.
+    pub ty: Type,
+    /// Array length in elements (1 for scalar variables).
+    pub count: usize,
+    /// Set by the privatisation pass (§4.7): the slot's lifetime crosses a
+    /// parallel-region boundary, so it is expanded into a *context array*
+    /// with one element per work-item.
+    pub privatized: bool,
+    /// Set by the uniformity analysis: the value is identical for all
+    /// work-items, so a single shared slot suffices (uniform merging, §4.7).
+    pub uniform: bool,
+}
+
+/// A function parameter. Kernel arguments keep their OpenCL address-space
+/// qualified types; the work-group function generation appends extra
+/// context parameters (group ids, sizes) per §4.1.
+#[derive(Debug, Clone)]
+pub struct Param {
+    /// Parameter name.
+    pub name: String,
+    /// Parameter type.
+    pub ty: Type,
+    /// True if this is a `__local` pointer argument whose buffer the host
+    /// (or launcher) must allocate — including converted automatic locals.
+    pub is_local_buf: bool,
+    /// For converted automatic locals (§4.7): required size in bytes.
+    pub auto_local_size: Option<usize>,
+}
+
+/// A kernel function as an explicit control-flow graph.
+#[derive(Debug, Clone)]
+pub struct Function {
+    /// Kernel name.
+    pub name: String,
+    /// Parameters (kernel args first, then appended context args).
+    pub params: Vec<Param>,
+    /// All blocks; ids index this vector. Blocks never get removed, only
+    /// unreachable (the verifier reports reachability separately).
+    pub blocks: Vec<Block>,
+    /// Entry block id.
+    pub entry: BlockId,
+    /// Private variable slots.
+    pub slots: Vec<AllocaInfo>,
+    /// Next fresh register number.
+    next_reg: u32,
+    /// Work-item loop metadata (filled by `kcc::wiloops`): the analog of
+    /// pocl's `llvm.mem.parallel_loop_access` — each entry marks one
+    /// materialised WI loop whose iterations are independent.
+    pub wi_loops: Vec<WiLoopMeta>,
+}
+
+/// Metadata describing one materialised parallel work-item loop (§4.1:
+/// "the parallel loops are annotated with LLVM metadata that retains the
+/// information of the parallel iterations for later phases").
+#[derive(Debug, Clone)]
+pub struct WiLoopMeta {
+    /// Which parallel region this loop iterates (index into the
+    /// `WorkGroupFunction::regions` list).
+    pub region: usize,
+    /// Loop dimension (0 = x innermost, 1 = y, 2 = z).
+    pub dim: u32,
+    /// Loop header block.
+    pub header: BlockId,
+    /// Loop latch block.
+    pub latch: BlockId,
+    /// Trip count if specialised for a known local size.
+    pub trip_count: Option<usize>,
+    /// Always true — kept explicit to mirror the metadata the paper
+    /// describes (a later pass must not have to re-prove independence).
+    pub parallel: bool,
+}
+
+impl Function {
+    /// New empty function with an entry block.
+    pub fn new(name: impl Into<String>) -> Function {
+        Function {
+            name: name.into(),
+            params: Vec::new(),
+            blocks: vec![Block { name: "entry".into(), insts: Vec::new(), term: Term::Ret }],
+            entry: BlockId(0),
+            slots: Vec::new(),
+            next_reg: 0,
+            wi_loops: Vec::new(),
+        }
+    }
+
+    /// Access a block.
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[id.0 as usize]
+    }
+
+    /// Access a block mutably.
+    pub fn block_mut(&mut self, id: BlockId) -> &mut Block {
+        &mut self.blocks[id.0 as usize]
+    }
+
+    /// Append a new empty block and return its id.
+    pub fn add_block(&mut self, name: impl Into<String>) -> BlockId {
+        let id = BlockId(self.blocks.len() as u32);
+        self.blocks.push(Block { name: name.into(), insts: Vec::new(), term: Term::Ret });
+        id
+    }
+
+    /// All block ids (including unreachable ones).
+    pub fn block_ids(&self) -> impl Iterator<Item = BlockId> {
+        (0..self.blocks.len() as u32).map(BlockId)
+    }
+
+    /// Allocate a fresh virtual register.
+    pub fn fresh_reg(&mut self) -> Reg {
+        let r = Reg(self.next_reg);
+        self.next_reg += 1;
+        r
+    }
+
+    /// Current register high-water mark (for engines sizing frames).
+    pub fn reg_count(&self) -> u32 {
+        self.next_reg
+    }
+
+    /// Add a private variable slot.
+    pub fn add_slot(&mut self, name: impl Into<String>, ty: Type, count: usize) -> SlotId {
+        let id = SlotId(self.slots.len() as u32);
+        self.slots.push(AllocaInfo { name: name.into(), ty, count, privatized: false, uniform: false });
+        id
+    }
+
+    /// Append `inst` to block `bb`; returns the result register if the
+    /// instruction produces a value.
+    pub fn push(&mut self, bb: BlockId, inst: Inst) -> Option<Reg> {
+        let reg = if inst.result_ty() == Type::Void { None } else { Some(self.fresh_reg()) };
+        self.block_mut(bb).insts.push((reg, inst));
+        reg
+    }
+
+    /// Append `inst` and unwrap the result register (panics on void).
+    pub fn push_val(&mut self, bb: BlockId, inst: Inst) -> Reg {
+        self.push(bb, inst).expect("instruction produces no value")
+    }
+
+    /// Set the terminator of `bb`.
+    pub fn set_term(&mut self, bb: BlockId, term: Term) {
+        self.block_mut(bb).term = term;
+    }
+
+    /// Predecessor map (derived from terminators). Order is deterministic
+    /// (by block id, then successor order).
+    pub fn preds(&self) -> Vec<Vec<BlockId>> {
+        let mut preds = vec![Vec::new(); self.blocks.len()];
+        for id in self.block_ids() {
+            for s in self.block(id).term.succs() {
+                preds[s.0 as usize].push(id);
+            }
+        }
+        preds
+    }
+
+    /// Successors of a block.
+    pub fn succs(&self, id: BlockId) -> Vec<BlockId> {
+        self.block(id).term.succs()
+    }
+
+    /// All blocks containing at least one barrier instruction.
+    pub fn barrier_blocks(&self) -> Vec<BlockId> {
+        self.block_ids().filter(|&b| self.block(b).has_barrier()).collect()
+    }
+
+    /// Exit blocks (terminator = Ret), in id order.
+    pub fn exit_blocks(&self) -> Vec<BlockId> {
+        self.block_ids().filter(|&b| matches!(self.block(b).term, Term::Ret)).collect()
+    }
+
+    /// Total instruction count over reachable blocks (used by stats/tests).
+    pub fn inst_count(&self) -> usize {
+        super::cfg::reachable(self).iter().map(|&b| self.block(b).insts.len()).sum()
+    }
+}
+
+/// Address-space of a pointer-typed operand as far as the type system
+/// knows. Slots are always `Private`; arguments carry their own space.
+pub fn operand_space(f: &Function, op: &Operand) -> Option<AddrSpace> {
+    match op {
+        Operand::Slot(_) => Some(AddrSpace::Private),
+        Operand::Arg(i) => match &f.params.get(*i as usize)?.ty {
+            Type::Ptr(_, sp) => Some(*sp),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// A translation unit: the set of kernels produced from one MiniCL source
+/// string (the analog of an LLVM module produced by Clang).
+#[derive(Debug, Clone, Default)]
+pub struct Module {
+    /// Kernels by definition order.
+    pub kernels: Vec<Function>,
+}
+
+impl Module {
+    /// Find a kernel by name.
+    pub fn kernel(&self, name: &str) -> Option<&Function> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// Kernel names in definition order.
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.kernels.iter().map(|k| k.name.as_str()).collect()
+    }
+}
+
+/// Remap helper used by `ReplicateCFG`/tail duplication: rewrites the
+/// registers of a cloned block so clones define fresh registers. Because
+/// registers are block-local (IR invariant), the map never needs to span
+/// blocks.
+pub fn remap_block_regs(f: &mut Function, bb: BlockId) {
+    let mut map: HashMap<Reg, Reg> = HashMap::new();
+    // Two phases to satisfy the borrow checker: compute fresh names first.
+    let n = f.block(bb).insts.len();
+    for i in 0..n {
+        // Remap operands through defs seen so far.
+        let mut inst = f.block(bb).insts[i].1.clone();
+        for op in inst.operands_mut() {
+            if let Operand::Reg(r) = op {
+                if let Some(nr) = map.get(r) {
+                    *op = Operand::Reg(*nr);
+                }
+            }
+        }
+        let old = f.block(bb).insts[i].0;
+        let fresh = old.map(|_| f.fresh_reg());
+        if let (Some(o), Some(fr)) = (old, fresh) {
+            map.insert(o, fr);
+        }
+        f.block_mut(bb).insts[i] = (fresh, inst);
+    }
+    // Terminator condition may reference a remapped register.
+    let mut term = f.block(bb).term.clone();
+    if let Term::Br { cond, .. } = &mut term {
+        if let Operand::Reg(r) = cond {
+            if let Some(nr) = map.get(r) {
+                *cond = Operand::Reg(*nr);
+            }
+        }
+    }
+    f.block_mut(bb).term = term;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::{BinOp, Imm};
+    use crate::ir::types::Scalar;
+
+    fn add_inst() -> Inst {
+        Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::ci32(1), b: Operand::ci32(2) }
+    }
+
+    #[test]
+    fn push_assigns_registers() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let r = f.push(e, add_inst());
+        assert!(r.is_some());
+        let s = f.push(
+            e,
+            Inst::Store { ty: Type::I32, ptr: Operand::Slot(SlotId(0)), val: Operand::Reg(r.unwrap()) },
+        );
+        assert!(s.is_none());
+    }
+
+    #[test]
+    fn preds_and_succs() {
+        let mut f = Function::new("k");
+        let a = f.entry;
+        let b = f.add_block("b");
+        let c = f.add_block("c");
+        f.set_term(a, Term::Br { cond: Operand::cbool(true), t: b, f: c });
+        f.set_term(b, Term::Jump(c));
+        let preds = f.preds();
+        assert_eq!(preds[c.0 as usize], vec![a, b]);
+        assert_eq!(f.succs(a), vec![b, c]);
+        assert_eq!(f.exit_blocks(), vec![c]);
+    }
+
+    #[test]
+    fn remap_block_regs_freshens_defs_and_uses() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let r0 = f.push_val(e, add_inst());
+        let _r1 = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Mul, ty: Type::I32, a: Operand::Reg(r0), b: Operand::Imm(Imm::Int(3, Scalar::I32)) },
+        );
+        let before = f.reg_count();
+        remap_block_regs(&mut f, e);
+        assert_eq!(f.reg_count(), before + 2);
+        // The use of r0 in the second instruction must point at the fresh def.
+        let def0 = f.block(e).insts[0].0.unwrap();
+        match f.block(e).insts[1].1 {
+            Inst::Bin { a: Operand::Reg(r), .. } => assert_eq!(r, def0),
+            _ => panic!(),
+        }
+        assert_ne!(def0, r0);
+    }
+}

@@ -1,0 +1,376 @@
+//! Instructions, operands, and builtins of the kernel IR.
+//!
+//! The IR is three-address form over virtual registers with one crucial
+//! structural invariant (enforced by the verifier, relied upon by the whole
+//! kernel compiler): **register temporaries never cross basic-block
+//! boundaries**. All cross-block dataflow goes through `Alloca` slots via
+//! `Load`/`Store`. This mirrors clang's pre-mem2reg output that pocl's
+//! privatisation operates on, and makes `ReplicateCFG`/tail duplication a
+//! simple block-local register remap.
+
+use super::types::{Scalar, Type};
+
+/// A virtual register id, local to a function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u32);
+
+/// A basic block id, local to a function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+/// An alloca slot id (private variable), local to a function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SlotId(pub u32);
+
+/// Immediate constant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Imm {
+    /// Integer constant with its scalar type (Bool encoded 0/1).
+    Int(i64, Scalar),
+    /// Floating constant with its scalar type.
+    Float(f64, Scalar),
+}
+
+impl Imm {
+    /// The immediate's type.
+    pub fn ty(&self) -> Type {
+        match self {
+            Imm::Int(_, s) | Imm::Float(_, s) => Type::Scalar(*s),
+        }
+    }
+}
+
+/// Instruction operand: a register, an immediate, or a kernel argument.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Operand {
+    /// Virtual register defined earlier in the same block.
+    Reg(Reg),
+    /// Immediate constant.
+    Imm(Imm),
+    /// Kernel/work-group function argument by index.
+    Arg(u32),
+    /// Address of a private alloca slot (base pointer).
+    Slot(SlotId),
+}
+
+impl Operand {
+    /// i32 immediate shorthand.
+    pub fn ci32(v: i32) -> Operand {
+        Operand::Imm(Imm::Int(v as i64, Scalar::I32))
+    }
+    /// u32 immediate shorthand.
+    pub fn cu32(v: u32) -> Operand {
+        Operand::Imm(Imm::Int(v as i64, Scalar::U32))
+    }
+    /// u64 immediate shorthand.
+    pub fn cu64(v: u64) -> Operand {
+        Operand::Imm(Imm::Int(v as i64, Scalar::U64))
+    }
+    /// f32 immediate shorthand.
+    pub fn cf32(v: f32) -> Operand {
+        Operand::Imm(Imm::Float(v as f64, Scalar::F32))
+    }
+    /// bool immediate shorthand.
+    pub fn cbool(v: bool) -> Operand {
+        Operand::Imm(Imm::Int(v as i64, Scalar::Bool))
+    }
+}
+
+/// Binary operators. Comparison ops produce `bool` (or bool vectors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    /// Short-circuit-free logical and (bool operands).
+    LAnd,
+    /// Short-circuit-free logical or (bool operands).
+    LOr,
+}
+
+impl BinOp {
+    /// True if the result type is bool-shaped regardless of operand type.
+    pub fn is_cmp(self) -> bool {
+        matches!(self, BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge)
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    /// Arithmetic negation.
+    Neg,
+    /// Bitwise complement.
+    Not,
+    /// Logical not (bool).
+    LNot,
+}
+
+/// Work-item index functions (OpenCL §6.12.1). Kept symbolic in the IR so
+/// the WI-loop materialiser can rewrite `LocalId` to loop induction
+/// variables and devices can bind the rest from launch geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WiFn {
+    GlobalId,
+    LocalId,
+    GroupId,
+    GlobalSize,
+    LocalSize,
+    NumGroups,
+    WorkDim,
+    GlobalOffset,
+}
+
+/// Math and misc builtin functions, implemented by `vecmath` in every
+/// engine (the paper's §5 Vecmathlib role).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MathFn {
+    Sqrt,
+    RSqrt,
+    Exp,
+    Exp2,
+    Log,
+    Log2,
+    Sin,
+    Cos,
+    Tan,
+    Fabs,
+    Floor,
+    Ceil,
+    Round,
+    Trunc,
+    Pow,
+    Fmin,
+    Fmax,
+    Fmod,
+    Mad,
+    Fma,
+    Min,
+    Max,
+    Clamp,
+    Abs,
+    Mix,
+    Dot,
+    Length,
+    Normalize,
+    Distance,
+    NativeSqrt,
+    NativeRSqrt,
+    NativeExp,
+    NativeLog,
+    NativeSin,
+    NativeCos,
+    NativeDivide,
+    NativeRecip,
+}
+
+impl MathFn {
+    /// Number of value arguments the builtin takes.
+    pub fn arity(self) -> usize {
+        use MathFn::*;
+        match self {
+            Pow | Fmin | Fmax | Fmod | Min | Max | Dot | Distance | NativeDivide => 2,
+            Mad | Fma | Clamp | Mix => 3,
+            _ => 1,
+        }
+    }
+}
+
+/// Instructions. Each instruction optionally defines one register (see
+/// `Inst::result_ty`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inst {
+    /// `dst = a <op> b` on `ty`-typed operands (comparisons yield bool-shaped `ty`).
+    Bin { op: BinOp, ty: Type, a: Operand, b: Operand },
+    /// `dst = <op> a`.
+    Un { op: UnOp, ty: Type, a: Operand },
+    /// `dst = (to) a` — numeric conversion / pointer cast.
+    Cast { to: Type, from: Type, a: Operand },
+    /// `dst = load ty, ptr` (ptr's address space recorded for the engines).
+    Load { ty: Type, ptr: Operand },
+    /// `store val, ptr`. No result.
+    Store { ty: Type, ptr: Operand, val: Operand },
+    /// `dst = ptr + idx * sizeof(elem)` — element pointer (GEP).
+    Gep { elem: Type, base: Operand, idx: Operand },
+    /// `dst = wi_fn(dim)` — work-item geometry query.
+    Wi { func: WiFn, dim: u32 },
+    /// `dst = math_fn(args...)` over scalar or vector `ty`.
+    Math { func: MathFn, ty: Type, args: Vec<Operand> },
+    /// `dst = cond ? a : b` (lane-wise for vector cond).
+    Select { ty: Type, cond: Operand, a: Operand, b: Operand },
+    /// `dst = (ty)(elems...)` — build a vector from scalars/subvectors.
+    VecBuild { ty: Type, elems: Vec<Operand> },
+    /// `dst = a.s[lane]` — extract one lane.
+    VecExtract { elem: Type, a: Operand, lane: u32 },
+    /// `dst = a with lane = v`.
+    VecInsert { ty: Type, a: Operand, lane: u32, v: Operand },
+    /// `dst = splat(a)` to vector `ty`.
+    Splat { ty: Type, a: Operand },
+    /// Work-group barrier (CLK_LOCAL_MEM_FENCE | CLK_GLOBAL_MEM_FENCE).
+    /// `kind` distinguishes programmer barriers from compiler-inserted
+    /// implicit ones (§4.5) — useful for debugging and tests.
+    Barrier { kind: BarrierKind },
+    /// No-op marker carrying a label; used by tests and the TTA scheduler
+    /// to delimit traces. Never affects semantics.
+    Marker { label: u32 },
+}
+
+/// Provenance of a barrier instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BarrierKind {
+    /// Written by the programmer (`barrier(...)` call).
+    Explicit,
+    /// Inserted by the b-loop handling (§4.5) or horizontal
+    /// parallelisation (§4.6).
+    Implicit,
+}
+
+impl Inst {
+    /// The type of the defined register, or `Void` if none.
+    pub fn result_ty(&self) -> Type {
+        match self {
+            Inst::Bin { op, ty, .. } => {
+                if op.is_cmp() {
+                    ty.with_elem(Scalar::Bool)
+                } else {
+                    ty.clone()
+                }
+            }
+            Inst::Un { ty, .. } => ty.clone(),
+            Inst::Cast { to, .. } => to.clone(),
+            Inst::Load { ty, .. } => ty.clone(),
+            Inst::Store { .. } => Type::Void,
+            Inst::Gep { elem, base: _, .. } => {
+                // The result is a pointer to elem; the address space is that
+                // of the base, which the verifier tracks. For result typing
+                // purposes Private is a placeholder refined by context.
+                elem.clone().ptr(super::types::AddrSpace::Private)
+            }
+            Inst::Wi { .. } => Type::U64,
+            Inst::Math { ty, .. } => ty.clone(),
+            Inst::Select { ty, .. } => ty.clone(),
+            Inst::VecBuild { ty, .. } => ty.clone(),
+            Inst::VecExtract { elem, .. } => elem.clone(),
+            Inst::VecInsert { ty, .. } => ty.clone(),
+            Inst::Splat { ty, .. } => ty.clone(),
+            Inst::Barrier { .. } | Inst::Marker { .. } => Type::Void,
+        }
+    }
+
+    /// True for barrier instructions.
+    pub fn is_barrier(&self) -> bool {
+        matches!(self, Inst::Barrier { .. })
+    }
+
+    /// Visit all operand slots (for remapping during replication).
+    pub fn operands_mut(&mut self) -> Vec<&mut Operand> {
+        match self {
+            Inst::Bin { a, b, .. } => vec![a, b],
+            Inst::Un { a, .. } => vec![a],
+            Inst::Cast { a, .. } => vec![a],
+            Inst::Load { ptr, .. } => vec![ptr],
+            Inst::Store { ptr, val, .. } => vec![ptr, val],
+            Inst::Gep { base, idx, .. } => vec![base, idx],
+            Inst::Wi { .. } => vec![],
+            Inst::Math { args, .. } => args.iter_mut().collect(),
+            Inst::Select { cond, a, b, .. } => vec![cond, a, b],
+            Inst::VecBuild { elems, .. } => elems.iter_mut().collect(),
+            Inst::VecExtract { a, .. } => vec![a],
+            Inst::VecInsert { a, v, .. } => vec![a, v],
+            Inst::Splat { a, .. } => vec![a],
+            Inst::Barrier { .. } | Inst::Marker { .. } => vec![],
+        }
+    }
+
+    /// Visit all operands (read-only).
+    pub fn operands(&self) -> Vec<Operand> {
+        match self {
+            Inst::Bin { a, b, .. } => vec![*a, *b],
+            Inst::Un { a, .. } => vec![*a],
+            Inst::Cast { a, .. } => vec![*a],
+            Inst::Load { ptr, .. } => vec![*ptr],
+            Inst::Store { ptr, val, .. } => vec![*ptr, *val],
+            Inst::Gep { base, idx, .. } => vec![*base, *idx],
+            Inst::Wi { .. } => vec![],
+            Inst::Math { args, .. } => args.clone(),
+            Inst::Select { cond, a, b, .. } => vec![*cond, *a, *b],
+            Inst::VecBuild { elems, .. } => elems.clone(),
+            Inst::VecExtract { a, .. } => vec![*a],
+            Inst::VecInsert { a, v, .. } => vec![*a, *v],
+            Inst::Splat { a, .. } => vec![*a],
+            Inst::Barrier { .. } | Inst::Marker { .. } => vec![],
+        }
+    }
+}
+
+/// Block terminators. Every block has exactly one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Term {
+    /// Unconditional jump.
+    Jump(BlockId),
+    /// Two-way conditional branch on a bool operand.
+    Br { cond: Operand, t: BlockId, f: BlockId },
+    /// Return from the kernel (kernels are void).
+    Ret,
+}
+
+impl Term {
+    /// Successor block ids in order.
+    pub fn succs(&self) -> Vec<BlockId> {
+        match self {
+            Term::Jump(b) => vec![*b],
+            Term::Br { t, f, .. } => vec![*t, *f],
+            Term::Ret => vec![],
+        }
+    }
+
+    /// Remap successor ids through `f`.
+    pub fn map_succs(&mut self, mut f: impl FnMut(BlockId) -> BlockId) {
+        match self {
+            Term::Jump(b) => *b = f(*b),
+            Term::Br { t, f: fb, .. } => {
+                *t = f(*t);
+                *fb = f(*fb);
+            }
+            Term::Ret => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmp_results_are_bool_shaped() {
+        let i = Inst::Bin { op: BinOp::Lt, ty: Type::Vec(Scalar::F32, 4), a: Operand::ci32(0), b: Operand::ci32(1) };
+        assert_eq!(i.result_ty(), Type::Vec(Scalar::Bool, 4));
+    }
+
+    #[test]
+    fn term_succs() {
+        let t = Term::Br { cond: Operand::cbool(true), t: BlockId(1), f: BlockId(2) };
+        assert_eq!(t.succs(), vec![BlockId(1), BlockId(2)]);
+        assert_eq!(Term::Ret.succs(), vec![]);
+    }
+
+    #[test]
+    fn math_arity() {
+        assert_eq!(MathFn::Mad.arity(), 3);
+        assert_eq!(MathFn::Pow.arity(), 2);
+        assert_eq!(MathFn::Sqrt.arity(), 1);
+    }
+}

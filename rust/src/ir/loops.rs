@@ -1,0 +1,285 @@
+//! Natural-loop detection and canonicalisation.
+//!
+//! §4.5 assumes "all OpenCL kernel loops can be converted to natural
+//! canonical loops which have a single entry node, the loop header ... and
+//! just one loop latch", with early exits converged to a single exit block.
+//! `canonicalize` establishes exactly that shape (dedicated preheader,
+//! single latch, dedicated exit block) so the b-loop barrier insertion has
+//! unambiguous program points.
+
+use std::collections::HashSet;
+
+use super::cfg::split_edge;
+use super::dom::DomTree;
+use super::func::Function;
+use super::inst::{BlockId, Term};
+
+/// One natural loop.
+#[derive(Debug, Clone)]
+pub struct Loop {
+    /// Loop header (single entry of the loop).
+    pub header: BlockId,
+    /// Latch blocks (sources of back edges). After canonicalisation there
+    /// is exactly one.
+    pub latches: Vec<BlockId>,
+    /// All blocks in the loop body, header included, sorted by id.
+    pub blocks: Vec<BlockId>,
+    /// Blocks inside the loop with an edge leaving the loop.
+    pub exiting: Vec<BlockId>,
+    /// Blocks outside the loop targeted by exiting edges.
+    pub exits: Vec<BlockId>,
+    /// Nesting depth (1 = outermost). Filled by `find_loops`.
+    pub depth: usize,
+}
+
+impl Loop {
+    /// True if `b` belongs to the loop body.
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.blocks.binary_search(&b).is_ok()
+    }
+
+    /// The single preheader if canonical: the unique predecessor of the
+    /// header outside the loop.
+    pub fn preheader(&self, f: &Function) -> Option<BlockId> {
+        let preds = f.preds();
+        let outside: Vec<BlockId> = preds[self.header.0 as usize]
+            .iter()
+            .copied()
+            .filter(|p| !self.contains(*p))
+            .collect();
+        if outside.len() == 1 {
+            Some(outside[0])
+        } else {
+            None
+        }
+    }
+}
+
+/// Find all natural loops (back edge t→h where h dominates t), merging
+/// loops that share a header, and computing nesting depths.
+pub fn find_loops(f: &Function) -> Vec<Loop> {
+    let dom = DomTree::compute(f);
+    let mut by_header: Vec<(BlockId, Vec<BlockId>)> = Vec::new();
+    for b in super::cfg::reachable(f) {
+        for s in f.succs(b) {
+            if dom.dominates(s, b) {
+                // back edge b -> s
+                match by_header.iter_mut().find(|(h, _)| *h == s) {
+                    Some((_, latches)) => latches.push(b),
+                    None => by_header.push((s, vec![b])),
+                }
+            }
+        }
+    }
+    let preds = f.preds();
+    let mut loops: Vec<Loop> = Vec::new();
+    for (header, latches) in by_header {
+        // Standard natural-loop body computation: walk predecessors from
+        // the latches until the header.
+        let mut body: HashSet<BlockId> = HashSet::new();
+        body.insert(header);
+        let mut stack = latches.clone();
+        while let Some(b) = stack.pop() {
+            if body.insert(b) {
+                for &p in &preds[b.0 as usize] {
+                    if dom.is_reachable(p) {
+                        stack.push(p);
+                    }
+                }
+            }
+        }
+        let mut blocks: Vec<BlockId> = body.iter().copied().collect();
+        blocks.sort();
+        let mut exiting = Vec::new();
+        let mut exits = Vec::new();
+        for &b in &blocks {
+            for s in f.succs(b) {
+                if !body.contains(&s) {
+                    if !exiting.contains(&b) {
+                        exiting.push(b);
+                    }
+                    if !exits.contains(&s) {
+                        exits.push(s);
+                    }
+                }
+            }
+        }
+        loops.push(Loop { header, latches, blocks, exiting, exits, depth: 0 });
+    }
+    // Nesting depth: number of loops whose body contains this header
+    // (including itself).
+    let snapshot: Vec<(BlockId, Vec<BlockId>)> =
+        loops.iter().map(|l| (l.header, l.blocks.clone())).collect();
+    for l in &mut loops {
+        l.depth = snapshot
+            .iter()
+            .filter(|(_, blocks)| blocks.binary_search(&l.header).is_ok())
+            .count();
+    }
+    // Outermost first for deterministic processing.
+    loops.sort_by_key(|l| (l.depth, l.header));
+    loops
+}
+
+/// Canonicalise every loop: dedicated preheader, single latch, and
+/// dedicated exit blocks (each exit block's predecessors are all inside the
+/// loop). Returns the number of edits made.
+pub fn canonicalize(f: &mut Function) -> usize {
+    let mut edits = 0;
+    // Iterate to a fixed point: splitting edges invalidates loop info.
+    loop {
+        let loops = find_loops(f);
+        let mut changed = false;
+        for l in &loops {
+            // 1. Dedicated preheader: exactly one out-of-loop predecessor
+            //    of the header, and that predecessor has a single successor.
+            let preds = f.preds();
+            let outside: Vec<BlockId> = preds[l.header.0 as usize]
+                .iter()
+                .copied()
+                .filter(|p| !l.contains(*p))
+                .collect();
+            let needs_preheader = outside.len() != 1
+                || f.succs(outside[0]).len() != 1;
+            if needs_preheader && !outside.is_empty() {
+                // Split every entering edge onto a fresh preheader chain:
+                // split one edge, loop again.
+                let from = outside[0];
+                split_edge(f, from, l.header);
+                edits += 1;
+                changed = true;
+                break;
+            }
+            // 2. Single latch: if several, split each back edge then merge.
+            if l.latches.len() > 1 {
+                // Insert a shared latch block: all back edges jump to it.
+                let shared = f.add_block(format!("{}.latch", f.block(l.header).name));
+                f.set_term(shared, Term::Jump(l.header));
+                for &latch in &l.latches {
+                    let mut term = f.block(latch).term.clone();
+                    term.map_succs(|s| if s == l.header { shared } else { s });
+                    f.block_mut(latch).term = term;
+                }
+                edits += 1;
+                changed = true;
+                break;
+            }
+            // 3. Dedicated exits: every exit block must have only in-loop
+            //    predecessors.
+            let preds = f.preds();
+            for &x in &l.exits {
+                let mixed = preds[x.0 as usize].iter().any(|p| !l.contains(*p));
+                if mixed {
+                    // Split each in-loop edge into x via a dedicated block.
+                    let from = *preds[x.0 as usize].iter().find(|p| l.contains(**p)).unwrap();
+                    split_edge(f, from, x);
+                    edits += 1;
+                    changed = true;
+                    break;
+                }
+            }
+            if changed {
+                break;
+            }
+        }
+        if !changed {
+            return edits;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::Operand;
+
+    /// while-loop shape: entry -> h; h -> body | exit; body -> h.
+    fn simple_loop() -> (Function, BlockId, BlockId, BlockId) {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let h = f.add_block("h");
+        let body = f.add_block("body");
+        let x = f.add_block("x");
+        f.set_term(e, Term::Jump(h));
+        f.set_term(h, Term::Br { cond: Operand::cbool(true), t: body, f: x });
+        f.set_term(body, Term::Jump(h));
+        f.set_term(x, Term::Ret);
+        (f, h, body, x)
+    }
+
+    #[test]
+    fn finds_simple_loop() {
+        let (f, h, body, x) = simple_loop();
+        let loops = find_loops(&f);
+        assert_eq!(loops.len(), 1);
+        let l = &loops[0];
+        assert_eq!(l.header, h);
+        assert_eq!(l.latches, vec![body]);
+        assert!(l.contains(body));
+        assert!(!l.contains(x));
+        assert_eq!(l.exits, vec![x]);
+        assert_eq!(l.depth, 1);
+    }
+
+    #[test]
+    fn nested_loop_depths() {
+        // e -> h1; h1 -> h2|x; h2 -> b2|l1; b2 -> h2 ; l1 -> h1
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let h1 = f.add_block("h1");
+        let h2 = f.add_block("h2");
+        let b2 = f.add_block("b2");
+        let l1 = f.add_block("l1");
+        let x = f.add_block("x");
+        f.set_term(e, Term::Jump(h1));
+        f.set_term(h1, Term::Br { cond: Operand::cbool(true), t: h2, f: x });
+        f.set_term(h2, Term::Br { cond: Operand::cbool(true), t: b2, f: l1 });
+        f.set_term(b2, Term::Jump(h2));
+        f.set_term(l1, Term::Jump(h1));
+        f.set_term(x, Term::Ret);
+        let loops = find_loops(&f);
+        assert_eq!(loops.len(), 2);
+        assert_eq!(loops[0].header, h1);
+        assert_eq!(loops[0].depth, 1);
+        assert_eq!(loops[1].header, h2);
+        assert_eq!(loops[1].depth, 2);
+    }
+
+    #[test]
+    fn canonicalize_inserts_preheader() {
+        let (mut f, h, _body, _x) = simple_loop();
+        canonicalize(&mut f);
+        let loops = find_loops(&f);
+        let l = loops.iter().find(|l| l.header == h).unwrap();
+        let ph = l.preheader(&f).expect("preheader exists");
+        assert_eq!(f.succs(ph), vec![h]);
+    }
+
+    #[test]
+    fn canonicalize_merges_latches() {
+        // Loop with two latches.
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let h = f.add_block("h");
+        let b1 = f.add_block("b1");
+        let b2 = f.add_block("b2");
+        let x = f.add_block("x");
+        f.set_term(e, Term::Jump(h));
+        f.set_term(h, Term::Br { cond: Operand::cbool(true), t: b1, f: x });
+        f.set_term(b1, Term::Br { cond: Operand::cbool(true), t: h, f: b2 });
+        f.set_term(b2, Term::Jump(h));
+        f.set_term(x, Term::Ret);
+        canonicalize(&mut f);
+        let loops = find_loops(&f);
+        let l = loops.iter().find(|l| l.header == h).unwrap();
+        assert_eq!(l.latches.len(), 1, "latches merged");
+    }
+
+    #[test]
+    fn canonicalize_is_idempotent() {
+        let (mut f, _h, _b, _x) = simple_loop();
+        canonicalize(&mut f);
+        let edits = canonicalize(&mut f);
+        assert_eq!(edits, 0);
+    }
+}

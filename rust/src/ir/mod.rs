@@ -1,0 +1,17 @@
+//! Kernel IR: the LLVM-IR analog the kernel compiler operates on.
+//!
+//! See `inst` for the core invariant (block-local registers) and `cfg` for
+//! the paper's `CreateSubgraph`/`ReplicateCFG` helpers (§4.2).
+
+pub mod cfg;
+pub mod dom;
+pub mod func;
+pub mod inst;
+pub mod loops;
+pub mod print;
+pub mod types;
+pub mod verify;
+
+pub use func::{AllocaInfo, Block, Function, Module, Param, WiLoopMeta};
+pub use inst::{BarrierKind, BinOp, BlockId, Imm, Inst, MathFn, Operand, Reg, SlotId, Term, UnOp, WiFn};
+pub use types::{AddrSpace, Scalar, Type};

@@ -1,0 +1,145 @@
+//! Textual IR printer — for debugging, docs, and golden tests.
+
+use std::fmt::Write;
+
+use super::func::Function;
+use super::inst::{BinOp, Imm, Inst, Operand, Term, UnOp};
+
+/// Render a function as readable text.
+pub fn print_function(f: &Function) -> String {
+    let mut out = String::new();
+    let params: Vec<String> =
+        f.params.iter().map(|p| format!("{} %{}", p.ty, p.name)).collect();
+    let _ = writeln!(out, "kernel @{}({}) {{", f.name, params.join(", "));
+    for (i, slot) in f.slots.iter().enumerate() {
+        let mut flags = String::new();
+        if slot.privatized {
+            flags.push_str(" privatized");
+        }
+        if slot.uniform {
+            flags.push_str(" uniform");
+        }
+        let _ = writeln!(out, "  slot s{} : {} x{}{}   ; {}", i, slot.ty, slot.count, flags, slot.name);
+    }
+    for id in f.block_ids() {
+        let b = f.block(id);
+        let _ = writeln!(out, "bb{} ({}):", id.0, b.name);
+        for (def, inst) in &b.insts {
+            let lhs = match def {
+                Some(r) => format!("  r{} = ", r.0),
+                None => "  ".to_string(),
+            };
+            let _ = writeln!(out, "{}{}", lhs, fmt_inst(inst));
+        }
+        let term = match &b.term {
+            Term::Jump(t) => format!("  jump bb{}", t.0),
+            Term::Br { cond, t, f } => format!("  br {}, bb{}, bb{}", fmt_op(cond), t.0, f.0),
+            Term::Ret => "  ret".to_string(),
+        };
+        let _ = writeln!(out, "{term}");
+    }
+    // WI-loop metadata footer (the "parallel loop" annotations).
+    for m in &f.wi_loops {
+        let _ = writeln!(
+            out,
+            "; wi_loop region={} dim={} header=bb{} latch=bb{} trip={:?} parallel={}",
+            m.region, m.dim, m.header.0, m.latch.0, m.trip_count, m.parallel
+        );
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn fmt_op(op: &Operand) -> String {
+    match op {
+        Operand::Reg(r) => format!("r{}", r.0),
+        Operand::Imm(Imm::Int(v, s)) => format!("{v}:{s:?}"),
+        Operand::Imm(Imm::Float(v, s)) => format!("{v}:{s:?}"),
+        Operand::Arg(a) => format!("%arg{a}"),
+        Operand::Slot(s) => format!("&s{}", s.0),
+    }
+}
+
+fn fmt_inst(inst: &Inst) -> String {
+    match inst {
+        Inst::Bin { op, ty, a, b } => {
+            format!("{} {} {}, {}", bin_name(*op), ty, fmt_op(a), fmt_op(b))
+        }
+        Inst::Un { op, ty, a } => format!("{} {} {}", un_name(*op), ty, fmt_op(a)),
+        Inst::Cast { to, from, a } => format!("cast {} -> {} {}", from, to, fmt_op(a)),
+        Inst::Load { ty, ptr } => format!("load {} {}", ty, fmt_op(ptr)),
+        Inst::Store { ty, ptr, val } => format!("store {} {}, {}", ty, fmt_op(val), fmt_op(ptr)),
+        Inst::Gep { elem, base, idx } => format!("gep {} {}, {}", elem, fmt_op(base), fmt_op(idx)),
+        Inst::Wi { func, dim } => format!("wi {:?}({dim})", func),
+        Inst::Math { func, ty, args } => {
+            let a: Vec<String> = args.iter().map(fmt_op).collect();
+            format!("math {:?} {} {}", func, ty, a.join(", "))
+        }
+        Inst::Select { ty, cond, a, b } => {
+            format!("select {} {}, {}, {}", ty, fmt_op(cond), fmt_op(a), fmt_op(b))
+        }
+        Inst::VecBuild { ty, elems } => {
+            let a: Vec<String> = elems.iter().map(fmt_op).collect();
+            format!("vecbuild {} ({})", ty, a.join(", "))
+        }
+        Inst::VecExtract { elem, a, lane } => format!("extract {} {}[{}]", elem, fmt_op(a), lane),
+        Inst::VecInsert { ty, a, lane, v } => {
+            format!("insert {} {}[{}] = {}", ty, fmt_op(a), lane, fmt_op(v))
+        }
+        Inst::Splat { ty, a } => format!("splat {} {}", ty, fmt_op(a)),
+        Inst::Barrier { kind } => format!("barrier ({kind:?})"),
+        Inst::Marker { label } => format!("marker {label}"),
+    }
+}
+
+fn bin_name(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "add",
+        BinOp::Sub => "sub",
+        BinOp::Mul => "mul",
+        BinOp::Div => "div",
+        BinOp::Rem => "rem",
+        BinOp::And => "and",
+        BinOp::Or => "or",
+        BinOp::Xor => "xor",
+        BinOp::Shl => "shl",
+        BinOp::Shr => "shr",
+        BinOp::Eq => "cmpeq",
+        BinOp::Ne => "cmpne",
+        BinOp::Lt => "cmplt",
+        BinOp::Le => "cmple",
+        BinOp::Gt => "cmpgt",
+        BinOp::Ge => "cmpge",
+        BinOp::LAnd => "land",
+        BinOp::LOr => "lor",
+    }
+}
+
+fn un_name(op: UnOp) -> &'static str {
+    match op {
+        UnOp::Neg => "neg",
+        UnOp::Not => "not",
+        UnOp::LNot => "lnot",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::BinOp;
+    use crate::ir::types::Type;
+
+    #[test]
+    fn prints_blocks_and_regs() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::ci32(1), b: Operand::ci32(2) },
+        );
+        let s = print_function(&f);
+        assert!(s.contains("kernel @k"));
+        assert!(s.contains("r0 = add int 1:I32, 2:I32"));
+        assert!(s.contains("ret"));
+    }
+}

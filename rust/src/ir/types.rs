@@ -1,0 +1,208 @@
+//! Type system of the kernel IR: OpenCL C scalar, vector and pointer types.
+
+use std::fmt;
+
+/// Scalar element types. The subset covers everything the AMD APP SDK-style
+/// suite kernels need (OpenCL `char/uchar` omitted; `half` unsupported like
+/// in base OpenCL 1.2 without `cl_khr_fp16`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scalar {
+    /// `bool` — result of comparisons; not addressable in OpenCL C.
+    Bool,
+    /// `int` — 32-bit signed.
+    I32,
+    /// `uint` — 32-bit unsigned.
+    U32,
+    /// `long` — 64-bit signed.
+    I64,
+    /// `ulong` / `size_t` — 64-bit unsigned.
+    U64,
+    /// `float` — IEEE binary32.
+    F32,
+    /// `double` — IEEE binary64 (`cl_khr_fp64`).
+    F64,
+}
+
+impl Scalar {
+    /// Byte size of the scalar.
+    pub fn size(self) -> usize {
+        match self {
+            Scalar::Bool => 1,
+            Scalar::I32 | Scalar::U32 | Scalar::F32 => 4,
+            Scalar::I64 | Scalar::U64 | Scalar::F64 => 8,
+        }
+    }
+    /// True for `float`/`double`.
+    pub fn is_float(self) -> bool {
+        matches!(self, Scalar::F32 | Scalar::F64)
+    }
+    /// True for any integer (including bool).
+    pub fn is_int(self) -> bool {
+        !self.is_float()
+    }
+    /// True for signed integers.
+    pub fn is_signed(self) -> bool {
+        matches!(self, Scalar::I32 | Scalar::I64)
+    }
+}
+
+/// OpenCL disjoint address spaces (§2 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrSpace {
+    /// `__global` — device global memory, shared by all work-items.
+    Global,
+    /// `__local` — per-work-group scratchpad.
+    Local,
+    /// `__constant` — read-only global data.
+    Constant,
+    /// `__private` — per-work-item stack data (allocas).
+    Private,
+}
+
+impl AddrSpace {
+    /// Qualifier spelling used by the printer.
+    pub fn keyword(self) -> &'static str {
+        match self {
+            AddrSpace::Global => "__global",
+            AddrSpace::Local => "__local",
+            AddrSpace::Constant => "__constant",
+            AddrSpace::Private => "__private",
+        }
+    }
+}
+
+/// Full IR types.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Type {
+    /// No value (void returns, store results).
+    Void,
+    /// Scalar value.
+    Scalar(Scalar),
+    /// Short vector `elem x lanes`, lanes ∈ {2,3,4,8,16}.
+    Vec(Scalar, u8),
+    /// Pointer to `elem` values in an address space. Element type is scalar
+    /// or vector (OpenCL C pointers-to-pointers are not needed by the suite).
+    Ptr(Box<Type>, AddrSpace),
+}
+
+impl Type {
+    /// `float` shorthand.
+    pub const F32: Type = Type::Scalar(Scalar::F32);
+    /// `int` shorthand.
+    pub const I32: Type = Type::Scalar(Scalar::I32);
+    /// `uint` shorthand.
+    pub const U32: Type = Type::Scalar(Scalar::U32);
+    /// `bool` shorthand.
+    pub const BOOL: Type = Type::Scalar(Scalar::Bool);
+    /// `size_t` shorthand.
+    pub const U64: Type = Type::Scalar(Scalar::U64);
+
+    /// Pointer-to-self in the given address space.
+    pub fn ptr(self, space: AddrSpace) -> Type {
+        Type::Ptr(Box::new(self), space)
+    }
+
+    /// Element scalar type of a scalar or vector type.
+    pub fn elem_scalar(&self) -> Option<Scalar> {
+        match self {
+            Type::Scalar(s) => Some(*s),
+            Type::Vec(s, _) => Some(*s),
+            _ => None,
+        }
+    }
+
+    /// Lane count: 1 for scalars, N for vectors.
+    pub fn lanes(&self) -> usize {
+        match self {
+            Type::Vec(_, n) => *n as usize,
+            _ => 1,
+        }
+    }
+
+    /// Byte size of a value of this type (pointers are 8 bytes; vec3 is
+    /// padded to 4 lanes per the OpenCL spec).
+    pub fn size(&self) -> usize {
+        match self {
+            Type::Void => 0,
+            Type::Scalar(s) => s.size(),
+            Type::Vec(s, n) => s.size() * if *n == 3 { 4 } else { *n as usize },
+            Type::Ptr(..) => 8,
+        }
+    }
+
+    /// True if scalar or vector of floats.
+    pub fn is_float(&self) -> bool {
+        self.elem_scalar().map(|s| s.is_float()).unwrap_or(false)
+    }
+
+    /// True if scalar or vector of (signed or unsigned) integers.
+    pub fn is_int(&self) -> bool {
+        self.elem_scalar().map(|s| s.is_int()).unwrap_or(false)
+    }
+
+    /// True for pointer types.
+    pub fn is_ptr(&self) -> bool {
+        matches!(self, Type::Ptr(..))
+    }
+
+    /// With the same shape (scalar/vector lane count) but a new element.
+    pub fn with_elem(&self, s: Scalar) -> Type {
+        match self {
+            Type::Vec(_, n) => Type::Vec(s, *n),
+            _ => Type::Scalar(s),
+        }
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::Void => write!(f, "void"),
+            Type::Scalar(s) => write!(f, "{}", scalar_name(*s)),
+            Type::Vec(s, n) => write!(f, "{}{}", scalar_name(*s), n),
+            Type::Ptr(e, sp) => write!(f, "{} {}*", sp.keyword(), e),
+        }
+    }
+}
+
+fn scalar_name(s: Scalar) -> &'static str {
+    match s {
+        Scalar::Bool => "bool",
+        Scalar::I32 => "int",
+        Scalar::U32 => "uint",
+        Scalar::I64 => "long",
+        Scalar::U64 => "ulong",
+        Scalar::F32 => "float",
+        Scalar::F64 => "double",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Type::F32.size(), 4);
+        assert_eq!(Type::Vec(Scalar::F32, 4).size(), 16);
+        assert_eq!(Type::Vec(Scalar::F32, 3).size(), 16); // vec3 padded
+        assert_eq!(Type::F32.ptr(AddrSpace::Global).size(), 8);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Type::Vec(Scalar::F32, 4).to_string(), "float4");
+        assert_eq!(
+            Type::U32.ptr(AddrSpace::Local).to_string(),
+            "__local uint*"
+        );
+    }
+
+    #[test]
+    fn classification() {
+        assert!(Type::F32.is_float());
+        assert!(Type::Vec(Scalar::I32, 8).is_int());
+        assert!(!Type::F32.ptr(AddrSpace::Global).is_float());
+        assert_eq!(Type::Vec(Scalar::F32, 8).with_elem(Scalar::U32), Type::Vec(Scalar::U32, 8));
+    }
+}

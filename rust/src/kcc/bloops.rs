@@ -1,0 +1,154 @@
+//! Implicit barriers for loops containing barriers — *b-loops* (§4.5).
+//!
+//! For every canonical loop that contains a barrier, three implicit
+//! barriers are added so the parallel region formation is unambiguous:
+//!
+//! 1. at the end of the loop **pre-header** (synchronise before entering),
+//! 2. at the **top of the header** (the paper's "after the PhiNode region"
+//!    — our IR has no phis, so the header top is the equivalent point),
+//! 3. at the end of the (single) **latch**, before its back-edge branch.
+//!
+//! The original loop branches are *not* replicated by the later work-item
+//! loop materialisation, which is what enforces the iteration-level
+//! lock-step semantics (Fig. 8, grey edges).
+
+use crate::cl::error::{Error, Result};
+use crate::ir::func::Function;
+use crate::ir::inst::{BarrierKind, Inst};
+use crate::ir::loops::{find_loops, Loop};
+
+/// Instrument every loop that contains a barrier. Returns how many loops
+/// were instrumented. `canonicalize` must have run.
+pub fn run(f: &mut Function) -> Result<usize> {
+    let mut count = 0;
+    // Loops are discovered once; instrumentation preserves loop structure
+    // (we only append/prepend instructions to existing blocks).
+    let loops = find_loops(f);
+    for l in &loops {
+        let has_barrier = l.blocks.iter().any(|&b| f.block(b).has_barrier());
+        if !has_barrier {
+            continue;
+        }
+        instrument_loop(f, l)?;
+        count += 1;
+    }
+    Ok(count)
+}
+
+/// Insert the three implicit b-loop barriers around loop `l`.
+/// Idempotent: skips points that already hold a barrier.
+pub fn instrument_loop(f: &mut Function, l: &Loop) -> Result<()> {
+    let pre = l.preheader(f).ok_or_else(|| {
+        Error::compile(format!(
+            "b-loop with header bb{} has no dedicated preheader (canonicalize first)",
+            l.header.0
+        ))
+    })?;
+    if l.latches.len() != 1 {
+        return Err(Error::compile(format!(
+            "b-loop with header bb{} has {} latches (canonicalize first)",
+            l.header.0,
+            l.latches.len()
+        )));
+    }
+    let latch = l.latches[0];
+    // 1. End of preheader.
+    if !ends_with_barrier(f, pre) {
+        f.block_mut(pre).insts.push((None, Inst::Barrier { kind: BarrierKind::Implicit }));
+    }
+    // 2. Top of header.
+    if !starts_with_barrier(f, l.header) {
+        f.block_mut(l.header).insts.insert(0, (None, Inst::Barrier { kind: BarrierKind::Implicit }));
+    }
+    // 3. End of latch (before the back-edge branch).
+    if !ends_with_barrier(f, latch) {
+        f.block_mut(latch).insts.push((None, Inst::Barrier { kind: BarrierKind::Implicit }));
+    }
+    Ok(())
+}
+
+fn ends_with_barrier(f: &Function, b: crate::ir::inst::BlockId) -> bool {
+    f.block(b).insts.last().map(|(_, i)| i.is_barrier()).unwrap_or(false)
+}
+
+fn starts_with_barrier(f: &Function, b: crate::ir::inst::BlockId) -> bool {
+    f.block(b).insts.first().map(|(_, i)| i.is_barrier()).unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+    use crate::ir::cfg::unify_exits;
+    use crate::ir::loops::canonicalize;
+    use crate::ir::verify::{barrier_count, verify};
+
+    fn prepared(src: &str) -> Function {
+        let m = compile(src).unwrap();
+        let mut f = m.kernels.into_iter().next().unwrap();
+        unify_exits(&mut f);
+        canonicalize(&mut f);
+        f
+    }
+
+    #[test]
+    fn instruments_barrier_loop() {
+        let mut f = prepared(
+            "__kernel void k(__global float *x, __local float *t, int n) {
+                 for (int i = 0; i < n; i++) {
+                     t[get_local_id(0)] = x[i];
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                     x[i] = t[0];
+                 }
+             }",
+        );
+        let before = barrier_count(&f);
+        let n = run(&mut f).unwrap();
+        verify(&f).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(barrier_count(&f), before + 3, "preheader + header + latch barriers");
+    }
+
+    #[test]
+    fn skips_barrier_free_loops() {
+        let mut f = prepared(
+            "__kernel void k(__global float *x, int n) {
+                 for (int i = 0; i < n; i++) { x[i] = (float)i; }
+             }",
+        );
+        assert_eq!(run(&mut f).unwrap(), 0);
+    }
+
+    #[test]
+    fn nested_loop_with_barrier_instruments_both() {
+        let mut f = prepared(
+            "__kernel void k(__global float *x, int n) {
+                 for (int i = 0; i < n; i++) {
+                     for (int j = 0; j < n; j++) {
+                         barrier(CLK_LOCAL_MEM_FENCE);
+                         x[i * n + j] = 1.0f;
+                     }
+                 }
+             }",
+        );
+        let n = run(&mut f).unwrap();
+        verify(&f).unwrap();
+        assert_eq!(n, 2, "both enclosing loops contain a barrier");
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut f = prepared(
+            "__kernel void k(__global float *x, int n) {
+                 for (int i = 0; i < n; i++) {
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                     x[i] = 1.0f;
+                 }
+             }",
+        );
+        run(&mut f).unwrap();
+        let count = barrier_count(&f);
+        run(&mut f).unwrap();
+        assert_eq!(barrier_count(&f), count);
+    }
+}

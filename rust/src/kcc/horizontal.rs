@@ -1,0 +1,189 @@
+//! Horizontal inner-loop parallelisation (§4.6).
+//!
+//! Inner loops with **uniform** trip counts and non-divergent entry are
+//! treated "like a loop with a barrier inside": the b-loop implicit
+//! barriers are inserted, which — after region formation and work-item
+//! loop generation — effectively interchanges the work-item loop with the
+//! inner loop (Fig. 9 → Fig. 10). The legality condition is exactly the
+//! paper's: the loop exit condition and the predicates leading to the loop
+//! entry must not depend on the work-item id.
+
+use crate::cl::error::Result;
+use crate::ir::func::Function;
+use crate::ir::inst::Term;
+use crate::ir::loops::find_loops;
+
+use super::bloops::instrument_loop;
+use super::uniformity::{analyze, Uniformity};
+
+/// Statistics for reporting/tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HorizontalStats {
+    /// Loops examined.
+    pub loops_seen: usize,
+    /// Loops horizontally parallelised (implicit barriers inserted).
+    pub loops_parallelized: usize,
+    /// Loops rejected because of divergent exit conditions or entry.
+    pub loops_divergent: usize,
+}
+
+/// Run the pass. `canonicalize` must have run; barriers may or may not be
+/// present (loops already containing barriers are left to `bloops`).
+pub fn run(f: &mut Function) -> Result<HorizontalStats> {
+    let mut stats = HorizontalStats::default();
+    let u = analyze(f);
+    let loops = find_loops(f);
+    // Instrument innermost-qualifying loops first is unnecessary: the
+    // barrier insertion points of different loops never clash after
+    // canonicalisation (distinct preheaders/latches), and instrumenting a
+    // loop makes enclosing loops b-loops, handled by `bloops` later.
+    let mut chosen = Vec::new();
+    for l in &loops {
+        stats.loops_seen += 1;
+        if l.blocks.iter().any(|&b| f.block(b).has_barrier()) {
+            continue; // already a b-loop; bloops will instrument
+        }
+        if !legal(f, &u, l) {
+            stats.loops_divergent += 1;
+            continue;
+        }
+        chosen.push(l.clone());
+    }
+    for l in &chosen {
+        instrument_loop(f, l)?;
+        stats.loops_parallelized += 1;
+    }
+    Ok(stats)
+}
+
+/// The §4.6 legality test: the loop's exit conditions are uniform, and the
+/// path to the loop entry is not divergence-controlled, so inserting the
+/// implicit barriers cannot deadlock/diverge work-items.
+fn legal(f: &Function, u: &Uniformity, l: &crate::ir::loops::Loop) -> bool {
+    // Every exiting block's branch must be uniform.
+    for &e in &l.exiting {
+        if matches!(f.block(e).term, Term::Br { .. }) && !u.uniform_branch(f, e) {
+            return false;
+        }
+    }
+    // All in-loop branches must be uniform as well: a divergent branch
+    // inside the loop body would put the implicit latch barrier under
+    // divergent control. (pocl's uniformity analysis makes the same
+    // conservative choice for the loop as a whole.)
+    for &b in &l.blocks {
+        if matches!(f.block(b).term, Term::Br { .. }) && !u.uniform_branch(f, b) {
+            return false;
+        }
+    }
+    // The loop entry must not be divergence-controlled.
+    match l.preheader(f) {
+        Some(p) if !u.divergent_blocks.contains(&p) => {}
+        _ => return false,
+    }
+    if u.divergent_blocks.contains(&l.header) {
+        return false;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+    use crate::ir::cfg::unify_exits;
+    use crate::ir::loops::canonicalize;
+    use crate::ir::verify::{barrier_count, verify};
+
+    fn prepared(src: &str) -> Function {
+        let m = compile(src).unwrap();
+        let mut f = m.kernels.into_iter().next().unwrap();
+        unify_exits(&mut f);
+        canonicalize(&mut f);
+        f
+    }
+
+    #[test]
+    fn uniform_inner_loop_is_parallelized() {
+        // The DCT shape from Fig. 9: inner loop with an argument-provided
+        // trip count.
+        let mut f = prepared(
+            "__kernel void dctish(__global float *out, __global float *in, uint blockWidth) {
+                 uint i = (uint)get_local_id(0);
+                 float acc = 0.0f;
+                 for (uint k = 0u; k < blockWidth; k++) {
+                     acc += in[k * blockWidth + i];
+                 }
+                 out[i] = acc;
+             }",
+        );
+        let stats = run(&mut f).unwrap();
+        verify(&f).unwrap();
+        assert_eq!(stats.loops_parallelized, 1, "{stats:?}");
+        assert_eq!(barrier_count(&f), 3);
+    }
+
+    #[test]
+    fn divergent_loop_is_rejected() {
+        // BinarySearch shape: trip count depends on data loaded per WI.
+        let mut f = prepared(
+            "__kernel void bs(__global float *x) {
+                 uint i = (uint)get_global_id(0);
+                 uint n = (uint)x[i];
+                 float acc = 0.0f;
+                 for (uint k = 0u; k < n; k++) { acc += 1.0f; }
+                 x[i] = acc;
+             }",
+        );
+        let stats = run(&mut f).unwrap();
+        assert_eq!(stats.loops_parallelized, 0);
+        assert_eq!(stats.loops_divergent, 1);
+        assert_eq!(barrier_count(&f), 0);
+    }
+
+    #[test]
+    fn loop_under_divergent_if_is_rejected() {
+        let mut f = prepared(
+            "__kernel void k(__global float *x, uint n) {
+                 uint i = (uint)get_global_id(0);
+                 if (i < n / 2u) {
+                     float acc = 0.0f;
+                     for (uint k = 0u; k < n; k++) { acc += x[k]; }
+                     x[i] = acc;
+                 }
+             }",
+        );
+        let stats = run(&mut f).unwrap();
+        assert_eq!(stats.loops_parallelized, 0);
+    }
+
+    #[test]
+    fn loop_with_divergent_body_branch_is_rejected() {
+        let mut f = prepared(
+            "__kernel void k(__global float *x, uint n) {
+                 uint i = (uint)get_global_id(0);
+                 float acc = 0.0f;
+                 for (uint k = 0u; k < n; k++) {
+                     if (x[k * n + i] > 0.0f) { acc += 1.0f; }
+                 }
+                 x[i] = acc;
+             }",
+        );
+        let stats = run(&mut f).unwrap();
+        assert_eq!(stats.loops_parallelized, 0, "divergent in-body branch");
+    }
+
+    #[test]
+    fn barrier_loops_are_left_to_bloops() {
+        let mut f = prepared(
+            "__kernel void k(__global float *x, uint n) {
+                 for (uint k = 0u; k < n; k++) {
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                     x[k] = 1.0f;
+                 }
+             }",
+        );
+        let stats = run(&mut f).unwrap();
+        assert_eq!(stats.loops_parallelized, 0);
+        assert_eq!(barrier_count(&f), 1, "untouched");
+    }
+}

@@ -1,0 +1,15 @@
+//! The pocl kernel compiler (§4): parallel region formation separated from
+//! target-specific parallel mapping.
+
+pub mod barriers;
+pub mod bloops;
+pub mod horizontal;
+pub mod passes;
+pub mod privatize;
+pub mod regions;
+pub mod taildup;
+pub mod uniformity;
+pub mod wiloops;
+
+pub use passes::{compile_workgroup, CompileOptions, CompileStats, WorkGroupFunction};
+pub use regions::Region;

@@ -1,0 +1,294 @@
+//! The kernel-compiler pass pipeline (Fig. 3).
+//!
+//! `compile_workgroup` takes a single-work-item kernel (frontend output)
+//! and an enqueue-time local size and produces a [`WorkGroupFunction`]:
+//!
+//! * `reg_fn` — the region-formed function (barriers intact, privatisation
+//!   flags set). This is what SPMD-style engines (the gang executor)
+//!   consume: the separation the paper's §4 headline contribution is about.
+//! * `loop_fn` — the work-item-loop materialised function (no barriers,
+//!   `wi_loops` metadata). This is what serial/ILP engines (interpreter,
+//!   TTA scheduler) consume.
+//!
+//! Pipeline: unify exits → canonicalise loops → horizontal inner-loop
+//! parallelisation (§4.6, optional) → b-loop implicit barriers (§4.5) →
+//! normalise/isolate barriers (§4.3) → tail duplication (§4.4) → region
+//! formation (Alg. 1) → privatisation (§4.7) → WI-loop materialisation
+//! (incl. peeling, Fig. 7).
+
+use crate::cl::error::Result;
+use crate::ir::cfg::unify_exits;
+use crate::ir::func::Function;
+use crate::ir::loops::canonicalize;
+
+use super::barriers::normalize;
+use super::bloops;
+use super::horizontal;
+use super::privatize;
+use super::regions::{check_regions, form_regions, Region};
+use super::taildup;
+use super::uniformity;
+use super::wiloops;
+
+/// Compilation options (per-device knobs).
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    /// Enable horizontal inner-loop parallelisation (§4.6). The §6.4 TTA
+    /// experiment toggles this.
+    pub horizontal: bool,
+    /// Work dimension used by `get_work_dim()`.
+    pub work_dim: u32,
+    /// Skip work-group function generation (SPMD targets, Fig. 3) — only
+    /// region formation runs; `loop_fn` equals the single-WI kernel with
+    /// barriers stripped. Used when the device executes work-items itself.
+    pub spmd: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { horizontal: true, work_dim: 1, spmd: false }
+    }
+}
+
+/// Aggregate statistics from all passes — reported by the CLI and asserted
+/// on by tests/benches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompileStats {
+    /// Parallel regions formed.
+    pub regions: usize,
+    /// Loops horizontally parallelised.
+    pub horizontal_loops: usize,
+    /// b-loops instrumented.
+    pub b_loops: usize,
+    /// Barriers that triggered tail duplication.
+    pub taildup_barriers: usize,
+    /// Blocks duplicated by tail duplication.
+    pub taildup_blocks: usize,
+    /// Slots privatised into context arrays.
+    pub privatized_slots: usize,
+    /// Slots merged as uniform.
+    pub uniform_slots: usize,
+    /// WI loops materialised.
+    pub wi_loops: usize,
+    /// Barriers requiring the peeling treatment.
+    pub peeled_barriers: usize,
+}
+
+/// A compiled work-group function, specialised for one local size (§4.1:
+/// generation happens at enqueue time when the local size is known).
+#[derive(Debug, Clone)]
+pub struct WorkGroupFunction {
+    /// Kernel name.
+    pub name: String,
+    /// Region-formed function: barriers intact, for region-level engines.
+    pub reg_fn: Function,
+    /// Parallel regions of `reg_fn`.
+    pub regions: Vec<Region>,
+    /// WI-loop materialised function: no barriers, `wi_loops` metadata.
+    pub loop_fn: Function,
+    /// The local size this work-group function is specialised for.
+    pub local_size: [usize; 3],
+    /// Pass statistics.
+    pub stats: CompileStats,
+}
+
+impl WorkGroupFunction {
+    /// Total work-items per work-group.
+    pub fn wg_size(&self) -> usize {
+        self.local_size.iter().product()
+    }
+
+    /// Number of original kernel parameters (before the appended
+    /// work-group context parameters of `loop_fn`).
+    pub fn kernel_param_count(&self) -> usize {
+        self.reg_fn.params.len()
+    }
+}
+
+/// Run the full §4 pipeline.
+pub fn compile_workgroup(
+    kernel: &Function,
+    local_size: [usize; 3],
+    opts: &CompileOptions,
+) -> Result<WorkGroupFunction> {
+    let mut stats = CompileStats::default();
+    let mut f = kernel.clone();
+
+    // Target-independent parallel region formation.
+    unify_exits(&mut f);
+    canonicalize(&mut f);
+    if opts.horizontal && !opts.spmd {
+        let h = horizontal::run(&mut f)?;
+        stats.horizontal_loops = h.loops_parallelized;
+    }
+    stats.b_loops = bloops::run(&mut f)?;
+    // Uniformity is analysed before barrier isolation mangles block
+    // structure; slot ids are stable across the later passes.
+    let uni = uniformity::analyze(&f);
+    normalize(&mut f)?;
+    let td = taildup::run(&mut f)?;
+    stats.taildup_barriers = td.barriers_split;
+    stats.taildup_blocks = td.blocks_duplicated;
+    debug_assert!(taildup::max_imm_preds(&f) <= 1);
+    let (regions, _graph) = form_regions(&f);
+    stats.regions = regions.len();
+    if cfg!(debug_assertions) {
+        check_regions(&f, &regions).map_err(crate::cl::error::Error::Compile)?;
+    }
+    let p = privatize::run(&mut f, &regions, &uni);
+    stats.privatized_slots = p.privatized;
+    stats.uniform_slots = p.merged_uniform;
+    crate::ir::verify::verify(&f)?;
+
+    // Target-specific parallel mapping: materialise WI loops.
+    let reg_fn = f.clone();
+    let (loop_fn, wstats) = if opts.spmd {
+        // SPMD devices run the single-WI function themselves; strip
+        // barriers only (the device hardware provides their semantics).
+        let mut g = f;
+        for b in g.block_ids().collect::<Vec<_>>() {
+            g.block_mut(b).insts.retain(|(_, i)| !i.is_barrier());
+        }
+        (g, wiloops::WiLoopStats::default())
+    } else {
+        wiloops::materialize(f, &regions, local_size, opts.work_dim)?
+    };
+    stats.wi_loops = wstats.loops_created;
+    stats.peeled_barriers = wstats.peeled;
+
+    Ok(WorkGroupFunction {
+        name: kernel.name.clone(),
+        reg_fn,
+        regions,
+        loop_fn,
+        local_size,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+    use crate::ir::verify::{barrier_count, verify};
+
+    fn wg(src: &str, local: [usize; 3]) -> WorkGroupFunction {
+        let m = compile(src).unwrap();
+        let k = m.kernels.into_iter().next().unwrap();
+        compile_workgroup(&k, local, &CompileOptions::default()).unwrap()
+    }
+
+    const VECADD: &str = "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
+        size_t i = get_global_id(0);
+        c[i] = a[i] + b[i];
+    }";
+
+    #[test]
+    fn vecadd_pipeline() {
+        let w = wg(VECADD, [8, 1, 1]);
+        assert_eq!(w.stats.regions, 1);
+        assert_eq!(w.stats.wi_loops, 1, "one x-dim WI loop");
+        assert_eq!(barrier_count(&w.loop_fn), 0, "barriers stripped");
+        assert!(barrier_count(&w.reg_fn) >= 2, "entry+exit barriers intact in region form");
+        verify(&w.loop_fn).unwrap();
+        assert_eq!(w.loop_fn.wi_loops.len(), 1);
+        assert!(w.loop_fn.wi_loops[0].parallel);
+        assert_eq!(w.loop_fn.wi_loops[0].trip_count, Some(8));
+    }
+
+    #[test]
+    fn local_size_one_skips_wg_generation() {
+        let w = wg(VECADD, [1, 1, 1]);
+        assert_eq!(w.stats.wi_loops, 0);
+        verify(&w.loop_fn).unwrap();
+    }
+
+    #[test]
+    fn three_dim_local_size() {
+        let w = wg(VECADD, [4, 2, 2]);
+        assert_eq!(w.stats.wi_loops, 3, "x, y and z loops");
+        verify(&w.loop_fn).unwrap();
+    }
+
+    #[test]
+    fn barrier_kernel_two_nests() {
+        let w = wg(
+            "__kernel void k(__global float *x, __local float *t) {
+                 size_t i = get_local_id(0);
+                 t[i] = x[i];
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[i] = t[0] + (float)i;
+             }",
+            [16, 1, 1],
+        );
+        assert_eq!(w.stats.regions, 2);
+        assert_eq!(w.stats.wi_loops, 2);
+        // `i` crosses the barrier → context array of 16 u64s.
+        let islot = w.loop_fn.slots.iter().find(|s| s.name == "i").unwrap();
+        assert!(islot.privatized);
+        assert_eq!(islot.count, 16);
+        verify(&w.loop_fn).unwrap();
+    }
+
+    #[test]
+    fn conditional_barrier_peels() {
+        let w = wg(
+            "__kernel void k(__global float *x, int c) {
+                 if (c > 0) { barrier(CLK_LOCAL_MEM_FENCE); x[get_local_id(0)] = 1.0f; }
+                 x[0] = 2.0f;
+             }",
+            [4, 1, 1],
+        );
+        assert!(w.stats.peeled_barriers >= 1, "{:?}", w.stats);
+        assert!(w.stats.taildup_barriers >= 1);
+        verify(&w.loop_fn).unwrap();
+        assert_eq!(barrier_count(&w.loop_fn), 0);
+    }
+
+    #[test]
+    fn dct_like_horizontal_parallelization() {
+        let w = wg(
+            "__kernel void dctish(__global float *out, __global float *in, uint blockWidth) {
+                 uint i = (uint)get_local_id(0);
+                 float acc = 0.0f;
+                 for (uint k = 0u; k < blockWidth; k++) {
+                     acc += in[k * blockWidth + i];
+                 }
+                 out[i] = acc;
+             }",
+            [8, 1, 1],
+        );
+        assert_eq!(w.stats.horizontal_loops, 1);
+        // acc crosses regions now → context array.
+        let acc = w.loop_fn.slots.iter().find(|s| s.name == "acc").unwrap();
+        assert!(acc.privatized, "horizontal parallelisation privatises the accumulator");
+        verify(&w.loop_fn).unwrap();
+    }
+
+    #[test]
+    fn spmd_mode_skips_materialization() {
+        let opts = CompileOptions { spmd: true, ..Default::default() };
+        let m = compile(VECADD).unwrap();
+        let k = m.kernels.into_iter().next().unwrap();
+        let w = compile_workgroup(&k, [64, 1, 1], &opts).unwrap();
+        assert_eq!(w.stats.wi_loops, 0);
+        assert_eq!(barrier_count(&w.loop_fn), 0);
+    }
+
+    #[test]
+    fn loop_with_barrier_compiles() {
+        let w = wg(
+            "__kernel void k(__global float *x, __local float *t, int n) {
+                 for (int i = 0; i < n; i++) {
+                     t[get_local_id(0)] = x[i];
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                     x[i] = t[0];
+                 }
+             }",
+            [4, 1, 1],
+        );
+        assert!(w.stats.b_loops >= 1);
+        verify(&w.loop_fn).unwrap();
+        assert_eq!(barrier_count(&w.loop_fn), 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Private-variable handling (§4.7): context arrays for region-crossing
+//! variables and uniform-variable merging.
+//!
+//! A slot whose lifetime is contained in a single parallel region stays a
+//! plain per-iteration scalar (Fig. 11's `a`). A slot that is live across
+//! regions (Fig. 11's `b`) is marked `privatized`: the work-item loop
+//! materialiser expands it into a **context array** with one element per
+//! work-item. Uniform, non-accumulating slots are *merged* instead — a
+//! single shared copy (the paper's Loop-Invariant-Code-Motion-like
+//! optimisation), which the engines may store/execute once per gang.
+
+use std::collections::HashSet;
+
+use crate::ir::func::Function;
+use crate::ir::inst::{Inst, Operand, SlotId};
+
+use super::regions::Region;
+use super::uniformity::Uniformity;
+
+/// Statistics for reporting/tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrivatizeStats {
+    /// Slots expanded into context arrays.
+    pub privatized: usize,
+    /// Slots merged as shared uniform values.
+    pub merged_uniform: usize,
+    /// Slots left as region-local scalars.
+    pub region_local: usize,
+}
+
+/// Classify every slot of `f`, setting `privatized`/`uniform` flags.
+pub fn run(f: &mut Function, regions: &[Region], u: &Uniformity) -> PrivatizeStats {
+    let mut stats = PrivatizeStats::default();
+    let nslots = f.slots.len();
+    // Which regions touch each slot?
+    let mut touched: Vec<HashSet<usize>> = vec![HashSet::new(); nslots];
+    for r in regions {
+        for &b in &r.blocks {
+            for (_, inst) in &f.block(b).insts {
+                for op in inst.operands() {
+                    if let Operand::Slot(s) = op {
+                        touched[s.0 as usize].insert(r.id);
+                    }
+                }
+                // Gep bases are covered by operands(); nothing else
+                // references slots.
+                let _ = inst;
+            }
+        }
+    }
+    for (i, slot) in f.slots.iter_mut().enumerate() {
+        let uniform = u.uniform_slots[i] && !u.accumulating_slots[i];
+        if uniform {
+            slot.uniform = true;
+            stats.merged_uniform += 1;
+            continue;
+        }
+        if touched[i].len() > 1 {
+            slot.privatized = true;
+            stats.privatized += 1;
+        } else {
+            stats.region_local += 1;
+        }
+    }
+    stats
+}
+
+/// Test helper: names of privatized slots.
+pub fn privatized_names(f: &Function) -> Vec<&str> {
+    f.slots.iter().filter(|s| s.privatized).map(|s| s.name.as_str()).collect()
+}
+
+/// Test helper: verify no instruction references an out-of-range slot after
+/// context-array expansion (paranoia check used by the pipeline).
+pub fn check_slot_refs(f: &Function) -> Result<(), String> {
+    for b in f.block_ids() {
+        for (_, inst) in &f.block(b).insts {
+            for op in inst.operands() {
+                if let Operand::Slot(s) = op {
+                    if s.0 as usize >= f.slots.len() {
+                        return Err(format!("slot {} out of range", s.0));
+                    }
+                }
+            }
+            let _ = inst;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+    use crate::kcc::barriers::normalize;
+    use crate::kcc::regions::form_regions;
+    use crate::kcc::uniformity::analyze;
+
+    fn classify(src: &str) -> Function {
+        let m = compile(src).unwrap();
+        let mut f = m.kernels.into_iter().next().unwrap();
+        let u = analyze(&f); // uniformity on the pre-normalized body
+        normalize(&mut f).unwrap();
+        crate::kcc::taildup::run(&mut f).unwrap();
+        let (regions, _) = form_regions(&f);
+        run(&mut f, &regions, &u);
+        f
+    }
+
+    #[test]
+    fn fig11_lifespans() {
+        // Variable a: used only before the barrier. Variable b: crosses it.
+        let f = classify(
+            "__kernel void k(__global float *x, __global float *y) {
+                 size_t i = get_global_id(0);
+                 float a = x[i] * 2.0f;
+                 float b = x[i] + a;
+                 x[i] = a;
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 y[i] = b;
+             }",
+        );
+        let a = f.slots.iter().find(|s| s.name == "a").unwrap();
+        let b = f.slots.iter().find(|s| s.name == "b").unwrap();
+        assert!(!a.privatized, "a is region-local (Fig. 11)");
+        assert!(b.privatized, "b crosses the barrier (Fig. 11)");
+        // i crosses the barrier too and is divergent.
+        let i = f.slots.iter().find(|s| s.name == "i").unwrap();
+        assert!(i.privatized);
+    }
+
+    #[test]
+    fn uniform_values_are_merged_not_privatized() {
+        let f = classify(
+            "__kernel void k(__global float *x, uint w) {
+                 uint lim = w * 2u;
+                 x[get_local_id(0)] = (float)lim;
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[get_local_id(0) + 1u] = (float)lim;
+             }",
+        );
+        let lim = f.slots.iter().find(|s| s.name == "lim").unwrap();
+        assert!(lim.uniform, "uniform value shared across regions is merged");
+        assert!(!lim.privatized);
+    }
+
+    #[test]
+    fn kernel_without_barriers_has_no_context_arrays() {
+        let f = classify(
+            "__kernel void k(__global float *x) {
+                 size_t i = get_global_id(0);
+                 float t = x[i] * 2.0f;
+                 x[i] = t;
+             }",
+        );
+        assert!(privatized_names(&f).is_empty());
+    }
+}

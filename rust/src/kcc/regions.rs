@@ -1,0 +1,205 @@
+//! Parallel region formation (§4.3, Algorithm 1).
+//!
+//! A **parallel region** is the single-entry single-exit sub-CFG between a
+//! barrier and one of its immediate successor barriers. All work-items
+//! execute a region to completion (in any relative order) before any
+//! work-item proceeds past the region's closing barrier.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::func::Function;
+use crate::ir::inst::BlockId;
+
+use super::barriers::{barrier_graph, BarrierGraph};
+
+/// One parallel region.
+#[derive(Debug, Clone)]
+pub struct Region {
+    /// Region index (discovery order from the entry barrier).
+    pub id: usize,
+    /// The barrier block the region starts after.
+    pub pre: BlockId,
+    /// The barrier block the region ends at.
+    pub post: BlockId,
+    /// Non-barrier blocks strictly between `pre` and `post`, sorted.
+    /// May be empty (two adjacent barriers).
+    pub blocks: Vec<BlockId>,
+    /// True if `pre → post` is realised through a CFG back edge (the
+    /// latch-side region of a b-loop, §4.5).
+    pub via_back_edge: bool,
+    /// True if `pre` has several immediate successor barriers, i.e. the
+    /// peeling transformation (§4.4, Fig. 7) applies when materialising
+    /// work-item loops.
+    pub needs_peeling: bool,
+}
+
+impl Region {
+    /// True if `b` is one of the region's body blocks.
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.blocks.binary_search(&b).is_ok()
+    }
+}
+
+/// Form all parallel regions of a normalised (barrier-isolated) function.
+pub fn form_regions(f: &Function) -> (Vec<Region>, BarrierGraph) {
+    let g = barrier_graph(f);
+    let barrier_set: HashSet<BlockId> = g.nodes.iter().copied().collect();
+    let mut regions = Vec::new();
+    let mut succ_count: HashMap<BlockId, usize> = HashMap::new();
+    for (s, _) in g.all_edges() {
+        *succ_count.entry(s).or_insert(0) += 1;
+    }
+    for (pre, post) in g.all_edges() {
+        let blocks = region_blocks(f, &barrier_set, pre, post);
+        let via_back_edge = g.back_edges.contains(&(pre, post));
+        regions.push(Region {
+            id: regions.len(),
+            pre,
+            post,
+            blocks,
+            via_back_edge,
+            needs_peeling: succ_count[&pre] > 1,
+        });
+    }
+    (regions, g)
+}
+
+/// Blocks on barrier-free paths from `pre` to `post`: forward-reachable
+/// from `pre` without crossing another barrier, intersected with
+/// backward-reachable from `post` likewise.
+pub fn region_blocks(
+    f: &Function,
+    barrier_set: &HashSet<BlockId>,
+    pre: BlockId,
+    post: BlockId,
+) -> Vec<BlockId> {
+    let mut fwd = HashSet::new();
+    let mut stack: Vec<BlockId> = f.succs(pre);
+    while let Some(b) = stack.pop() {
+        if barrier_set.contains(&b) || !fwd.insert(b) {
+            continue;
+        }
+        for s in f.succs(b) {
+            stack.push(s);
+        }
+    }
+    let preds = f.preds();
+    let mut bwd = HashSet::new();
+    let mut stack: Vec<BlockId> = preds[post.0 as usize].clone();
+    while let Some(b) = stack.pop() {
+        if barrier_set.contains(&b) || !bwd.insert(b) {
+            continue;
+        }
+        for &p in &preds[b.0 as usize] {
+            stack.push(p);
+        }
+    }
+    let mut out: Vec<BlockId> = fwd.intersection(&bwd).copied().collect();
+    out.sort();
+    out
+}
+
+/// Region invariant checks used by tests and (in debug builds) the pass
+/// pipeline: regions contain no barriers and flow only into their own
+/// blocks, their closing barrier, or sibling regions of the same `pre`
+/// (shared prefixes before a barrier-selecting branch).
+pub fn check_regions(f: &Function, regions: &[Region]) -> Result<(), String> {
+    for r in regions {
+        for &b in &r.blocks {
+            if f.block(b).has_barrier() {
+                return Err(format!("region {} contains barrier block {}", r.id, b.0));
+            }
+        }
+        let siblings: HashSet<BlockId> = regions
+            .iter()
+            .filter(|s| s.pre == r.pre)
+            .flat_map(|s| s.blocks.iter().copied().chain(std::iter::once(s.post)))
+            .collect();
+        for &b in &r.blocks {
+            for s in f.succs(b) {
+                if !r.contains(s) && s != r.post && !siblings.contains(&s) {
+                    return Err(format!(
+                        "region {} block {} escapes to block {} (not post/sibling)",
+                        r.id, b.0, s.0
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+    use crate::kcc::barriers::normalize;
+
+    fn regions_of(src: &str) -> (Function, Vec<Region>) {
+        let m = compile(src).unwrap();
+        let mut f = m.kernels.into_iter().next().unwrap();
+        normalize(&mut f).unwrap();
+        let (regions, _) = form_regions(&f);
+        check_regions(&f, &regions).unwrap();
+        (f, regions)
+    }
+
+    #[test]
+    fn kernel_without_barriers_is_one_region() {
+        let (_, regions) =
+            regions_of("__kernel void k(__global float *x) { x[get_global_id(0)] = 1.0f; }");
+        assert_eq!(regions.len(), 1);
+        assert!(!regions[0].needs_peeling);
+        assert!(!regions[0].via_back_edge);
+        assert!(!regions[0].blocks.is_empty());
+    }
+
+    #[test]
+    fn unconditional_barrier_creates_two_regions() {
+        let (_, regions) = regions_of(
+            "__kernel void k(__global float *x, __local float *t) {
+                 size_t i = get_local_id(0);
+                 t[i] = x[i];
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[i] = t[0];
+             }",
+        );
+        assert_eq!(regions.len(), 2, "Fig. 4(b): one region per side of the barrier");
+    }
+
+    #[test]
+    fn barrier_loop_has_back_edge_region() {
+        let (_, regions) = regions_of(
+            "__kernel void k(__global float *x, int n) {
+                 for (int i = 0; i < n; i++) {
+                     x[i] += 1.0f;
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                 }
+             }",
+        );
+        assert!(regions.iter().any(|r| r.via_back_edge), "latch-side region exists");
+    }
+
+    #[test]
+    fn conditional_barrier_regions_need_peeling() {
+        let (_, regions) = regions_of(
+            "__kernel void k(__global float *x, int c) {
+                 if (c > 0) { barrier(CLK_LOCAL_MEM_FENCE); x[0] = 1.0f; }
+                 x[1] = 2.0f;
+             }",
+        );
+        assert!(regions.iter().any(|r| r.needs_peeling));
+    }
+
+    #[test]
+    fn adjacent_barriers_make_empty_region() {
+        let (_, regions) = regions_of(
+            "__kernel void k(__global float *x) {
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[0] = 1.0f;
+             }",
+        );
+        assert!(regions.iter().any(|r| r.blocks.len() <= 1));
+    }
+}

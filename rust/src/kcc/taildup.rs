@@ -1,0 +1,231 @@
+//! Tail duplication for conditional barriers (§4.4, Algorithm 2).
+//!
+//! Transforms the CFG so that every barrier has **at most one immediate
+//! predecessor barrier** in the (back-edge-free) barrier DAG, which makes
+//! single-entry single-exit parallel region formation unambiguous
+//! (Proposition 1 guarantees the trigger exists whenever a conditional
+//! barrier does).
+//!
+//! Implementation: while some barrier `u` has ≥2 immediate predecessor
+//! barriers, replicate `u`'s *tail* — the sub-CFG forward-reachable from
+//! `u` without following CFG back edges — once per extra predecessor, and
+//! redirect that predecessor's paths into the copy. Back edges inside the
+//! replicated set keep pointing at the original loop headers, which
+//! preserves loop semantics (both copies iterate the same loop).
+
+use std::collections::HashSet;
+
+use crate::cl::error::{Error, Result};
+use crate::ir::cfg::replicate_cfg;
+use crate::ir::dom::DomTree;
+use crate::ir::func::Function;
+use crate::ir::inst::BlockId;
+
+use super::barriers::barrier_graph;
+
+
+/// Statistics returned by the pass (consumed by `CompileStats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TailDupStats {
+    /// Number of barrier nodes that triggered duplication.
+    pub barriers_split: usize,
+    /// Total blocks created by replication.
+    pub blocks_duplicated: usize,
+}
+
+/// Run tail duplication until every barrier has ≤1 immediate predecessor
+/// barrier. Returns statistics.
+///
+/// When a barrier `u` has several immediate predecessor barriers, one of
+/// them — the one dominating `u`, if any — keeps the original tail; every
+/// other predecessor `p` is a *conditional* path into `u`, and the whole
+/// tail starting **at `p`** is replicated for it (Algorithm 2 duplicates
+/// from the conditional barrier to the exit). Edges entering `p` are
+/// redirected into the copy; the copy's back edges keep pointing at the
+/// original loop headers.
+pub fn run(f: &mut Function) -> Result<TailDupStats> {
+    let mut stats = TailDupStats::default();
+    // Each iteration fixes one violating barrier. Cap generously to catch
+    // non-termination bugs rather than hanging.
+    for _ in 0..1024 {
+        let g = barrier_graph(f);
+        let Some(&u) = g.nodes.iter().find(|&&n| g.imm_preds(n).len() > 1) else {
+            return Ok(stats);
+        };
+        let preds = g.imm_preds(u);
+        stats.barriers_split += 1;
+
+        let dom = DomTree::compute(f);
+        // The dominating predecessor (the unconditional path) keeps the
+        // original blocks; ties broken by taking the first.
+        let keep = preds.iter().copied().find(|&p| dom.dominates(p, u)).unwrap_or(preds[0]);
+        for &p in preds.iter().filter(|&&p| p != keep) {
+            // Replicate everything forward-reachable from p (p included).
+            let tail = forward_tail(f, &dom, p);
+            let map = replicate_cfg(f, &tail);
+            stats.blocks_duplicated += map.len();
+            // Redirect edges into p from outside the tail.
+            let tail_set: HashSet<BlockId> = tail.iter().copied().collect();
+            let cfg_preds = f.preds();
+            let redirect: Vec<BlockId> = cfg_preds[p.0 as usize]
+                .iter()
+                .copied()
+                .filter(|pb| !tail_set.contains(pb))
+                .collect();
+            if redirect.is_empty() {
+                return Err(Error::compile(format!(
+                    "tail duplication: conditional barrier {} has no external edge",
+                    p.0
+                )));
+            }
+            let new_p = map[&p];
+            for rb in redirect {
+                let mut term = f.block(rb).term.clone();
+                term.map_succs(|s| if s == p { new_p } else { s });
+                f.block_mut(rb).term = term;
+            }
+        }
+    }
+    Err(Error::compile("tail duplication did not converge in 1024 iterations"))
+}
+
+/// Sub-CFG forward-reachable from `from`, never following back edges
+/// (computed via dominance: an edge b→s with s dominating b is a back
+/// edge). Includes `from` itself.
+fn forward_tail(f: &Function, dom: &DomTree, from: BlockId) -> Vec<BlockId> {
+    let mut out = HashSet::new();
+    let mut stack = vec![from];
+    while let Some(b) = stack.pop() {
+        if !out.insert(b) {
+            continue;
+        }
+        for s in f.succs(b) {
+            if dom.is_reachable(s) && dom.dominates(s, b) {
+                continue; // back edge
+            }
+            stack.push(s);
+        }
+    }
+    let mut v: Vec<BlockId> = out.into_iter().collect();
+    v.sort();
+    v
+}
+
+/// The property the pass establishes; exposed for tests and the pipeline's
+/// debug assertions.
+pub fn max_imm_preds(f: &Function) -> usize {
+    let g = barrier_graph(f);
+    g.nodes.iter().map(|&n| g.imm_preds(n).len()).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+    use crate::ir::verify::verify;
+    use crate::kcc::barriers::normalize;
+    use crate::kcc::regions::{check_regions, form_regions};
+
+    fn prepare(src: &str) -> Function {
+        let m = compile(src).unwrap();
+        let mut f = m.kernels.into_iter().next().unwrap();
+        normalize(&mut f).unwrap();
+        f
+    }
+
+    #[test]
+    fn no_op_without_conditional_barriers() {
+        let mut f = prepare(
+            "__kernel void k(__global float *x) {
+                 x[0] = 1.0f;
+                 barrier(CLK_LOCAL_MEM_FENCE);
+                 x[1] = 2.0f;
+             }",
+        );
+        let stats = run(&mut f).unwrap();
+        assert_eq!(stats.barriers_split, 0);
+    }
+
+    #[test]
+    fn conditional_barrier_gets_unique_preds() {
+        let mut f = prepare(
+            "__kernel void k(__global float *x, int c) {
+                 if (c > 0) { barrier(CLK_LOCAL_MEM_FENCE); x[0] = 1.0f; }
+                 x[1] = 2.0f;
+             }",
+        );
+        assert!(max_imm_preds(&f) > 1, "precondition: violation exists");
+        let stats = run(&mut f).unwrap();
+        verify(&f).unwrap();
+        assert!(stats.barriers_split >= 1);
+        assert!(max_imm_preds(&f) <= 1, "property established");
+        let (regions, _) = form_regions(&f);
+        check_regions(&f, &regions).unwrap();
+    }
+
+    #[test]
+    fn nested_conditional_barriers() {
+        let mut f = prepare(
+            "__kernel void k(__global float *x, int c, int d) {
+                 if (c > 0) {
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                     if (d > 0) { barrier(CLK_LOCAL_MEM_FENCE); x[0] = 1.0f; }
+                 }
+                 barrier(CLK_GLOBAL_MEM_FENCE);
+                 x[1] = 2.0f;
+             }",
+        );
+        run(&mut f).unwrap();
+        verify(&f).unwrap();
+        assert!(max_imm_preds(&f) <= 1);
+        let (regions, _) = form_regions(&f);
+        check_regions(&f, &regions).unwrap();
+    }
+
+    #[test]
+    fn if_else_with_barriers_on_both_sides() {
+        let mut f = prepare(
+            "__kernel void k(__global float *x, int c) {
+                 if (c > 0) { x[0] = 1.0f; barrier(CLK_LOCAL_MEM_FENCE); x[1] = 1.0f; }
+                 else { x[2] = 2.0f; barrier(CLK_LOCAL_MEM_FENCE); x[3] = 2.0f; }
+                 x[4] = 3.0f;
+             }",
+        );
+        run(&mut f).unwrap();
+        verify(&f).unwrap();
+        assert!(max_imm_preds(&f) <= 1);
+    }
+
+    #[test]
+    fn barrier_in_loop_stays_intact() {
+        let mut f = prepare(
+            "__kernel void k(__global float *x, int n) {
+                 for (int i = 0; i < n; i++) {
+                     x[i] += 1.0f;
+                     barrier(CLK_LOCAL_MEM_FENCE);
+                 }
+                 x[0] = 0.0f;
+             }",
+        );
+        run(&mut f).unwrap();
+        verify(&f).unwrap();
+        assert!(max_imm_preds(&f) <= 1);
+        // The loop must still exist.
+        assert!(!crate::ir::loops::find_loops(&f).is_empty());
+    }
+
+    #[test]
+    fn conditional_barrier_inside_loop() {
+        let mut f = prepare(
+            "__kernel void k(__global float *x, int n, int c) {
+                 for (int i = 0; i < n; i++) {
+                     if (c > 0) { barrier(CLK_LOCAL_MEM_FENCE); }
+                     x[i] += 1.0f;
+                 }
+             }",
+        );
+        run(&mut f).unwrap();
+        verify(&f).unwrap();
+        assert!(max_imm_preds(&f) <= 1);
+    }
+}

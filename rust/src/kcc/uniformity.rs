@@ -1,0 +1,487 @@
+//! Variable uniformity and divergence analysis (§4.6).
+//!
+//! A value is **uniform** when it is provably identical for every work-item
+//! in the work-group: constants and kernel arguments are uniform roots;
+//! work-item ids are divergent roots; everything else propagates. A slot
+//! (private variable) is uniform when every store to it stores a uniform
+//! value at a uniform address from a control-uniform block.
+//!
+//! The analysis additionally reports **accumulating** slots (read-modify-
+//! written, e.g. loop induction variables): those must be replicated per
+//! work-item even when their values are uniform, because a merged copy
+//! would be updated once per work-item in the work-item loop (§4.5 notes
+//! the same per-target tradeoff).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::cfg::{create_subgraph, reachable};
+use crate::ir::func::Function;
+use crate::ir::inst::{BlockId, Inst, Operand, Reg, SlotId, Term, WiFn};
+
+/// Result of the analysis.
+#[derive(Debug, Clone)]
+pub struct Uniformity {
+    /// Per-slot: all stores uniform (value + address + control).
+    pub uniform_slots: Vec<bool>,
+    /// Per-slot: some block loads the slot before storing it (read-modify-
+    /// write), so per-WI replication is required regardless of uniformity.
+    pub accumulating_slots: Vec<bool>,
+    /// Blocks under divergent control (between a divergent branch and its
+    /// reconvergence point).
+    pub divergent_blocks: HashSet<BlockId>,
+}
+
+impl Uniformity {
+    /// True if the branch condition terminating `b` is uniform.
+    pub fn uniform_branch(&self, f: &Function, b: BlockId) -> bool {
+        match &f.block(b).term {
+            Term::Br { cond, .. } => {
+                let regs = block_value_kinds(f, b, &self.uniform_slots);
+                operand_uniform(cond, &regs)
+            }
+            _ => true,
+        }
+    }
+}
+
+/// What we know about a register inside one block.
+#[derive(Debug, Clone, Copy)]
+enum Kind {
+    /// Plain value; `true` = uniform.
+    Val(bool),
+    /// Pointer with a root (None = global/local/constant memory) and
+    /// whether the address computation is uniform.
+    Ptr { root: Option<SlotId>, addr_uniform: bool },
+}
+
+impl Kind {
+    fn uniform(&self) -> bool {
+        match self {
+            Kind::Val(u) => *u,
+            Kind::Ptr { addr_uniform, .. } => *addr_uniform,
+        }
+    }
+}
+
+/// Run the analysis to fixpoint.
+pub fn analyze(f: &Function) -> Uniformity {
+    let nslots = f.slots.len();
+    let mut u = Uniformity {
+        uniform_slots: vec![true; nslots],
+        accumulating_slots: accumulating(f),
+        divergent_blocks: HashSet::new(),
+    };
+    for _ in 0..(nslots + 2) {
+        // 1. Divergent blocks from divergent branches, under the current
+        //    slot assumption.
+        u.divergent_blocks = divergent_blocks(f, &u.uniform_slots);
+        // 2. Demote slots with non-uniform stores.
+        let mut changed = false;
+        for b in reachable(f) {
+            let regs = block_value_kinds(f, b, &u.uniform_slots);
+            let divergent_block = u.divergent_blocks.contains(&b);
+            for (_, inst) in &f.block(b).insts {
+                if let Inst::Store { ptr, val, .. } = inst {
+                    let root = match ptr {
+                        Operand::Slot(s) => Some(*s),
+                        Operand::Reg(r) => match regs.get(r) {
+                            Some(Kind::Ptr { root, .. }) => *root,
+                            _ => None,
+                        },
+                        _ => None,
+                    };
+                    let Some(slot) = root else { continue };
+                    if !u.uniform_slots[slot.0 as usize] {
+                        continue;
+                    }
+                    let val_u = operand_uniform(val, &regs);
+                    let addr_u = match ptr {
+                        Operand::Slot(_) => true,
+                        Operand::Reg(r) => regs.get(r).map(|k| k.uniform()).unwrap_or(false),
+                        _ => true,
+                    };
+                    if divergent_block || !val_u || !addr_u {
+                        u.uniform_slots[slot.0 as usize] = false;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    u
+}
+
+/// Slots that are loaded before being stored within a single block chain —
+/// the read-modify-write pattern (`i = i + 1`, `acc += ...`).
+fn accumulating(f: &Function) -> Vec<bool> {
+    let mut acc = vec![false; f.slots.len()];
+    for b in f.block_ids() {
+        // Track which regs carry a loaded slot value within this block.
+        let mut loaded_from: HashMap<Reg, SlotId> = HashMap::new();
+        let mut tainted: HashMap<Reg, HashSet<SlotId>> = HashMap::new();
+        for (def, inst) in &f.block(b).insts {
+            // Propagate taint: result depends on loads of which slots?
+            let mut deps: HashSet<SlotId> = HashSet::new();
+            for op in inst.operands() {
+                if let Operand::Reg(r) = op {
+                    if let Some(s) = loaded_from.get(&r) {
+                        deps.insert(*s);
+                    }
+                    if let Some(t) = tainted.get(&r) {
+                        deps.extend(t.iter().copied());
+                    }
+                }
+            }
+            if let Inst::Load { ptr, .. } = inst {
+                if let Operand::Slot(s) = ptr {
+                    if let Some(d) = def {
+                        loaded_from.insert(*d, *s);
+                    }
+                }
+            }
+            if let Inst::Store { ptr: Operand::Slot(s), val, .. } = inst {
+                let mut val_deps = HashSet::new();
+                if let Operand::Reg(r) = val {
+                    if let Some(src) = loaded_from.get(r) {
+                        val_deps.insert(*src);
+                    }
+                    if let Some(t) = tainted.get(r) {
+                        val_deps.extend(t.iter().copied());
+                    }
+                }
+                if val_deps.contains(s) {
+                    acc[s.0 as usize] = true;
+                }
+            }
+            if let Some(d) = def {
+                tainted.insert(*d, deps);
+            }
+        }
+    }
+    acc
+}
+
+/// Per-block register classification under a slot-uniformity assumption.
+fn block_value_kinds(f: &Function, b: BlockId, uniform_slots: &[bool]) -> HashMap<Reg, Kind> {
+    let mut kinds: HashMap<Reg, Kind> = HashMap::new();
+    for (def, inst) in &f.block(b).insts {
+        let Some(d) = def else { continue };
+        let k = match inst {
+            Inst::Wi { func, .. } => Kind::Val(matches!(
+                func,
+                WiFn::GroupId
+                    | WiFn::LocalSize
+                    | WiFn::GlobalSize
+                    | WiFn::NumGroups
+                    | WiFn::WorkDim
+                    | WiFn::GlobalOffset
+            )),
+            Inst::Load { ptr, .. } => match ptr {
+                Operand::Slot(s) => Kind::Val(uniform_slots[s.0 as usize]),
+                Operand::Reg(r) => match kinds.get(r) {
+                    Some(Kind::Ptr { root: Some(s), addr_uniform }) => {
+                        Kind::Val(*addr_uniform && uniform_slots[s.0 as usize])
+                    }
+                    // Loads from global/local memory are conservatively
+                    // divergent (another work-item may have stored there).
+                    _ => Kind::Val(false),
+                },
+                Operand::Arg(_) => Kind::Val(false),
+                Operand::Imm(_) => Kind::Val(false),
+            },
+            Inst::Gep { base, idx, .. } => {
+                let idx_u = operand_uniform(idx, &kinds);
+                match base {
+                    Operand::Slot(s) => Kind::Ptr { root: Some(*s), addr_uniform: idx_u },
+                    Operand::Arg(_) => Kind::Ptr { root: None, addr_uniform: idx_u },
+                    Operand::Reg(r) => match kinds.get(r) {
+                        Some(Kind::Ptr { root, addr_uniform }) => {
+                            Kind::Ptr { root: *root, addr_uniform: *addr_uniform && idx_u }
+                        }
+                        _ => Kind::Ptr { root: None, addr_uniform: false },
+                    },
+                    Operand::Imm(_) => Kind::Ptr { root: None, addr_uniform: idx_u },
+                }
+            }
+            _ => {
+                let all = inst.operands().iter().all(|op| operand_uniform(op, &kinds));
+                Kind::Val(all)
+            }
+        };
+        kinds.insert(*d, k);
+    }
+    kinds
+}
+
+fn operand_uniform(op: &Operand, kinds: &HashMap<Reg, Kind>) -> bool {
+    match op {
+        Operand::Imm(_) | Operand::Arg(_) | Operand::Slot(_) => true,
+        Operand::Reg(r) => kinds.get(r).map(|k| k.uniform()).unwrap_or(false),
+    }
+}
+
+/// Blocks strictly between each divergent branch and its immediate
+/// postdominator (the reconvergence point).
+fn divergent_blocks(f: &Function, uniform_slots: &[bool]) -> HashSet<BlockId> {
+    let ipdom = ipostdoms(f);
+    let mut out = HashSet::new();
+    for b in reachable(f) {
+        let Term::Br { cond, .. } = &f.block(b).term else { continue };
+        let kinds = block_value_kinds(f, b, uniform_slots);
+        if operand_uniform(cond, &kinds) {
+            continue;
+        }
+        match ipdom.get(&b) {
+            Some(Some(j)) => {
+                for n in create_subgraph(f, b, *j) {
+                    if n != b && n != *j {
+                        out.insert(n);
+                    }
+                }
+            }
+            _ => {
+                // No reconvergence point: everything reachable from b
+                // (except b) is divergent-controlled.
+                let mut stack = f.succs(b);
+                while let Some(n) = stack.pop() {
+                    if out.insert(n) {
+                        stack.extend(f.succs(n));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Immediate postdominators via the CHK algorithm on the reversed CFG with
+/// a virtual exit. Returns `None` for blocks whose only postdominator is
+/// the virtual exit.
+pub fn ipostdoms(f: &Function) -> HashMap<BlockId, Option<BlockId>> {
+    let blocks = reachable(f);
+    let n = blocks.len();
+    let index: HashMap<BlockId, usize> = blocks.iter().enumerate().map(|(i, &b)| (b, i)).collect();
+    // Reversed graph: node n = virtual exit; succs_rev(virtual) = exits;
+    // succs_rev(b) = preds(b); preds_rev(b) = succs(b) (+virtual for exits).
+    let exits: Vec<usize> =
+        f.exit_blocks().iter().filter_map(|b| index.get(b).copied()).collect();
+    let preds_cfg = f.preds();
+    // Post-order of reversed graph from virtual exit.
+    let mut post: Vec<usize> = Vec::new();
+    let mut seen = vec![false; n + 1];
+    let mut stack: Vec<(usize, usize)> = vec![(n, 0)];
+    seen[n] = true;
+    let rev_succs = |v: usize| -> Vec<usize> {
+        if v == n {
+            exits.clone()
+        } else {
+            preds_cfg[blocks[v].0 as usize]
+                .iter()
+                .filter_map(|p| index.get(p).copied())
+                .collect()
+        }
+    };
+    while let Some(&mut (v, ref mut i)) = stack.last_mut() {
+        let succs = rev_succs(v);
+        if *i < succs.len() {
+            let s = succs[*i];
+            *i += 1;
+            if !seen[s] {
+                seen[s] = true;
+                stack.push((s, 0));
+            }
+        } else {
+            post.push(v);
+            stack.pop();
+        }
+    }
+    let rpo: Vec<usize> = post.iter().rev().copied().collect();
+    let rpo_idx: HashMap<usize, usize> = rpo.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+    let mut idom: Vec<Option<usize>> = vec![None; n + 1];
+    idom[n] = Some(n);
+    let preds_rev = |v: usize| -> Vec<usize> {
+        // predecessors in reversed graph = successors in CFG, plus the
+        // virtual node for exit blocks.
+        let mut out: Vec<usize> = f
+            .succs(blocks[v])
+            .iter()
+            .filter_map(|s| index.get(s).copied())
+            .collect();
+        if exits.contains(&v) {
+            out.push(n);
+        }
+        out
+    };
+    let intersect = |idom: &Vec<Option<usize>>, mut a: usize, mut b: usize| -> usize {
+        while a != b {
+            while rpo_idx[&a] > rpo_idx[&b] {
+                a = idom[a].unwrap();
+            }
+            while rpo_idx[&b] > rpo_idx[&a] {
+                b = idom[b].unwrap();
+            }
+        }
+        a
+    };
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &v in rpo.iter().skip(1) {
+            let mut new: Option<usize> = None;
+            for p in preds_rev(v) {
+                if !rpo_idx.contains_key(&p) {
+                    continue;
+                }
+                if idom[p].is_some() {
+                    new = Some(match new {
+                        None => p,
+                        Some(cur) => intersect(&idom, p, cur),
+                    });
+                }
+            }
+            if let Some(ni) = new {
+                if idom[v] != Some(ni) {
+                    idom[v] = Some(ni);
+                    changed = true;
+                }
+            }
+        }
+    }
+    let mut out = HashMap::new();
+    for (i, &b) in blocks.iter().enumerate() {
+        out.insert(
+            b,
+            match idom[i] {
+                Some(p) if p < n => Some(blocks[p]),
+                _ => None,
+            },
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::compile;
+
+    fn analyzed(src: &str) -> (Function, Uniformity) {
+        let m = compile(src).unwrap();
+        let f = m.kernels.into_iter().next().unwrap();
+        let u = analyze(&f);
+        (f, u)
+    }
+
+    fn slot_named(f: &Function, name: &str) -> usize {
+        f.slots.iter().position(|s| s.name == name).unwrap()
+    }
+
+    #[test]
+    fn kernel_args_are_uniform_roots() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x, uint w) {
+                 uint lim = w * 2u;
+                 x[get_global_id(0)] = (float)lim;
+             }",
+        );
+        assert!(u.uniform_slots[slot_named(&f, "w")]);
+        assert!(u.uniform_slots[slot_named(&f, "lim")]);
+    }
+
+    #[test]
+    fn work_item_ids_are_divergent() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x) {
+                 uint i = (uint)get_global_id(0);
+                 x[i] = 1.0f;
+             }",
+        );
+        assert!(!u.uniform_slots[slot_named(&f, "i")]);
+    }
+
+    #[test]
+    fn divergence_poisons_control_dependent_stores() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x, uint w) {
+                 uint flag = 0u;
+                 if (get_global_id(0) > (size_t)w) { flag = 1u; }
+                 x[0] = (float)flag;
+             }",
+        );
+        assert!(!u.uniform_slots[slot_named(&f, "flag")], "store under divergent control");
+    }
+
+    #[test]
+    fn uniform_branch_does_not_poison() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x, uint w) {
+                 uint flag = 0u;
+                 if (w > 4u) { flag = 1u; }
+                 x[get_global_id(0)] = (float)flag;
+             }",
+        );
+        assert!(u.uniform_slots[slot_named(&f, "flag")]);
+    }
+
+    #[test]
+    fn induction_variable_is_uniform_but_accumulating() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x, int n) {
+                 for (int i = 0; i < n; i++) { x[get_global_id(0)] += 1.0f; }
+             }",
+        );
+        let i = slot_named(&f, "i");
+        assert!(u.uniform_slots[i], "loop bound from arg → uniform induction");
+        assert!(u.accumulating_slots[i], "i = i + 1 is read-modify-write");
+    }
+
+    #[test]
+    fn loads_from_global_memory_are_divergent() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x) {
+                 float v = x[0];
+                 x[1] = v;
+             }",
+        );
+        assert!(!u.uniform_slots[slot_named(&f, "v")]);
+    }
+
+    #[test]
+    fn divergent_blocks_detected() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x) {
+                 if (get_global_id(0) == 0u) { x[0] = 1.0f; }
+                 x[1] = 2.0f;
+             }",
+        );
+        assert!(!u.divergent_blocks.is_empty());
+        // The reconvergence block (storing x[1]) must NOT be divergent.
+        let last_store_block = crate::ir::cfg::reachable(&f)
+            .into_iter()
+            .filter(|b| {
+                f.block(*b)
+                    .insts
+                    .iter()
+                    .any(|(_, i)| matches!(i, Inst::Store { .. }))
+            })
+            .next_back()
+            .unwrap();
+        assert!(!u.divergent_blocks.contains(&last_store_block));
+    }
+
+    #[test]
+    fn postdoms_of_diamond() {
+        let (f, _) = analyzed(
+            "__kernel void k(__global float *x, int c) {
+                 if (c > 0) { x[0] = 1.0f; } else { x[1] = 2.0f; }
+                 x[2] = 3.0f;
+             }",
+        );
+        let ipd = ipostdoms(&f);
+        // Entry's ipostdom is the join (or further) — never None here.
+        assert!(ipd[&f.entry].is_some());
+    }
+}

@@ -1,0 +1,602 @@
+//! Work-item loop materialisation (§4.1/§4.3 Fig. 4, §4.4 Fig. 7).
+//!
+//! Turns the region-formed function into a **work-group function**: each
+//! parallel region is wrapped in (up to three nested) work-item loops with
+//! constant trip counts (the local size is known at enqueue time, §4.1).
+//! The loops are recorded in `Function::wi_loops` — the metadata that later
+//! parallel-mapping stages (the gang executor, the TTA scheduler) consume
+//! without having to re-prove iteration independence.
+//!
+//! Barriers whose region set diverges (conditional barriers after tail
+//! duplication) get the **loop peeling** treatment of Fig. 7: the first
+//! work-item executes a peeled copy of the shared region code; the barrier
+//! it reaches selects which region's work-item loop the remaining
+//! work-items execute, with the barrier-selecting branches removed from the
+//! loop bodies.
+//!
+//! Work-item geometry builtins are rewritten here: `get_local_id` reads the
+//! loop induction slots; group ids / counts / offsets become appended
+//! work-group function parameters (the paper's "additional struct function
+//! argument ... that contains the work-space coordinates").
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cl::error::{Error, Result};
+use crate::ir::cfg::replicate_cfg;
+use crate::ir::func::{Function, Param, WiLoopMeta};
+use crate::ir::inst::{BinOp, BlockId, Imm, Inst, Operand, Reg, SlotId, Term, WiFn};
+use crate::ir::types::{AddrSpace, Scalar, Type};
+
+use super::regions::Region;
+
+/// Number of appended work-group context parameters:
+/// `group_id[3] ++ num_groups[3] ++ global_offset[3]`.
+pub const WG_EXTRA_PARAMS: usize = 9;
+
+/// Index helpers for the appended parameters.
+pub fn wg_param_base(kernel_params: usize) -> usize {
+    kernel_params
+}
+
+/// Statistics for reporting/tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WiLoopStats {
+    /// Loop nests created.
+    pub loops_created: usize,
+    /// Barriers that required peeling.
+    pub peeled: usize,
+    /// Context-array accesses rewritten.
+    pub ctx_rewrites: usize,
+}
+
+/// Materialise work-item loops. `f` must be normalised + tail-duplicated,
+/// with privatisation flags set. `local` is the enqueue-time local size.
+/// Returns the transformed **work-group function** (the input is consumed).
+pub fn materialize(
+    mut f: Function,
+    regions: &[Region],
+    local: [usize; 3],
+    work_dim: u32,
+) -> Result<(Function, WiLoopStats)> {
+    let mut stats = WiLoopStats::default();
+    let kernel_params = f.params.len();
+    // Appended work-group context parameters.
+    for name in ["group_id", "num_groups", "global_offset"] {
+        for d in 0..3 {
+            f.params.push(Param {
+                name: format!("__pocl_{name}_{d}"),
+                ty: Type::U64,
+                is_local_buf: false,
+                auto_local_size: None,
+            });
+        }
+    }
+    // Work-item index slots.
+    let wi: [SlotId; 3] = [
+        f.add_slot("__pocl_wi_0", Type::U64, 1),
+        f.add_slot("__pocl_wi_1", Type::U64, 1),
+        f.add_slot("__pocl_wi_2", Type::U64, 1),
+    ];
+    let total: usize = local.iter().product();
+
+    // Group regions by their opening barrier.
+    let mut by_pre: HashMap<BlockId, Vec<&Region>> = HashMap::new();
+    for r in regions {
+        by_pre.entry(r.pre).or_default().push(r);
+    }
+    let mut pres: Vec<BlockId> = by_pre.keys().copied().collect();
+    pres.sort();
+
+    for pre in pres {
+        let rs = &by_pre[&pre];
+        if total == 1 {
+            // Local size 1: the whole work-group function generation is a
+            // no-op (§4.1/Fig. 3: "or the local size is one, this step is
+            // skipped"); barriers are stripped below.
+            continue;
+        }
+        if rs.len() == 1 && !rs[0].needs_peeling {
+            let r = rs[0];
+            if r.blocks.is_empty() {
+                continue; // adjacent barriers
+            }
+            let entry = single_succ(&f, pre)?;
+            if !r.contains(entry) {
+                return Err(Error::compile(format!(
+                    "region {} entry mismatch at barrier bb{}",
+                    r.id, pre.0
+                )));
+            }
+            let nest = build_loop_nest(&mut f, &wi, local, r.id, false, &mut stats);
+            let blocks = r.blocks.clone();
+            wire_region(&mut f, &wi, local, r.id, pre, entry, &blocks, r.post, &nest);
+        } else {
+            // Peeling (Fig. 7). The union of sibling regions is the shared
+            // code the first work-item executes.
+            stats.peeled += 1;
+            let mut union: Vec<BlockId> = rs.iter().flat_map(|r| r.blocks.iter().copied()).collect();
+            union.sort();
+            union.dedup();
+            if union.is_empty() {
+                continue;
+            }
+            let entry = single_succ(&f, pre)?;
+            // The peeled copy is work-item (0,0,0): reset the wi slots at
+            // the opening barrier (a previous region's loop left them at
+            // the local size).
+            for d in 0..3 {
+                f.block_mut(pre).insts.push((
+                    None,
+                    Inst::Store { ty: Type::U64, ptr: Operand::Slot(wi[d]), val: Operand::cu64(0) },
+                ));
+            }
+            // Peeled copy for work-item 0.
+            let peel_map = replicate_cfg(&mut f, &union);
+            f.set_term(pre, Term::Jump(peel_map[&entry]));
+            // Per sibling region: a work-item loop over a branch-cleaned
+            // copy, entered from the peeled copy's edge into r.post.
+            for r in rs {
+                // The loop body copy.
+                let rc_map = if r.blocks.is_empty() {
+                    HashMap::new()
+                } else {
+                    replicate_cfg(&mut f, &r.blocks)
+                };
+                let rc_set: HashSet<BlockId> = rc_map.values().copied().collect();
+                // Remove barrier-selecting branches: any branch in the copy
+                // with exactly one target inside {copy ∪ post} becomes a
+                // jump to that target.
+                for &cb in rc_map.values() {
+                    if let Term::Br { t, f: fb, .. } = f.block(cb).term.clone() {
+                        let t_ok = rc_set.contains(&t) || t == r.post;
+                        let f_ok = rc_set.contains(&fb) || fb == r.post;
+                        match (t_ok, f_ok) {
+                            (true, false) => f.set_term(cb, Term::Jump(t)),
+                            (false, true) => f.set_term(cb, Term::Jump(fb)),
+                            (true, true) => {}
+                            (false, false) => {
+                                return Err(Error::compile(format!(
+                                    "peeled region {}: block bb{} has no valid successor",
+                                    r.id, cb.0
+                                )))
+                            }
+                        }
+                    }
+                }
+                // Setup block the peeled copy branches to when it reaches
+                // this region's closing barrier.
+                let setup = f.add_block(format!("peel.setup.r{}", r.id));
+                if r.blocks.is_empty() {
+                    f.set_term(setup, Term::Jump(r.post));
+                } else {
+                    let nest = build_loop_nest(&mut f, &wi, local, r.id, true, &mut stats);
+                    let rc_entry = rc_map[&entry];
+                    let rc_blocks: Vec<BlockId> = rc_map.values().copied().collect();
+                    wire_region(&mut f, &wi, local, r.id, setup, rc_entry, &rc_blocks, r.post, &nest);
+                }
+                // Redirect the peeled copy's edges into r.post → setup.
+                for &pb in peel_map.values() {
+                    let mut term = f.block(pb).term.clone();
+                    term.map_succs(|s| if s == r.post { setup } else { s });
+                    f.block_mut(pb).term = term;
+                }
+            }
+        }
+    }
+
+    // Strip barriers (the loop structure now carries their semantics).
+    for b in f.block_ids().collect::<Vec<_>>() {
+        f.block_mut(b).insts.retain(|(_, i)| !i.is_barrier());
+    }
+
+    // Prologue: zero the work-item index slots at function entry.
+    let entry = f.entry;
+    for d in (0..3).rev() {
+        f.block_mut(entry).insts.insert(
+            0,
+            (None, Inst::Store { ty: Type::U64, ptr: Operand::Slot(wi[d]), val: Operand::cu64(0) }),
+        );
+    }
+
+    // Rewrite work-item builtins and privatized slot accesses.
+    rewrite_blocks(&mut f, &wi, local, work_dim, kernel_params, total, &mut stats)?;
+
+    // Expand privatized slots into context arrays.
+    for slot in f.slots.iter_mut() {
+        if slot.privatized {
+            slot.count *= total;
+        }
+    }
+
+    crate::ir::verify::verify(&f)
+        .map_err(|e| Error::Compile(format!("wiloops produced invalid IR: {e}")))?;
+    Ok((f, stats))
+}
+
+fn single_succ(f: &Function, b: BlockId) -> Result<BlockId> {
+    let s = f.succs(b);
+    if s.len() != 1 {
+        return Err(Error::compile(format!("barrier block bb{} has {} successors", b.0, s.len())));
+    }
+    Ok(s[0])
+}
+
+/// One dimension of a loop nest.
+struct NestDim {
+    dim: u32,
+    init: BlockId,
+    header: BlockId,
+    latch: BlockId,
+}
+
+/// The created loop nest: dims ordered outermost→innermost, plus the block
+/// the region body must eventually flow into (innermost latch) and where
+/// the nest exits (filled by `wire_region`).
+struct Nest {
+    dims: Vec<NestDim>,
+}
+
+/// Build init/header/latch blocks for every dimension with size > 1,
+/// z (2) outermost → x (0) innermost. `skip_first` makes the innermost
+/// loop start at 1 when all outer indices are 0 (the peeled iteration).
+fn build_loop_nest(
+    f: &mut Function,
+    wi: &[SlotId; 3],
+    local: [usize; 3],
+    region_id: usize,
+    skip_first: bool,
+    stats: &mut WiLoopStats,
+) -> Nest {
+    let mut dims = Vec::new();
+    for d in [2u32, 1, 0] {
+        if local[d as usize] > 1 {
+            let init = f.add_block(format!("wi.init.r{region_id}.d{d}"));
+            let header = f.add_block(format!("wi.head.r{region_id}.d{d}"));
+            let latch = f.add_block(format!("wi.latch.r{region_id}.d{d}"));
+            dims.push(NestDim { dim: d, init, header, latch });
+        }
+    }
+    // Fill init/latch/header contents.
+    for i in 0..dims.len() {
+        let d = dims[i].dim;
+        let slot = wi[d as usize];
+        let innermost = i + 1 == dims.len();
+        // init: wi_d = 0 (or the skip-first select on the innermost).
+        let init_bb = dims[i].init;
+        let init_val = if skip_first && innermost {
+            // all outer dims zero → start at 1.
+            let mut cond = Operand::cbool(true);
+            for outer in dims.iter().take(i) {
+                let v = f.push_val(
+                    init_bb,
+                    Inst::Load { ty: Type::U64, ptr: Operand::Slot(wi[outer.dim as usize]) },
+                );
+                let z = f.push_val(
+                    init_bb,
+                    Inst::Bin { op: BinOp::Eq, ty: Type::U64, a: Operand::Reg(v), b: Operand::cu64(0) },
+                );
+                cond = if matches!(cond, Operand::Imm(Imm::Int(1, Scalar::Bool))) {
+                    Operand::Reg(z)
+                } else {
+                    Operand::Reg(f.push_val(
+                        init_bb,
+                        Inst::Bin { op: BinOp::LAnd, ty: Type::BOOL, a: cond, b: Operand::Reg(z) },
+                    ))
+                };
+            }
+            let sel = f.push_val(
+                init_bb,
+                Inst::Select { ty: Type::U64, cond, a: Operand::cu64(1), b: Operand::cu64(0) },
+            );
+            Operand::Reg(sel)
+        } else {
+            Operand::cu64(0)
+        };
+        f.block_mut(init_bb)
+            .insts
+            .push((None, Inst::Store { ty: Type::U64, ptr: Operand::Slot(slot), val: init_val }));
+        // latch: wi_d += 1; jump header.
+        let latch_bb = dims[i].latch;
+        let v = f.push_val(latch_bb, Inst::Load { ty: Type::U64, ptr: Operand::Slot(slot) });
+        let v1 = f.push_val(
+            latch_bb,
+            Inst::Bin { op: BinOp::Add, ty: Type::U64, a: Operand::Reg(v), b: Operand::cu64(1) },
+        );
+        f.block_mut(latch_bb).insts.push((
+            None,
+            Inst::Store { ty: Type::U64, ptr: Operand::Slot(slot), val: Operand::Reg(v1) },
+        ));
+        f.set_term(latch_bb, Term::Jump(dims[i].header));
+        stats.loops_created += 1;
+    }
+    Nest { dims }
+}
+
+/// Wire a loop nest around a region: `from` (a barrier or setup block)
+/// jumps into the nest, region exits to `post` are retargeted to the
+/// innermost latch, and headers chain init/latch blocks.
+#[allow(clippy::too_many_arguments)]
+fn wire_region(
+    f: &mut Function,
+    wi: &[SlotId; 3],
+    local: [usize; 3],
+    region_id: usize,
+    from: BlockId,
+    entry: BlockId,
+    region_blocks: &[BlockId],
+    post: BlockId,
+    nest: &Nest,
+) {
+    let n = nest.dims.len();
+    let first = nest.dims.first().map(|d| d.init).unwrap_or(post);
+    f.set_term(from, Term::Jump(first));
+    if n == 0 {
+        return;
+    }
+    // Header conditions and chaining.
+    for i in 0..n {
+        let d = nest.dims[i].dim;
+        let header = nest.dims[i].header;
+        // header: v = load wi_d; c = v < L_d; br c, body, exit
+        let body = if i + 1 < n { nest.dims[i + 1].init } else { entry };
+        let exit = if i == 0 { post } else { nest.dims[i - 1].latch };
+        let v = f.push_val(header, Inst::Load { ty: Type::U64, ptr: Operand::Slot(wi[d as usize]) });
+        let lim = Operand::cu64(local[d as usize] as u64);
+        let c = f.push_val(
+            header,
+            Inst::Bin { op: BinOp::Lt, ty: Type::U64, a: Operand::Reg(v), b: lim },
+        );
+        f.set_term(header, Term::Br { cond: Operand::Reg(c), t: body, f: exit });
+        f.set_term(nest.dims[i].init, Term::Jump(header));
+    }
+    // Region exits → innermost latch.
+    let inner_latch = nest.dims[n - 1].latch;
+    for &b in region_blocks {
+        let mut term = f.block(b).term.clone();
+        term.map_succs(|s| if s == post { inner_latch } else { s });
+        f.block_mut(b).term = term;
+    }
+    // Record the parallel-loop metadata (the §4.1 "annotated using LLVM
+    // metadata" analog).
+    for dim in &nest.dims {
+        f.wi_loops.push(WiLoopMeta {
+            region: region_id,
+            dim: dim.dim,
+            header: dim.header,
+            latch: dim.latch,
+            trip_count: Some(local[dim.dim as usize]),
+            parallel: true,
+        });
+    }
+}
+
+/// Rewrite `Wi` builtins and privatized-slot accesses in every block.
+#[allow(clippy::too_many_arguments)]
+fn rewrite_blocks(
+    f: &mut Function,
+    wi: &[SlotId; 3],
+    local: [usize; 3],
+    work_dim: u32,
+    kernel_params: usize,
+    total: usize,
+    stats: &mut WiLoopStats,
+) -> Result<()> {
+    let base = wg_param_base(kernel_params) as u32;
+    let privatized: Vec<bool> = f.slots.iter().map(|s| s.privatized).collect();
+    let counts: Vec<usize> = f.slots.iter().map(|s| s.count).collect();
+    let _ = total;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let old = std::mem::take(&mut f.block_mut(bb).insts);
+        let mut new: Vec<(Option<Reg>, Inst)> = Vec::with_capacity(old.len());
+        // Cache the flat work-item index per block.
+        let mut flat: Option<Reg> = None;
+        for (def, inst) in old {
+            match inst {
+                Inst::Wi { func, dim } => {
+                    let d = dim.min(2) as usize;
+                    let out = def.expect("Wi defines a value");
+                    match func {
+                        WiFn::LocalId => {
+                            new.push((
+                                Some(out),
+                                Inst::Load { ty: Type::U64, ptr: Operand::Slot(wi[d]) },
+                            ));
+                        }
+                        WiFn::GroupId => new.push((Some(out), identity(Operand::Arg(base + d as u32)))),
+                        WiFn::NumGroups => {
+                            new.push((Some(out), identity(Operand::Arg(base + 3 + d as u32))))
+                        }
+                        WiFn::GlobalOffset => {
+                            new.push((Some(out), identity(Operand::Arg(base + 6 + d as u32))))
+                        }
+                        WiFn::LocalSize => {
+                            new.push((Some(out), identity(Operand::cu64(local[d] as u64))))
+                        }
+                        WiFn::GlobalSize => new.push((
+                            Some(out),
+                            Inst::Bin {
+                                op: BinOp::Mul,
+                                ty: Type::U64,
+                                a: Operand::Arg(base + 3 + d as u32),
+                                b: Operand::cu64(local[d] as u64),
+                            },
+                        )),
+                        WiFn::WorkDim => {
+                            new.push((Some(out), identity(Operand::cu64(work_dim as u64))))
+                        }
+                        WiFn::GlobalId => {
+                            // group_id*L + wi + offset
+                            let t1 = f.fresh_reg();
+                            new.push((
+                                Some(t1),
+                                Inst::Bin {
+                                    op: BinOp::Mul,
+                                    ty: Type::U64,
+                                    a: Operand::Arg(base + d as u32),
+                                    b: Operand::cu64(local[d] as u64),
+                                },
+                            ));
+                            let t2 = f.fresh_reg();
+                            new.push((
+                                Some(t2),
+                                Inst::Load { ty: Type::U64, ptr: Operand::Slot(wi[d]) },
+                            ));
+                            let t3 = f.fresh_reg();
+                            new.push((
+                                Some(t3),
+                                Inst::Bin {
+                                    op: BinOp::Add,
+                                    ty: Type::U64,
+                                    a: Operand::Reg(t1),
+                                    b: Operand::Reg(t2),
+                                },
+                            ));
+                            new.push((
+                                Some(out),
+                                Inst::Bin {
+                                    op: BinOp::Add,
+                                    ty: Type::U64,
+                                    a: Operand::Reg(t3),
+                                    b: Operand::Arg(base + 6 + d as u32),
+                                },
+                            ));
+                        }
+                    }
+                }
+                mut other => {
+                    // Privatized slot rewrite.
+                    let mut needs: Vec<SlotId> = Vec::new();
+                    for op in other.operands() {
+                        if let Operand::Slot(s) = op {
+                            if privatized[s.0 as usize] {
+                                needs.push(s);
+                            }
+                        }
+                    }
+                    if !needs.is_empty() {
+                        let fl = match flat {
+                            Some(r) => r,
+                            None => {
+                                let r = emit_flat(f, &mut new, wi, local);
+                                flat = Some(r);
+                                r
+                            }
+                        };
+                        stats.ctx_rewrites += 1;
+                        rewrite_private_access(f, &mut new, &mut other, fl, &privatized, &counts);
+                    }
+                    new.push((def, other));
+                }
+            }
+        }
+        f.block_mut(bb).insts = new;
+    }
+    Ok(())
+}
+
+fn identity(op: Operand) -> Inst {
+    Inst::Bin { op: BinOp::Add, ty: Type::U64, a: op, b: Operand::cu64(0) }
+}
+
+/// Emit `flat = (wi2*L1 + wi1)*L0 + wi0` into `new`, returning the reg.
+fn emit_flat(
+    f: &mut Function,
+    new: &mut Vec<(Option<Reg>, Inst)>,
+    wi: &[SlotId; 3],
+    local: [usize; 3],
+) -> Reg {
+    let mut acc: Option<Reg> = None;
+    for d in [2usize, 1, 0] {
+        let v = f.fresh_reg();
+        new.push((Some(v), Inst::Load { ty: Type::U64, ptr: Operand::Slot(wi[d]) }));
+        acc = Some(match acc {
+            None => v,
+            Some(prev) => {
+                let m = f.fresh_reg();
+                new.push((
+                    Some(m),
+                    Inst::Bin {
+                        op: BinOp::Mul,
+                        ty: Type::U64,
+                        a: Operand::Reg(prev),
+                        b: Operand::cu64(local[d] as u64),
+                    },
+                ));
+                let a = f.fresh_reg();
+                new.push((
+                    Some(a),
+                    Inst::Bin {
+                        op: BinOp::Add,
+                        ty: Type::U64,
+                        a: Operand::Reg(m),
+                        b: Operand::Reg(v),
+                    },
+                ));
+                a
+            }
+        });
+    }
+    acc.unwrap()
+}
+
+/// Rewrite one instruction's accesses to privatized slots: direct
+/// `Load`/`Store` pointers become `Gep(slot, flat*count)`, `Gep` bases get
+/// `flat*count` added to the index.
+fn rewrite_private_access(
+    f: &mut Function,
+    new: &mut Vec<(Option<Reg>, Inst)>,
+    inst: &mut Inst,
+    flat: Reg,
+    privatized: &[bool],
+    counts: &[usize],
+) {
+    // Helper: offset register = flat * count (count==1 → flat itself).
+    let mut offset_of = |f: &mut Function, new: &mut Vec<(Option<Reg>, Inst)>, s: SlotId| -> Reg {
+        let count = counts[s.0 as usize];
+        if count == 1 {
+            flat
+        } else {
+            let m = f.fresh_reg();
+            new.push((
+                Some(m),
+                Inst::Bin {
+                    op: BinOp::Mul,
+                    ty: Type::U64,
+                    a: Operand::Reg(flat),
+                    b: Operand::cu64(count as u64),
+                },
+            ));
+            m
+        }
+    };
+    match inst {
+        Inst::Load { ty, ptr } | Inst::Store { ty, ptr, .. } => {
+            if let Operand::Slot(s) = *ptr {
+                if privatized[s.0 as usize] {
+                    let off = offset_of(f, new, s);
+                    let p = f.fresh_reg();
+                    new.push((
+                        Some(p),
+                        Inst::Gep { elem: ty.clone(), base: Operand::Slot(s), idx: Operand::Reg(off) },
+                    ));
+                    *ptr = Operand::Reg(p);
+                }
+            }
+        }
+        Inst::Gep { base, idx, elem: _ } => {
+            if let Operand::Slot(s) = *base {
+                if privatized[s.0 as usize] {
+                    let off = offset_of(f, new, s);
+                    let ni = f.fresh_reg();
+                    new.push((
+                        Some(ni),
+                        Inst::Bin { op: BinOp::Add, ty: Type::U64, a: Operand::Reg(off), b: *idx },
+                    ));
+                    *idx = Operand::Reg(ni);
+                }
+            }
+        }
+        _ => {}
+    }
+}
+

@@ -1,0 +1,51 @@
+//! # pocl-rs — a performance-portable OpenCL-style runtime and kernel compiler
+//!
+//! Reproduction of *"pocl: A Performance-Portable OpenCL Implementation"*
+//! (Jääskeläinen, Sánchez de La Lama, Schnetter, Raiskila, Takala, Berg;
+//! Int. J. Parallel Programming, 2015) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! The crate is organised exactly like the paper's system (Fig. 2):
+//!
+//! * [`cl`] — the **host layer**: a `cl*`-style API (platform, context,
+//!   command queue, buffers, programs, kernels, events).
+//! * [`frontend`] — the Clang analog: a lexer/parser/semantic analyser for
+//!   *MiniCL*, an OpenCL C subset, lowering to the typed IR in [`ir`].
+//! * [`ir`] — the LLVM-IR analog: typed SSA-lite IR on a control-flow
+//!   graph, with the CFG utilities the paper's algorithms are written
+//!   against (`CreateSubgraph`, `ReplicateCFG`, dominators, natural loops).
+//! * [`kcc`] — the **kernel compiler**, the paper's core contribution:
+//!   parallel region formation, conditional-barrier tail duplication,
+//!   work-item loop generation with parallel-loop metadata, b-loop handling,
+//!   horizontal inner-loop parallelisation, and variable privatisation.
+//! * [`exec`] — execution engines for work-group functions: a serial
+//!   interpreter, a lane-parallel *gang* executor (the SIMD mapping), and a
+//!   fiber-based per-work-item baseline (the FreeOCL / Twin Peaks analog).
+//! * [`devices`] — the **device layer**: `basic`, `threaded` (pthread
+//!   analog), `ttasim` (static multi-issue TTA simulator) and `pjrt`
+//!   (SPMD-style offload of AOT-compiled Pallas/XLA kernels).
+//! * [`runtime`] — the PJRT client wrapper used by the `pjrt` device to
+//!   load and execute `artifacts/*.hlo.txt` produced by `python/compile`.
+//! * [`bufalloc`] — the chunked first-fit buffer allocator of §3.
+//! * [`vecmath`] — the Vecmathlib port of §5: vectorised elementary
+//!   functions over software-SIMD `RealVec` types.
+//! * [`suite`] — the AMD APP SDK-style benchmark applications used in §6,
+//!   with handwritten Rust "vendor stand-in" baselines.
+//! * [`bench`] — the measurement harness regenerating every table/figure.
+//! * [`testing`] — a minimal property-testing module (seeded generators)
+//!   used by the test suite.
+
+pub mod bench;
+pub mod bufalloc;
+pub mod cl;
+pub mod devices;
+pub mod exec;
+pub mod frontend;
+pub mod ir;
+pub mod kcc;
+pub mod runtime;
+pub mod suite;
+pub mod testing;
+pub mod vecmath;
+
+pub use cl::error::{Error, Result};

@@ -1,0 +1,67 @@
+//! pocl-rs CLI: device discovery, kernel compilation inspection, and
+//! suite runs.
+//!
+//! ```text
+//! poclrs devices                 # Table 1 capability table
+//! poclrs run <App> [device]      # run + verify one suite app
+//! poclrs compile <file.cl> [LX]  # show compile stats + IR for a kernel
+//! poclrs suite [device]          # run + verify the whole suite
+//! ```
+
+use std::sync::Arc;
+
+use poclrs::cl::Platform;
+use poclrs::kcc::{compile_workgroup, CompileOptions};
+use poclrs::suite::{all_apps, app_by_name, runner, SizeClass};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let platform = Platform::default_platform();
+    match args.first().map(|s| s.as_str()) {
+        Some("devices") => {
+            println!("platform `{}`\n{}", platform.name, platform.capability_table());
+        }
+        Some("run") => {
+            let name = args.get(1).ok_or_else(|| anyhow::anyhow!("usage: run <App> [device]"))?;
+            let dev = args.get(2).map(|s| s.as_str()).unwrap_or("pthread-gang(8)");
+            let device = platform
+                .device(dev)
+                .ok_or_else(|| anyhow::anyhow!("no device matching `{dev}`"))?;
+            let app = app_by_name(name, SizeClass::Bench)
+                .ok_or_else(|| anyhow::anyhow!("no app named `{name}`"))?;
+            let r = runner::run_and_verify(&app, device)?;
+            println!(
+                "{name}: OK on {dev} ({} work-groups, {:?} kernel time)",
+                r.stats.workgroups, r.kernel_time
+            );
+        }
+        Some("suite") => {
+            let dev = args.get(1).map(|s| s.as_str()).unwrap_or("pthread-gang(8)");
+            let device = platform
+                .device(dev)
+                .ok_or_else(|| anyhow::anyhow!("no device matching `{dev}`"))?;
+            for app in all_apps(SizeClass::Small) {
+                match runner::run_and_verify(&app, Arc::clone(&device)) {
+                    Ok(r) => println!("{:<22} OK   {:>8.2?}", app.name, r.kernel_time),
+                    Err(e) => println!("{:<22} FAIL {e}", app.name),
+                }
+            }
+        }
+        Some("compile") => {
+            let path = args.get(1).ok_or_else(|| anyhow::anyhow!("usage: compile <file.cl> [LX]"))?;
+            let lx: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+            let src = std::fs::read_to_string(path)?;
+            let module = poclrs::frontend::compile(&src)?;
+            for k in &module.kernels {
+                let wgf = compile_workgroup(k, [lx, 1, 1], &CompileOptions::default())?;
+                println!("kernel `{}` @ local [{lx},1,1]: {:?}\n", k.name, wgf.stats);
+                println!("--- region form ---\n{}", poclrs::ir::print::print_function(&wgf.reg_fn));
+                println!("--- WI-loop form ---\n{}", poclrs::ir::print::print_function(&wgf.loop_fn));
+            }
+        }
+        _ => {
+            eprintln!("usage: poclrs devices | run <App> [device] | suite [device] | compile <file.cl> [LX]");
+        }
+    }
+    Ok(())
+}

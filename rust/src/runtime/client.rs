@@ -1,0 +1,72 @@
+//! PJRT CPU client wrapper: one client per process, many loaded executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::cl::error::{Error, Result};
+
+use super::executable::LoadedExecutable;
+
+/// A process-wide PJRT runtime holding the CPU client and a cache of
+/// compiled executables keyed by artifact path.
+///
+/// Compilation of an HLO module is expensive (ms-scale); the cache makes the
+/// `pjrt` device's kernel-enqueue path allocation- and compile-free after
+/// the first launch, mirroring how pocl amortises kernel compilation across
+/// enqueues (§6: "multiple execution iterations ... allow the kernel
+/// compilers to amortize the kernel compilation time").
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<LoadedExecutable>>>,
+}
+
+// SAFETY: the `xla` crate wraps the PJRT client in `Rc` + raw pointers, so
+// it is not auto-Send/Sync. All mutation funnels through this struct's
+// Mutex-protected cache and `LoadedExecutable`'s execute lock; the PJRT
+// CPU client itself is thread-safe at the C API level. The unsound corner
+// (cloning the inner Rc concurrently) is never exercised: we hand out
+// `Arc<LoadedExecutable>`, never the client.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Pjrt(e.to_string()))?;
+        Ok(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform name reported by PJRT (e.g. `"cpu"` / `"Host"`).
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable PJRT devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact, compile it, and cache the executable.
+    ///
+    /// Returns the cached executable on subsequent calls with the same path.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<LoadedExecutable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(exe) = self.cache.lock().unwrap().get(&path) {
+            return Ok(exe.clone());
+        }
+        let exe = Arc::new(LoadedExecutable::compile_from_file(&self.client, &path)?);
+        self.cache.lock().unwrap().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Drop all cached executables (used by tests).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Number of executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,120 @@
+//! A compiled PJRT executable with a typed host-buffer execute interface.
+
+use std::path::Path;
+
+use crate::cl::error::{Error, Result};
+
+/// Shape + dtype of one executable argument, used to marshal flat host
+/// buffers into PJRT literals.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    /// Row-major dimensions.
+    pub dims: Vec<usize>,
+    /// Element type (only f32/i32 are used by the suite kernels).
+    pub dtype: DType,
+}
+
+/// Element dtypes supported on the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl ArgSpec {
+    /// f32 tensor spec.
+    pub fn f32(dims: &[usize]) -> Self {
+        ArgSpec { dims: dims.to_vec(), dtype: DType::F32 }
+    }
+    /// i32 tensor spec.
+    pub fn i32(dims: &[usize]) -> Self {
+        ArgSpec { dims: dims.to_vec(), dtype: DType::I32 }
+    }
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+    /// True if zero-sized.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One argument's data, borrowed from host memory.
+pub enum ArgData<'a> {
+    /// f32 buffer.
+    F32(&'a [f32]),
+    /// i32 buffer.
+    I32(&'a [i32]),
+}
+
+/// An HLO module compiled for the PJRT CPU client.
+///
+/// The python side lowers with `return_tuple=True`, so outputs are always a
+/// tuple; `execute_f32` unpacks it into flat `Vec<f32>` buffers.
+pub struct LoadedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Serialises `execute` calls (see the Send/Sync note below).
+    lock: std::sync::Mutex<()>,
+    /// Artifact path (for diagnostics).
+    pub path: String,
+}
+
+// SAFETY: see `PjrtRuntime` — execution is serialised through `lock`, and
+// the wrapped executable is never cloned across threads.
+unsafe impl Send for LoadedExecutable {}
+unsafe impl Sync for LoadedExecutable {}
+
+impl LoadedExecutable {
+    /// Parse HLO text from `path` and compile it on `client`.
+    pub fn compile_from_file(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Pjrt(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::Pjrt(format!("compile {}: {e}", path.display())))?;
+        Ok(LoadedExecutable {
+            exe,
+            lock: std::sync::Mutex::new(()),
+            path: path.display().to_string(),
+        })
+    }
+
+    /// Execute with typed args; returns every tuple element as a flat f32
+    /// vector (i32 outputs are not needed by the current artifacts).
+    pub fn execute_f32(&self, args: &[(ArgData<'_>, &ArgSpec)]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for (data, spec) in args {
+            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+            let lit = match data {
+                ArgData::F32(buf) => xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Pjrt(format!("reshape arg: {e}")))?,
+                ArgData::I32(buf) => xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Pjrt(format!("reshape arg: {e}")))?,
+            };
+            literals.push(lit);
+        }
+        let _guard = self.lock.lock().unwrap();
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Pjrt(format!("execute {}: {e}", self.path)))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Pjrt(format!("fetch result: {e}")))?;
+        // Outputs are lowered with return_tuple=True: decompose the tuple.
+        let elems = result
+            .decompose_tuple()
+            .map_err(|e| Error::Pjrt(format!("decompose tuple: {e}")))?;
+        let mut out = Vec::with_capacity(elems.len());
+        for elem in elems {
+            out.push(
+                elem.to_vec::<f32>()
+                    .map_err(|e| Error::Pjrt(format!("read output: {e}")))?,
+            );
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads AOT-compiled XLA/Pallas artifacts and executes them.
+//!
+//! This is the only place the `xla` crate is touched. The compile path is
+//! `python/compile/aot.py` (jax → StableHLO → HLO **text**); the rust side
+//! loads the text with `HloModuleProto::from_text_file`, compiles it once on
+//! the PJRT CPU client, and exposes a typed `execute` over `f32`/`i32`
+//! host buffers. Python never runs on the request path.
+
+mod client;
+mod executable;
+
+pub use client::PjrtRuntime;
+pub use executable::{ArgData, ArgSpec, DType, LoadedExecutable};

@@ -1,0 +1,63 @@
+//! BinarySearch: per-work-item binary search — the paper's worst case on
+//! x86 (divergent, data-dependent loop; §6.1 and §8 discuss why).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void binarysearch(__global uint *out,
+                           __global const uint *sorted,
+                           __global const uint *keys,
+                           uint n) {
+    size_t i = get_global_id(0);
+    uint key = keys[i];
+    uint lo = 0u;
+    uint hi = n;
+    while (lo < hi) {
+        uint mid = (lo + hi) / 2u;
+        if (sorted[mid] < key) { lo = mid + 1u; } else { hi = mid; }
+    }
+    out[i] = lo;
+}
+"#;
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let (n, m) = match size {
+        SizeClass::Small => (256usize, 64usize),
+        SizeClass::Bench => (1 << 14, 4096),
+    };
+    let mut sorted = super::rand_u32(n, 1 << 20, 11);
+    sorted.sort_unstable();
+    let keys = super::rand_u32(m, 1 << 20, 13);
+    App {
+        name: "BinarySearch",
+        source: SRC,
+        buffers: vec![
+            BufInit::U32(vec![0; m]),
+            BufInit::U32(sorted),
+            BufInit::U32(keys),
+        ],
+        passes: vec![Pass {
+            kernel: "binarysearch",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Buf(2),
+                PassArg::Scalar(KernelArg::U32(n as u32)),
+            ],
+            global: [m, 1, 1],
+            local: [64, 1, 1],
+        }],
+        outputs: vec![0],
+        native: Box::new(|bufs| {
+            let (BufInit::U32(sorted), BufInit::U32(keys)) = (&bufs[1], &bufs[2]) else {
+                unreachable!()
+            };
+            let out: Vec<u32> =
+                keys.iter().map(|k| sorted.partition_point(|v| v < k) as u32).collect();
+            vec![BufInit::U32(out), bufs[1].clone(), bufs[2].clone()]
+        }),
+        tol: 0.0,
+    }
+}

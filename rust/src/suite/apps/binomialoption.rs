@@ -1,0 +1,123 @@
+//! BinomialOption: one option per work-group, lattice walked with a
+//! barrier per level (the canonical b-loop workload, §4.5).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+use crate::vecmath::scalar32;
+
+const SRC: &str = r#"
+__kernel void binomialoption(__global const float *randArray,
+                             __global float *output,
+                             __local float *callA,
+                             __local float *callB,
+                             uint numSteps) {
+    uint tid = (uint)get_local_id(0);
+    uint bid = (uint)get_group_id(0);
+    float inRand = randArray[bid];
+    float s = (1.0f - inRand) * 5.0f + inRand * 30.0f;
+    float x = (1.0f - inRand) * 1.0f + inRand * 100.0f;
+    float optionYears = (1.0f - inRand) * 0.25f + inRand * 10.0f;
+    float dt = optionYears / (float)numSteps;
+    float vsdt = 0.3f * sqrt(dt);
+    float rdt = 0.02f * dt;
+    float r = exp(rdt);
+    float rInv = 1.0f / r;
+    float u = exp(vsdt);
+    float d = 1.0f / u;
+    float pu = (r - d) / (u - d);
+    float pd = 1.0f - pu;
+    float puByr = pu * rInv;
+    float pdByr = pd * rInv;
+    float profit = s * exp(vsdt * (2.0f * (float)tid - (float)numSteps)) - x;
+    callA[tid] = (profit > 0.0f) ? profit : 0.0f;
+    barrier(CLK_LOCAL_MEM_FENCE);
+    for (int j = (int)numSteps; j > 0; j -= 2) {
+        if ((int)tid < j) {
+            callB[tid] = puByr * callA[tid + 1u] + pdByr * callA[tid];
+        }
+        barrier(CLK_LOCAL_MEM_FENCE);
+        if ((int)tid < j - 1) {
+            callA[tid] = puByr * callB[tid + 1u] + pdByr * callB[tid];
+        }
+        barrier(CLK_LOCAL_MEM_FENCE);
+    }
+    if (tid == 0u) { output[bid] = callA[0]; }
+}
+"#;
+
+/// Native lattice evaluation, mirroring the kernel's float order.
+fn native_one(in_rand: f32, num_steps: usize) -> f32 {
+    let s = (1.0 - in_rand) * 5.0 + in_rand * 30.0;
+    let x = (1.0 - in_rand) * 1.0 + in_rand * 100.0;
+    let option_years = (1.0 - in_rand) * 0.25 + in_rand * 10.0;
+    let dt = option_years / num_steps as f32;
+    let vsdt = 0.3 * dt.sqrt();
+    let rdt = 0.02 * dt;
+    let r = scalar32::exp(rdt);
+    let r_inv = 1.0 / r;
+    let u = scalar32::exp(vsdt);
+    let d = 1.0 / u;
+    let pu = (r - d) / (u - d);
+    let pd = 1.0 - pu;
+    let pu_byr = pu * r_inv;
+    let pd_byr = pd * r_inv;
+    let n = num_steps + 1;
+    let mut call_a: Vec<f32> = (0..n)
+        .map(|t| {
+            let profit = s * scalar32::exp(vsdt * (2.0 * t as f32 - num_steps as f32)) - x;
+            profit.max(0.0)
+        })
+        .collect();
+    let mut call_b = vec![0.0f32; n];
+    let mut j = num_steps as i64;
+    while j > 0 {
+        for t in 0..n {
+            if (t as i64) < j {
+                call_b[t] = pu_byr * call_a[t + 1] + pd_byr * call_a[t];
+            }
+        }
+        for t in 0..n {
+            if (t as i64) < j - 1 {
+                call_a[t] = pu_byr * call_b[t + 1] + pd_byr * call_b[t];
+            }
+        }
+        j -= 2;
+    }
+    call_a[0]
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let (options, steps) = match size {
+        SizeClass::Small => (4usize, 15usize),
+        SizeClass::Bench => (16, 63),
+    };
+    let wg = steps + 1;
+    App {
+        name: "BinomialOption",
+        source: SRC,
+        buffers: vec![
+            BufInit::F32(super::rand_f32(options, 29)),
+            BufInit::F32(vec![0.0; options]),
+        ],
+        passes: vec![Pass {
+            kernel: "binomialoption",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Local(wg * 4),
+                PassArg::Local(wg * 4),
+                PassArg::Scalar(KernelArg::U32(steps as u32)),
+            ],
+            global: [options * wg, 1, 1],
+            local: [wg, 1, 1],
+        }],
+        outputs: vec![1],
+        native: Box::new(move |bufs| {
+            let BufInit::F32(rand) = &bufs[0] else { unreachable!() };
+            let out: Vec<f32> = rand.iter().map(|&r| native_one(r, steps)).collect();
+            vec![bufs[0].clone(), BufInit::F32(out)]
+        }),
+        tol: 5e-3,
+    }
+}

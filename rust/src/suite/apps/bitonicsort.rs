@@ -1,0 +1,70 @@
+//! BitonicSort: multi-pass comparator network (stage/pass kernel
+//! relaunches — exercises the enqueue-time specialisation cache, §4.1).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void bitonicsort(__global uint *a, uint stage, uint passOfStage) {
+    uint threadId = (uint)get_global_id(0);
+    uint pairDistance = 1u << (stage - passOfStage);
+    uint blockWidth = 2u * pairDistance;
+    uint leftId = (threadId % pairDistance) + (threadId / pairDistance) * blockWidth;
+    uint rightId = leftId + pairDistance;
+    uint leftElement = a[leftId];
+    uint rightElement = a[rightId];
+    uint sameDirectionBlockWidth = 1u << stage;
+    uint sortIncreasing = 1u;
+    if ((threadId / sameDirectionBlockWidth) % 2u == 1u) {
+        sortIncreasing = 1u - sortIncreasing;
+    }
+    uint greater = (leftElement > rightElement) ? leftElement : rightElement;
+    uint lesser = (leftElement > rightElement) ? rightElement : leftElement;
+    if (sortIncreasing == 1u) {
+        a[leftId] = lesser;
+        a[rightId] = greater;
+    } else {
+        a[leftId] = greater;
+        a[rightId] = lesser;
+    }
+}
+"#;
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let n = match size {
+        SizeClass::Small => 256usize,
+        SizeClass::Bench => 1 << 13,
+    };
+    let data = super::rand_u32(n, u32::MAX, 23);
+    let stages = n.trailing_zeros();
+    let mut passes = Vec::new();
+    for stage in 0..stages {
+        for pass in 0..=stage {
+            passes.push(Pass {
+                kernel: "bitonicsort",
+                args: vec![
+                    PassArg::Buf(0),
+                    PassArg::Scalar(KernelArg::U32(stage)),
+                    PassArg::Scalar(KernelArg::U32(pass)),
+                ],
+                global: [n / 2, 1, 1],
+                local: [64.min(n / 2), 1, 1],
+            });
+        }
+    }
+    App {
+        name: "BitonicSort",
+        source: SRC,
+        buffers: vec![BufInit::U32(data)],
+        passes,
+        outputs: vec![0],
+        native: Box::new(|bufs| {
+            let BufInit::U32(data) = &bufs[0] else { unreachable!() };
+            let mut v = data.clone();
+            v.sort_unstable();
+            vec![BufInit::U32(v)]
+        }),
+        tol: 0.0,
+    }
+}

@@ -1,0 +1,94 @@
+//! BlackScholes: transcendental-heavy option pricing (exercises the §5
+//! Vecmathlib builtins; no barriers, perfectly data-parallel).
+
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+use crate::vecmath::scalar32;
+
+const SRC: &str = r#"
+float phi(float x) {
+    float zabs = fabs(x);
+    float k2 = 1.0f / (1.0f + 0.2316419f * zabs);
+    float poly = k2 * (0.319381530f + k2 * (-0.356563782f +
+                 k2 * (1.781477937f + k2 * (-1.821255978f + k2 * 1.330274429f))));
+    float pdf = 0.3989422804f * exp(-0.5f * zabs * zabs);
+    float cnd = 1.0f - pdf * poly;
+    return (x < 0.0f) ? 1.0f - cnd : cnd;
+}
+
+__kernel void blackscholes(__global const float *rnd,
+                           __global float *call,
+                           __global float *put) {
+    size_t i = get_global_id(0);
+    float in = rnd[i];
+    float s = 10.0f + in * 90.0f;
+    float k = 10.0f + in * 90.0f;
+    float t = 1.0f + in * 9.0f;
+    float r = 0.01f;
+    float sigma = 0.10f + in * 0.4f;
+    float sqrtT = sqrt(t);
+    float d1 = (log(s / k) + (r + sigma * sigma * 0.5f) * t) / (sigma * sqrtT);
+    float d2 = d1 - sigma * sqrtT;
+    float kexp = k * exp(-r * t);
+    call[i] = s * phi(d1) - kexp * phi(d2);
+    put[i] = kexp * phi(0.0f - d2) - s * phi(0.0f - d1);
+}
+"#;
+
+fn phi_native(x: f32) -> f32 {
+    let zabs = x.abs();
+    let k2 = 1.0 / (1.0 + 0.2316419 * zabs);
+    let poly = k2
+        * (0.319381530
+            + k2 * (-0.356563782 + k2 * (1.781477937 + k2 * (-1.821255978 + k2 * 1.330274429))));
+    let pdf = 0.3989422804 * scalar32::exp(-0.5 * zabs * zabs);
+    let cnd = 1.0 - pdf * poly;
+    if x < 0.0 {
+        1.0 - cnd
+    } else {
+        cnd
+    }
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let n = match size {
+        SizeClass::Small => 512usize,
+        SizeClass::Bench => 1 << 14,
+    };
+    App {
+        name: "BlackScholes",
+        source: SRC,
+        buffers: vec![
+            BufInit::F32(super::rand_f32(n, 17)),
+            BufInit::F32(vec![0.0; n]),
+            BufInit::F32(vec![0.0; n]),
+        ],
+        passes: vec![Pass {
+            kernel: "blackscholes",
+            args: vec![PassArg::Buf(0), PassArg::Buf(1), PassArg::Buf(2)],
+            global: [n, 1, 1],
+            local: [64, 1, 1],
+        }],
+        outputs: vec![1, 2],
+        native: Box::new(|bufs| {
+            let BufInit::F32(rnd) = &bufs[0] else { unreachable!() };
+            let mut call = Vec::with_capacity(rnd.len());
+            let mut put = Vec::with_capacity(rnd.len());
+            for &inr in rnd {
+                let s = 10.0 + inr * 90.0;
+                let k = 10.0 + inr * 90.0;
+                let t = 1.0 + inr * 9.0;
+                let r = 0.01f32;
+                let sigma = 0.10 + inr * 0.4;
+                let sqrt_t = t.sqrt();
+                let d1 = (scalar32::log(s / k) + (r + sigma * sigma * 0.5) * t) / (sigma * sqrt_t);
+                let d2 = d1 - sigma * sqrt_t;
+                let kexp = k * scalar32::exp(-r * t);
+                call.push(s * phi_native(d1) - kexp * phi_native(d2));
+                put.push(kexp * phi_native(-d2) - s * phi_native(-d1));
+            }
+            vec![bufs[0].clone(), BufInit::F32(call), BufInit::F32(put)]
+        }),
+        tol: 2e-3,
+    }
+}

@@ -1,0 +1,128 @@
+//! DCT: the 8×8 block discrete cosine transform from the AMD SDK — the
+//! paper's flagship for horizontal inner-loop parallelisation (§4.6,
+//! Fig. 9/10) and the §6.4 TTA experiment.
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+uint getIdx(uint blockIdx, uint blockIdy, uint idx, uint idy, uint blockWidth, uint width) {
+    return (blockIdy * blockWidth + idy) * width + (blockIdx * blockWidth + idx);
+}
+
+__kernel void dct(__global float *output,
+                  __global const float *input,
+                  __global const float *dct8x8,
+                  __local float *inter,
+                  const uint width,
+                  const uint blockWidth,
+                  const uint inverse) {
+    uint i = (uint)get_local_id(0);
+    uint j = (uint)get_local_id(1);
+    uint groupIdx = (uint)get_group_id(0);
+    uint groupIdy = (uint)get_group_id(1);
+    float acc = 0.0f;
+    for (uint k = 0u; k < blockWidth; k++) {
+        uint index1 = (inverse != 0u) ? (k * blockWidth + j) : (j * blockWidth + k);
+        uint index2 = getIdx(groupIdx, groupIdy, i, k, blockWidth, width);
+        acc += dct8x8[index1] * input[index2];
+    }
+    inter[j * blockWidth + i] = acc;
+    barrier(CLK_LOCAL_MEM_FENCE);
+    acc = 0.0f;
+    for (uint k = 0u; k < blockWidth; k++) {
+        uint index1 = (inverse != 0u) ? (k * blockWidth + i) : (i * blockWidth + k);
+        acc += inter[j * blockWidth + k] * dct8x8[index1];
+    }
+    output[getIdx(groupIdx, groupIdy, i, j, blockWidth, width)] = acc;
+}
+"#;
+
+/// The 8×8 DCT basis matrix D[j][k] = c_j cos((2k+1) jπ/16).
+pub fn dct_matrix(bw: usize) -> Vec<f32> {
+    let mut d = vec![0f32; bw * bw];
+    for j in 0..bw {
+        let cj = if j == 0 { (1.0 / bw as f64).sqrt() } else { (2.0 / bw as f64).sqrt() };
+        for k in 0..bw {
+            d[j * bw + k] =
+                (cj * ((2.0 * k as f64 + 1.0) * j as f64 * std::f64::consts::PI
+                    / (2.0 * bw as f64))
+                    .cos()) as f32;
+        }
+    }
+    d
+}
+
+/// Native baseline: Y = D · X · Dᵀ per 8×8 block, same accumulation order.
+fn native(input: &[f32], d: &[f32], width: usize, bw: usize) -> Vec<f32> {
+    let height = input.len() / width;
+    let mut out = vec![0f32; input.len()];
+    for by in (0..height).step_by(bw) {
+        for bx in (0..width).step_by(bw) {
+            // inter[j][i] = sum_k D[j][k] * X[k][i]
+            let mut inter = vec![0f32; bw * bw];
+            for j in 0..bw {
+                for i in 0..bw {
+                    let mut acc = 0f32;
+                    for k in 0..bw {
+                        acc += d[j * bw + k] * input[(by + k) * width + bx + i];
+                    }
+                    inter[j * bw + i] = acc;
+                }
+            }
+            // out[j][i] = sum_k inter[j][k] * D[i][k]
+            for j in 0..bw {
+                for i in 0..bw {
+                    let mut acc = 0f32;
+                    for k in 0..bw {
+                        acc += inter[j * bw + k] * d[i * bw + k];
+                    }
+                    out[(by + j) * width + bx + i] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let width = match size {
+        SizeClass::Small => 16usize,
+        SizeClass::Bench => 64,
+    };
+    let bw = 8usize;
+    let input = super::rand_f32(width * width, 31);
+    let d = dct_matrix(bw);
+    App {
+        name: "DCT",
+        source: SRC,
+        buffers: vec![
+            BufInit::F32(vec![0.0; width * width]),
+            BufInit::F32(input),
+            BufInit::F32(d),
+        ],
+        passes: vec![Pass {
+            kernel: "dct",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Buf(2),
+                PassArg::Local(bw * bw * 4),
+                PassArg::Scalar(KernelArg::U32(width as u32)),
+                PassArg::Scalar(KernelArg::U32(bw as u32)),
+                PassArg::Scalar(KernelArg::U32(0)),
+            ],
+            global: [width, width, 1],
+            local: [bw, bw, 1],
+        }],
+        outputs: vec![0],
+        native: Box::new(move |bufs| {
+            let (BufInit::F32(input), BufInit::F32(d)) = (&bufs[1], &bufs[2]) else {
+                unreachable!()
+            };
+            vec![BufInit::F32(native(input, d, width, bw)), bufs[1].clone(), bufs[2].clone()]
+        }),
+        tol: 1e-4,
+    }
+}

@@ -1,0 +1,89 @@
+//! DwtHaar1D: per-work-group multi-level Haar wavelet transform
+//! (b-loop with halving active set; exercises privatised region-crossing
+//! scalars — Fig. 11's `b` pattern).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void dwthaar(__global const float *in,
+                      __global float *out,
+                      __local float *t,
+                      uint n) {
+    uint i = (uint)get_local_id(0);
+    size_t g = (size_t)get_group_id(0) * (size_t)n;
+    t[2u * i] = in[g + (size_t)(2u * i)];
+    t[2u * i + 1u] = in[g + (size_t)(2u * i + 1u)];
+    barrier(CLK_LOCAL_MEM_FENCE);
+    uint len = n;
+    while (len > 1u) {
+        uint half = len / 2u;
+        float a = 0.0f;
+        float d = 0.0f;
+        if (i < half) {
+            a = (t[2u * i] + t[2u * i + 1u]) * 0.70710678f;
+            d = (t[2u * i] - t[2u * i + 1u]) * 0.70710678f;
+        }
+        barrier(CLK_LOCAL_MEM_FENCE);
+        if (i < half) {
+            t[i] = a;
+            out[g + (size_t)(half + i)] = d;
+        }
+        barrier(CLK_LOCAL_MEM_FENCE);
+        len = half;
+    }
+    if (i == 0u) { out[g] = t[0]; }
+}
+"#;
+
+fn native(input: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; input.len()];
+    for (g, chunk) in input.chunks(n).enumerate() {
+        let mut t = chunk.to_vec();
+        let base = g * n;
+        let mut len = n;
+        while len > 1 {
+            let half = len / 2;
+            let mut next = vec![0f32; half];
+            for i in 0..half {
+                next[i] = (t[2 * i] + t[2 * i + 1]) * 0.70710678;
+                out[base + half + i] = (t[2 * i] - t[2 * i + 1]) * 0.70710678;
+            }
+            t[..half].copy_from_slice(&next);
+            len = half;
+        }
+        out[base] = t[0];
+    }
+    out
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let (n, groups) = match size {
+        SizeClass::Small => (16usize, 4usize),
+        SizeClass::Bench => (256, 32),
+    };
+    let input = super::rand_f32(n * groups, 37);
+    App {
+        name: "DwtHaar1D",
+        source: SRC,
+        buffers: vec![BufInit::F32(input), BufInit::F32(vec![0.0; n * groups])],
+        passes: vec![Pass {
+            kernel: "dwthaar",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Local(n * 4),
+                PassArg::Scalar(KernelArg::U32(n as u32)),
+            ],
+            global: [groups * n / 2, 1, 1],
+            local: [n / 2, 1, 1],
+        }],
+        outputs: vec![1],
+        native: Box::new(move |bufs| {
+            let BufInit::F32(input) = &bufs[0] else { unreachable!() };
+            vec![bufs[0].clone(), BufInit::F32(native(input, n))]
+        }),
+        tol: 1e-4,
+    }
+}

@@ -1,0 +1,67 @@
+//! FastWalshTransform: log₂(n) global passes over one buffer.
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void fastwalsh(__global float *a, uint step) {
+    uint tid = (uint)get_global_id(0);
+    uint group = tid % step;
+    uint pair = 2u * step * (tid / step) + group;
+    uint match_ = pair + step;
+    float t1 = a[pair];
+    float t2 = a[match_];
+    a[pair] = t1 + t2;
+    a[match_] = t1 - t2;
+}
+"#;
+
+fn native(data: &[f32]) -> Vec<f32> {
+    let n = data.len();
+    let mut a = data.to_vec();
+    let mut step = 1usize;
+    while step < n {
+        for tid in 0..n / 2 {
+            let group = tid % step;
+            let pair = 2 * step * (tid / step) + group;
+            let mat = pair + step;
+            let (t1, t2) = (a[pair], a[mat]);
+            a[pair] = t1 + t2;
+            a[mat] = t1 - t2;
+        }
+        step *= 2;
+    }
+    a
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let n = match size {
+        SizeClass::Small => 256usize,
+        SizeClass::Bench => 1 << 13,
+    };
+    let data = super::rand_f32(n, 41);
+    let mut passes = Vec::new();
+    let mut step = 1usize;
+    while step < n {
+        passes.push(Pass {
+            kernel: "fastwalsh",
+            args: vec![PassArg::Buf(0), PassArg::Scalar(KernelArg::U32(step as u32))],
+            global: [n / 2, 1, 1],
+            local: [64.min(n / 2), 1, 1],
+        });
+        step *= 2;
+    }
+    App {
+        name: "FastWalshTransform",
+        source: SRC,
+        buffers: vec![BufInit::F32(data)],
+        passes,
+        outputs: vec![0],
+        native: Box::new(|bufs| {
+            let BufInit::F32(d) = &bufs[0] else { unreachable!() };
+            vec![BufInit::F32(native(d))]
+        }),
+        tol: 1e-4,
+    }
+}

@@ -1,0 +1,67 @@
+//! FloydWarshall: all-pairs shortest paths, n passes of an n×n kernel.
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void floydwarshall(__global uint *path, uint n, uint k) {
+    uint x = (uint)get_global_id(0);
+    uint y = (uint)get_global_id(1);
+    uint yx = y * n + x;
+    uint d = path[y * n + k] + path[k * n + x];
+    if (d < path[yx]) { path[yx] = d; }
+}
+"#;
+
+fn native(adj: &[u32], n: usize) -> Vec<u32> {
+    let mut p = adj.to_vec();
+    for k in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let d = p[y * n + k].saturating_add(p[k * n + x]);
+                if d < p[y * n + x] {
+                    p[y * n + x] = d;
+                }
+            }
+        }
+    }
+    p
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let n = match size {
+        SizeClass::Small => 16usize,
+        SizeClass::Bench => 64,
+    };
+    // Random edge weights; keep small so sums never overflow u32.
+    let adj: Vec<u32> = super::rand_u32(n * n, 200, 43)
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| if i % (n + 1) == 0 { 0 } else { v + 1 })
+        .collect();
+    let passes = (0..n)
+        .map(|k| Pass {
+            kernel: "floydwarshall",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Scalar(KernelArg::U32(n as u32)),
+                PassArg::Scalar(KernelArg::U32(k as u32)),
+            ],
+            global: [n, n, 1],
+            local: [8.min(n), 8.min(n), 1],
+        })
+        .collect();
+    App {
+        name: "FloydWarshall",
+        source: SRC,
+        buffers: vec![BufInit::U32(adj)],
+        passes,
+        outputs: vec![0],
+        native: Box::new(move |bufs| {
+            let BufInit::U32(adj) = &bufs[0] else { unreachable!() };
+            vec![BufInit::U32(native(adj, n))]
+        }),
+        tol: 0.0,
+    }
+}

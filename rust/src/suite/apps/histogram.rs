@@ -1,0 +1,86 @@
+//! Histogram: per-work-item private bins (exercises private arrays and
+//! the context-array rewrite) + a reduction pass. The AMD original uses
+//! local atomics; MiniCL has none, so this is the standard atomics-free
+//! two-phase formulation (documented in DESIGN.md §Substitutions).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void histogram_partial(__global const uint *data,
+                                __global uint *partial,
+                                uint itemsPerWi) {
+    size_t i = get_global_id(0);
+    size_t nwi = get_global_size(0);
+    uint bins[16];
+    for (uint b = 0u; b < 16u; b++) { bins[b] = 0u; }
+    for (uint k = 0u; k < itemsPerWi; k++) {
+        uint v = data[i * (size_t)itemsPerWi + (size_t)k];
+        bins[v & 15u] += 1u;
+    }
+    for (uint b = 0u; b < 16u; b++) {
+        partial[(size_t)b * nwi + i] = bins[b];
+    }
+}
+
+__kernel void histogram_reduce(__global const uint *partial,
+                               __global uint *hist,
+                               uint chunks) {
+    uint b = (uint)get_global_id(0);
+    uint acc = 0u;
+    for (uint c = 0u; c < chunks; c++) {
+        acc += partial[b * chunks + c];
+    }
+    hist[b] = acc;
+}
+"#;
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let (wis, per) = match size {
+        SizeClass::Small => (32usize, 16usize),
+        SizeClass::Bench => (256, 256),
+    };
+    let data = super::rand_u32(wis * per, 1 << 16, 47);
+    App {
+        name: "Histogram",
+        source: SRC,
+        buffers: vec![
+            BufInit::U32(data),
+            BufInit::U32(vec![0; 16 * wis]),
+            BufInit::U32(vec![0; 16]),
+        ],
+        passes: vec![
+            Pass {
+                kernel: "histogram_partial",
+                args: vec![
+                    PassArg::Buf(0),
+                    PassArg::Buf(1),
+                    PassArg::Scalar(KernelArg::U32(per as u32)),
+                ],
+                global: [wis, 1, 1],
+                local: [16.min(wis), 1, 1],
+            },
+            Pass {
+                kernel: "histogram_reduce",
+                args: vec![
+                    PassArg::Buf(1),
+                    PassArg::Buf(2),
+                    PassArg::Scalar(KernelArg::U32(wis as u32)),
+                ],
+                global: [16, 1, 1],
+                local: [16, 1, 1],
+            },
+        ],
+        outputs: vec![2],
+        native: Box::new(move |bufs| {
+            let BufInit::U32(data) = &bufs[0] else { unreachable!() };
+            let mut hist = vec![0u32; 16];
+            for &v in data {
+                hist[(v & 15) as usize] += 1;
+            }
+            vec![bufs[0].clone(), bufs[1].clone(), BufInit::U32(hist)]
+        }),
+        tol: 0.0,
+    }
+}

@@ -1,0 +1,72 @@
+//! Mandelbrot: data-dependent escape loop (maximally divergent — the
+//! gang executor's per-lane fallback runs almost everywhere).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void mandelbrot(__global uint *counts, uint width, float scale, uint maxIter) {
+    uint x = (uint)get_global_id(0);
+    uint y = (uint)get_global_id(1);
+    float cx = ((float)x / (float)width) * scale - scale * 0.75f;
+    float cy = ((float)y / (float)width) * scale - scale * 0.5f;
+    float zx = 0.0f;
+    float zy = 0.0f;
+    uint it = 0u;
+    while (it < maxIter && zx * zx + zy * zy < 4.0f) {
+        float t = zx * zx - zy * zy + cx;
+        zy = 2.0f * zx * zy + cy;
+        zx = t;
+        it++;
+    }
+    counts[y * width + x] = it;
+}
+"#;
+
+fn native(width: usize, scale: f32, max_iter: u32) -> Vec<u32> {
+    let mut out = vec![0u32; width * width];
+    for y in 0..width {
+        for x in 0..width {
+            let cx = (x as f32 / width as f32) * scale - scale * 0.75;
+            let cy = (y as f32 / width as f32) * scale - scale * 0.5;
+            let (mut zx, mut zy) = (0f32, 0f32);
+            let mut it = 0u32;
+            while it < max_iter && zx * zx + zy * zy < 4.0 {
+                let t = zx * zx - zy * zy + cx;
+                zy = 2.0 * zx * zy + cy;
+                zx = t;
+                it += 1;
+            }
+            out[y * width + x] = it;
+        }
+    }
+    out
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let (width, max_iter) = match size {
+        SizeClass::Small => (16usize, 64u32),
+        SizeClass::Bench => (64, 256),
+    };
+    let scale = 2.5f32;
+    App {
+        name: "Mandelbrot",
+        source: SRC,
+        buffers: vec![BufInit::U32(vec![0; width * width])],
+        passes: vec![Pass {
+            kernel: "mandelbrot",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Scalar(KernelArg::U32(width as u32)),
+                PassArg::Scalar(KernelArg::F32(scale)),
+                PassArg::Scalar(KernelArg::U32(max_iter)),
+            ],
+            global: [width, width, 1],
+            local: [8.min(width), 8.min(width), 1],
+        }],
+        outputs: vec![0],
+        native: Box::new(move |_| vec![BufInit::U32(native(width, scale, max_iter))]),
+        tol: 0.0,
+    }
+}

@@ -1,0 +1,80 @@
+//! MatrixMultiplication: tiled GEMM with local-memory staging and a
+//! barrier per tile (b-loop + privatised accumulator).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void matmul(__global float *C,
+                     __global const float *A,
+                     __global const float *B,
+                     uint n,
+                     __local float *As,
+                     __local float *Bs) {
+    uint tx = (uint)get_local_id(0);
+    uint ty = (uint)get_local_id(1);
+    uint col = (uint)get_global_id(0);
+    uint row = (uint)get_global_id(1);
+    float acc = 0.0f;
+    uint tiles = n / 8u;
+    for (uint t = 0u; t < tiles; t++) {
+        As[ty * 8u + tx] = A[row * n + (t * 8u + tx)];
+        Bs[ty * 8u + tx] = B[(t * 8u + ty) * n + col];
+        barrier(CLK_LOCAL_MEM_FENCE);
+        for (uint k = 0u; k < 8u; k++) {
+            acc += As[ty * 8u + k] * Bs[k * 8u + tx];
+        }
+        barrier(CLK_LOCAL_MEM_FENCE);
+    }
+    C[row * n + col] = acc;
+}
+"#;
+
+/// Native baseline with the same tile-ordered accumulation.
+fn native(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; n * n];
+    for row in 0..n {
+        for col in 0..n {
+            let mut acc = 0f32;
+            for k in 0..n {
+                acc += a[row * n + k] * b[k * n + col];
+            }
+            c[row * n + col] = acc;
+        }
+    }
+    c
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let n = match size {
+        SizeClass::Small => 16usize,
+        SizeClass::Bench => 64,
+    };
+    let a = super::rand_f32(n * n, 53);
+    let b = super::rand_f32(n * n, 59);
+    App {
+        name: "MatrixMultiplication",
+        source: SRC,
+        buffers: vec![BufInit::F32(vec![0.0; n * n]), BufInit::F32(a), BufInit::F32(b)],
+        passes: vec![Pass {
+            kernel: "matmul",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Buf(2),
+                PassArg::Scalar(KernelArg::U32(n as u32)),
+                PassArg::Local(8 * 8 * 4),
+                PassArg::Local(8 * 8 * 4),
+            ],
+            global: [n, n, 1],
+            local: [8, 8, 1],
+        }],
+        outputs: vec![0],
+        native: Box::new(move |bufs| {
+            let (BufInit::F32(a), BufInit::F32(b)) = (&bufs[1], &bufs[2]) else { unreachable!() };
+            vec![BufInit::F32(native(a, b, n)), bufs[1].clone(), bufs[2].clone()]
+        }),
+        tol: 1e-3,
+    }
+}

@@ -1,0 +1,59 @@
+//! MatrixTranspose: local-tile staging with a barrier (coalescing
+//! pattern from the AMD SDK).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void mattranspose(__global float *out,
+                           __global const float *in,
+                           __local float *tile,
+                           uint w) {
+    uint lx = (uint)get_local_id(0);
+    uint ly = (uint)get_local_id(1);
+    uint gx = (uint)get_global_id(0);
+    uint gy = (uint)get_global_id(1);
+    tile[ly * 8u + lx] = in[gy * w + gx];
+    barrier(CLK_LOCAL_MEM_FENCE);
+    uint ox = (uint)get_group_id(1) * 8u + lx;
+    uint oy = (uint)get_group_id(0) * 8u + ly;
+    out[oy * w + ox] = tile[lx * 8u + ly];
+}
+"#;
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let w = match size {
+        SizeClass::Small => 16usize,
+        SizeClass::Bench => 128,
+    };
+    let input = super::rand_f32(w * w, 61);
+    App {
+        name: "MatrixTranspose",
+        source: SRC,
+        buffers: vec![BufInit::F32(vec![0.0; w * w]), BufInit::F32(input)],
+        passes: vec![Pass {
+            kernel: "mattranspose",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Local(8 * 8 * 4),
+                PassArg::Scalar(KernelArg::U32(w as u32)),
+            ],
+            global: [w, w, 1],
+            local: [8, 8, 1],
+        }],
+        outputs: vec![0],
+        native: Box::new(move |bufs| {
+            let BufInit::F32(input) = &bufs[1] else { unreachable!() };
+            let mut out = vec![0f32; w * w];
+            for y in 0..w {
+                for x in 0..w {
+                    out[x * w + y] = input[y * w + x];
+                }
+            }
+            vec![BufInit::F32(out), bufs[1].clone()]
+        }),
+        tol: 0.0,
+    }
+}

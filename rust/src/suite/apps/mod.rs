@@ -1,0 +1,32 @@
+//! Suite applications (AMD APP SDK analogs), one module each.
+
+pub mod binarysearch;
+pub mod binomialoption;
+pub mod bitonicsort;
+pub mod blackscholes;
+pub mod dct;
+pub mod dwthaar;
+pub mod fastwalsh;
+pub mod floydwarshall;
+pub mod histogram;
+pub mod mandelbrot;
+pub mod matmul;
+pub mod mattranspose;
+pub mod nbody;
+pub mod prefixsum;
+pub mod reduction;
+pub mod simpleconv;
+
+use crate::testing::Rng;
+
+/// Shared input generator: deterministic pseudo-random f32s in [0,1).
+pub fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    r.f32s(n, 0.0, 1.0)
+}
+
+/// Deterministic pseudo-random u32s below `below`.
+pub fn rand_u32(n: usize, below: u32, seed: u64) -> Vec<u32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| (r.next_u64() % below as u64) as u32).collect()
+}

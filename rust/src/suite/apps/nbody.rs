@@ -1,0 +1,110 @@
+//! NBody: all-pairs gravity step with float4 positions — the paper's
+//! other worst case on x86 (§6.1); math-heavy with a uniform inner loop
+//! that the horizontal pass parallelises.
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void nbody(__global const float4 *pos,
+                    __global float4 *newPos,
+                    __global const float4 *vel,
+                    __global float4 *newVel,
+                    uint numBodies,
+                    float deltaTime,
+                    float epsSqr) {
+    size_t gid = get_global_id(0);
+    float4 myPos = pos[gid];
+    float4 acc = (float4)(0.0f, 0.0f, 0.0f, 0.0f);
+    for (uint j = 0u; j < numBodies; j++) {
+        float4 p = pos[j];
+        float rx = p.x - myPos.x;
+        float ry = p.y - myPos.y;
+        float rz = p.z - myPos.z;
+        float distSqr = rx * rx + ry * ry + rz * rz;
+        float invDist = 1.0f / sqrt(distSqr + epsSqr);
+        float invDistCube = invDist * invDist * invDist;
+        float s = p.w * invDistCube;
+        acc.x += s * rx;
+        acc.y += s * ry;
+        acc.z += s * rz;
+    }
+    float4 oldVel = vel[gid];
+    float4 np = myPos + oldVel * deltaTime + acc * (0.5f * deltaTime * deltaTime);
+    np.w = myPos.w;
+    float4 nv = oldVel + acc * deltaTime;
+    newPos[gid] = np;
+    newVel[gid] = nv;
+}
+"#;
+
+fn native(pos: &[f32], vel: &[f32], n: usize, dt: f32, eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut np = vec![0f32; n * 4];
+    let mut nv = vec![0f32; n * 4];
+    for i in 0..n {
+        let my = &pos[i * 4..i * 4 + 4];
+        let mut acc = [0f32; 3];
+        for j in 0..n {
+            let p = &pos[j * 4..j * 4 + 4];
+            let r = [p[0] - my[0], p[1] - my[1], p[2] - my[2]];
+            let dist_sqr = r[0] * r[0] + r[1] * r[1] + r[2] * r[2];
+            let inv = 1.0 / (dist_sqr + eps).sqrt();
+            let s = p[3] * inv * inv * inv;
+            acc[0] += s * r[0];
+            acc[1] += s * r[1];
+            acc[2] += s * r[2];
+        }
+        let ov = &vel[i * 4..i * 4 + 4];
+        for c in 0..3 {
+            np[i * 4 + c] = my[c] + ov[c] * dt + acc[c] * (0.5 * dt * dt);
+            nv[i * 4 + c] = ov[c] + acc[c] * dt;
+        }
+        np[i * 4 + 3] = my[3];
+        nv[i * 4 + 3] = ov[3];
+    }
+    (np, nv)
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let n = match size {
+        SizeClass::Small => 64usize,
+        SizeClass::Bench => 512,
+    };
+    let (dt, eps) = (0.005f32, 50.0f32);
+    let pos = super::rand_f32(n * 4, 67);
+    let vel = vec![0.0f32; n * 4];
+    App {
+        name: "NBody",
+        source: SRC,
+        buffers: vec![
+            BufInit::F32(pos),
+            BufInit::F32(vec![0.0; n * 4]),
+            BufInit::F32(vel),
+            BufInit::F32(vec![0.0; n * 4]),
+        ],
+        passes: vec![Pass {
+            kernel: "nbody",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Buf(2),
+                PassArg::Buf(3),
+                PassArg::Scalar(KernelArg::U32(n as u32)),
+                PassArg::Scalar(KernelArg::F32(dt)),
+                PassArg::Scalar(KernelArg::F32(eps)),
+            ],
+            global: [n, 1, 1],
+            local: [64.min(n), 1, 1],
+        }],
+        outputs: vec![1, 3],
+        native: Box::new(move |bufs| {
+            let (BufInit::F32(pos), BufInit::F32(vel)) = (&bufs[0], &bufs[2]) else {
+                unreachable!()
+            };
+            let (np, nv) = native(pos, vel, n, dt, eps);
+            vec![bufs[0].clone(), BufInit::F32(np), bufs[2].clone(), BufInit::F32(nv)]
+        }),
+        tol: 2e-3,
+    }
+}

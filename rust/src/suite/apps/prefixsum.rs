@@ -1,0 +1,100 @@
+//! PrefixSum: Blelchoch-style work-group exclusive scan (up-sweep +
+//! down-sweep, barriers inside loops with uniform-but-accumulating
+//! bounds — the hardest b-loop shape in the suite).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void prefixsum(__global float *output,
+                        __global const float *input,
+                        __local float *block,
+                        uint length) {
+    uint tid = (uint)get_local_id(0);
+    uint offset = 1u;
+    block[2u * tid] = input[2u * tid];
+    block[2u * tid + 1u] = input[2u * tid + 1u];
+    for (uint d = length >> 1; d > 0u; d >>= 1) {
+        barrier(CLK_LOCAL_MEM_FENCE);
+        if (tid < d) {
+            uint ai = offset * (2u * tid + 1u) - 1u;
+            uint bi = offset * (2u * tid + 2u) - 1u;
+            block[bi] += block[ai];
+        }
+        offset *= 2u;
+    }
+    barrier(CLK_LOCAL_MEM_FENCE);
+    if (tid == 0u) { block[length - 1u] = 0.0f; }
+    for (uint d = 1u; d < length; d *= 2u) {
+        offset >>= 1;
+        barrier(CLK_LOCAL_MEM_FENCE);
+        if (tid < d) {
+            uint ai = offset * (2u * tid + 1u) - 1u;
+            uint bi = offset * (2u * tid + 2u) - 1u;
+            float t = block[ai];
+            block[ai] = block[bi];
+            block[bi] += t;
+        }
+    }
+    barrier(CLK_LOCAL_MEM_FENCE);
+    output[2u * tid] = block[2u * tid];
+    output[2u * tid + 1u] = block[2u * tid + 1u];
+}
+"#;
+
+/// Build the app (single work-group, like the AMD sample's group scan).
+pub fn build(size: SizeClass) -> App {
+    let n = match size {
+        SizeClass::Small => 32usize,
+        SizeClass::Bench => 512,
+    };
+    let input = super::rand_f32(n, 71);
+    App {
+        name: "PrefixSum",
+        source: SRC,
+        buffers: vec![BufInit::F32(vec![0.0; n]), BufInit::F32(input)],
+        passes: vec![Pass {
+            kernel: "prefixsum",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Local(n * 4),
+                PassArg::Scalar(KernelArg::U32(n as u32)),
+            ],
+            global: [n / 2, 1, 1],
+            local: [n / 2, 1, 1],
+        }],
+        outputs: vec![0],
+        native: Box::new(move |bufs| {
+            let BufInit::F32(input) = &bufs[1] else { unreachable!() };
+            // Replicate the Blelloch tree order so f32 rounding matches.
+            let mut block = input.clone();
+            let mut offset = 1usize;
+            let mut d = n >> 1;
+            while d > 0 {
+                for t in 0..d {
+                    let ai = offset * (2 * t + 1) - 1;
+                    let bi = offset * (2 * t + 2) - 1;
+                    block[bi] += block[ai];
+                }
+                offset *= 2;
+                d >>= 1;
+            }
+            block[n - 1] = 0.0;
+            let mut d = 1usize;
+            while d < n {
+                offset >>= 1;
+                for t in 0..d {
+                    let ai = offset * (2 * t + 1) - 1;
+                    let bi = offset * (2 * t + 2) - 1;
+                    let tmp = block[ai];
+                    block[ai] = block[bi];
+                    block[bi] += tmp;
+                }
+                d *= 2;
+            }
+            vec![BufInit::F32(block), bufs[1].clone()]
+        }),
+        tol: 1e-4,
+    }
+}

@@ -1,0 +1,62 @@
+//! Reduction: classic local-memory tree sum with a stride-halving
+//! barrier loop.
+
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void reduction(__global const float *in,
+                        __global float *out,
+                        __local float *sdata) {
+    uint tid = (uint)get_local_id(0);
+    size_t i = get_global_id(0);
+    sdata[tid] = in[i];
+    barrier(CLK_LOCAL_MEM_FENCE);
+    for (uint s = (uint)get_local_size(0) / 2u; s > 0u; s >>= 1) {
+        if (tid < s) { sdata[tid] += sdata[tid + s]; }
+        barrier(CLK_LOCAL_MEM_FENCE);
+    }
+    if (tid == 0u) { out[get_group_id(0)] = sdata[0]; }
+}
+"#;
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let (n, wg) = match size {
+        SizeClass::Small => (256usize, 32usize),
+        SizeClass::Bench => (1 << 14, 128),
+    };
+    let input = super::rand_f32(n, 73);
+    let groups = n / wg;
+    App {
+        name: "Reduction",
+        source: SRC,
+        buffers: vec![BufInit::F32(input), BufInit::F32(vec![0.0; groups])],
+        passes: vec![Pass {
+            kernel: "reduction",
+            args: vec![PassArg::Buf(0), PassArg::Buf(1), PassArg::Local(wg * 4)],
+            global: [n, 1, 1],
+            local: [wg, 1, 1],
+        }],
+        outputs: vec![1],
+        native: Box::new(move |bufs| {
+            let BufInit::F32(input) = &bufs[0] else { unreachable!() };
+            // Tree order matches the kernel exactly → tight tolerance.
+            let out: Vec<f32> = input
+                .chunks(wg)
+                .map(|chunk| {
+                    let mut t = chunk.to_vec();
+                    let mut s = wg / 2;
+                    while s > 0 {
+                        for i in 0..s {
+                            t[i] += t[i + s];
+                        }
+                        s /= 2;
+                    }
+                    t[0]
+                })
+                .collect();
+            vec![bufs[0].clone(), BufInit::F32(out)]
+        }),
+        tol: 1e-5,
+    }
+}

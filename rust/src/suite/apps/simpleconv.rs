@@ -1,0 +1,96 @@
+//! SimpleConvolution: 2-D convolution with border handling (divergent
+//! guards inside uniform loops — the horizontal pass must reject these).
+
+use crate::cl::program::KernelArg;
+use crate::suite::{App, BufInit, Pass, PassArg, SizeClass};
+
+const SRC: &str = r#"
+__kernel void simpleconv(__global float *out,
+                         __global const float *in,
+                         __global const float *mask,
+                         uint width,
+                         uint height,
+                         uint maskW) {
+    uint x = (uint)get_global_id(0);
+    uint y = (uint)get_global_id(1);
+    uint half_ = maskW / 2u;
+    float sum = 0.0f;
+    for (uint r = 0u; r < maskW; r++) {
+        for (uint c = 0u; c < maskW; c++) {
+            int yy = (int)y + (int)r - (int)half_;
+            int xx = (int)x + (int)c - (int)half_;
+            if (yy >= 0 && yy < (int)height && xx >= 0 && xx < (int)width) {
+                sum += in[(uint)yy * width + (uint)xx] * mask[r * maskW + c];
+            }
+        }
+    }
+    out[y * width + x] = sum;
+}
+"#;
+
+fn native(input: &[f32], mask: &[f32], w: usize, h: usize, mw: usize) -> Vec<f32> {
+    let half = (mw / 2) as i64;
+    let mut out = vec![0f32; w * h];
+    for y in 0..h as i64 {
+        for x in 0..w as i64 {
+            let mut sum = 0f32;
+            for r in 0..mw as i64 {
+                for c in 0..mw as i64 {
+                    let yy = y + r - half;
+                    let xx = x + c - half;
+                    if yy >= 0 && yy < h as i64 && xx >= 0 && xx < w as i64 {
+                        sum += input[yy as usize * w + xx as usize]
+                            * mask[(r * mw as i64 + c) as usize];
+                    }
+                }
+            }
+            out[y as usize * w + x as usize] = sum;
+        }
+    }
+    out
+}
+
+/// Build the app.
+pub fn build(size: SizeClass) -> App {
+    let w = match size {
+        SizeClass::Small => 16usize,
+        SizeClass::Bench => 64,
+    };
+    let mw = 5usize;
+    let input = super::rand_f32(w * w, 79);
+    let mask = super::rand_f32(mw * mw, 83);
+    App {
+        name: "SimpleConvolution",
+        source: SRC,
+        buffers: vec![
+            BufInit::F32(vec![0.0; w * w]),
+            BufInit::F32(input),
+            BufInit::F32(mask),
+        ],
+        passes: vec![Pass {
+            kernel: "simpleconv",
+            args: vec![
+                PassArg::Buf(0),
+                PassArg::Buf(1),
+                PassArg::Buf(2),
+                PassArg::Scalar(KernelArg::U32(w as u32)),
+                PassArg::Scalar(KernelArg::U32(w as u32)),
+                PassArg::Scalar(KernelArg::U32(mw as u32)),
+            ],
+            global: [w, w, 1],
+            local: [8.min(w), 8.min(w), 1],
+        }],
+        outputs: vec![0],
+        native: Box::new(move |bufs| {
+            let (BufInit::F32(input), BufInit::F32(mask)) = (&bufs[1], &bufs[2]) else {
+                unreachable!()
+            };
+            vec![
+                BufInit::F32(native(input, mask, w, w, mw)),
+                bufs[1].clone(),
+                bufs[2].clone(),
+            ]
+        }),
+        tol: 1e-4,
+    }
+}

@@ -1,0 +1,128 @@
+//! The AMD APP SDK-style benchmark suite used by §6's evaluation.
+//!
+//! Every application bundles: a MiniCL kernel (the unmodified-OpenCL-style
+//! workload), one or more launch passes, input generators, a handwritten
+//! Rust **native baseline** (the proprietary-vendor stand-in — see
+//! DESIGN.md §Substitutions), and a verifier.
+
+pub mod apps;
+pub mod runner;
+
+use crate::cl::program::KernelArg;
+
+/// A device buffer's initial contents.
+#[derive(Debug, Clone)]
+pub enum BufInit {
+    /// f32 data.
+    F32(Vec<f32>),
+    /// u32 data.
+    U32(Vec<u32>),
+}
+
+impl BufInit {
+    /// Byte length.
+    pub fn byte_len(&self) -> usize {
+        match self {
+            BufInit::F32(v) => v.len() * 4,
+            BufInit::U32(v) => v.len() * 4,
+        }
+    }
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            BufInit::F32(v) => v.len(),
+            BufInit::U32(v) => v.len(),
+        }
+    }
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One kernel argument of a pass.
+#[derive(Debug, Clone)]
+pub enum PassArg {
+    /// Index into the app's buffer list.
+    Buf(usize),
+    /// Scalar argument.
+    Scalar(KernelArg),
+    /// Explicit `__local` buffer of the given byte size.
+    Local(usize),
+}
+
+/// One kernel launch.
+#[derive(Debug, Clone)]
+pub struct Pass {
+    /// Kernel name within the app's program.
+    pub kernel: &'static str,
+    /// Arguments in kernel order.
+    pub args: Vec<PassArg>,
+    /// Global work size.
+    pub global: [usize; 3],
+    /// Local work size.
+    pub local: [usize; 3],
+}
+
+/// A benchmark application.
+pub struct App {
+    /// Display name (matches the paper's figures).
+    pub name: &'static str,
+    /// MiniCL program source.
+    pub source: &'static str,
+    /// Device buffers (initial contents).
+    pub buffers: Vec<BufInit>,
+    /// Launch passes in order (one iteration of the benchmark).
+    pub passes: Vec<Pass>,
+    /// Buffer indices verified against the native baseline.
+    pub outputs: Vec<usize>,
+    /// Handwritten Rust baseline: takes the initial buffers, returns the
+    /// full post-run buffer contents (only `outputs` are compared).
+    pub native: Box<dyn Fn(&[BufInit]) -> Vec<BufInit> + Send + Sync>,
+    /// Comparison tolerance for f32 outputs (0.0 = exact).
+    pub tol: f32,
+}
+
+impl App {
+    /// Run the native baseline.
+    pub fn run_native(&self) -> Vec<BufInit> {
+        (self.native)(&self.buffers)
+    }
+}
+
+/// Problem-size preset: tests use `Small`, benches use `Bench`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeClass {
+    /// Quick verification sizes.
+    Small,
+    /// Benchmark sizes (still laptop-scale; the interpreter substrate is
+    /// ~100× slower than compiled code, see DESIGN.md).
+    Bench,
+}
+
+/// All suite applications at a size class, in Fig. 12 order.
+pub fn all_apps(size: SizeClass) -> Vec<App> {
+    vec![
+        apps::binarysearch::build(size),
+        apps::binomialoption::build(size),
+        apps::bitonicsort::build(size),
+        apps::blackscholes::build(size),
+        apps::dct::build(size),
+        apps::dwthaar::build(size),
+        apps::fastwalsh::build(size),
+        apps::floydwarshall::build(size),
+        apps::histogram::build(size),
+        apps::matmul::build(size),
+        apps::mattranspose::build(size),
+        apps::nbody::build(size),
+        apps::prefixsum::build(size),
+        apps::reduction::build(size),
+        apps::simpleconv::build(size),
+        apps::mandelbrot::build(size),
+    ]
+}
+
+/// Look up one app by (case-insensitive) name.
+pub fn app_by_name(name: &str, size: SizeClass) -> Option<App> {
+    all_apps(size).into_iter().find(|a| a.name.eq_ignore_ascii_case(name))
+}

@@ -1,0 +1,118 @@
+//! Suite runner: executes an [`App`] through the host API on a device and
+//! verifies against the native baseline.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cl::{CommandQueue, Context, Kernel, KernelArg, Program};
+use crate::cl::error::{Error, Result};
+use crate::devices::{Device, LaunchStats};
+
+use super::{App, BufInit, PassArg};
+
+/// Result of one device run.
+pub struct RunResult {
+    /// Final contents of every buffer.
+    pub buffers: Vec<BufInit>,
+    /// Kernel-only wall time (sum over passes).
+    pub kernel_time: Duration,
+    /// Aggregate device stats.
+    pub stats: LaunchStats,
+}
+
+/// Run all passes of `app` once on `device`.
+pub fn run_on_device(app: &App, device: Arc<dyn Device>) -> Result<RunResult> {
+    let ctx = Arc::new(Context::new(device));
+    let mut queue = CommandQueue::new(ctx.clone());
+    let program = Program::build(app.source)?;
+
+    // Create + fill buffers.
+    let mut bufs = Vec::with_capacity(app.buffers.len());
+    for b in &app.buffers {
+        let handle = ctx.create_buffer(b.byte_len())?;
+        match b {
+            BufInit::F32(d) => ctx.write_f32(handle, d)?,
+            BufInit::U32(d) => ctx.write_u32(handle, d)?,
+        }
+        bufs.push(handle);
+    }
+
+    let mut kernel_time = Duration::ZERO;
+    let mut stats = LaunchStats::default();
+    for pass in &app.passes {
+        let mut k = Kernel::new(&program, pass.kernel)?;
+        for (i, a) in pass.args.iter().enumerate() {
+            let arg = match a {
+                PassArg::Buf(bi) => KernelArg::Buf(bufs[*bi]),
+                PassArg::Scalar(s) => s.clone(),
+                PassArg::Local(sz) => KernelArg::LocalSize(*sz),
+            };
+            k.set_arg(i, arg)?;
+        }
+        let t0 = Instant::now();
+        let ev = queue.enqueue_nd_range(&program, &k, pass.global, pass.local)?;
+        kernel_time += t0.elapsed();
+        stats.workgroups += ev.stats.workgroups;
+        stats.diverged_gangs += ev.stats.diverged_gangs;
+        stats.cycles += ev.stats.cycles;
+    }
+
+    // Read everything back.
+    let mut out = Vec::with_capacity(bufs.len());
+    for (handle, init) in bufs.iter().zip(&app.buffers) {
+        out.push(match init {
+            BufInit::F32(d) => BufInit::F32(ctx.read_f32(*handle, d.len())?),
+            BufInit::U32(d) => BufInit::U32(ctx.read_u32(*handle, d.len())?),
+        });
+    }
+    Ok(RunResult { buffers: out, kernel_time, stats })
+}
+
+/// Time the native baseline.
+pub fn run_native_timed(app: &App) -> (Vec<BufInit>, Duration) {
+    let t0 = Instant::now();
+    let out = app.run_native();
+    (out, t0.elapsed())
+}
+
+/// Compare device results against the native baseline on the app's
+/// output buffers.
+pub fn verify(app: &App, got: &[BufInit]) -> Result<()> {
+    let expect = app.run_native();
+    for &i in &app.outputs {
+        match (&got[i], &expect[i]) {
+            (BufInit::F32(g), BufInit::F32(e)) => {
+                if g.len() != e.len() {
+                    return Err(Error::exec(format!("{}: output {i} length mismatch", app.name)));
+                }
+                for (j, (a, b)) in g.iter().zip(e).enumerate() {
+                    let scale = b.abs().max(1.0);
+                    if (a - b).abs() > app.tol * scale {
+                        return Err(Error::exec(format!(
+                            "{}: buffer {i}[{j}] = {a}, expected {b} (tol {})",
+                            app.name, app.tol
+                        )));
+                    }
+                }
+            }
+            (BufInit::U32(g), BufInit::U32(e)) => {
+                if g != e {
+                    let j = g.iter().zip(e).position(|(a, b)| a != b).unwrap_or(0);
+                    return Err(Error::exec(format!(
+                        "{}: buffer {i}[{j}] = {}, expected {}",
+                        app.name, g[j], e[j]
+                    )));
+                }
+            }
+            _ => return Err(Error::exec(format!("{}: buffer {i} type mismatch", app.name))),
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: run on device + verify.
+pub fn run_and_verify(app: &App, device: Arc<dyn Device>) -> Result<RunResult> {
+    let r = run_on_device(app, device)?;
+    verify(app, &r.buffers)?;
+    Ok(r)
+}

@@ -1,0 +1,17 @@
+//! Vecmathlib port (§5): efficient, accurate, **vectorised** elemental
+//! functions designed to inline into surrounding application code.
+//!
+//! * `scalar32`/`scalar64` — branch-light scalar algorithms (bit
+//!   manipulation, Newton iteration, range reduction + polynomials).
+//! * `realvec` — the `RealVec<N>` software-SIMD types whose lane loops
+//!   LLVM auto-vectorises; Tables 3–4 of the paper are regenerated against
+//!   these.
+//!
+//! The execution engines' math builtins dispatch here, mirroring how pocl
+//! links kernels against Vecmathlib at bitcode level.
+
+pub mod realvec;
+pub mod scalar32;
+pub mod scalar64;
+
+pub use realvec::{RealVec, RealVec64};

@@ -1,0 +1,209 @@
+//! `RealVec` — the paper's software-SIMD vector type (§5).
+//!
+//! `realvec<typename T, int D>` becomes `RealVec<const N: usize>` (f32)
+//! and `RealVec64<const N: usize>` (f64). Lane loops over fixed-size
+//! arrays compile to SIMD: the elemental algorithms in `scalar32`/
+//! `scalar64` are branch-light straight-line code, so LLVM vectorises the
+//! loops the same way Vecmathlib's intrinsics specialisations would be
+//! selected per target. Sizes not natively supported by the hardware are
+//! split/extended automatically by the compiler, mirroring the paper's
+//! "realvec<float,8> operations may be split into two realvec<float,4>".
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+use super::{scalar32, scalar64};
+
+/// f32 SIMD vector of N lanes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RealVec<const N: usize>(pub [f32; N]);
+
+/// f64 SIMD vector of N lanes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RealVec64<const N: usize>(pub [f64; N]);
+
+macro_rules! lanewise {
+    ($self:ident, $f:expr) => {{
+        let mut out = $self.0;
+        for v in out.iter_mut() {
+            *v = $f(*v);
+        }
+        Self(out)
+    }};
+}
+
+macro_rules! impl_ops {
+    ($ty:ident, $elem:ty) => {
+        impl<const N: usize> $ty<N> {
+            /// Broadcast a scalar to all lanes.
+            pub fn splat(v: $elem) -> Self {
+                Self([v; N])
+            }
+            /// Lane accessor.
+            pub fn lane(&self, i: usize) -> $elem {
+                self.0[i]
+            }
+            /// Horizontal sum.
+            pub fn hsum(&self) -> $elem {
+                self.0.iter().sum()
+            }
+            /// Fused-ish multiply-add (a*b+c lane-wise).
+            pub fn mul_add(self, b: Self, c: Self) -> Self {
+                let mut out = self.0;
+                for i in 0..N {
+                    out[i] = out[i] * b.0[i] + c.0[i];
+                }
+                Self(out)
+            }
+        }
+        impl<const N: usize> Add for $ty<N> {
+            type Output = Self;
+            fn add(self, rhs: Self) -> Self {
+                let mut out = self.0;
+                for i in 0..N {
+                    out[i] += rhs.0[i];
+                }
+                Self(out)
+            }
+        }
+        impl<const N: usize> Sub for $ty<N> {
+            type Output = Self;
+            fn sub(self, rhs: Self) -> Self {
+                let mut out = self.0;
+                for i in 0..N {
+                    out[i] -= rhs.0[i];
+                }
+                Self(out)
+            }
+        }
+        impl<const N: usize> Mul for $ty<N> {
+            type Output = Self;
+            fn mul(self, rhs: Self) -> Self {
+                let mut out = self.0;
+                for i in 0..N {
+                    out[i] *= rhs.0[i];
+                }
+                Self(out)
+            }
+        }
+        impl<const N: usize> Div for $ty<N> {
+            type Output = Self;
+            fn div(self, rhs: Self) -> Self {
+                let mut out = self.0;
+                for i in 0..N {
+                    out[i] /= rhs.0[i];
+                }
+                Self(out)
+            }
+        }
+        impl<const N: usize> Neg for $ty<N> {
+            type Output = Self;
+            fn neg(self) -> Self {
+                let mut out = self.0;
+                for v in out.iter_mut() {
+                    *v = -*v;
+                }
+                Self(out)
+            }
+        }
+    };
+}
+
+impl_ops!(RealVec, f32);
+impl_ops!(RealVec64, f64);
+
+impl<const N: usize> RealVec<N> {
+    /// Lane-wise exp (vectorised elemental function).
+    pub fn exp(self) -> Self {
+        lanewise!(self, scalar32::exp)
+    }
+    /// Lane-wise sin.
+    pub fn sin(self) -> Self {
+        lanewise!(self, scalar32::sin)
+    }
+    /// Lane-wise cos.
+    pub fn cos(self) -> Self {
+        lanewise!(self, scalar32::cos)
+    }
+    /// Lane-wise natural log.
+    pub fn log(self) -> Self {
+        lanewise!(self, scalar32::log)
+    }
+    /// Lane-wise sqrt (hardware instruction per lane → SIMD sqrt).
+    pub fn sqrt(self) -> Self {
+        lanewise!(self, scalar32::sqrt)
+    }
+    /// Lane-wise |x| via bit manipulation.
+    pub fn fabs(self) -> Self {
+        lanewise!(self, scalar32::fabs)
+    }
+}
+
+impl<const N: usize> RealVec64<N> {
+    /// Lane-wise exp.
+    pub fn exp(self) -> Self {
+        lanewise!(self, scalar64::exp)
+    }
+    /// Lane-wise sin.
+    pub fn sin(self) -> Self {
+        lanewise!(self, scalar64::sin)
+    }
+    /// Lane-wise cos.
+    pub fn cos(self) -> Self {
+        lanewise!(self, scalar64::cos)
+    }
+    /// Lane-wise natural log.
+    pub fn log(self) -> Self {
+        lanewise!(self, scalar64::log)
+    }
+    /// Lane-wise sqrt.
+    pub fn sqrt(self) -> Self {
+        lanewise!(self, scalar64::sqrt)
+    }
+    /// Lane-wise |x|.
+    pub fn fabs(self) -> Self {
+        lanewise!(self, scalar64::fabs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_arithmetic() {
+        let a = RealVec::<4>([1.0, 2.0, 3.0, 4.0]);
+        let b = RealVec::<4>::splat(2.0);
+        assert_eq!((a + b).0, [3.0, 4.0, 5.0, 6.0]);
+        assert_eq!((a * b).0, [2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(a.mul_add(b, a).0, [3.0, 6.0, 9.0, 12.0]);
+        assert_eq!(a.hsum(), 10.0);
+    }
+
+    #[test]
+    fn vector_elementals_match_scalar() {
+        let xs = [0.1f32, 1.0, 2.5, 7.25];
+        let v = RealVec::<4>(xs);
+        for i in 0..4 {
+            assert_eq!(v.exp().lane(i), super::scalar32::exp(xs[i]));
+            assert_eq!(v.sin().lane(i), super::scalar32::sin(xs[i]));
+            assert_eq!(v.sqrt().lane(i), xs[i].sqrt());
+        }
+    }
+
+    #[test]
+    fn double_lanes() {
+        let v = RealVec64::<2>([1.0, 4.0]);
+        assert_eq!(v.sqrt().0, [1.0, 2.0]);
+        assert!((v.exp().lane(1) - 4f64.exp()).abs() / 4f64.exp() < 1e-13);
+    }
+
+    #[test]
+    fn wide_vectors_split_transparently() {
+        // realvec<float,8> semantics: same results as two 4-lane ops.
+        let xs: [f32; 8] = [0.5, 1.5, 2.5, 3.5, 4.5, 5.5, 6.5, 7.5];
+        let v8 = RealVec::<8>(xs).exp();
+        for i in 0..8 {
+            assert_eq!(v8.lane(i), super::scalar32::exp(xs[i]));
+        }
+    }
+}

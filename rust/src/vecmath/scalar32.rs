@@ -1,0 +1,297 @@
+//! Branch-free f32 elemental functions (§5 / §5.1 of the paper).
+//!
+//! Algorithms follow Vecmathlib's structure: bit manipulation for the
+//! trivial functions, Newton iteration where a cheap inverse exists, and
+//! range reduction + minimax polynomial (Cephes coefficients) for the
+//! transcendentals. All bodies are straight-line code so the `RealVec`
+//! lane loops auto-vectorise.
+
+/// |x| via sign-bit clearing (§5.1: "fabs is implemented by setting the
+/// sign bit to 0").
+#[inline]
+pub fn fabs(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() & 0x7FFF_FFFF)
+}
+
+/// Sign bit test via bit manipulation.
+#[inline]
+pub fn signbit(x: f32) -> bool {
+    x.to_bits() >> 31 != 0
+}
+
+/// copysign via bit splicing.
+#[inline]
+pub fn copysign(x: f32, y: f32) -> f32 {
+    f32::from_bits((x.to_bits() & 0x7FFF_FFFF) | (y.to_bits() & 0x8000_0000))
+}
+
+/// Square root via exponent halving + Newton iterations (§5.1). The
+/// hardware `sqrtss` is what production uses ([`sqrt`]); this version
+/// exists to validate the paper's algorithm and for targets without a
+/// sqrt unit.
+#[inline]
+pub fn sqrt_newton(x: f32) -> f32 {
+    if x <= 0.0 {
+        return if x == 0.0 { 0.0 } else { f32::NAN };
+    }
+    // Initial guess: halve the exponent.
+    let b = x.to_bits();
+    let e = ((b >> 23) & 0xFF) as i32 - 127;
+    let guess = f32::from_bits((((e / 2 + 127) as u32) << 23) | (b & 0x007F_FFFF) >> 1);
+    // Newton: r' = (r + x/r) / 2 — doubles accurate digits per step.
+    let mut r = guess.max(f32::MIN_POSITIVE);
+    r = 0.5 * (r + x / r);
+    r = 0.5 * (r + x / r);
+    r = 0.5 * (r + x / r);
+    r = 0.5 * (r + x / r);
+    r
+}
+
+/// Hardware square root (the production path, like Vecmathlib's use of
+/// `sqrtss`).
+#[inline]
+pub fn sqrt(x: f32) -> f32 {
+    x.sqrt()
+}
+
+/// 1/sqrt(x).
+#[inline]
+pub fn rsqrt(x: f32) -> f32 {
+    1.0 / x.sqrt()
+}
+
+const LOG2E: f32 = 1.442_695_04_f32;
+const C1: f32 = 0.693_359_375_f32; // ln2 hi
+const C2: f32 = -2.121_944_4e-4_f32; // ln2 lo
+
+/// exp(x) via range reduction to [-ln2/2, ln2/2] + degree-5 minimax
+/// polynomial (Cephes `expf` coefficients), exponent reassembled by bit
+/// manipulation.
+#[inline]
+pub fn exp(x: f32) -> f32 {
+    let x = x.clamp(-87.336_54, 88.722_835);
+    let k = (x * LOG2E).round();
+    let r = x - k * C1 - k * C2;
+    let mut p = 1.987_569_2e-4_f32;
+    p = p * r + 1.398_199_9e-3;
+    p = p * r + 8.333_452e-3;
+    p = p * r + 4.166_579_6e-2;
+    p = p * r + 1.666_666_6e-1;
+    p = p * r + 5.000_000_1e-1;
+    let e = p * r * r + r + 1.0;
+    // 2^k via exponent bits.
+    let two_k = f32::from_bits((((k as i32 + 127) as u32) << 23).min(0xFF00_0000));
+    e * two_k
+}
+
+/// 2^x.
+#[inline]
+pub fn exp2(x: f32) -> f32 {
+    exp(x * core::f32::consts::LN_2)
+}
+
+/// ln(x) via mantissa/exponent split + atanh-series polynomial (Cephes
+/// `logf`).
+#[inline]
+pub fn log(x: f32) -> f32 {
+    if x <= 0.0 {
+        return if x == 0.0 { f32::NEG_INFINITY } else { f32::NAN };
+    }
+    let b = x.to_bits();
+    let mut e = ((b >> 23) & 0xFF) as i32 - 126;
+    let mut m = f32::from_bits((b & 0x007F_FFFF) | (126 << 23)); // [0.5, 1)
+    // Normalise to [sqrt(1/2), sqrt(2)).
+    if m < core::f32::consts::FRAC_1_SQRT_2 {
+        e -= 1;
+        m = m + m - 1.0;
+    } else {
+        m -= 1.0;
+    }
+    let z = m * m;
+    let mut p = 7.037_683_6e-2_f32;
+    p = p * m - 1.151_461e-1;
+    p = p * m + 1.167_699_9e-1;
+    p = p * m - 1.242_014_1e-1;
+    p = p * m + 1.424_932_3e-1;
+    p = p * m - 1.666_805_7e-1;
+    p = p * m + 2.000_071_5e-1;
+    p = p * m - 2.499_999_4e-1;
+    p = p * m + 3.333_333_1e-1;
+    let mut r = m * z * p;
+    let ef = e as f32;
+    r += -2.121_944_4e-4 * ef;
+    r -= 0.5 * z;
+    r = m + r;
+    r += 0.693_359_375 * ef;
+    r
+}
+
+/// log2(x).
+#[inline]
+pub fn log2(x: f32) -> f32 {
+    log(x) * core::f32::consts::LOG2_E
+}
+
+const FOPI: f32 = 1.273_239_5; // 4/pi
+const DP1: f32 = 0.785_156_25;
+const DP2: f32 = 2.418_756_5e-4;
+const DP3: f32 = 3.774_895e-8;
+
+/// Cephes-style octant reduction: returns (octant mod 8, reduced arg).
+#[inline]
+fn sincos_reduce(ax: f32) -> (i32, f32) {
+    let mut j = (ax * FOPI) as i64;
+    if j & 1 == 1 {
+        j += 1;
+    }
+    let y = j as f32;
+    let r = ((ax - y * DP1) - y * DP2) - y * DP3;
+    ((j & 7) as i32, r)
+}
+
+#[inline]
+fn sin_poly(r: f32) -> f32 {
+    let z = r * r;
+    ((-1.951_529_6e-4 * z + 8.332_161e-3) * z - 1.666_665_5e-1) * z * r + r
+}
+
+#[inline]
+fn cos_poly(r: f32) -> f32 {
+    let z = r * r;
+    ((2.443_315_7e-5 * z - 1.388_731_6e-3) * z + 4.166_664_6e-2) * z * z - 0.5 * z + 1.0
+}
+
+/// sin(x) via Cephes-style reduction + polynomials. Accuracy degrades for
+/// |x| ≳ 8192·π as with any single-precision payne-hanek-free reduction.
+#[inline]
+pub fn sin(x: f32) -> f32 {
+    let mut sign = signbit(x);
+    let ax = fabs(x);
+    let (mut j, r) = sincos_reduce(ax);
+    if j > 3 {
+        sign = !sign;
+        j -= 4;
+    }
+    let v = if j == 1 || j == 2 { cos_poly(r) } else { sin_poly(r) };
+    if sign {
+        -v
+    } else {
+        v
+    }
+}
+
+/// cos(x).
+#[inline]
+pub fn cos(x: f32) -> f32 {
+    let ax = fabs(x);
+    let (mut j, r) = sincos_reduce(ax);
+    let mut sign = false;
+    if j > 3 {
+        j -= 4;
+        sign = !sign;
+    }
+    if j > 1 {
+        sign = !sign;
+    }
+    let v = if j == 1 || j == 2 { sin_poly(r) } else { cos_poly(r) };
+    if sign {
+        -v
+    } else {
+        v
+    }
+}
+
+/// tan(x) = sin/cos.
+#[inline]
+pub fn tan(x: f32) -> f32 {
+    sin(x) / cos(x)
+}
+
+/// x^y for x > 0 (general signs handled per OpenCL pow rules minimally).
+#[inline]
+pub fn pow(x: f32, y: f32) -> f32 {
+    if x == 0.0 {
+        return if y == 0.0 { 1.0 } else { 0.0 };
+    }
+    if x < 0.0 {
+        // Integer exponents keep sign semantics.
+        let yi = y as i32;
+        if y == yi as f32 {
+            let v = exp(log(-x) * y);
+            return if yi & 1 == 1 { -v } else { v };
+        }
+        return f32::NAN;
+    }
+    exp(log(x) * y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel(a: f32, b: f32) -> f32 {
+        if b == 0.0 {
+            a.abs()
+        } else {
+            ((a - b) / b).abs()
+        }
+    }
+
+    #[test]
+    fn bit_manipulation_functions() {
+        assert_eq!(fabs(-2.5), 2.5);
+        assert!(signbit(-0.0));
+        assert!(!signbit(1.0));
+        assert_eq!(copysign(3.0, -1.0), -3.0);
+    }
+
+    #[test]
+    fn newton_sqrt_matches_hardware() {
+        for &x in &[1e-6f32, 0.25, 1.0, 2.0, 3.14159, 1e6] {
+            assert!(rel(sqrt_newton(x), x.sqrt()) < 1e-6, "sqrt({x})");
+        }
+        assert_eq!(sqrt_newton(0.0), 0.0);
+        assert!(sqrt_newton(-1.0).is_nan());
+    }
+
+    #[test]
+    fn exp_accuracy() {
+        let mut x = -80.0f32;
+        while x < 80.0 {
+            assert!(rel(exp(x), x.exp()) < 3e-6, "exp({x}) = {} vs {}", exp(x), x.exp());
+            x += 0.37;
+        }
+        assert_eq!(exp(0.0), 1.0);
+    }
+
+    #[test]
+    fn log_accuracy() {
+        let mut x = 1e-30f32;
+        while x < 1e30 {
+            assert!(rel(log(x), x.ln()) < 3e-6, "log({x}) = {} vs {}", log(x), x.ln());
+            x *= 7.3;
+        }
+        assert_eq!(log(1.0), 0.0);
+        assert_eq!(log(0.0), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn sin_cos_accuracy() {
+        let mut x = -50.0f32;
+        while x < 50.0 {
+            assert!((sin(x) - x.sin()).abs() < 2e-6, "sin({x}) = {} vs {}", sin(x), x.sin());
+            assert!((cos(x) - x.cos()).abs() < 2e-6, "cos({x}) = {} vs {}", cos(x), x.cos());
+            x += 0.0917;
+        }
+    }
+
+    #[test]
+    fn pow_cases() {
+        assert!(rel(pow(2.0, 10.0), 1024.0) < 1e-5);
+        assert!(rel(pow(3.0, 0.5), 3.0f32.sqrt()) < 1e-5);
+        assert_eq!(pow(-2.0, 2.0), 4.0);
+        assert_eq!(pow(-2.0, 3.0), -8.0);
+        assert!(pow(-2.0, 0.5).is_nan());
+        assert_eq!(pow(0.0, 0.0), 1.0);
+    }
+}

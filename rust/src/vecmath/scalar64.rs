@@ -1,0 +1,258 @@
+//! f64 elemental functions: same structure as `scalar32` but with series
+//! carried far enough for double precision (terms below 1e-16 on the
+//! reduced ranges).
+
+/// |x| via sign-bit clearing.
+#[inline]
+pub fn fabs(x: f64) -> f64 {
+    f64::from_bits(x.to_bits() & 0x7FFF_FFFF_FFFF_FFFF)
+}
+
+/// Sign bit test.
+#[inline]
+pub fn signbit(x: f64) -> bool {
+    x.to_bits() >> 63 != 0
+}
+
+/// Hardware square root.
+#[inline]
+pub fn sqrt(x: f64) -> f64 {
+    x.sqrt()
+}
+
+/// Newton square root (validation of the §5.1 algorithm in f64).
+#[inline]
+pub fn sqrt_newton(x: f64) -> f64 {
+    if x <= 0.0 {
+        return if x == 0.0 { 0.0 } else { f64::NAN };
+    }
+    let b = x.to_bits();
+    let e = ((b >> 52) & 0x7FF) as i64 - 1023;
+    let guess = f64::from_bits((((e / 2 + 1023) as u64) << 52) | ((b & 0x000F_FFFF_FFFF_FFFF) >> 1));
+    let mut r = guess.max(f64::MIN_POSITIVE);
+    for _ in 0..6 {
+        r = 0.5 * (r + x / r);
+    }
+    r
+}
+
+/// exp(x): reduce to r ∈ [-ln2/2, ln2/2], Taylor series to r¹²/12!
+/// (max term ≈ 6e-15 on the range), scale by 2^k via exponent bits.
+#[inline]
+pub fn exp(x: f64) -> f64 {
+    if x > 709.78 {
+        return f64::INFINITY;
+    }
+    if x < -745.0 {
+        return 0.0;
+    }
+    const LOG2E: f64 = core::f64::consts::LOG2_E;
+    const LN2_HI: f64 = 6.931_471_803_691_238e-1;
+    const LN2_LO: f64 = 1.908_214_929_270_587_7e-10;
+    let k = (x * LOG2E).round();
+    let r = (x - k * LN2_HI) - k * LN2_LO;
+    // Horner Taylor: sum r^n / n!
+    let mut p = 1.0 / 479_001_600.0; // 1/12!
+    p = p * r + 1.0 / 39_916_800.0;
+    p = p * r + 1.0 / 3_628_800.0;
+    p = p * r + 1.0 / 362_880.0;
+    p = p * r + 1.0 / 40_320.0;
+    p = p * r + 1.0 / 5_040.0;
+    p = p * r + 1.0 / 720.0;
+    p = p * r + 1.0 / 120.0;
+    p = p * r + 1.0 / 24.0;
+    p = p * r + 1.0 / 6.0;
+    p = p * r + 0.5;
+    p = p * r + 1.0;
+    p = p * r + 1.0;
+    let two_k = f64::from_bits(((k as i64 + 1023) as u64) << 52);
+    p * two_k
+}
+
+/// ln(x): mantissa in [√½, √2), atanh series 2·Σ r^(2n+1)/(2n+1) with
+/// r = (m−1)/(m+1), |r| ≤ 0.1716 so r¹⁹/19 ≈ 3e-16.
+#[inline]
+pub fn log(x: f64) -> f64 {
+    if x <= 0.0 {
+        return if x == 0.0 { f64::NEG_INFINITY } else { f64::NAN };
+    }
+    let b = x.to_bits();
+    let mut e = ((b >> 52) & 0x7FF) as i64 - 1022;
+    let mut m = f64::from_bits((b & 0x000F_FFFF_FFFF_FFFF) | (1022u64 << 52)); // [0.5,1)
+    if m < core::f64::consts::FRAC_1_SQRT_2 {
+        e -= 1;
+        m *= 2.0;
+    }
+    let r = (m - 1.0) / (m + 1.0);
+    let z = r * r;
+    let mut p = 1.0 / 19.0;
+    p = p * z + 1.0 / 17.0;
+    p = p * z + 1.0 / 15.0;
+    p = p * z + 1.0 / 13.0;
+    p = p * z + 1.0 / 11.0;
+    p = p * z + 1.0 / 9.0;
+    p = p * z + 1.0 / 7.0;
+    p = p * z + 1.0 / 5.0;
+    p = p * z + 1.0 / 3.0;
+    p = p * z + 1.0;
+    2.0 * r * p + e as f64 * core::f64::consts::LN_2
+}
+
+const FOPI: f64 = 1.273_239_544_735_162_7; // 4/pi
+const DP1: f64 = 7.853_981_554_508_209e-1;
+const DP2: f64 = 7.946_627_356_147_928e-9;
+const DP3: f64 = 3.061_616_997_868_383e-17;
+
+#[inline]
+fn reduce(ax: f64) -> (i64, f64) {
+    let mut j = (ax * FOPI) as i64;
+    if j & 1 == 1 {
+        j += 1;
+    }
+    let y = j as f64;
+    let r = ((ax - y * DP1) - y * DP2) - y * DP3;
+    (j & 7, r)
+}
+
+/// Taylor sine on |r| ≤ π/4 to r¹⁵ (max term ≈ 2e-14·r).
+#[inline]
+fn sin_poly(r: f64) -> f64 {
+    let z = r * r;
+    let mut p = -1.0 / 1_307_674_368_000.0; // -1/15!
+    p = p * z + 1.0 / 6_227_020_800.0;
+    p = p * z - 1.0 / 39_916_800.0;
+    p = p * z + 1.0 / 362_880.0;
+    p = p * z - 1.0 / 5_040.0;
+    p = p * z + 1.0 / 120.0;
+    p = p * z - 1.0 / 6.0;
+    p * z * r + r
+}
+
+/// Taylor cosine on |r| ≤ π/4 to r¹⁴: cos = 1 − z/2 + z²·P(z), z = r².
+#[inline]
+fn cos_poly(r: f64) -> f64 {
+    let z = r * r;
+    let mut p = -1.0 / 87_178_291_200.0; // -1/14!
+    p = p * z + 1.0 / 479_001_600.0;
+    p = p * z - 1.0 / 3_628_800.0;
+    p = p * z + 1.0 / 40_320.0;
+    p = p * z - 1.0 / 720.0;
+    p = p * z + 1.0 / 24.0;
+    p * z * z - 0.5 * z + 1.0
+}
+
+/// sin(x).
+#[inline]
+pub fn sin(x: f64) -> f64 {
+    let mut sign = signbit(x);
+    let (mut j, r) = reduce(fabs(x));
+    if j > 3 {
+        sign = !sign;
+        j -= 4;
+    }
+    let v = if j == 1 || j == 2 { cos_poly(r) } else { sin_poly(r) };
+    if sign {
+        -v
+    } else {
+        v
+    }
+}
+
+/// cos(x).
+#[inline]
+pub fn cos(x: f64) -> f64 {
+    let (mut j, r) = reduce(fabs(x));
+    let mut sign = false;
+    if j > 3 {
+        j -= 4;
+        sign = !sign;
+    }
+    if j > 1 {
+        sign = !sign;
+    }
+    let v = if j == 1 || j == 2 { sin_poly(r) } else { cos_poly(r) };
+    if sign {
+        -v
+    } else {
+        v
+    }
+}
+
+/// x^y (positive base via exp∘log; negative handled for integer y).
+#[inline]
+pub fn pow(x: f64, y: f64) -> f64 {
+    if x == 0.0 {
+        return if y == 0.0 { 1.0 } else { 0.0 };
+    }
+    if x < 0.0 {
+        let yi = y as i64;
+        if y == yi as f64 {
+            let v = exp(log(-x) * y);
+            return if yi & 1 == 1 { -v } else { v };
+        }
+        return f64::NAN;
+    }
+    exp(log(x) * y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel(a: f64, b: f64) -> f64 {
+        if b == 0.0 {
+            a.abs()
+        } else {
+            ((a - b) / b).abs()
+        }
+    }
+
+    #[test]
+    fn exp_accuracy() {
+        let mut x = -700.0f64;
+        while x < 700.0 {
+            assert!(rel(exp(x), x.exp()) < 1e-13, "exp({x})");
+            x += 13.37;
+        }
+        assert_eq!(exp(0.0), 1.0);
+        assert_eq!(exp(800.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn log_accuracy() {
+        let mut x = 1e-300f64;
+        while x < 1e300 {
+            assert!(rel(log(x), x.ln()) < 1e-13, "log({x})");
+            x *= 911.7;
+        }
+    }
+
+    #[test]
+    fn sin_cos_accuracy() {
+        let mut x = -300.0f64;
+        while x < 300.0 {
+            assert!((sin(x) - x.sin()).abs() < 1e-12, "sin({x}): {} vs {}", sin(x), x.sin());
+            assert!((cos(x) - x.cos()).abs() < 1e-12, "cos({x})");
+            x += 0.617;
+        }
+    }
+
+    #[test]
+    fn newton_sqrt() {
+        for &x in &[1e-12, 0.25, 2.0, 1e12] {
+            assert!(rel(sqrt_newton(x), x.sqrt()) < 1e-14, "sqrt({x})");
+        }
+    }
+
+    #[test]
+    fn bit_ops() {
+        assert_eq!(fabs(-1.5), 1.5);
+        assert!(signbit(-0.0));
+    }
+
+    #[test]
+    fn pow_matches_std() {
+        assert!(rel(pow(2.0, 10.0), 1024.0) < 1e-12);
+        assert!(rel(pow(9.0, 0.5), 3.0) < 1e-12);
+    }
+}

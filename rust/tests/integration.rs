@@ -1,0 +1,75 @@
+//! Cross-cutting integration tests: host API flows, the §4.1 cache, the
+//! PJRT runtime against a generated artifact, and Table 1 reporting.
+
+use std::sync::Arc;
+
+use poclrs::cl::{CommandQueue, Context, Kernel, KernelArg, Platform, Program};
+use poclrs::kcc::CompileOptions;
+
+#[test]
+fn specialization_cache_shared_across_enqueues() {
+    let platform = Platform::default_platform();
+    let ctx = Arc::new(Context::new(platform.device("basic-serial").unwrap()));
+    let mut q = CommandQueue::new(ctx.clone());
+    let program = Program::build(
+        "__kernel void k(__global float *x) { x[get_global_id(0)] += 1.0f; }",
+    )
+    .unwrap();
+    let buf = ctx.create_buffer(64 * 4).unwrap();
+    ctx.write_f32(buf, &vec![0.0; 64]).unwrap();
+    let mut k = Kernel::new(&program, "k").unwrap();
+    k.set_arg(0, KernelArg::Buf(buf)).unwrap();
+    for _ in 0..5 {
+        q.enqueue_nd_range(&program, &k, [64, 1, 1], [16, 1, 1]).unwrap();
+    }
+    q.enqueue_nd_range(&program, &k, [64, 1, 1], [32, 1, 1]).unwrap();
+    assert_eq!(*program.cache_misses.lock().unwrap(), 2, "two local sizes → two compiles");
+    assert_eq!(*program.cache_hits.lock().unwrap(), 4);
+    let out = ctx.read_f32(buf, 64).unwrap();
+    assert!(out.iter().all(|&v| v == 6.0));
+}
+
+#[test]
+fn capability_table_is_table1_shaped() {
+    let platform = Platform::default_platform();
+    let t = platform.capability_table();
+    // The Table 1 axes: TLP / ILP / DLP per device.
+    assert!(t.contains("TLP") && t.contains("ILP") && t.contains("DLP"));
+    assert!(t.lines().count() >= 6);
+}
+
+#[test]
+fn pjrt_runtime_roundtrip_if_artifacts_exist() {
+    // Soft-skip when `make artifacts` hasn't run (CI without python).
+    let path = std::path::Path::new("artifacts/matmul.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use poclrs::runtime::{ArgData, ArgSpec, PjrtRuntime};
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load(path).unwrap();
+    let n = 64usize;
+    let a = vec![1.0f32; n * n];
+    let b = vec![2.0f32; n * n];
+    let spec = ArgSpec::f32(&[n * n]);
+    let out = exe
+        .execute_f32(&[(ArgData::F32(&a), &spec), (ArgData::F32(&b), &spec)])
+        .unwrap();
+    assert_eq!(out[0].len(), n * n);
+    assert!(out[0].iter().all(|&v| (v - 2.0 * n as f32).abs() < 1e-3));
+    // Second load hits the executable cache.
+    let _ = rt.load(path).unwrap();
+    assert_eq!(rt.cached(), 1);
+}
+
+#[test]
+fn spmd_options_respected_for_pjrt_style_devices() {
+    let m = poclrs::frontend::compile(
+        "__kernel void k(__global float *x) { x[get_global_id(0)] = 1.0f; }",
+    )
+    .unwrap();
+    let opts = CompileOptions { spmd: true, ..Default::default() };
+    let wgf = poclrs::kcc::compile_workgroup(&m.kernels[0], [64, 1, 1], &opts).unwrap();
+    assert_eq!(wgf.stats.wi_loops, 0, "SPMD path skips WI-loop materialisation");
+}

@@ -1,0 +1,19 @@
+use std::sync::Arc;
+use std::time::Instant;
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::suite::{app_by_name, runner, SizeClass};
+
+/// Perf probe used by the §Perf iteration log. Ignored by default
+/// (meaningful only in --release): `cargo test --release --test perf_probe -- --ignored --nocapture`.
+#[test]
+#[ignore]
+fn perf_probe() {
+    for name in ["Mandelbrot", "MatrixMultiplication"] {
+        let app = app_by_name(name, SizeClass::Bench).unwrap();
+        let d: Arc<dyn Device> = Arc::new(BasicDevice::new(EngineKind::Gang(8)));
+        runner::run_and_verify(&app, d.clone()).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..3 { runner::run_on_device(&app, d.clone()).unwrap(); }
+        println!("PERF {name}: {:.1} ms/run", t0.elapsed().as_secs_f64()*1e3/3.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! Property tests for Bufalloc: random alloc/free interleavings keep the
+//! chunk-list invariants (tiling, ordering, coalescing) intact.
+
+use poclrs::bufalloc::Bufalloc;
+use poclrs::testing::{check, Rng};
+
+fn random_workout(rng: &mut Rng, greedy: bool) {
+    let region = 1 << 16;
+    let mut b = Bufalloc::new(region, 64, greedy);
+    let mut live: Vec<(usize, usize)> = Vec::new();
+    for _ in 0..200 {
+        if rng.bool() || live.is_empty() {
+            let size = rng.range(1, 4096);
+            match b.alloc(size) {
+                Ok(off) => {
+                    // No overlap with any live allocation.
+                    for &(o, s) in &live {
+                        assert!(off + size <= o || o + s <= off, "overlap at {off}");
+                    }
+                    live.push((off, size));
+                }
+                Err(_) => {
+                    // OOM acceptable only when pressure is real.
+                    assert!(b.largest_free() < size + 64);
+                }
+            }
+        } else {
+            let idx = rng.below(live.len());
+            let (off, _) = live.swap_remove(idx);
+            b.free(off).unwrap();
+        }
+        b.check_invariants().unwrap();
+    }
+    for (off, _) in live {
+        b.free(off).unwrap();
+    }
+    b.check_invariants().unwrap();
+    assert_eq!(b.allocated(), 0);
+    assert_eq!(b.chunk_count(), 1, "all memory coalesced back");
+}
+
+#[test]
+fn prop_bufalloc_first_fit() {
+    check(25, |rng| random_workout(rng, false));
+}
+
+#[test]
+fn prop_bufalloc_greedy() {
+    check(25, |rng| random_workout(rng, true));
+}

@@ -1,0 +1,95 @@
+//! Property tests over the kernel compiler: for a family of generated
+//! kernels (random barrier placement, conditional barriers, b-loops) and
+//! random launch geometries, (1) the structural invariants hold and
+//! (2) all engines agree bit-for-bit.
+
+use std::sync::Arc;
+
+use poclrs::cl::{CommandQueue, Context, Kernel, KernelArg, Program};
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::testing::{check, Rng};
+
+/// Generate a random kernel from a template family that exercises
+/// barriers, conditional barriers, loops and private state.
+fn gen_kernel(rng: &mut Rng) -> String {
+    let mut body = String::from(
+        "size_t i = get_local_id(0);\n size_t g = get_global_id(0);\n float v = x[g];\n",
+    );
+    let stmts = rng.range(1, 4);
+    for s in 0..stmts {
+        match rng.below(5) {
+            0 => body.push_str("v = v * 1.5f + 1.0f;\n"),
+            // Every template ends with a barrier after its last read of
+            // `t`, so composed statements never race on local memory
+            // (reads and writes of `t` in the same parallel region are UB
+            // and engines could legitimately differ).
+            1 => body.push_str(
+                "t[i] = v;\n barrier(CLK_LOCAL_MEM_FENCE);\n v = t[(i + 1u) % get_local_size(0)];\n barrier(CLK_LOCAL_MEM_FENCE);\n",
+            ),
+            2 => body.push_str(&format!(
+                "for (int k{s} = 0; k{s} < {}; k{s}++) {{\n t[i] = v;\n barrier(CLK_LOCAL_MEM_FENCE);\n v += t[(i + {}u) % get_local_size(0)];\n barrier(CLK_LOCAL_MEM_FENCE);\n }}\n",
+                rng.range(1, 3),
+                rng.range(1, 3)
+            )),
+            3 => body.push_str(&format!(
+                "if (c > {}) {{\n t[i] = v + 2.0f;\n barrier(CLK_LOCAL_MEM_FENCE);\n v = t[0];\n barrier(CLK_LOCAL_MEM_FENCE);\n }}\n",
+                rng.below(2)
+            )),
+            _ => body.push_str("if (v > 2.0f) { v = v - 1.0f; } else { v = v + 3.0f; }\n"),
+        }
+    }
+    body.push_str("x[g] = v;\n");
+    format!("__kernel void k(__global float *x, __local float *t, int c) {{\n{body}\n}}")
+}
+
+fn run_engine(src: &str, engine: EngineKind, input: &[f32], local: usize, c: i32) -> Vec<f32> {
+    let device: Arc<dyn Device> = Arc::new(BasicDevice::new(engine));
+    let ctx = Arc::new(Context::new(device));
+    let mut q = CommandQueue::new(ctx.clone());
+    let program = Program::build(src).unwrap();
+    let x = ctx.create_buffer(input.len() * 4).unwrap();
+    ctx.write_f32(x, input).unwrap();
+    let mut k = Kernel::new(&program, "k").unwrap();
+    k.set_arg(0, KernelArg::Buf(x)).unwrap();
+    k.set_arg(1, KernelArg::LocalSize(local * 4)).unwrap();
+    k.set_arg(2, KernelArg::I32(c)).unwrap();
+    q.enqueue_nd_range(&program, &k, [input.len(), 1, 1], [local, 1, 1]).unwrap();
+    ctx.read_f32(x, input.len()).unwrap()
+}
+
+#[test]
+fn prop_engines_agree_on_random_barrier_kernels() {
+    check(30, |rng| {
+        let src = gen_kernel(rng);
+        let local = *rng.pick(&[2usize, 4, 8]);
+        let groups = rng.range(1, 3);
+        let n = local * groups;
+        let input = rng.f32s(n, 0.0, 4.0);
+        let c = rng.below(3) as i32;
+        let serial = run_engine(&src, EngineKind::Serial, &input, local, c);
+        for engine in [EngineKind::Gang(4), EngineKind::Gang(8), EngineKind::Fiber] {
+            let got = run_engine(&src, engine, &input, local, c);
+            assert_eq!(serial, got, "engine {engine:?} disagrees\nkernel:\n{src}");
+        }
+    });
+}
+
+#[test]
+fn prop_compiler_invariants_on_random_kernels() {
+    use poclrs::kcc::{compile_workgroup, taildup, CompileOptions};
+    check(40, |rng| {
+        let src = gen_kernel(rng);
+        let m = poclrs::frontend::compile(&src).unwrap();
+        let local = [*rng.pick(&[1usize, 3, 8]), 1, 1];
+        let wgf = compile_workgroup(&m.kernels[0], local, &CompileOptions::default()).unwrap();
+        // Invariants: verified IR both forms; ≤1 imm pred per barrier in
+        // region form; no barriers left in loop form.
+        poclrs::ir::verify::verify(&wgf.reg_fn).unwrap();
+        poclrs::ir::verify::verify(&wgf.loop_fn).unwrap();
+        assert!(taildup::max_imm_preds(&wgf.reg_fn) <= 1, "Prop.1 fixed point\n{src}");
+        assert_eq!(poclrs::ir::verify::barrier_count(&wgf.loop_fn), 0);
+        // Region sanity.
+        poclrs::kcc::regions::check_regions(&wgf.reg_fn, &wgf.regions)
+            .unwrap_or_else(|e| panic!("{e}\n{src}"));
+    });
+}

@@ -1,0 +1,47 @@
+//! Integration: every suite application must produce baseline-identical
+//! results on every CPU-style device (the correctness half of Fig. 12-14).
+
+use std::sync::Arc;
+
+use poclrs::devices::{basic::BasicDevice, threaded::ThreadedDevice, ttasim::TtaSimDevice, Device, EngineKind};
+use poclrs::suite::{all_apps, runner, SizeClass};
+
+fn devices() -> Vec<(&'static str, Arc<dyn Device>)> {
+    vec![
+        ("basic-serial", Arc::new(BasicDevice::new(EngineKind::Serial)) as Arc<dyn Device>),
+        ("basic-gang8", Arc::new(BasicDevice::new(EngineKind::Gang(8)))),
+        ("basic-gang4", Arc::new(BasicDevice::new(EngineKind::Gang(4)))),
+        ("basic-fiber", Arc::new(BasicDevice::new(EngineKind::Fiber))),
+        ("pthread-gang8", Arc::new(ThreadedDevice::new(EngineKind::Gang(8), 4))),
+    ]
+}
+
+#[test]
+fn all_apps_verify_on_all_devices() {
+    let mut failures = Vec::new();
+    for (dname, device) in devices() {
+        for app in all_apps(SizeClass::Small) {
+            if let Err(e) = runner::run_and_verify(&app, device.clone()) {
+                failures.push(format!("{dname}/{}: {e}", app.name));
+            }
+        }
+    }
+    assert!(failures.is_empty(), "suite failures:\n{}", failures.join("\n"));
+}
+
+#[test]
+fn all_apps_verify_on_ttasim_both_modes() {
+    let mut failures = Vec::new();
+    for horizontal in [false, true] {
+        let device: Arc<dyn Device> = Arc::new(TtaSimDevice::new(horizontal));
+        for app in all_apps(SizeClass::Small) {
+            match runner::run_and_verify(&app, device.clone()) {
+                Ok(r) => {
+                    assert!(r.stats.cycles > 0, "{}: cycle model engaged", app.name);
+                }
+                Err(e) => failures.push(format!("ttasim(h={horizontal})/{}: {e}", app.name)),
+            }
+        }
+    }
+    assert!(failures.is_empty(), "ttasim failures:\n{}", failures.join("\n"));
+}
