@@ -12,7 +12,7 @@ use poclrs::devices::ttasim::TtaSimDevice;
 use poclrs::devices::Device;
 use poclrs::suite::{apps::dct, runner, SizeClass};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let app = dct::build(SizeClass::Bench);
     let mut cycles = Vec::new();
     for horizontal in [false, true] {

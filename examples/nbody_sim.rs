@@ -8,12 +8,12 @@ use poclrs::cl::{CommandQueue, Context, Kernel, KernelArg, Platform, Program};
 use poclrs::suite::apps::nbody;
 use poclrs::suite::{BufInit, SizeClass};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let app = nbody::build(SizeClass::Small);
     let n = 64usize;
     let platform = Platform::default_platform();
-    let ctx = Arc::new(Context::new(platform.device("pthread-gang(8)").unwrap()));
-    let mut queue = CommandQueue::new(ctx.clone());
+    let ctx = Arc::new(Context::new(platform.find_device("pthread-gang(8)")?));
+    let queue = CommandQueue::new(ctx.clone());
     let program = Program::build(app.source)?;
 
     let BufInit::F32(pos0) = &app.buffers[0] else { unreachable!() };
@@ -36,13 +36,18 @@ fn main() -> anyhow::Result<()> {
         k.set_arg(4, KernelArg::U32(n as u32))?;
         k.set_arg(5, KernelArg::F32(0.005))?;
         k.set_arg(6, KernelArg::F32(50.0))?;
-        queue.enqueue_nd_range(&program, &k, [n, 1, 1], [64, 1, 1])?;
+        // In-order queue: steps chain implicitly; no wait-list needed.
+        queue.enqueue_nd_range(&program, &k, [n, 1, 1], [64, 1, 1], &[])?;
         if step % 5 == 4 {
-            let p = ctx.read_f32(dst_p, n * 4)?;
+            // Reading through the queue keeps the read ordered behind
+            // the steps enqueued so far.
+            let rd = queue.enqueue_read_buffer(dst_p, 0, n * 16, &[])?;
+            let p: Vec<f32> = rd.wait_vec()?;
             let com: f32 = p.chunks(4).map(|b| b[0]).sum::<f32>() / n as f32;
             println!("step {:>3}: centre-of-mass x = {com:.4}", step + 1);
         }
     }
+    queue.finish()?;
     println!(
         "{} enqueues, kernel compiled once (cache hits: {})",
         steps,

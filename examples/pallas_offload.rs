@@ -21,7 +21,7 @@ use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
 use poclrs::runtime::ArgSpec;
 use poclrs::suite::{app_by_name, runner, SizeClass};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let art = |name: &str| format!("artifacts/{name}.hlo.txt");
     for name in ["matmul", "blackscholes", "nbody"] {
         if !std::path::Path::new(&art(name)).exists() {

@@ -16,11 +16,11 @@ __kernel void vecadd(__global const float *a, __global const float *b, __global 
 }
 "#;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Platform + device discovery (Table 1).
     let platform = Platform::default_platform();
     println!("platform `{}`:\n{}", platform.name, platform.capability_table());
-    let device = platform.device("pthread-gang(8)").expect("device");
+    let device = platform.find_device("pthread-gang(8)")?;
 
     // 2. Context, program, buffers.
     let ctx = Arc::new(Context::new(device));
@@ -31,25 +31,30 @@ fn main() -> anyhow::Result<()> {
     let c = ctx.create_buffer(n * 4)?;
     let av: Vec<f32> = (0..n).map(|i| i as f32).collect();
     let bv: Vec<f32> = (0..n).map(|i| (2 * i) as f32).collect();
-    ctx.write_f32(a, &av)?;
-    ctx.write_f32(b, &bv)?;
 
-    // 3. Kernel + enqueue.
+    // 3. Kernel + deferred enqueues on an (in-order) queue: the writes,
+    //    the launch, and the read are all commands with live events.
     let mut kernel = Kernel::new(&program, "vecadd")?;
     kernel.set_arg(0, KernelArg::Buf(a))?;
     kernel.set_arg(1, KernelArg::Buf(b))?;
     kernel.set_arg(2, KernelArg::Buf(c))?;
-    let mut queue = CommandQueue::new(ctx.clone());
-    let ev = queue.enqueue_nd_range(&program, &kernel, [n, 1, 1], [64, 1, 1])?;
+    let queue = CommandQueue::new(ctx.clone());
+    let wa = queue.enqueue_write_slice(a, &av, &[])?;
+    let wb = queue.enqueue_write_slice(b, &bv, &[])?;
+    let ev = queue.enqueue_nd_range(&program, &kernel, [n, 1, 1], [64, 1, 1], &[wa, wb])?;
+    let rd = queue.enqueue_read_buffer(c, 0, n * 4, &[ev.clone()])?;
+    queue.flush();
+
+    // 4. Wait on the events and verify.
+    let out: Vec<f32> = rd.wait_vec()?;
+    let stats = ev.wait()?;
     println!(
         "vecadd: {} work-groups in {:.3} ms",
-        ev.stats.workgroups,
-        ev.duration_ns as f64 / 1e6
+        stats.workgroups,
+        ev.duration_ns() as f64 / 1e6
     );
-
-    // 4. Verify.
-    let out = ctx.read_f32(c, n)?;
     assert!(out.iter().enumerate().all(|(i, &v)| v == 3.0 * i as f32));
     println!("OK: c[i] == 3*i for all {n} elements");
+    queue.finish()?;
     Ok(())
 }

@@ -1,0 +1,165 @@
+//! Deferred commands: everything a queue can execute.
+//!
+//! A [`Command`] is a fully-resolved, self-contained unit of device work:
+//! kernel launches carry their enqueue-time-specialised work-group
+//! function (§4.1) and resolved argument values, transfers carry owned
+//! host data. Commands are `Send`, so the queue's scheduler can run them
+//! on worker threads; the same `execute` path also backs the context's
+//! blocking typed helpers, so immediate and deferred transfers share one
+//! implementation.
+
+use std::sync::Arc;
+
+use crate::cl::context::{Buffer, Context};
+use crate::cl::error::Result;
+use crate::devices::{LaunchRequest, LaunchStats};
+use crate::exec::VVal;
+use crate::kcc::WorkGroupFunction;
+
+/// One unit of queued device work (the `clEnqueue*` families).
+pub enum Command {
+    /// ND-range kernel launch (`clEnqueueNDRangeKernel`).
+    NdRange {
+        /// Kernel name (for event labels).
+        kernel: String,
+        /// Enqueue-time-specialised work-group function.
+        wgf: Arc<WorkGroupFunction>,
+        /// Resolved argument values.
+        args: Vec<VVal>,
+        /// Buffers referenced by the args (re-validated at execution so a
+        /// launch can't touch memory released while it was queued).
+        buffers: Vec<Buffer>,
+        /// Work-groups per dimension.
+        groups: [usize; 3],
+        /// Work dimensions.
+        work_dim: u32,
+        /// Local memory bytes per work-group.
+        local_mem: usize,
+    },
+    /// Host → device transfer (`clEnqueueWriteBuffer`); the host data is
+    /// owned by the command.
+    WriteBuffer {
+        /// Destination buffer.
+        buf: Buffer,
+        /// Byte offset within the buffer.
+        offset: usize,
+        /// Bytes to write.
+        data: Vec<u8>,
+    },
+    /// Device → host transfer (`clEnqueueReadBuffer`); the data is
+    /// delivered through the event's payload.
+    ReadBuffer {
+        /// Source buffer.
+        buf: Buffer,
+        /// Byte offset within the buffer.
+        offset: usize,
+        /// Bytes to read.
+        len: usize,
+    },
+    /// Device → device copy (`clEnqueueCopyBuffer`).
+    CopyBuffer {
+        /// Source buffer.
+        src: Buffer,
+        /// Destination buffer.
+        dst: Buffer,
+        /// Byte offset within `src`.
+        src_offset: usize,
+        /// Byte offset within `dst`.
+        dst_offset: usize,
+        /// Bytes to copy.
+        len: usize,
+    },
+    /// Pattern fill (`clEnqueueFillBuffer`).
+    FillBuffer {
+        /// Destination buffer.
+        buf: Buffer,
+        /// Byte offset within the buffer.
+        offset: usize,
+        /// Fill pattern (repeated).
+        pattern: Vec<u8>,
+        /// Bytes to fill (multiple of the pattern length).
+        len: usize,
+    },
+    /// Synchronisation point that completes when its wait-list does
+    /// (`clEnqueueMarkerWithWaitList`).
+    Marker,
+    /// Out-of-order execution fence: later commands implicitly wait on it
+    /// (`clEnqueueBarrierWithWaitList`).
+    Barrier,
+}
+
+/// What executing a command produces.
+pub(crate) struct CommandOutput {
+    /// Device statistics (kernel launches).
+    pub stats: LaunchStats,
+    /// Result bytes (buffer reads).
+    pub payload: Option<Vec<u8>>,
+}
+
+impl CommandOutput {
+    fn empty() -> CommandOutput {
+        CommandOutput { stats: LaunchStats::default(), payload: None }
+    }
+}
+
+impl Command {
+    /// Short label for events and logs.
+    pub fn label(&self) -> String {
+        match self {
+            Command::NdRange { kernel, .. } => kernel.clone(),
+            Command::WriteBuffer { .. } => "write_buffer".to_string(),
+            Command::ReadBuffer { .. } => "read_buffer".to_string(),
+            Command::CopyBuffer { .. } => "copy_buffer".to_string(),
+            Command::FillBuffer { .. } => "fill_buffer".to_string(),
+            Command::Marker => "marker".to_string(),
+            Command::Barrier => "barrier".to_string(),
+        }
+    }
+
+    /// Execute against the context. Called from queue workers and from the
+    /// context's blocking helpers.
+    pub(crate) fn execute(&self, ctx: &Context) -> Result<CommandOutput> {
+        match self {
+            Command::NdRange { wgf, args, buffers, groups, work_dim, local_mem, .. } => {
+                for b in buffers {
+                    ctx.check_live(b)?;
+                }
+                let req = LaunchRequest {
+                    wgf: Arc::clone(wgf),
+                    args: args.clone(),
+                    groups: *groups,
+                    offset: [0; 3],
+                    work_dim: *work_dim,
+                    local_mem: *local_mem,
+                };
+                // SAFETY: commands that run concurrently were declared
+                // independent by the client (no wait-list edge between
+                // them); per the OpenCL execution model, racy access to
+                // the same memory from independent commands is UB in the
+                // *client* program — the same contract the threaded
+                // device applies to work-groups.
+                let global = unsafe { ctx.global.view() };
+                let stats = ctx.device.launch(global, &req)?;
+                Ok(CommandOutput { stats, payload: None })
+            }
+            Command::WriteBuffer { buf, offset, data } => {
+                ctx.write_buffer(*buf, *offset, data)?;
+                Ok(CommandOutput::empty())
+            }
+            Command::ReadBuffer { buf, offset, len } => {
+                let mut out = vec![0u8; *len];
+                ctx.read_buffer(*buf, *offset, &mut out)?;
+                Ok(CommandOutput { stats: LaunchStats::default(), payload: Some(out) })
+            }
+            Command::CopyBuffer { src, dst, src_offset, dst_offset, len } => {
+                ctx.copy_buffer(*src, *dst, *src_offset, *dst_offset, *len)?;
+                Ok(CommandOutput::empty())
+            }
+            Command::FillBuffer { buf, offset, pattern, len } => {
+                ctx.fill_buffer(*buf, *offset, pattern, *len)?;
+                Ok(CommandOutput::empty())
+            }
+            Command::Marker | Command::Barrier => Ok(CommandOutput::empty()),
+        }
+    }
+}

@@ -1,9 +1,31 @@
 //! Contexts and buffers: device memory management on top of Bufalloc.
+//!
+//! The context owns the device's global-memory region and the buffer
+//! allocator, and tracks which buffer handles are live so that stale
+//! handles (released buffers, double frees) are rejected with
+//! `Error::InvalidArg` instead of silently corrupting memory.
+//!
+//! Global memory is deliberately *not* behind a lock: independent
+//! commands of an out-of-order queue must be able to touch disjoint
+//! buffers concurrently. Commands that race on the same bytes without a
+//! declared event edge are UB in the client program, exactly as on real
+//! OpenCL devices (and as the threaded device already assumes for
+//! work-groups).
+//!
+//! The typed helpers (`write_f32`, `read_u32`, ...) are thin wrappers
+//! over the generic [`Context::write_slice`] / [`Context::read_vec`],
+//! which delegate to a blocking execute-and-wait of the same
+//! [`Command`]s an enqueue would defer.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::bufalloc::Bufalloc;
+use crate::cl::command::Command;
 use crate::cl::error::{Error, Result};
+use crate::cl::event::Event;
 use crate::devices::Device;
 
 /// A buffer handle (`cl_mem` analog): an offset/length into the context's
@@ -14,8 +36,130 @@ pub struct Buffer {
     pub offset: usize,
     /// Size in bytes.
     pub size: usize,
-    /// Allocation id (for double-free detection).
+    /// Allocation id (used for stale-handle / double-free detection).
     pub id: u64,
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for u32 {}
+    impl Sealed for i32 {}
+}
+
+/// The 4-byte scalar element types transferable through the typed buffer
+/// helpers. Sealed: exactly `f32`, `u32` and `i32`.
+pub trait Scalar: sealed::Sealed + Copy + 'static {
+    /// Little-endian encoding.
+    fn to_le(self) -> [u8; 4];
+    /// Little-endian decoding.
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl Scalar for f32 {
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl Scalar for u32 {
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(bytes: [u8; 4]) -> Self {
+        u32::from_le_bytes(bytes)
+    }
+}
+
+impl Scalar for i32 {
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// Encode a scalar slice as little-endian bytes.
+pub(crate) fn bytes_of<T: Scalar>(data: &[T]) -> Vec<u8> {
+    data.iter().copied().flat_map(Scalar::to_le).collect()
+}
+
+/// Decode little-endian bytes as a scalar vector (trailing partial
+/// elements are dropped).
+pub(crate) fn vec_from_bytes<T: Scalar>(bytes: &[u8]) -> Vec<T> {
+    bytes.chunks_exact(4).map(|c| T::from_le(c.try_into().unwrap())).collect()
+}
+
+/// The device's global memory region, shared without locking so that
+/// independent commands can access disjoint buffers concurrently.
+///
+/// Transfers use raw-pointer copies on bounds-checked ranges, so they
+/// never materialise aliasing `&mut` views. Kernel launches receive the
+/// whole region as `&mut [u8]` — the same full-view contract the
+/// threaded device's `SharedMem` already hands each worker — and rely on
+/// the OpenCL rule that commands racing on the same bytes without a
+/// declared event edge are UB in the *client* program.
+pub(crate) struct GlobalMem {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: all access goes through bounds-checked buffer ranges; see the
+// type-level contract above.
+unsafe impl Send for GlobalMem {}
+unsafe impl Sync for GlobalMem {}
+
+impl GlobalMem {
+    fn new(size: usize) -> GlobalMem {
+        let boxed: Box<[u8]> = vec![0u8; size].into_boxed_slice();
+        GlobalMem { ptr: Box::into_raw(boxed) as *mut u8, len: size }
+    }
+
+    /// Full mutable view of global memory (kernel launches).
+    ///
+    /// # Safety
+    /// Callers must confine themselves to byte ranges they own (a live
+    /// buffer's allocation) or otherwise uphold the racy-access-is-UB
+    /// contract documented on [`GlobalMem`].
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn view(&self) -> &mut [u8] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+
+    /// Copy host bytes into the region.
+    ///
+    /// # Safety
+    /// `offset + data.len()` must be within bounds.
+    pub(crate) unsafe fn write(&self, offset: usize, data: &[u8]) {
+        std::ptr::copy_nonoverlapping(data.as_ptr(), self.ptr.add(offset), data.len());
+    }
+
+    /// Copy region bytes out to host memory.
+    ///
+    /// # Safety
+    /// `offset + out.len()` must be within bounds.
+    pub(crate) unsafe fn read(&self, offset: usize, out: &mut [u8]) {
+        std::ptr::copy_nonoverlapping(self.ptr.add(offset), out.as_mut_ptr(), out.len());
+    }
+
+    /// Copy within the region (overlap-safe).
+    ///
+    /// # Safety
+    /// Both ranges must be within bounds.
+    pub(crate) unsafe fn copy(&self, src: usize, dst: usize, len: usize) {
+        std::ptr::copy(self.ptr.add(src), self.ptr.add(dst), len);
+    }
+}
+
+impl Drop for GlobalMem {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len came from Box::into_raw of a boxed slice.
+        unsafe { drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.ptr, self.len))) };
+    }
 }
 
 /// A context (`cl_context` analog): one device plus its global memory,
@@ -23,9 +167,13 @@ pub struct Buffer {
 pub struct Context {
     /// The device this context talks to.
     pub device: Arc<dyn Device>,
-    pub(crate) global: Mutex<Vec<u8>>,
+    pub(crate) global: GlobalMem,
     pub(crate) alloc: Mutex<Bufalloc>,
-    next_id: Mutex<u64>,
+    /// Live buffer ids → allocation offset (stale-handle detection).
+    live: Mutex<HashMap<u64, usize>>,
+    next_id: AtomicU64,
+    /// Timestamp origin for events produced by the blocking helpers.
+    pub(crate) epoch: Instant,
 }
 
 impl Context {
@@ -35,23 +183,56 @@ impl Context {
         let size = device.info().global_mem.min(512 << 20);
         Context {
             device,
-            global: Mutex::new(vec![0u8; size]),
+            global: GlobalMem::new(size),
             alloc: Mutex::new(Bufalloc::new(size, 64, true)),
-            next_id: Mutex::new(1),
+            live: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            epoch: Instant::now(),
         }
     }
 
-    /// Allocate a device buffer (`clCreateBuffer`).
+    /// Allocate a device buffer (`clCreateBuffer`). Ids start at 1.
     pub fn create_buffer(&self, size: usize) -> Result<Buffer> {
         let offset = self.alloc.lock().unwrap().alloc(size)?;
-        let mut id = self.next_id.lock().unwrap();
-        *id += 1;
-        Ok(Buffer { offset, size, id: *id })
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.live.lock().unwrap().insert(id, offset);
+        Ok(Buffer { offset, size, id })
     }
 
-    /// Release a buffer (`clReleaseMemObject`).
+    /// Release a buffer (`clReleaseMemObject`). Releasing a handle twice
+    /// (or a forged/stale handle) is an `InvalidArg` error.
     pub fn release_buffer(&self, buf: Buffer) -> Result<()> {
-        self.alloc.lock().unwrap().free(buf.offset)
+        let removed = self.live.lock().unwrap().remove(&buf.id);
+        match removed {
+            Some(offset) if offset == buf.offset => self.alloc.lock().unwrap().free(offset),
+            Some(offset) => {
+                // Defensive: id was live but at a different offset —
+                // restore and reject the forged handle.
+                self.live.lock().unwrap().insert(buf.id, offset);
+                Err(Error::invalid(format!("buffer id {} does not match its allocation", buf.id)))
+            }
+            None => Err(Error::invalid(format!(
+                "double free or stale buffer handle (id {})",
+                buf.id
+            ))),
+        }
+    }
+
+    /// True while the handle refers to a live allocation.
+    pub fn buffer_is_live(&self, buf: &Buffer) -> bool {
+        self.live.lock().unwrap().get(&buf.id) == Some(&buf.offset)
+    }
+
+    /// Reject stale handles with `InvalidArg`.
+    pub(crate) fn check_live(&self, buf: &Buffer) -> Result<()> {
+        if self.buffer_is_live(buf) {
+            Ok(())
+        } else {
+            Err(Error::invalid(format!(
+                "stale buffer handle (id {}): buffer was released",
+                buf.id
+            )))
+        }
     }
 
     /// Bytes currently allocated.
@@ -59,63 +240,130 @@ impl Context {
         self.alloc.lock().unwrap().allocated()
     }
 
-    /// Write host data into a buffer.
+    /// Write host data into a buffer (raw bytes).
     pub fn write_buffer(&self, buf: Buffer, offset: usize, data: &[u8]) -> Result<()> {
+        self.check_live(&buf)?;
         if offset + data.len() > buf.size {
             return Err(Error::invalid("write exceeds buffer size"));
         }
-        let mut g = self.global.lock().unwrap();
-        g[buf.offset + offset..buf.offset + offset + data.len()].copy_from_slice(data);
+        // SAFETY: range is bounds-checked against a live allocation.
+        unsafe { self.global.write(buf.offset + offset, data) };
         Ok(())
     }
 
-    /// Read a buffer back to host memory.
+    /// Read a buffer back to host memory (raw bytes).
     pub fn read_buffer(&self, buf: Buffer, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.check_live(&buf)?;
         if offset + out.len() > buf.size {
             return Err(Error::invalid("read exceeds buffer size"));
         }
-        let g = self.global.lock().unwrap();
-        out.copy_from_slice(&g[buf.offset + offset..buf.offset + offset + out.len()]);
+        // SAFETY: range is bounds-checked against a live allocation.
+        unsafe { self.global.read(buf.offset + offset, out) };
         Ok(())
     }
 
-    /// Typed helpers (f32).
+    /// Device-side copy between buffers.
+    pub fn copy_buffer(
+        &self,
+        src: Buffer,
+        dst: Buffer,
+        src_offset: usize,
+        dst_offset: usize,
+        len: usize,
+    ) -> Result<()> {
+        self.check_live(&src)?;
+        self.check_live(&dst)?;
+        if src_offset + len > src.size {
+            return Err(Error::invalid("copy exceeds source buffer size"));
+        }
+        if dst_offset + len > dst.size {
+            return Err(Error::invalid("copy exceeds destination buffer size"));
+        }
+        // SAFETY: ranges are bounds-checked against live allocations; the
+        // copy is overlap-safe.
+        unsafe { self.global.copy(src.offset + src_offset, dst.offset + dst_offset, len) };
+        Ok(())
+    }
+
+    /// Fill a buffer range with a repeated byte pattern.
+    pub fn fill_buffer(&self, buf: Buffer, offset: usize, pattern: &[u8], len: usize) -> Result<()> {
+        self.check_live(&buf)?;
+        if pattern.is_empty() || len % pattern.len() != 0 {
+            return Err(Error::invalid("fill length must be a positive multiple of the pattern"));
+        }
+        if offset + len > buf.size {
+            return Err(Error::invalid("fill exceeds buffer size"));
+        }
+        // SAFETY: range is bounds-checked against a live allocation.
+        let base = buf.offset + offset;
+        let mut off = 0;
+        while off < len {
+            let chunk = pattern.len().min(len - off);
+            unsafe { self.global.write(base + off, &pattern[..chunk]) };
+            off += chunk;
+        }
+        Ok(())
+    }
+
+    /// Execute one command immediately (blocking enqueue + wait), sharing
+    /// the queue's command implementation.
+    fn run_blocking(&self, cmd: Command) -> Result<Event> {
+        let ns = self.epoch.elapsed().as_nanos() as u64;
+        let ev = Event::new(cmd.label(), ns);
+        ev.mark_submitted(ns);
+        ev.mark_running(self.epoch.elapsed().as_nanos() as u64);
+        match cmd.execute(self) {
+            Ok(out) => {
+                ev.complete_ok(self.epoch.elapsed().as_nanos() as u64, out.stats, out.payload);
+                Ok(ev)
+            }
+            Err(e) => {
+                ev.complete_err(self.epoch.elapsed().as_nanos() as u64, e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    /// Write a typed scalar slice into a buffer (blocking).
+    pub fn write_slice<T: Scalar>(&self, buf: Buffer, data: &[T]) -> Result<()> {
+        self.run_blocking(Command::WriteBuffer { buf, offset: 0, data: bytes_of(data) })?;
+        Ok(())
+    }
+
+    /// Read a typed scalar vector out of a buffer (blocking).
+    pub fn read_vec<T: Scalar>(&self, buf: Buffer, n: usize) -> Result<Vec<T>> {
+        let ev = self.run_blocking(Command::ReadBuffer { buf, offset: 0, len: n * 4 })?;
+        ev.wait_vec::<T>()
+    }
+
+    /// Typed helper (f32) — thin wrapper over [`Context::write_slice`].
     pub fn write_f32(&self, buf: Buffer, data: &[f32]) -> Result<()> {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.write_buffer(buf, 0, &bytes)
+        self.write_slice(buf, data)
     }
 
     /// Read f32 data back.
     pub fn read_f32(&self, buf: Buffer, n: usize) -> Result<Vec<f32>> {
-        let mut bytes = vec![0u8; n * 4];
-        self.read_buffer(buf, 0, &mut bytes)?;
-        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        self.read_vec(buf, n)
     }
 
-    /// Typed helpers (u32).
+    /// Typed helper (u32).
     pub fn write_u32(&self, buf: Buffer, data: &[u32]) -> Result<()> {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.write_buffer(buf, 0, &bytes)
+        self.write_slice(buf, data)
     }
 
     /// Read u32 data back.
     pub fn read_u32(&self, buf: Buffer, n: usize) -> Result<Vec<u32>> {
-        let mut bytes = vec![0u8; n * 4];
-        self.read_buffer(buf, 0, &mut bytes)?;
-        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+        self.read_vec(buf, n)
     }
 
-    /// Typed helpers (i32).
+    /// Typed helper (i32).
     pub fn write_i32(&self, buf: Buffer, data: &[i32]) -> Result<()> {
-        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        self.write_buffer(buf, 0, &bytes)
+        self.write_slice(buf, data)
     }
 
     /// Read i32 data back.
     pub fn read_i32(&self, buf: Buffer, n: usize) -> Result<Vec<i32>> {
-        let mut bytes = vec![0u8; n * 4];
-        self.read_buffer(buf, 0, &mut bytes)?;
-        Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+        self.read_vec(buf, n)
     }
 }
 
@@ -136,6 +384,53 @@ mod tests {
         assert_eq!(c.read_f32(b, 3).unwrap(), vec![1.0, 2.0, 3.0]);
         c.release_buffer(b).unwrap();
         assert_eq!(c.allocated(), 0);
+    }
+
+    #[test]
+    fn ids_start_at_one() {
+        let c = ctx();
+        let b = c.create_buffer(64).unwrap();
+        assert_eq!(b.id, 1);
+        assert_eq!(c.create_buffer(64).unwrap().id, 2);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let c = ctx();
+        let b = c.create_buffer(64).unwrap();
+        c.release_buffer(b).unwrap();
+        assert!(matches!(c.release_buffer(b), Err(Error::InvalidArg(_))));
+    }
+
+    #[test]
+    fn use_after_free_rejected() {
+        let c = ctx();
+        let b = c.create_buffer(64).unwrap();
+        c.release_buffer(b).unwrap();
+        assert!(matches!(c.write_f32(b, &[1.0]), Err(Error::InvalidArg(_))));
+        assert!(matches!(c.read_f32(b, 1), Err(Error::InvalidArg(_))));
+        assert!(!c.buffer_is_live(&b));
+    }
+
+    #[test]
+    fn generic_scalar_roundtrip() {
+        let c = ctx();
+        let b = c.create_buffer(64).unwrap();
+        c.write_slice::<i32>(b, &[-3, 0, 7]).unwrap();
+        assert_eq!(c.read_vec::<i32>(b, 3).unwrap(), vec![-3, 0, 7]);
+        c.write_u32(b, &[1, 2, 3]).unwrap();
+        assert_eq!(c.read_u32(b, 3).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn copy_and_fill() {
+        let c = ctx();
+        let a = c.create_buffer(64).unwrap();
+        let b = c.create_buffer(64).unwrap();
+        c.fill_buffer(a, 0, &5.0f32.to_le_bytes(), 64).unwrap();
+        c.copy_buffer(a, b, 0, 0, 64).unwrap();
+        assert!(c.read_f32(b, 16).unwrap().iter().all(|&v| v == 5.0));
+        assert!(c.fill_buffer(a, 0, &[1, 2, 3], 64).is_err(), "non-multiple pattern");
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Live events (`cl_event` analog) for deferred commands.
+//!
+//! Every `enqueue_*` call on a [`crate::cl::CommandQueue`] returns an
+//! [`Event`] — a shared handle onto the command's lifecycle. The status
+//! progresses
+//!
+//! ```text
+//! Queued → Submitted → Running → Complete
+//!                   ╲→ Error (command failed or a dependency failed)
+//! ```
+//!
+//! mirroring OpenCL's `CL_QUEUED / CL_SUBMITTED / CL_RUNNING /
+//! CL_COMPLETE` execution statuses. Events double as the edges of the
+//! command dependency DAG (wait-lists) and carry
+//! `CL_QUEUE_PROFILING_ENABLE`-style timestamps for each transition,
+//! taken against the owning queue's creation instant.
+//!
+//! [`Event::wait`] blocks until the command finishes; like
+//! `clWaitForEvents` it implicitly flushes the owning queue first, so
+//! waiting on a merely-queued command cannot deadlock. Buffer reads
+//! deliver their data through the event ([`Event::wait_data`] /
+//! [`Event::wait_vec`]).
+
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex, Weak};
+
+use crate::cl::context::{vec_from_bytes, Scalar};
+use crate::cl::error::{Error, Result};
+use crate::cl::queue::SchedulerShared;
+use crate::devices::LaunchStats;
+
+/// Execution status of a command (ordered by lifecycle progress).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CommandStatus {
+    /// Enqueued on the host queue, not yet submitted to the scheduler.
+    Queued,
+    /// Submitted (the queue was flushed); eligible to run once its
+    /// wait-list dependencies complete.
+    Submitted,
+    /// Executing on a queue worker.
+    Running,
+    /// Finished successfully.
+    Complete,
+    /// Finished with an error (its own, or a failed dependency).
+    Error,
+}
+
+/// Profiling timestamps in nanoseconds since the owning queue's creation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EventProfile {
+    /// When the command was enqueued (`CL_PROFILING_COMMAND_QUEUED`).
+    pub queued_ns: u64,
+    /// When the queue submitted it (`CL_PROFILING_COMMAND_SUBMIT`).
+    pub submitted_ns: u64,
+    /// When a worker started executing it (`CL_PROFILING_COMMAND_START`).
+    pub start_ns: u64,
+    /// When execution finished (`CL_PROFILING_COMMAND_END`).
+    pub end_ns: u64,
+}
+
+struct EventState {
+    status: CommandStatus,
+    profile: EventProfile,
+    stats: LaunchStats,
+    payload: Option<Vec<u8>>,
+    error: Option<Error>,
+}
+
+struct EventInner {
+    what: String,
+    state: Mutex<EventState>,
+    cv: Condvar,
+    /// Back-reference to the owning queue's scheduler so `wait()` can
+    /// flush it (avoids the wait-on-unflushed-queue deadlock). `None` for
+    /// events produced by the context's blocking helpers.
+    scheduler: Mutex<Option<Weak<SchedulerShared>>>,
+}
+
+/// A live handle onto one enqueued command. Cheap to clone; clones share
+/// the same underlying state.
+#[derive(Clone)]
+pub struct Event(Arc<EventInner>);
+
+impl Event {
+    /// Create a fresh event in the `Queued` state.
+    pub(crate) fn new(what: impl Into<String>, queued_ns: u64) -> Event {
+        Event(Arc::new(EventInner {
+            what: what.into(),
+            state: Mutex::new(EventState {
+                status: CommandStatus::Queued,
+                profile: EventProfile { queued_ns, ..Default::default() },
+                stats: LaunchStats::default(),
+                payload: None,
+                error: None,
+            }),
+            cv: Condvar::new(),
+            scheduler: Mutex::new(None),
+        }))
+    }
+
+    /// Attach the owning queue's scheduler (for the implicit flush in
+    /// `wait`).
+    pub(crate) fn attach_scheduler(&self, scheduler: Weak<SchedulerShared>) {
+        *self.0.scheduler.lock().unwrap() = Some(scheduler);
+    }
+
+    /// What this command is (kernel name or transfer kind).
+    pub fn what(&self) -> &str {
+        &self.0.what
+    }
+
+    /// Current status.
+    pub fn status(&self) -> CommandStatus {
+        self.0.state.lock().unwrap().status
+    }
+
+    /// True once the command reached `Complete` or `Error`.
+    pub fn is_finished(&self) -> bool {
+        matches!(self.status(), CommandStatus::Complete | CommandStatus::Error)
+    }
+
+    /// The command's error, if it finished unsuccessfully.
+    pub(crate) fn error_of(&self) -> Option<Error> {
+        let st = self.0.state.lock().unwrap();
+        if st.status == CommandStatus::Error {
+            Some(st.error.clone().unwrap_or_else(|| Error::exec("command failed")))
+        } else {
+            None
+        }
+    }
+
+    /// Submit the owning queue if this event is still merely queued
+    /// (used by schedulers to unstick commands that wait on events of a
+    /// different, never-flushed queue).
+    pub(crate) fn ensure_submitted(&self) {
+        if self.status() == CommandStatus::Queued {
+            let sched = self.0.scheduler.lock().unwrap().clone();
+            if let Some(weak) = sched {
+                if let Some(shared) = weak.upgrade() {
+                    shared.submit_all();
+                }
+            }
+        }
+    }
+
+    pub(crate) fn mark_submitted(&self, ns: u64) {
+        let mut st = self.0.state.lock().unwrap();
+        if st.status == CommandStatus::Queued {
+            st.status = CommandStatus::Submitted;
+            st.profile.submitted_ns = ns;
+        }
+    }
+
+    pub(crate) fn mark_running(&self, ns: u64) {
+        let mut st = self.0.state.lock().unwrap();
+        st.status = CommandStatus::Running;
+        st.profile.start_ns = ns;
+    }
+
+    pub(crate) fn complete_ok(&self, ns: u64, stats: LaunchStats, payload: Option<Vec<u8>>) {
+        {
+            let mut st = self.0.state.lock().unwrap();
+            st.status = CommandStatus::Complete;
+            st.profile.end_ns = ns;
+            st.stats = stats;
+            st.payload = payload;
+        }
+        self.0.cv.notify_all();
+    }
+
+    pub(crate) fn complete_err(&self, ns: u64, err: Error) {
+        {
+            let mut st = self.0.state.lock().unwrap();
+            st.status = CommandStatus::Error;
+            st.profile.end_ns = ns;
+            st.error = Some(err);
+        }
+        self.0.cv.notify_all();
+    }
+
+    /// Block until the command finishes (flushing the owning queue first,
+    /// like `clWaitForEvents`). Returns the device statistics on success.
+    pub fn wait(&self) -> Result<LaunchStats> {
+        let sched = self.0.scheduler.lock().unwrap().clone();
+        if let Some(weak) = sched {
+            if let Some(shared) = weak.upgrade() {
+                shared.submit_all();
+            }
+        }
+        let mut st = self.0.state.lock().unwrap();
+        while !matches!(st.status, CommandStatus::Complete | CommandStatus::Error) {
+            st = self.0.cv.wait(st).unwrap();
+        }
+        match &st.error {
+            Some(e) => Err(e.clone()),
+            None => Ok(st.stats),
+        }
+    }
+
+    /// Wait, then take the command's result bytes (buffer reads only).
+    /// The payload can be taken once.
+    pub fn wait_data(&self) -> Result<Vec<u8>> {
+        self.wait()?;
+        self.0.state.lock().unwrap().payload.take().ok_or_else(|| {
+            Error::invalid(format!(
+                "event `{}` carries no data (not a read, or already taken)",
+                self.0.what
+            ))
+        })
+    }
+
+    /// Wait, then decode the result bytes as a typed vector.
+    pub fn wait_vec<T: Scalar>(&self) -> Result<Vec<T>> {
+        Ok(vec_from_bytes(&self.wait_data()?))
+    }
+
+    /// Profiling timestamps recorded so far.
+    pub fn profile(&self) -> EventProfile {
+        self.0.state.lock().unwrap().profile
+    }
+
+    /// Execution duration (start → end) in nanoseconds; 0 until complete.
+    pub fn duration_ns(&self) -> u128 {
+        let st = self.0.state.lock().unwrap();
+        if st.status == CommandStatus::Complete && st.profile.end_ns >= st.profile.start_ns {
+            (st.profile.end_ns - st.profile.start_ns) as u128
+        } else {
+            0
+        }
+    }
+
+    /// Device statistics, once complete.
+    pub fn stats(&self) -> Option<LaunchStats> {
+        let st = self.0.state.lock().unwrap();
+        if st.status == CommandStatus::Complete {
+            Some(st.stats)
+        } else {
+            None
+        }
+    }
+}
+
+impl fmt::Debug for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Event")
+            .field("what", &self.0.what)
+            .field("status", &self.status())
+            .finish()
+    }
+}

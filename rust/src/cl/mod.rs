@@ -2,16 +2,52 @@
 //!
 //! `Platform` → `Context` (+ `Buffer` via Bufalloc) → `Program` (+ the
 //! §4.1 per-local-size specialisation cache) → `Kernel` → `CommandQueue`
-//! (+ profiling `Event`s).
+//! (+ live `Event`s).
+//!
+//! # Command lifecycle
+//!
+//! The queue API is **deferred**: every `enqueue_*` call resolves its
+//! arguments immediately (kernel launches compile/fetch their §4.1
+//! work-group function here), wraps the work in a [`Command`], and
+//! returns a live [`Event`]:
+//!
+//! ```text
+//!   enqueue_*            flush()/wait()        scheduler         done
+//!  ───────────▶ Queued ───────────────▶ Submitted ──▶ Running ──▶ Complete
+//!                                                         ╲─────▶ Error
+//! ```
+//!
+//! Commands form a dependency DAG through explicit wait-lists (the
+//! `wait: &[Event]` parameter); [`Event::wait`] and
+//! [`CommandQueue::finish`] block until completion, and events carry
+//! OpenCL-style profiling timestamps for every transition.
+//!
+//! # Queue modes
+//!
+//! * [`QueueProperties::InOrder`] (default) — commands implicitly chain
+//!   behind their predecessor: classic sequential OpenCL semantics.
+//! * [`QueueProperties::OutOfOrder`] — all *ready* commands run
+//!   concurrently on a worker pool; ordering comes only from wait-lists
+//!   and [`CommandQueue::enqueue_barrier`] fences. Independent transfers
+//!   and kernel launches overlap — see `examples/async_pipeline.rs`.
+//!
+//! Buffer reads deliver data through the event
+//! ([`Event::wait_vec`]); the context's typed helpers
+//! (`write_f32` & co.) remain as blocking conveniences that share the
+//! same command implementations.
 
+pub mod command;
 pub mod context;
 pub mod error;
+pub mod event;
 pub mod platform;
 pub mod program;
 pub mod queue;
 
-pub use context::{Buffer, Context};
+pub use command::Command;
+pub use context::{Buffer, Context, Scalar};
 pub use error::{Error, Result};
+pub use event::{CommandStatus, Event, EventProfile};
 pub use platform::Platform;
 pub use program::{Kernel, KernelArg, Program};
-pub use queue::{CommandQueue, Event};
+pub use queue::{CommandQueue, QueueProperties};

@@ -3,6 +3,7 @@
 
 use std::sync::Arc;
 
+use crate::cl::error::{Error, Result};
 use crate::devices::{basic::BasicDevice, threaded::ThreadedDevice, ttasim::TtaSimDevice, Device, EngineKind};
 
 /// The pocl-rs platform: a named set of devices.
@@ -33,9 +34,34 @@ impl Platform {
         }
     }
 
-    /// Find a device by (substring of) name.
+    /// Resolve a device by name: an exact match wins, otherwise the name
+    /// must be a substring of exactly one device. Ambiguous names (e.g.
+    /// `"basic"`, which matches both `basic-serial` and `basic-fiber`)
+    /// and unknown names are errors, so a lookup can never silently bind
+    /// to the wrong device as the platform grows.
+    pub fn find_device(&self, name: &str) -> Result<Arc<dyn Device>> {
+        if let Some(d) = self.devices.iter().find(|d| d.info().name == name) {
+            return Ok(d.clone());
+        }
+        let matches: Vec<&Arc<dyn Device>> =
+            self.devices.iter().filter(|d| d.info().name.contains(name)).collect();
+        match matches.len() {
+            0 => Err(Error::NotFound(format!("device `{name}`"))),
+            1 => Ok(matches[0].clone()),
+            _ => {
+                let names: Vec<String> = matches.iter().map(|d| d.info().name).collect();
+                Err(Error::invalid(format!(
+                    "ambiguous device name `{name}`: matches {}",
+                    names.join(", ")
+                )))
+            }
+        }
+    }
+
+    /// Find a device by name ([`Platform::find_device`] rules); `None`
+    /// for unknown *or ambiguous* names.
     pub fn device(&self, name: &str) -> Option<Arc<dyn Device>> {
-        self.devices.iter().find(|d| d.info().name.contains(name)).cloned()
+        self.find_device(name).ok()
     }
 
     /// Render the Table 1-style capability table.
@@ -62,10 +88,28 @@ mod tests {
     fn default_platform_has_expected_devices() {
         let p = Platform::default_platform();
         assert!(p.devices.len() >= 5);
-        assert!(p.device("basic").is_some());
-        assert!(p.device("pthread").is_some());
-        assert!(p.device("ttasim").is_some());
+        assert!(p.device("basic-serial").is_some());
+        assert!(p.device("pthread-gang(8)").is_some());
+        assert!(p.device("ttasim").is_some(), "unique substring resolves");
         assert!(p.device("nonexistent").is_none());
+    }
+
+    #[test]
+    fn ambiguous_lookups_are_errors() {
+        let p = Platform::default_platform();
+        // `basic` matches basic-serial and basic-fiber; `pthread` matches
+        // both gang widths.
+        assert!(matches!(p.find_device("basic"), Err(Error::InvalidArg(_))));
+        assert!(matches!(p.find_device("pthread"), Err(Error::InvalidArg(_))));
+        assert!(p.device("basic").is_none());
+        assert!(matches!(p.find_device("nonexistent"), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn exact_match_beats_substring() {
+        let p = Platform::default_platform();
+        let d = p.find_device("basic-serial").unwrap();
+        assert_eq!(d.info().name, "basic-serial");
     }
 
     #[test]

@@ -1,60 +1,287 @@
-//! Command queues (`clCommandQueue` analog) with events and profiling.
+//! Command queues (`clCommandQueue` analog): deferred submission, a
+//! dependency DAG of events, and in-order / out-of-order execution.
 //!
-//! The queue resolves kernel arguments against the context, asks the
-//! program for the enqueue-time specialised work-group function (§4.1),
-//! plans local memory, and dispatches to the device layer. Execution is
-//! in-order; every enqueue returns an [`Event`] carrying profiling
-//! timestamps (`CL_QUEUE_PROFILING_ENABLE` semantics — the §6 benchmarks
-//! time kernels this way).
+//! Every `enqueue_*` call resolves its arguments immediately (kernel
+//! launches get their §4.1 enqueue-time-specialised work-group function
+//! here), wraps the work in a [`Command`], and returns a live [`Event`]
+//! in the `Queued` state. Nothing executes until the queue is flushed:
+//! [`CommandQueue::flush`] submits all queued commands to the worker
+//! pool, [`CommandQueue::finish`] flushes and blocks until everything
+//! completed, and [`Event::wait`] flushes the owning queue implicitly.
+//!
+//! **In-order** queues ([`QueueProperties::InOrder`], the default) chain
+//! every command behind the previous one, preserving classic OpenCL
+//! sequential semantics on a single worker. **Out-of-order** queues run
+//! all *ready* commands concurrently on a worker pool and synchronise
+//! only on declared wait-list edges (plus explicit barriers), so
+//! independent transfers and launches overlap.
 
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
 
-use crate::cl::context::Context;
+use crate::cl::command::Command;
+use crate::cl::context::{bytes_of, Buffer, Context, Scalar};
 use crate::cl::error::{Error, Result};
+use crate::cl::event::{CommandStatus, Event};
 use crate::cl::program::{Kernel, KernelArg, Program};
-use crate::devices::{LaunchRequest, LaunchStats};
 use crate::exec::value::{SP_GLOBAL, SP_LOCAL};
 use crate::exec::VVal;
 use crate::kcc::CompileOptions;
 
-/// A completed command's record.
-#[derive(Debug, Clone)]
-pub struct Event {
-    /// What ran (kernel name or transfer).
-    pub what: String,
-    /// Wall-clock duration in nanoseconds.
-    pub duration_ns: u128,
-    /// Device statistics for kernel launches.
-    pub stats: LaunchStats,
+/// Queue execution mode (`CL_QUEUE_OUT_OF_ORDER_EXEC_MODE_ENABLE` analog).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum QueueProperties {
+    /// Commands execute in enqueue order (each implicitly waits on its
+    /// predecessor).
+    #[default]
+    InOrder,
+    /// Ready commands execute concurrently; ordering comes only from
+    /// wait-lists and barriers.
+    OutOfOrder,
 }
 
-/// In-order command queue bound to one context.
+/// One not-yet-executed command with its dependency edges.
+struct PendingCmd {
+    cmd: Command,
+    event: Event,
+    deps: Vec<Event>,
+    submitted: bool,
+}
+
+struct SchedState {
+    pending: VecDeque<PendingCmd>,
+    /// Commands currently executing on workers.
+    running: usize,
+    /// High-water mark of `running` (worker-pool instrumentation).
+    max_running: usize,
+    shutdown: bool,
+}
+
+/// Shared between the queue handle, its worker threads, and its events.
+pub(crate) struct SchedulerShared {
+    ctx: Arc<Context>,
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    epoch: Instant,
+}
+
+impl SchedulerShared {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Submit every still-queued command to the workers (`clFlush`).
+    pub(crate) fn submit_all(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            let ns = self.now_ns();
+            for p in st.pending.iter_mut() {
+                if !p.submitted {
+                    p.submitted = true;
+                    p.event.mark_submitted(ns);
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn push(&self, cmd: Command, event: Event, deps: Vec<Event>) {
+        self.state
+            .lock()
+            .unwrap()
+            .pending
+            .push_back(PendingCmd { cmd, event, deps, submitted: false });
+    }
+}
+
+/// First submitted command whose wait-list is fully finished.
+fn find_ready(pending: &VecDeque<PendingCmd>) -> Option<usize> {
+    pending.iter().position(|p| p.submitted && p.deps.iter().all(Event::is_finished))
+}
+
+fn worker_loop(shared: &SchedulerShared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(i) = find_ready(&st.pending) {
+                    let job = st.pending.remove(i).expect("ready index valid");
+                    st.running += 1;
+                    if st.running > st.max_running {
+                        st.max_running = st.running;
+                    }
+                    break Some(job);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                // A submitted command may wait on events of a *different*
+                // queue that was never flushed; submit their owners so the
+                // dependency can make progress (clWaitForEvents-style
+                // implicit flush, applied transitively).
+                let mut stuck: Vec<Event> = Vec::new();
+                for p in st.pending.iter() {
+                    if !p.submitted {
+                        continue;
+                    }
+                    for d in &p.deps {
+                        if d.status() == CommandStatus::Queued {
+                            stuck.push(d.clone());
+                        }
+                    }
+                }
+                if !stuck.is_empty() {
+                    drop(st);
+                    for d in stuck {
+                        d.ensure_submitted();
+                    }
+                    st = shared.state.lock().unwrap();
+                    // Fall through to the timed wait: if a dependency can
+                    // never be submitted (its queue is gone), this stays a
+                    // bounded poll instead of a hot spin.
+                }
+                if st.pending.iter().any(|p| p.submitted) {
+                    // Foreign dependencies' completion doesn't signal our
+                    // condvar — re-poll on a short timeout.
+                    let (guard, _) =
+                        shared.cv.wait_timeout(st, Duration::from_millis(2)).unwrap();
+                    st = guard;
+                } else {
+                    // Nothing submitted: sleep until a flush or shutdown.
+                    st = shared.cv.wait(st).unwrap();
+                }
+            }
+        };
+        let Some(job) = job else { return };
+        if let Some(dep_err) = job.deps.iter().find_map(Event::error_of) {
+            job.event.complete_err(
+                shared.now_ns(),
+                Error::exec(format!("dependency failed: {dep_err}")),
+            );
+        } else {
+            job.event.mark_running(shared.now_ns());
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                job.cmd.execute(&shared.ctx)
+            }));
+            match result {
+                Ok(Ok(out)) => job.event.complete_ok(shared.now_ns(), out.stats, out.payload),
+                Ok(Err(e)) => job.event.complete_err(shared.now_ns(), e),
+                Err(_) => job.event.complete_err(
+                    shared.now_ns(),
+                    Error::exec(format!("command `{}` panicked", job.event.what())),
+                ),
+            }
+        }
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.running -= 1;
+        }
+        shared.cv.notify_all();
+    }
+}
+
+/// Per-queue bookkeeping of issued events.
+#[derive(Default)]
+struct IssueState {
+    /// Previous command (in-order chaining).
+    last: Option<Event>,
+    /// Last barrier (out-of-order fence).
+    barrier: Option<Event>,
+    /// Every event issued, in order (profiling log, `finish`).
+    all: Vec<Event>,
+}
+
+/// A command queue bound to one context.
 pub struct CommandQueue {
     /// The context (device + memory).
     pub context: Arc<Context>,
-    /// Completed events (profiling log).
-    pub events: Vec<Event>,
+    props: QueueProperties,
+    shared: Arc<SchedulerShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    issued: Mutex<IssueState>,
 }
 
 impl CommandQueue {
-    /// Create a queue on a context.
+    /// Create an in-order queue on a context.
     pub fn new(context: Arc<Context>) -> CommandQueue {
-        CommandQueue { context, events: Vec::new() }
+        CommandQueue::with_properties(context, QueueProperties::InOrder)
+    }
+
+    /// Create a queue with explicit properties.
+    pub fn with_properties(context: Arc<Context>, props: QueueProperties) -> CommandQueue {
+        let nworkers = match props {
+            QueueProperties::InOrder => 1,
+            QueueProperties::OutOfOrder => thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(2, 8),
+        };
+        let shared = Arc::new(SchedulerShared {
+            ctx: context.clone(),
+            state: Mutex::new(SchedState {
+                pending: VecDeque::new(),
+                running: 0,
+                max_running: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            epoch: Instant::now(),
+        });
+        let workers = (0..nworkers)
+            .map(|_| {
+                let s = Arc::clone(&shared);
+                thread::spawn(move || worker_loop(&s))
+            })
+            .collect();
+        CommandQueue { context, props, shared, workers, issued: Mutex::new(IssueState::default()) }
+    }
+
+    /// The queue's execution mode.
+    pub fn properties(&self) -> QueueProperties {
+        self.props
+    }
+
+    /// Record a command with its dependency edges; returns its event.
+    fn issue(&self, cmd: Command, wait: &[Event]) -> Event {
+        let ev = Event::new(cmd.label(), self.shared.now_ns());
+        ev.attach_scheduler(Arc::downgrade(&self.shared));
+        let mut deps: Vec<Event> = wait.to_vec();
+        {
+            let mut iss = self.issued.lock().unwrap();
+            match self.props {
+                QueueProperties::InOrder => {
+                    if let Some(prev) = &iss.last {
+                        deps.push(prev.clone());
+                    }
+                }
+                QueueProperties::OutOfOrder => {
+                    if let Some(b) = &iss.barrier {
+                        deps.push(b.clone());
+                    }
+                }
+            }
+            iss.last = Some(ev.clone());
+            iss.all.push(ev.clone());
+        }
+        self.shared.push(cmd, ev.clone(), deps);
+        ev
     }
 
     /// Enqueue an ND-range kernel (`clEnqueueNDRangeKernel`).
     ///
     /// `global` must be divisible by `local` in every dimension (OpenCL
-    /// 1.2 rule).
+    /// 1.2 rule). The command is deferred; it executes after `wait` (and,
+    /// in-order, after every earlier command) once the queue is flushed.
     pub fn enqueue_nd_range(
-        &mut self,
+        &self,
         program: &Program,
         kernel: &Kernel,
         global: [usize; 3],
         local: [usize; 3],
+        wait: &[Event],
     ) -> Result<Event> {
-        let t0 = Instant::now();
         for d in 0..3 {
             if local[d] == 0 || global[d] % local[d] != 0 {
                 return Err(Error::invalid(format!(
@@ -62,7 +289,13 @@ impl CommandQueue {
                 )));
             }
         }
-        let work_dim = if global[2] > 1 { 3 } else if global[1] > 1 { 2 } else { 1 };
+        let work_dim = if global[2] > 1 {
+            3
+        } else if global[1] > 1 {
+            2
+        } else {
+            1
+        };
         let mut opts: CompileOptions = self.context.device.compile_options();
         opts.work_dim = work_dim;
         let wgf = program.workgroup_function(&kernel.name, local, &opts)?;
@@ -71,6 +304,7 @@ impl CommandQueue {
         // local offsets; auto-locals appended after user args.
         let kfun = program.module.kernel(&kernel.name).unwrap();
         let mut args: Vec<VVal> = Vec::with_capacity(kfun.params.len());
+        let mut buffers: Vec<Buffer> = Vec::new();
         let mut local_off = 0usize;
         let mut user_idx = 0usize;
         for p in &kfun.params {
@@ -84,7 +318,11 @@ impl CommandQueue {
             })?;
             user_idx += 1;
             args.push(match a {
-                KernelArg::Buf(b) => VVal::ptr(SP_GLOBAL, b.offset as u64),
+                KernelArg::Buf(b) => {
+                    self.context.check_live(b)?;
+                    buffers.push(*b);
+                    VVal::ptr(SP_GLOBAL, b.offset as u64)
+                }
                 KernelArg::LocalSize(sz) => {
                     let v = VVal::ptr(SP_LOCAL, local_off as u64);
                     local_off += sz;
@@ -98,92 +336,377 @@ impl CommandQueue {
         }
 
         let groups = [global[0] / local[0], global[1] / local[1], global[2] / local[2]];
-        let req = LaunchRequest {
-            wgf: &wgf,
+        let cmd = Command::NdRange {
+            kernel: kernel.name.clone(),
+            wgf,
             args,
+            buffers,
             groups,
-            offset: [0; 3],
             work_dim,
             local_mem: local_off,
         };
-        let mut g = self.context.global.lock().unwrap();
-        let stats = self.context.device.launch(&mut g, &req)?;
-        drop(g);
-        let ev = Event {
-            what: kernel.name.clone(),
-            duration_ns: t0.elapsed().as_nanos(),
-            stats,
-        };
-        self.events.push(ev.clone());
-        Ok(ev)
+        Ok(self.issue(cmd, wait))
     }
 
-    /// Total kernel time across recorded events (profiling sum).
+    /// Enqueue a host → device write of raw bytes; the queue owns `data`.
+    pub fn enqueue_write_buffer(
+        &self,
+        buf: Buffer,
+        offset: usize,
+        data: Vec<u8>,
+        wait: &[Event],
+    ) -> Result<Event> {
+        self.context.check_live(&buf)?;
+        if offset + data.len() > buf.size {
+            return Err(Error::invalid("write exceeds buffer size"));
+        }
+        Ok(self.issue(Command::WriteBuffer { buf, offset, data }, wait))
+    }
+
+    /// Enqueue a typed host → device write.
+    pub fn enqueue_write_slice<T: Scalar>(
+        &self,
+        buf: Buffer,
+        data: &[T],
+        wait: &[Event],
+    ) -> Result<Event> {
+        self.enqueue_write_buffer(buf, 0, bytes_of(data), wait)
+    }
+
+    /// Enqueue a device → host read; the bytes arrive in the event's
+    /// payload ([`Event::wait_data`] / [`Event::wait_vec`]).
+    pub fn enqueue_read_buffer(
+        &self,
+        buf: Buffer,
+        offset: usize,
+        len: usize,
+        wait: &[Event],
+    ) -> Result<Event> {
+        self.context.check_live(&buf)?;
+        if offset + len > buf.size {
+            return Err(Error::invalid("read exceeds buffer size"));
+        }
+        Ok(self.issue(Command::ReadBuffer { buf, offset, len }, wait))
+    }
+
+    /// Enqueue a device-side buffer copy.
+    pub fn enqueue_copy_buffer(
+        &self,
+        src: Buffer,
+        dst: Buffer,
+        src_offset: usize,
+        dst_offset: usize,
+        len: usize,
+        wait: &[Event],
+    ) -> Result<Event> {
+        self.context.check_live(&src)?;
+        self.context.check_live(&dst)?;
+        if src_offset + len > src.size || dst_offset + len > dst.size {
+            return Err(Error::invalid("copy exceeds buffer size"));
+        }
+        Ok(self.issue(Command::CopyBuffer { src, dst, src_offset, dst_offset, len }, wait))
+    }
+
+    /// Enqueue a pattern fill.
+    pub fn enqueue_fill_buffer(
+        &self,
+        buf: Buffer,
+        offset: usize,
+        pattern: Vec<u8>,
+        len: usize,
+        wait: &[Event],
+    ) -> Result<Event> {
+        self.context.check_live(&buf)?;
+        if pattern.is_empty() || len % pattern.len() != 0 {
+            return Err(Error::invalid("fill length must be a positive multiple of the pattern"));
+        }
+        if offset + len > buf.size {
+            return Err(Error::invalid("fill exceeds buffer size"));
+        }
+        Ok(self.issue(Command::FillBuffer { buf, offset, pattern, len }, wait))
+    }
+
+    /// Enqueue a marker: completes when `wait` completes, or — with an
+    /// empty wait-list — when every previously enqueued command completes
+    /// (`clEnqueueMarkerWithWaitList` semantics).
+    pub fn enqueue_marker(&self, wait: &[Event]) -> Event {
+        let deps: Vec<Event> =
+            if wait.is_empty() { self.issued.lock().unwrap().all.clone() } else { wait.to_vec() };
+        self.issue(Command::Marker, &deps)
+    }
+
+    /// Enqueue a barrier: waits on every previously enqueued command, and
+    /// every later command implicitly waits on it (out-of-order fence).
+    pub fn enqueue_barrier(&self) -> Event {
+        let deps: Vec<Event> = self.issued.lock().unwrap().all.clone();
+        let ev = self.issue(Command::Barrier, &deps);
+        self.issued.lock().unwrap().barrier = Some(ev.clone());
+        ev
+    }
+
+    /// Submit all queued commands to the workers (`clFlush`). Returns
+    /// immediately.
+    pub fn flush(&self) {
+        self.shared.submit_all();
+    }
+
+    /// Flush, then block until every command has completed (`clFinish`).
+    /// Returns the first command error, if any.
+    pub fn finish(&self) -> Result<()> {
+        self.flush();
+        let events: Vec<Event> = self.issued.lock().unwrap().all.clone();
+        let mut first_err = None;
+        for ev in events {
+            if let Err(e) = ev.wait() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Every event issued on this queue, in enqueue order (profiling log).
+    pub fn events(&self) -> Vec<Event> {
+        self.issued.lock().unwrap().all.clone()
+    }
+
+    /// Total execution time across completed events (profiling sum).
     pub fn total_kernel_ns(&self) -> u128 {
-        self.events.iter().map(|e| e.duration_ns).sum()
+        self.events().iter().map(Event::duration_ns).sum()
     }
 
-    /// Wait for completion (in-order queue executes eagerly; kept for API
-    /// parity with `clFinish`).
-    pub fn finish(&self) {}
+    /// High-water mark of concurrently running commands (worker-pool
+    /// instrumentation; ≥ 2 proves overlapped execution).
+    pub fn max_concurrency(&self) -> usize {
+        self.shared.state.lock().unwrap().max_running
+    }
+}
+
+impl Drop for CommandQueue {
+    fn drop(&mut self) {
+        // Implicit flush + finish (clReleaseCommandQueue semantics), then
+        // stop the workers.
+        let _ = self.finish();
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cl::event::CommandStatus;
     use crate::cl::platform::Platform;
+
+    const VECADD: &str = "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
+        size_t i = get_global_id(0);
+        c[i] = a[i] + b[i];
+    }";
+
+    /// A kernel heavy enough (interpreted) that independent launches
+    /// observably overlap on the worker pool.
+    const SPIN: &str = "__kernel void spin(__global float *x, int iters) {
+        size_t g = get_global_id(0);
+        float v = x[g];
+        for (int i = 0; i < iters; i++) { v = v * 1.000001f + 1.0f; }
+        x[g] = v;
+    }";
+
+    fn serial_ctx() -> Arc<Context> {
+        let platform = Platform::default_platform();
+        Arc::new(Context::new(platform.device("basic-serial").unwrap()))
+    }
 
     #[test]
     fn end_to_end_vecadd_through_host_api() {
         let platform = Platform::default_platform();
         let device = platform.device("pthread-gang(8)").unwrap();
         let ctx = Arc::new(Context::new(device));
-        let mut q = CommandQueue::new(ctx.clone());
-        let program = Program::build(
-            "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
-                 size_t i = get_global_id(0);
-                 c[i] = a[i] + b[i];
-             }",
-        )
-        .unwrap();
+        let q = CommandQueue::new(ctx.clone());
+        let program = Program::build(VECADD).unwrap();
         let n = 1024;
         let a = ctx.create_buffer(n * 4).unwrap();
         let b = ctx.create_buffer(n * 4).unwrap();
         let c = ctx.create_buffer(n * 4).unwrap();
         let av: Vec<f32> = (0..n).map(|i| i as f32).collect();
         let bv: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
-        ctx.write_f32(a, &av).unwrap();
-        ctx.write_f32(b, &bv).unwrap();
+        let wa = q.enqueue_write_slice(a, &av, &[]).unwrap();
+        let wb = q.enqueue_write_slice(b, &bv, &[]).unwrap();
         let mut k = Kernel::new(&program, "vecadd").unwrap();
         k.set_arg(0, KernelArg::Buf(a)).unwrap();
         k.set_arg(1, KernelArg::Buf(b)).unwrap();
         k.set_arg(2, KernelArg::Buf(c)).unwrap();
-        let ev = q.enqueue_nd_range(&program, &k, [n, 1, 1], [64, 1, 1]).unwrap();
-        assert_eq!(ev.stats.workgroups, n / 64);
-        let out = ctx.read_f32(c, n).unwrap();
+        let ev = q.enqueue_nd_range(&program, &k, [n, 1, 1], [64, 1, 1], &[wa, wb]).unwrap();
+        assert_eq!(ev.status(), CommandStatus::Queued, "deferred until flush");
+        let rd = q.enqueue_read_buffer(c, 0, n * 4, &[ev.clone()]).unwrap();
+        q.flush();
+        let out: Vec<f32> = rd.wait_vec().unwrap();
+        let stats = ev.wait().unwrap();
+        assert_eq!(stats.workgroups, n / 64);
+        assert!(ev.duration_ns() > 0);
         assert!(out.iter().enumerate().all(|(i, &v)| v == 3.0 * i as f32));
+        q.finish().unwrap();
+    }
+
+    #[test]
+    fn commands_deferred_until_flush_and_wait_blocks() {
+        let ctx = serial_ctx();
+        let q = CommandQueue::new(ctx.clone());
+        let program =
+            Program::build("__kernel void k(__global float *x) { x[get_global_id(0)] = 1.0f; }")
+                .unwrap();
+        let buf = ctx.create_buffer(64 * 4).unwrap();
+        ctx.write_f32(buf, &vec![0.0; 64]).unwrap();
+        let mut k = Kernel::new(&program, "k").unwrap();
+        k.set_arg(0, KernelArg::Buf(buf)).unwrap();
+        let ev = q.enqueue_nd_range(&program, &k, [64, 1, 1], [16, 1, 1], &[]).unwrap();
+        // Unflushed → the command cannot have run: memory is untouched.
+        assert_eq!(ev.status(), CommandStatus::Queued);
+        assert!(ctx.read_f32(buf, 64).unwrap().iter().all(|&v| v == 0.0));
+        // wait() implicitly flushes the owning queue, then blocks.
+        let stats = ev.wait().unwrap();
+        assert_eq!(stats.workgroups, 4);
+        assert_eq!(ev.status(), CommandStatus::Complete);
+        assert!(ctx.read_f32(buf, 64).unwrap().iter().all(|&v| v == 1.0));
+        let p = ev.profile();
+        assert!(p.queued_ns <= p.submitted_ns && p.submitted_ns <= p.start_ns);
+        assert!(p.start_ns <= p.end_ns);
+    }
+
+    #[test]
+    fn out_of_order_runs_independent_commands_concurrently() {
+        let ctx = serial_ctx();
+        let q = CommandQueue::with_properties(ctx.clone(), QueueProperties::OutOfOrder);
+        let program = Program::build(SPIN).unwrap();
+        let bufs: Vec<_> = (0..3).map(|_| ctx.create_buffer(64 * 4).unwrap()).collect();
+        for &b in &bufs {
+            ctx.write_f32(b, &vec![0.0; 64]).unwrap();
+        }
+        for &b in &bufs {
+            let mut k = Kernel::new(&program, "spin").unwrap();
+            k.set_arg(0, KernelArg::Buf(b)).unwrap();
+            k.set_arg(1, KernelArg::I32(20000)).unwrap();
+            q.enqueue_nd_range(&program, &k, [64, 1, 1], [32, 1, 1], &[]).unwrap();
+        }
+        q.finish().unwrap();
+        assert!(
+            q.max_concurrency() >= 2,
+            "independent launches should overlap on the worker pool (saw {})",
+            q.max_concurrency()
+        );
+    }
+
+    #[test]
+    fn wait_list_edge_forces_sequential_execution() {
+        let ctx = serial_ctx();
+        let q = CommandQueue::with_properties(ctx.clone(), QueueProperties::OutOfOrder);
+        let program = Program::build(
+            "__kernel void writer(__global float *x) {
+                 uint g = (uint)get_global_id(0);
+                 x[g] = (float)g * 3.0f;
+             }
+             __kernel void reader(__global const float *x, __global float *y) {
+                 size_t g = get_global_id(0);
+                 y[g] = x[g] + 1.0f;
+             }",
+        )
+        .unwrap();
+        let n = 256;
+        let x = ctx.create_buffer(n * 4).unwrap();
+        let y = ctx.create_buffer(n * 4).unwrap();
+        let mut kw = Kernel::new(&program, "writer").unwrap();
+        kw.set_arg(0, KernelArg::Buf(x)).unwrap();
+        let ew = q.enqueue_nd_range(&program, &kw, [n, 1, 1], [32, 1, 1], &[]).unwrap();
+        let mut kr = Kernel::new(&program, "reader").unwrap();
+        kr.set_arg(0, KernelArg::Buf(x)).unwrap();
+        kr.set_arg(1, KernelArg::Buf(y)).unwrap();
+        let er = q.enqueue_nd_range(&program, &kr, [n, 1, 1], [32, 1, 1], &[ew.clone()]).unwrap();
+        q.finish().unwrap();
+        let out = ctx.read_f32(y, n).unwrap();
+        assert!(out.iter().enumerate().all(|(i, &v)| v == 3.0 * i as f32 + 1.0));
+        // The declared edge serialises them: the reader started only
+        // after the writer ended.
+        assert!(
+            er.profile().start_ns >= ew.profile().end_ns,
+            "wait-list edge must order writer before reader"
+        );
+    }
+
+    #[test]
+    fn fill_copy_marker_barrier() {
+        let ctx = serial_ctx();
+        let q = CommandQueue::with_properties(ctx.clone(), QueueProperties::OutOfOrder);
+        let a = ctx.create_buffer(64 * 4).unwrap();
+        let b = ctx.create_buffer(64 * 4).unwrap();
+        let f = q.enqueue_fill_buffer(a, 0, 4.0f32.to_le_bytes().to_vec(), 64 * 4, &[]).unwrap();
+        let c = q.enqueue_copy_buffer(a, b, 0, 0, 64 * 4, &[f]).unwrap();
+        let m = q.enqueue_marker(&[]);
+        let bar = q.enqueue_barrier();
+        let rd = q.enqueue_read_buffer(b, 0, 64 * 4, &[]).unwrap();
+        q.flush();
+        let out: Vec<f32> = rd.wait_vec().unwrap();
+        assert!(out.iter().all(|&v| v == 4.0));
+        m.wait().unwrap();
+        bar.wait().unwrap();
+        c.wait().unwrap();
+        q.finish().unwrap();
+    }
+
+    #[test]
+    fn stale_buffer_handles_rejected_at_enqueue() {
+        let ctx = serial_ctx();
+        let q = CommandQueue::new(ctx.clone());
+        let program =
+            Program::build("__kernel void k(__global float *x) { x[0] = 1.0f; }").unwrap();
+        let buf = ctx.create_buffer(64).unwrap();
+        ctx.release_buffer(buf).unwrap();
+        let mut k = Kernel::new(&program, "k").unwrap();
+        k.set_arg(0, KernelArg::Buf(buf)).unwrap();
+        assert!(q.enqueue_nd_range(&program, &k, [8, 1, 1], [8, 1, 1], &[]).is_err());
+        assert!(q.enqueue_write_buffer(buf, 0, vec![0u8; 8], &[]).is_err());
+        assert!(q.enqueue_read_buffer(buf, 0, 8, &[]).is_err());
+    }
+
+    #[test]
+    fn failed_dependency_propagates() {
+        let ctx = serial_ctx();
+        let q = CommandQueue::with_properties(ctx.clone(), QueueProperties::OutOfOrder);
+        let buf = ctx.create_buffer(16).unwrap();
+        let w = q.enqueue_write_buffer(buf, 0, vec![1u8; 16], &[]).unwrap();
+        let r = q.enqueue_read_buffer(buf, 0, 16, &[w.clone()]).unwrap();
+        // Release the buffer while the commands are still queued: the
+        // write fails its execute-time liveness check, and the failure
+        // propagates along the wait-list edge to the read.
+        ctx.release_buffer(buf).unwrap();
+        q.flush();
+        assert!(w.wait().is_err(), "write to a released buffer must fail");
+        assert!(r.wait().is_err(), "dependents of failed commands fail too");
+        assert!(q.finish().is_err());
     }
 
     #[test]
     fn invalid_nd_range_rejected() {
-        let platform = Platform::default_platform();
-        let ctx = Arc::new(Context::new(platform.device("basic").unwrap()));
-        let mut q = CommandQueue::new(ctx);
+        let ctx = serial_ctx();
+        let q = CommandQueue::new(ctx);
         let program =
             Program::build("__kernel void k(__global float *x) { x[0] = 1.0f; }").unwrap();
         let k = Kernel::new(&program, "k").unwrap();
-        assert!(q.enqueue_nd_range(&program, &k, [10, 1, 1], [3, 1, 1]).is_err());
+        assert!(q.enqueue_nd_range(&program, &k, [10, 1, 1], [3, 1, 1], &[]).is_err());
     }
 
     #[test]
     fn unset_args_rejected() {
-        let platform = Platform::default_platform();
-        let ctx = Arc::new(Context::new(platform.device("basic").unwrap()));
-        let mut q = CommandQueue::new(ctx);
+        let ctx = serial_ctx();
+        let q = CommandQueue::new(ctx);
         let program =
             Program::build("__kernel void k(__global float *x) { x[0] = 1.0f; }").unwrap();
         let k = Kernel::new(&program, "k").unwrap();
-        let e = q.enqueue_nd_range(&program, &k, [8, 1, 1], [8, 1, 1]);
+        let e = q.enqueue_nd_range(&program, &k, [8, 1, 1], [8, 1, 1], &[]);
         assert!(e.is_err());
     }
 }

@@ -40,13 +40,13 @@ impl Device for BasicDevice {
         }
     }
 
-    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {
         let mut stats = LaunchStats::default();
         let mut local = vec![0u8; req.local_mem.max(1)];
         for g in req.all_groups() {
             let ctx = req.ctx(g);
             stats.diverged_gangs +=
-                super::run_one_group(self.engine, req.wgf, &req.args, global, &mut local, &ctx)?;
+                super::run_one_group(self.engine, &req.wgf, &req.args, global, &mut local, &ctx)?;
             stats.workgroups += 1;
         }
         Ok(stats)

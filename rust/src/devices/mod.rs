@@ -10,9 +10,12 @@
 //!   Pallas/XLA artifacts through the PJRT C API.
 
 pub mod basic;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod threaded;
 pub mod ttasim;
+
+use std::sync::Arc;
 
 use crate::cl::error::Result;
 use crate::exec::{LaunchCtx, VVal};
@@ -48,9 +51,12 @@ pub struct DeviceInfo {
 
 /// A kernel launch prepared by the host layer: the specialised work-group
 /// function, resolved argument values, and the launch geometry.
-pub struct LaunchRequest<'a> {
+///
+/// Owns its work-group function (shared with the program's §4.1 cache),
+/// so launches are `Send` and can be deferred into a queue's scheduler.
+pub struct LaunchRequest {
     /// Enqueue-time-specialised work-group function.
-    pub wgf: &'a WorkGroupFunction,
+    pub wgf: Arc<WorkGroupFunction>,
     /// Argument values (buffers already resolved to global offsets,
     /// local pointers to local offsets).
     pub args: Vec<VVal>,
@@ -64,7 +70,7 @@ pub struct LaunchRequest<'a> {
     pub local_mem: usize,
 }
 
-impl LaunchRequest<'_> {
+impl LaunchRequest {
     /// Launch context for one work-group.
     pub fn ctx(&self, g: [usize; 3]) -> LaunchCtx {
         LaunchCtx {
@@ -111,8 +117,9 @@ pub trait Device: Send + Sync {
     fn compile_options(&self) -> CompileOptions {
         CompileOptions::default()
     }
-    /// Execute a launch.
-    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats>;
+    /// Execute a launch. Devices may be called concurrently from a
+    /// queue's worker pool; implementations must be reentrant.
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats>;
 }
 
 /// Run one work-group with the chosen engine (shared by basic/threaded).

@@ -156,7 +156,7 @@ impl Device for PjrtDevice {
         crate::kcc::CompileOptions { spmd: true, ..Default::default() }
     }
 
-    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {
         self.launch_binding(global, &req.wgf.name, &req.args)?;
         Ok(LaunchStats { workgroups: req.all_groups().len(), ..Default::default() })
     }

@@ -59,7 +59,7 @@ impl Device for ThreadedDevice {
         }
     }
 
-    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {
         let groups = req.all_groups();
         let nthreads = self.threads.min(groups.len()).max(1);
         if nthreads == 1 {
@@ -93,7 +93,7 @@ impl Device for ThreadedDevice {
                             unsafe { std::slice::from_raw_parts_mut(shared.0, shared.1) };
                         stats.diverged_gangs += super::run_one_group(
                             engine,
-                            req_ref.wgf,
+                            &req_ref.wgf,
                             &req_ref.args,
                             global_view,
                             &mut local,

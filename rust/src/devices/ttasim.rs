@@ -273,7 +273,7 @@ impl TtaSimDevice {
     }
 
     /// Execute + count cycles for one launch (all work-groups).
-    pub fn simulate(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+    pub fn simulate(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {
         let f = &req.wgf.loop_fn;
         let sched = schedule_function(&self.config, f);
         let mut stats = LaunchStats::default();
@@ -335,7 +335,7 @@ impl Device for TtaSimDevice {
         self.opts.clone()
     }
 
-    fn launch(&self, global: &mut [u8], req: &LaunchRequest<'_>) -> Result<LaunchStats> {
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {
         self.simulate(global, req)
     }
 }

@@ -43,6 +43,7 @@ pub mod exec;
 pub mod frontend;
 pub mod ir;
 pub mod kcc;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod suite;
 pub mod testing;

@@ -14,7 +14,7 @@ use poclrs::cl::Platform;
 use poclrs::kcc::{compile_workgroup, CompileOptions};
 use poclrs::suite::{all_apps, app_by_name, runner, SizeClass};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let platform = Platform::default_platform();
     match args.first().map(|s| s.as_str()) {
@@ -22,13 +22,12 @@ fn main() -> anyhow::Result<()> {
             println!("platform `{}`\n{}", platform.name, platform.capability_table());
         }
         Some("run") => {
-            let name = args.get(1).ok_or_else(|| anyhow::anyhow!("usage: run <App> [device]"))?;
+            let name =
+                args.get(1).ok_or_else(|| String::from("usage: run <App> [device]"))?;
             let dev = args.get(2).map(|s| s.as_str()).unwrap_or("pthread-gang(8)");
-            let device = platform
-                .device(dev)
-                .ok_or_else(|| anyhow::anyhow!("no device matching `{dev}`"))?;
+            let device = platform.find_device(dev)?;
             let app = app_by_name(name, SizeClass::Bench)
-                .ok_or_else(|| anyhow::anyhow!("no app named `{name}`"))?;
+                .ok_or_else(|| format!("no app named `{name}`"))?;
             let r = runner::run_and_verify(&app, device)?;
             println!(
                 "{name}: OK on {dev} ({} work-groups, {:?} kernel time)",
@@ -37,9 +36,7 @@ fn main() -> anyhow::Result<()> {
         }
         Some("suite") => {
             let dev = args.get(1).map(|s| s.as_str()).unwrap_or("pthread-gang(8)");
-            let device = platform
-                .device(dev)
-                .ok_or_else(|| anyhow::anyhow!("no device matching `{dev}`"))?;
+            let device = platform.find_device(dev)?;
             for app in all_apps(SizeClass::Small) {
                 match runner::run_and_verify(&app, Arc::clone(&device)) {
                     Ok(r) => println!("{:<22} OK   {:>8.2?}", app.name, r.kernel_time),
@@ -48,7 +45,8 @@ fn main() -> anyhow::Result<()> {
             }
         }
         Some("compile") => {
-            let path = args.get(1).ok_or_else(|| anyhow::anyhow!("usage: compile <file.cl> [LX]"))?;
+            let path =
+                args.get(1).ok_or_else(|| String::from("usage: compile <file.cl> [LX]"))?;
             let lx: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
             let src = std::fs::read_to_string(path)?;
             let module = poclrs::frontend::compile(&src)?;

@@ -1,10 +1,18 @@
 //! Suite runner: executes an [`App`] through the host API on a device and
 //! verifies against the native baseline.
+//!
+//! The runner exploits the asynchronous queue API: it enqueues every
+//! buffer upload without dependencies, chains kernel passes behind their
+//! predecessor plus the uploads of the buffers they actually touch, and
+//! reads every output back concurrently. On an out-of-order queue the
+//! independent per-pass transfers therefore overlap with compute — the
+//! first scalability win of the event-graph redesign on the multi-pass
+//! apps (prefixsum, bitonicsort, reduction).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cl::{CommandQueue, Context, Kernel, KernelArg, Program};
+use crate::cl::{CommandQueue, Context, Event, Kernel, KernelArg, Program, QueueProperties};
 use crate::cl::error::{Error, Result};
 use crate::devices::{Device, LaunchStats};
 
@@ -14,57 +22,98 @@ use super::{App, BufInit, PassArg};
 pub struct RunResult {
     /// Final contents of every buffer.
     pub buffers: Vec<BufInit>,
-    /// Kernel-only wall time (sum over passes).
+    /// Kernel-only execution time (sum over pass events).
     pub kernel_time: Duration,
     /// Aggregate device stats.
     pub stats: LaunchStats,
 }
 
-/// Run all passes of `app` once on `device`.
+/// Run all passes of `app` once on `device` (out-of-order queue: uploads
+/// and read-backs overlap with compute along the event graph).
 pub fn run_on_device(app: &App, device: Arc<dyn Device>) -> Result<RunResult> {
+    run_on_device_with_queue(app, device, QueueProperties::OutOfOrder)
+}
+
+/// Run all passes of `app` once on `device` with an explicit queue mode.
+pub fn run_on_device_with_queue(
+    app: &App,
+    device: Arc<dyn Device>,
+    props: QueueProperties,
+) -> Result<RunResult> {
     let ctx = Arc::new(Context::new(device));
-    let mut queue = CommandQueue::new(ctx.clone());
+    let queue = CommandQueue::with_properties(ctx.clone(), props);
     let program = Program::build(app.source)?;
 
-    // Create + fill buffers.
+    // Create buffers and enqueue all uploads, dependency-free: they can
+    // overlap with each other and with any pass that doesn't touch them.
     let mut bufs = Vec::with_capacity(app.buffers.len());
+    let mut uploads = Vec::with_capacity(app.buffers.len());
     for b in &app.buffers {
         let handle = ctx.create_buffer(b.byte_len())?;
-        match b {
-            BufInit::F32(d) => ctx.write_f32(handle, d)?,
-            BufInit::U32(d) => ctx.write_u32(handle, d)?,
-        }
+        let ev = match b {
+            BufInit::F32(d) => queue.enqueue_write_slice(handle, d, &[])?,
+            BufInit::U32(d) => queue.enqueue_write_slice(handle, d, &[])?,
+        };
         bufs.push(handle);
+        uploads.push(ev);
     }
 
-    let mut kernel_time = Duration::ZERO;
-    let mut stats = LaunchStats::default();
+    // Passes chain behind their predecessor (they share buffers) and the
+    // uploads of the buffers they reference.
+    let mut prev: Option<Event> = None;
+    let mut kernel_events = Vec::with_capacity(app.passes.len());
     for pass in &app.passes {
         let mut k = Kernel::new(&program, pass.kernel)?;
+        let mut wait: Vec<Event> = Vec::new();
         for (i, a) in pass.args.iter().enumerate() {
             let arg = match a {
-                PassArg::Buf(bi) => KernelArg::Buf(bufs[*bi]),
+                PassArg::Buf(bi) => {
+                    wait.push(uploads[*bi].clone());
+                    KernelArg::Buf(bufs[*bi])
+                }
                 PassArg::Scalar(s) => s.clone(),
                 PassArg::Local(sz) => KernelArg::LocalSize(*sz),
             };
             k.set_arg(i, arg)?;
         }
-        let t0 = Instant::now();
-        let ev = queue.enqueue_nd_range(&program, &k, pass.global, pass.local)?;
-        kernel_time += t0.elapsed();
-        stats.workgroups += ev.stats.workgroups;
-        stats.diverged_gangs += ev.stats.diverged_gangs;
-        stats.cycles += ev.stats.cycles;
+        if let Some(p) = &prev {
+            wait.push(p.clone());
+        }
+        let ev = queue.enqueue_nd_range(&program, &k, pass.global, pass.local, &wait)?;
+        kernel_events.push(ev.clone());
+        prev = Some(ev);
     }
 
-    // Read everything back.
+    // Read everything back concurrently: each read waits on the last
+    // pass (which transitively covers all passes) and its own upload.
+    let mut reads = Vec::with_capacity(bufs.len());
+    for (i, handle) in bufs.iter().enumerate() {
+        let mut wait = vec![uploads[i].clone()];
+        if let Some(p) = &prev {
+            wait.push(p.clone());
+        }
+        reads.push(queue.enqueue_read_buffer(*handle, 0, app.buffers[i].byte_len(), &wait)?);
+    }
+    queue.flush();
+
     let mut out = Vec::with_capacity(bufs.len());
-    for (handle, init) in bufs.iter().zip(&app.buffers) {
+    for (ev, init) in reads.iter().zip(&app.buffers) {
         out.push(match init {
-            BufInit::F32(d) => BufInit::F32(ctx.read_f32(*handle, d.len())?),
-            BufInit::U32(d) => BufInit::U32(ctx.read_u32(*handle, d.len())?),
+            BufInit::F32(_) => BufInit::F32(ev.wait_vec::<f32>()?),
+            BufInit::U32(_) => BufInit::U32(ev.wait_vec::<u32>()?),
         });
     }
+
+    let mut stats = LaunchStats::default();
+    let mut kernel_time = Duration::ZERO;
+    for ev in &kernel_events {
+        let s = ev.wait()?;
+        stats.workgroups += s.workgroups;
+        stats.diverged_gangs += s.diverged_gangs;
+        stats.cycles += s.cycles;
+        kernel_time += Duration::from_nanos(ev.duration_ns() as u64);
+    }
+    queue.finish()?;
     Ok(RunResult { buffers: out, kernel_time, stats })
 }
 
@@ -113,6 +162,17 @@ pub fn verify(app: &App, got: &[BufInit]) -> Result<()> {
 /// Convenience: run on device + verify.
 pub fn run_and_verify(app: &App, device: Arc<dyn Device>) -> Result<RunResult> {
     let r = run_on_device(app, device)?;
+    verify(app, &r.buffers)?;
+    Ok(r)
+}
+
+/// Run with an explicit queue mode + verify.
+pub fn run_and_verify_with_queue(
+    app: &App,
+    device: Arc<dyn Device>,
+    props: QueueProperties,
+) -> Result<RunResult> {
+    let r = run_on_device_with_queue(app, device, props)?;
     verify(app, &r.buffers)?;
     Ok(r)
 }

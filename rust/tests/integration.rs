@@ -10,7 +10,7 @@ use poclrs::kcc::CompileOptions;
 fn specialization_cache_shared_across_enqueues() {
     let platform = Platform::default_platform();
     let ctx = Arc::new(Context::new(platform.device("basic-serial").unwrap()));
-    let mut q = CommandQueue::new(ctx.clone());
+    let q = CommandQueue::new(ctx.clone());
     let program = Program::build(
         "__kernel void k(__global float *x) { x[get_global_id(0)] += 1.0f; }",
     )
@@ -20,11 +20,14 @@ fn specialization_cache_shared_across_enqueues() {
     let mut k = Kernel::new(&program, "k").unwrap();
     k.set_arg(0, KernelArg::Buf(buf)).unwrap();
     for _ in 0..5 {
-        q.enqueue_nd_range(&program, &k, [64, 1, 1], [16, 1, 1]).unwrap();
+        q.enqueue_nd_range(&program, &k, [64, 1, 1], [16, 1, 1], &[]).unwrap();
     }
-    q.enqueue_nd_range(&program, &k, [64, 1, 1], [32, 1, 1]).unwrap();
+    q.enqueue_nd_range(&program, &k, [64, 1, 1], [32, 1, 1], &[]).unwrap();
+    // Work-group functions are specialised at *enqueue* time (§4.1), so
+    // the cache counters are exact before the queue even flushes.
     assert_eq!(*program.cache_misses.lock().unwrap(), 2, "two local sizes → two compiles");
     assert_eq!(*program.cache_hits.lock().unwrap(), 4);
+    q.finish().unwrap();
     let out = ctx.read_f32(buf, 64).unwrap();
     assert!(out.iter().all(|&v| v == 6.0));
 }
@@ -38,6 +41,7 @@ fn capability_table_is_table1_shaped() {
     assert!(t.lines().count() >= 6);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_runtime_roundtrip_if_artifacts_exist() {
     // Soft-skip when `make artifacts` hasn't run (CI without python).

@@ -45,7 +45,7 @@ fn gen_kernel(rng: &mut Rng) -> String {
 fn run_engine(src: &str, engine: EngineKind, input: &[f32], local: usize, c: i32) -> Vec<f32> {
     let device: Arc<dyn Device> = Arc::new(BasicDevice::new(engine));
     let ctx = Arc::new(Context::new(device));
-    let mut q = CommandQueue::new(ctx.clone());
+    let q = CommandQueue::new(ctx.clone());
     let program = Program::build(src).unwrap();
     let x = ctx.create_buffer(input.len() * 4).unwrap();
     ctx.write_f32(x, input).unwrap();
@@ -53,7 +53,8 @@ fn run_engine(src: &str, engine: EngineKind, input: &[f32], local: usize, c: i32
     k.set_arg(0, KernelArg::Buf(x)).unwrap();
     k.set_arg(1, KernelArg::LocalSize(local * 4)).unwrap();
     k.set_arg(2, KernelArg::I32(c)).unwrap();
-    q.enqueue_nd_range(&program, &k, [input.len(), 1, 1], [local, 1, 1]).unwrap();
+    q.enqueue_nd_range(&program, &k, [input.len(), 1, 1], [local, 1, 1], &[]).unwrap();
+    q.finish().unwrap();
     ctx.read_f32(x, input.len()).unwrap()
 }
 

@@ -1,8 +1,10 @@
 //! Integration: every suite application must produce baseline-identical
-//! results on every CPU-style device (the correctness half of Fig. 12-14).
+//! results on every CPU-style device (the correctness half of Fig. 12-14),
+//! under both queue execution modes (in-order and out-of-order).
 
 use std::sync::Arc;
 
+use poclrs::cl::QueueProperties;
 use poclrs::devices::{basic::BasicDevice, threaded::ThreadedDevice, ttasim::TtaSimDevice, Device, EngineKind};
 use poclrs::suite::{all_apps, runner, SizeClass};
 
@@ -17,12 +19,14 @@ fn devices() -> Vec<(&'static str, Arc<dyn Device>)> {
 }
 
 #[test]
-fn all_apps_verify_on_all_devices() {
+fn all_apps_verify_on_all_devices_both_queue_modes() {
     let mut failures = Vec::new();
-    for (dname, device) in devices() {
-        for app in all_apps(SizeClass::Small) {
-            if let Err(e) = runner::run_and_verify(&app, device.clone()) {
-                failures.push(format!("{dname}/{}: {e}", app.name));
+    for props in [QueueProperties::InOrder, QueueProperties::OutOfOrder] {
+        for (dname, device) in devices() {
+            for app in all_apps(SizeClass::Small) {
+                if let Err(e) = runner::run_and_verify_with_queue(&app, device.clone(), props) {
+                    failures.push(format!("{props:?}/{dname}/{}: {e}", app.name));
+                }
             }
         }
     }
