@@ -1,0 +1,92 @@
+//! Engine comparison — serial vs per-lane gang vs lane-batched vector
+//! gang over a few uniform-control suite kernels, emitting a
+//! `BENCH_engines.json` snapshot (the ISSUE 2 wall-clock criterion:
+//! gang-vector beats gang-scalar at width 8).
+//!
+//! Run with `cargo bench --bench bench_engines`; `POCLRS_BENCH_MS` bounds
+//! the per-case sampling budget (default 300 ms).
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Duration;
+
+use poclrs::bench::{bench_fn, BenchResult};
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::suite::{app_by_name, runner, SizeClass};
+
+const WIDTH: usize = 8;
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("POCLRS_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(300),
+    );
+    let engines: Vec<(&str, EngineKind)> = vec![
+        ("serial", EngineKind::Serial),
+        ("gang-scalar8", EngineKind::Gang(WIDTH)),
+        ("gang-vector8", EngineKind::GangVector(WIDTH)),
+    ];
+    // Uniform-control float kernels: the vector engine's best case, and
+    // the shape of the Fig. 12 suite wins the paper reports for SIMD.
+    let apps = ["SimpleConvolution", "DCT", "MatrixMultiplication"];
+
+    println!("== Engine matrix: serial vs gang-scalar vs gang-vector (width {WIDTH}) ==\n");
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"engines\",\n  \"width\": {WIDTH},\n  \"apps\": [");
+    let mut first_app = true;
+    for name in apps {
+        let Some(app) = app_by_name(name, SizeClass::Bench) else {
+            println!("{name:<22} SKIP (unknown app)");
+            continue;
+        };
+        let mut results: Vec<(&str, BenchResult, poclrs::devices::LaunchStats)> = Vec::new();
+        for (label, engine) in &engines {
+            let device: Arc<dyn Device> = Arc::new(BasicDevice::new(*engine));
+            match runner::run_and_verify(&app, device.clone()) {
+                Ok(r) => {
+                    let bench = bench_fn(format!("{name}/{label}"), 1, 15, budget, || {
+                        let _ = runner::run_on_device(&app, device.clone()).unwrap();
+                    });
+                    results.push((*label, bench, r.stats));
+                }
+                Err(e) => println!("{name:<22} {label}: FAILED {e}"),
+            }
+        }
+        if results.is_empty() {
+            continue;
+        }
+        let base = results[0].1.ms();
+        let cells: Vec<String> = results
+            .iter()
+            .map(|(l, r, _)| format!("{l}={:.2}ms ({:.2}x)", r.ms(), r.ms() / base))
+            .collect();
+        println!("{name:<22} {}", cells.join("  "));
+
+        if !first_app {
+            let _ = writeln!(json, ",");
+        }
+        first_app = false;
+        let _ = write!(json, "    {{\"name\": \"{name}\", \"results\": [");
+        for (i, (label, r, stats)) in results.iter().enumerate() {
+            if i > 0 {
+                let _ = write!(json, ", ");
+            }
+            let _ = write!(
+                json,
+                "{{\"engine\": \"{label}\", \"ms\": {:.4}, \"dispatches\": {}, \"gangs\": {}, \"diverged\": {}}}",
+                r.ms(),
+                stats.dispatches(),
+                stats.gangs,
+                stats.diverged_gangs
+            );
+        }
+        let _ = write!(json, "]}}");
+    }
+    let _ = writeln!(json, "\n  ]\n}}");
+    match std::fs::write("BENCH_engines.json", &json) {
+        Ok(()) => println!("\nsnapshot written to BENCH_engines.json"),
+        Err(e) => println!("\ncould not write BENCH_engines.json: {e}"),
+    }
+    println!(
+        "(expectation: gang-vector8 < gang-scalar8 wall-clock on every row —\n the ~{WIDTH}x dispatch reduction shows up as real throughput)"
+    );
+}

@@ -32,6 +32,9 @@ impl Device for BasicDevice {
                 EngineKind::Gang(8) => "gang x8 (AVX2 model)",
                 EngineKind::Gang(4) => "gang x4 (NEON/AltiVec model)",
                 EngineKind::Gang(_) => "gang",
+                EngineKind::GangVector(8) => "gang-vector x8 (AVX2 SoA)",
+                EngineKind::GangVector(4) => "gang-vector x4 (NEON/AltiVec SoA)",
+                EngineKind::GangVector(_) => "gang-vector (SoA)",
                 EngineKind::Serial => "scalar WI loops",
                 EngineKind::Fiber => "fibers (no DLP)",
             },
@@ -45,8 +48,9 @@ impl Device for BasicDevice {
         let mut local = vec![0u8; req.local_mem.max(1)];
         for g in req.all_groups() {
             let ctx = req.ctx(g);
-            stats.diverged_gangs +=
+            let gs =
                 super::run_one_group(self.engine, &req.wgf, &req.args, global, &mut local, &ctx)?;
+            stats.merge_gang(&gs);
             stats.workgroups += 1;
         }
         Ok(stats)

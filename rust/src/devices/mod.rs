@@ -26,10 +26,37 @@ use crate::kcc::{CompileOptions, WorkGroupFunction};
 pub enum EngineKind {
     /// Serial WI-loop execution (paper `basic`).
     Serial,
-    /// Lockstep gangs of the given SIMD width (8 ≈ AVX2, 4 ≈ NEON/AltiVec).
+    /// Per-lane lockstep gangs of the given SIMD width (8 ≈ AVX2, 4 ≈
+    /// NEON/AltiVec): one interpreter dispatch per instruction per lane.
     Gang(usize),
+    /// Lane-batched (structure-of-arrays) gangs of the given width: one
+    /// dispatch per instruction per *gang*, uniform values computed once
+    /// (`exec::vecgang`). Use [`native_gang_width`] for a host-tuned width.
+    GangVector(usize),
     /// Per-work-item fibers (FreeOCL / Twin Peaks baseline).
     Fiber,
+}
+
+/// Host-appropriate default gang width: AVX2-class x86-64 hosts get 8
+/// lanes, everything else 4 (Table 1's DLP column). The
+/// `POCLRS_GANG_WIDTH` environment variable overrides the detection (the
+/// vector engine is specialised for widths 2/4/8/16; other values degrade
+/// to the per-lane gang engine).
+pub fn native_gang_width() -> usize {
+    if let Some(w) =
+        std::env::var("POCLRS_GANG_WIDTH").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        if w > 0 {
+            return w;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return 8;
+        }
+    }
+    4
 }
 
 /// Table 1-style device description.
@@ -101,10 +128,49 @@ impl LaunchRequest {
 pub struct LaunchStats {
     /// Work-groups executed.
     pub workgroups: usize,
-    /// Gangs that diverged (gang engine only).
+    /// Gangs executed (gang engines only; chunks × regions).
+    pub gangs: usize,
+    /// Gangs that diverged (gang engines only).
     pub diverged_gangs: usize,
+    /// Lane-batched instruction dispatches (vector gang engine).
+    pub vector_insts: usize,
+    /// Uniform (once-per-gang scalar) instruction dispatches (vector gang
+    /// engine).
+    pub uniform_insts: usize,
+    /// Per-lane instruction dispatches (scalar gang lockstep and both
+    /// engines' divergence/tail fallback paths).
+    pub lane_insts: usize,
     /// Simulated cycles (ttasim only).
     pub cycles: u64,
+}
+
+impl LaunchStats {
+    /// Fold one work-group's gang-engine statistics into the launch total.
+    pub fn merge_gang(&mut self, g: &crate::exec::gang::GangStats) {
+        self.gangs += g.gangs;
+        self.diverged_gangs += g.diverged;
+        self.vector_insts += g.vector_insts;
+        self.uniform_insts += g.uniform_insts;
+        self.lane_insts += g.lane_insts;
+    }
+
+    /// Fold another launch's statistics into this one (worker pools,
+    /// multi-pass runs).
+    pub fn accumulate(&mut self, other: &LaunchStats) {
+        self.workgroups += other.workgroups;
+        self.gangs += other.gangs;
+        self.diverged_gangs += other.diverged_gangs;
+        self.vector_insts += other.vector_insts;
+        self.uniform_insts += other.uniform_insts;
+        self.lane_insts += other.lane_insts;
+        self.cycles += other.cycles;
+    }
+
+    /// Total interpreter dispatches across the launch — the metric the
+    /// lane-batched engine shrinks by ~width× on uniform kernels.
+    pub fn dispatches(&self) -> usize {
+        self.vector_insts + self.uniform_insts + self.lane_insts
+    }
 }
 
 /// The host-device interface: every device executes prepared launches
@@ -122,7 +188,9 @@ pub trait Device: Send + Sync {
     fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats>;
 }
 
-/// Run one work-group with the chosen engine (shared by basic/threaded).
+/// Run one work-group with the chosen engine (shared by basic/threaded),
+/// returning the engine's execution statistics (zeroed for engines that
+/// do not gang).
 pub fn run_one_group(
     engine: EngineKind,
     wgf: &WorkGroupFunction,
@@ -130,20 +198,20 @@ pub fn run_one_group(
     global: &mut [u8],
     local: &mut [u8],
     ctx: &LaunchCtx,
-) -> Result<usize> {
+) -> Result<crate::exec::gang::GangStats> {
     let mut mem = crate::exec::MemoryRefs { global, local };
     match engine {
         EngineKind::Serial => {
             crate::exec::serial::run_workgroup(wgf, args, &mut mem, ctx)?;
-            Ok(0)
+            Ok(Default::default())
         }
-        EngineKind::Gang(w) => {
-            let stats = crate::exec::gang::run_workgroup(wgf, args, &mut mem, ctx, w)?;
-            Ok(stats.diverged)
+        EngineKind::Gang(w) => crate::exec::gang::run_workgroup(wgf, args, &mut mem, ctx, w),
+        EngineKind::GangVector(w) => {
+            crate::exec::vecgang::run_workgroup(wgf, args, &mut mem, ctx, w)
         }
         EngineKind::Fiber => {
             crate::exec::fiber::run_workgroup(wgf, args, &mut mem, ctx)?;
-            Ok(0)
+            Ok(Default::default())
         }
     }
 }

@@ -51,6 +51,9 @@ impl Device for ThreadedDevice {
                         "gang x4 (NEON/AltiVec model)"
                     }
                 }
+                EngineKind::GangVector(8) => "gang-vector x8 (AVX2 SoA)",
+                EngineKind::GangVector(4) => "gang-vector x4 (NEON/AltiVec SoA)",
+                EngineKind::GangVector(_) => "gang-vector (SoA)",
                 EngineKind::Serial => "scalar WI loops",
                 EngineKind::Fiber => "fibers (no DLP)",
             },
@@ -91,7 +94,7 @@ impl Device for ThreadedDevice {
                         // this safe for conforming kernels.
                         let global_view =
                             unsafe { std::slice::from_raw_parts_mut(shared.0, shared.1) };
-                        stats.diverged_gangs += super::run_one_group(
+                        let gs = super::run_one_group(
                             engine,
                             &req_ref.wgf,
                             &req_ref.args,
@@ -99,6 +102,7 @@ impl Device for ThreadedDevice {
                             &mut local,
                             &ctx,
                         )?;
+                        stats.merge_gang(&gs);
                         stats.workgroups += 1;
                     }
                     Ok(stats)
@@ -109,8 +113,7 @@ impl Device for ThreadedDevice {
         let mut total = LaunchStats::default();
         for r in results {
             let s = r.map_err(|e| Error::exec(format!("worker failed: {e}")))?;
-            total.workgroups += s.workgroups;
-            total.diverged_gangs += s.diverged_gangs;
+            total.accumulate(&s);
         }
         Ok(total)
     }

@@ -19,13 +19,55 @@ use super::interp::{Flow, LaunchCtx, Machine, SlotStore};
 use super::mem::MemoryRefs;
 use super::value::VVal;
 
-/// Execution statistics (consumed by benches/tests).
+/// Execution statistics (consumed by benches/tests), shared by the
+/// per-lane gang engine and the lane-batched vector engine so their
+/// dispatch counts are directly comparable.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct GangStats {
     /// Gangs executed (chunks × regions).
     pub gangs: usize,
     /// Gangs that diverged and fell back to per-lane execution.
     pub diverged: usize,
+    /// Lane-batched instruction dispatches: one interpreter dispatch
+    /// covered a whole gang's worth of lanes (vector engine only).
+    pub vector_insts: usize,
+    /// Uniform instruction dispatches: evaluated once per gang because the
+    /// value is provably or dynamically lane-invariant (vector engine).
+    pub uniform_insts: usize,
+    /// Per-lane instruction dispatches (the scalar gang engine's lockstep
+    /// loop, and both engines' divergence/tail fallback paths).
+    pub lane_insts: usize,
+}
+
+impl GangStats {
+    /// Total interpreter dispatches — the throughput metric the vector
+    /// engine is built to shrink (each dispatch is one `match` over the
+    /// instruction plus operand marshalling).
+    pub fn dispatches(&self) -> usize {
+        self.vector_insts + self.uniform_insts + self.lane_insts
+    }
+}
+
+/// Reconcile the barrier one gang/lane reached with the barrier the rest
+/// of the work-group reached so far. Conforming kernels always agree;
+/// disagreement is the OpenCL barrier-divergence error, reported with
+/// `scope` ("across gangs" / "within gang") for context.
+pub(crate) fn note_barrier(
+    agreed: &mut Option<BlockId>,
+    reached: BlockId,
+    scope: &str,
+) -> Result<()> {
+    match *agreed {
+        None => *agreed = Some(reached),
+        Some(prev) if prev == reached => {}
+        Some(prev) => {
+            return Err(Error::exec(format!(
+                "barrier divergence {scope}: bb{} vs bb{}",
+                prev.0, reached.0
+            )))
+        }
+    }
+    Ok(())
 }
 
 /// Execute one work-group in lockstep gangs of `width` lanes.
@@ -72,16 +114,7 @@ pub fn run_workgroup(
                 f, args, mem, ctx, &mut stores, &mut lane_regs, &lanes, start, local_id,
                 &mut stats,
             )?;
-            match next_barrier {
-                None => next_barrier = Some(reached),
-                Some(prev) if prev == reached => {}
-                Some(prev) => {
-                    return Err(Error::exec(format!(
-                        "barrier divergence across gangs: bb{} vs bb{}",
-                        prev.0, reached.0
-                    )))
-                }
-            }
+            note_barrier(&mut next_barrier, reached, "across gangs")?;
         }
         cur = next_barrier.expect("work-group is non-empty");
     }
@@ -114,6 +147,7 @@ fn run_gang_region(
         // dominated the hot loop; see EXPERIMENTS.md §Perf).
         for (def, inst) in &f.block(cur).insts {
             for &wi in lanes {
+                stats.lane_insts += 1;
                 let store = &mut stores[wi];
                 let mut m = Machine {
                     regs: std::mem::take(&mut lane_regs[wi]),
@@ -174,47 +208,64 @@ fn run_gang_region(
                     cur = target.unwrap();
                 } else {
                     // Fall back: finish the region per-lane (the masked /
-                    // scalarised path of a real vectoriser).
+                    // scalarised path of a real vectoriser). Registers are
+                    // block-local (IR invariant), so lanes restart from
+                    // their branch targets with fresh frames.
                     stats.diverged += 1;
                     let mut reached: Option<BlockId> = None;
                     for (i, &wi) in lanes.iter().enumerate() {
-                        let store = &mut stores[wi];
-                        let mut m = Machine {
-                            regs: std::mem::take(&mut lane_regs[wi]),
+                        let bar = run_lane_to_barrier(
+                            f,
                             args,
-                            slots: store,
                             mem,
                             ctx,
-                            local_id: local_id(wi),
-                        };
-                        let mut pos = lane_targets[i];
-                        let bar = loop {
-                            if f.block(pos).has_barrier() {
-                                break pos;
-                            }
-                            match m.exec_block(f, pos, true)? {
-                                Flow::Goto(b) => pos = b,
-                                Flow::Done => {
-                                    return Err(Error::exec("lane returned mid-region"))
-                                }
-                                Flow::AtBarrier(bb) => break bb,
-                            }
-                        };
-                        lane_regs[wi] = std::mem::take(&mut m.regs);
-                        match reached {
-                            None => reached = Some(bar),
-                            Some(prev) if prev == bar => {}
-                            Some(prev) => {
-                                return Err(Error::exec(format!(
-                                    "barrier divergence within gang: bb{} vs bb{}",
-                                    prev.0, bar.0
-                                )))
-                            }
-                        }
+                            &mut stores[wi],
+                            lane_targets[i],
+                            local_id(wi),
+                            stats,
+                        )?;
+                        note_barrier(&mut reached, bar, "within gang")?;
                     }
                     return Ok(reached.unwrap());
                 }
             }
+        }
+    }
+}
+
+/// Run one lane (work-item) from `start` to the next barrier block with a
+/// fresh register frame (registers are block-local, so frames carry no
+/// state across blocks). Shared by the scalar gang's divergence fallback
+/// and the vector engine's divergence + tail-gang paths.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_lane_to_barrier(
+    f: &crate::ir::func::Function,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+    store: &mut SlotStore,
+    start: BlockId,
+    local_id: [u64; 3],
+    stats: &mut GangStats,
+) -> Result<BlockId> {
+    let mut m = Machine {
+        regs: vec![VVal::i(0); f.reg_count() as usize],
+        args,
+        slots: store,
+        mem,
+        ctx,
+        local_id,
+    };
+    let mut pos = start;
+    loop {
+        if f.block(pos).has_barrier() {
+            return Ok(pos);
+        }
+        stats.lane_insts += f.block(pos).insts.len();
+        match m.exec_block(f, pos, true)? {
+            Flow::Goto(b) => pos = b,
+            Flow::Done => return Err(Error::exec("lane returned mid-region")),
+            Flow::AtBarrier(bb) => return Ok(bb),
         }
     }
 }

@@ -228,22 +228,7 @@ impl<'m, 'a> Machine<'m, 'a> {
                 }
             }
             Inst::Wi { func, dim } => {
-                let d = (*dim).min(2) as usize;
-                let v = match func {
-                    WiFn::LocalId => self.local_id[d],
-                    WiFn::GroupId => self.ctx.group_id[d],
-                    WiFn::GlobalId => {
-                        self.ctx.group_id[d] * self.ctx.local_size[d] as u64
-                            + self.local_id[d]
-                            + self.ctx.global_offset[d]
-                    }
-                    WiFn::LocalSize => self.ctx.local_size[d] as u64,
-                    WiFn::GlobalSize => self.ctx.num_groups[d] * self.ctx.local_size[d] as u64,
-                    WiFn::NumGroups => self.ctx.num_groups[d],
-                    WiFn::GlobalOffset => self.ctx.global_offset[d],
-                    WiFn::WorkDim => self.ctx.work_dim as u64,
-                };
-                Ok(VVal::i(v as i64))
+                Ok(VVal::i(wi_value(*func, *dim, self.ctx, &self.local_id) as i64))
             }
             Inst::Math { func, ty, args } => {
                 let vals: Vec<VVal> = args.iter().map(|a| self.operand(a)).collect();
@@ -306,7 +291,27 @@ fn add_ctx(e: Error, f: &Function, inst: &Inst) -> Error {
     }
 }
 
-fn norm_val(v: Val, s: Scalar) -> Val {
+/// Evaluate a work-item geometry query for one work-item. Shared by the
+/// scalar machine and the lane-batched vector machine so every engine
+/// derives ids from the same formulas.
+pub fn wi_value(func: WiFn, dim: u32, ctx: &LaunchCtx, local_id: &[u64; 3]) -> u64 {
+    let d = dim.min(2) as usize;
+    match func {
+        WiFn::LocalId => local_id[d],
+        WiFn::GroupId => ctx.group_id[d],
+        WiFn::GlobalId => {
+            ctx.group_id[d] * ctx.local_size[d] as u64 + local_id[d] + ctx.global_offset[d]
+        }
+        WiFn::LocalSize => ctx.local_size[d] as u64,
+        WiFn::GlobalSize => ctx.num_groups[d] * ctx.local_size[d] as u64,
+        WiFn::NumGroups => ctx.num_groups[d],
+        WiFn::GlobalOffset => ctx.global_offset[d],
+        WiFn::WorkDim => ctx.work_dim as u64,
+    }
+}
+
+/// Normalise a value to a scalar type (int widths wrap, floats round).
+pub fn norm_val(v: Val, s: Scalar) -> Val {
     match (v, s.is_float()) {
         (Val::I(i), false) => Val::I(norm_int(i, s)),
         (Val::I(i), true) => Val::F(norm_float(i as f64, s)),
@@ -316,7 +321,9 @@ fn norm_val(v: Val, s: Scalar) -> Val {
     }
 }
 
-fn normalize_to(v: &VVal, ty: &Type) -> VVal {
+/// Normalise a (possibly vector) value to a type's element scalar — the
+/// rounding/wrapping every store applies before hitting memory.
+pub fn normalize_to(v: &VVal, ty: &Type) -> VVal {
     let Some(s) = ty.elem_scalar() else { return v.clone() };
     match v {
         VVal::S(x) => VVal::S(norm_val(*x, s)),
@@ -341,7 +348,8 @@ pub fn eval_bin(op: BinOp, ty: &Type, a: &VVal, b: &VVal) -> Result<VVal> {
     Ok(VVal::V(out))
 }
 
-fn bin_scalar(op: BinOp, s: Scalar, a: Val, b: Val) -> Result<Val> {
+/// Binary op on two scalar values (the per-lane kernel of [`eval_bin`]).
+pub fn bin_scalar(op: BinOp, s: Scalar, a: Val, b: Val) -> Result<Val> {
     use BinOp::*;
     if s.is_float() && !matches!(op, And | Or | Xor | Shl | Shr) {
         let (x, y) = (a.as_f(), b.as_f());
@@ -427,7 +435,8 @@ fn bin_scalar(op: BinOp, s: Scalar, a: Val, b: Val) -> Result<Val> {
     Ok(Val::I(norm_int(r, s)))
 }
 
-fn eval_un(op: UnOp, ty: &Type, a: &VVal) -> Result<VVal> {
+/// Unary op over scalars or lane-wise over vectors.
+pub fn eval_un(op: UnOp, ty: &Type, a: &VVal) -> Result<VVal> {
     let s = ty.elem_scalar().unwrap_or(Scalar::I32);
     let f = |v: Val| -> Val {
         match op {
@@ -448,7 +457,8 @@ fn eval_un(op: UnOp, ty: &Type, a: &VVal) -> Result<VVal> {
     })
 }
 
-fn eval_cast(a: &VVal, _from: &Type, to: &Type) -> VVal {
+/// Numeric conversion to `to` (scalar-to-vector casts splat).
+pub fn eval_cast(a: &VVal, _from: &Type, to: &Type) -> VVal {
     let Some(s) = to.elem_scalar() else { return a.clone() };
     let conv = |v: Val| norm_val(v, s);
     match (a, to.lanes()) {

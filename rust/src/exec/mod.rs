@@ -1,11 +1,26 @@
 //! Execution engines for compiled work-group functions.
 //!
-//! * [`serial`] — runs the WI-loop-materialised `loop_fn` (paper `basic`).
-//! * [`gang`] — lockstep SIMD-style execution of `reg_fn` regions.
-//! * [`fiber`] — per-work-item fibers (FreeOCL / Twin Peaks baseline).
+//! The engine matrix (which engine consumes which compiler artifact):
 //!
-//! All engines share the [`interp::Machine`] instruction evaluator, so a
-//! result difference between engines is a scheduling bug, not a semantics
+//! * [`serial`] — runs the WI-loop-materialised `loop_fn` straight through
+//!   (paper `basic`); one dispatch per instruction per work-item, no
+//!   per-instruction scheduling overhead. Wins for tiny work-groups.
+//! * [`gang`] — per-lane lockstep execution of `reg_fn` regions: every
+//!   instruction is dispatched once per lane, lane frames swapped per
+//!   instruction. The reference model for SIMD mapping, and the fallback
+//!   path for divergent control flow.
+//! * [`vecgang`] — lane-batched (structure-of-arrays) execution of
+//!   `reg_fn` regions: one dispatch per gang over [`value::VLane`] values,
+//!   uniform values computed once per gang, varying floats carried in
+//!   `vecmath::RealVec64`. ~width× fewer dispatches than [`gang`] on
+//!   uniform-control kernels; divergent branches degrade to the [`gang`]
+//!   per-lane path until the region's closing barrier.
+//! * [`fiber`] — per-work-item fibers over `reg_fn` (FreeOCL / Twin Peaks
+//!   baseline; the architecture the paper argues against).
+//!
+//! The scalar engines share the [`interp::Machine`] instruction evaluator
+//! and the vector engine reuses its per-operation kernels, so a result
+//! difference between engines is a scheduling bug, not a semantics
 //! difference — the property the cross-engine tests rely on.
 
 pub mod fiber;
@@ -14,10 +29,11 @@ pub mod interp;
 pub mod mem;
 pub mod serial;
 pub mod value;
+pub mod vecgang;
 
 pub use interp::LaunchCtx;
 pub use mem::MemoryRefs;
-pub use value::{Val, VVal};
+pub use value::{Val, VLane, VVal};
 
 #[cfg(test)]
 mod tests {
@@ -30,6 +46,7 @@ mod tests {
     enum Engine {
         Serial,
         Gang(usize),
+        GangVec(usize),
         Fiber,
     }
 
@@ -113,6 +130,11 @@ mod tests {
                                 .map(|_| ())
                                 .unwrap()
                         }
+                        Engine::GangVec(w) => {
+                            vecgang::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx, w)
+                                .map(|_| ())
+                                .unwrap()
+                        }
                         Engine::Fiber => {
                             fiber::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx).unwrap()
                         }
@@ -128,7 +150,14 @@ mod tests {
     }
 
     fn all_engines() -> Vec<Engine> {
-        vec![Engine::Serial, Engine::Gang(4), Engine::Gang(8), Engine::Fiber]
+        vec![
+            Engine::Serial,
+            Engine::Gang(4),
+            Engine::Gang(8),
+            Engine::GangVec(4),
+            Engine::GangVec(8),
+            Engine::Fiber,
+        ]
     }
 
     const VECADD: &str = "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {

@@ -1,6 +1,13 @@
 //! Runtime values for the execution engines.
+//!
+//! [`Val`]/[`VVal`] are the scalar-machine values (one work-item at a
+//! time). [`VLane`] is the lane-batched (structure-of-arrays) value of the
+//! vector gang engine: one logical value *per gang*, holding either a
+//! single scalar shared by every lane (uniform) or one value per lane in a
+//! packed SoA layout that the `vecmath` SIMD layer can consume directly.
 
 use crate::ir::types::{AddrSpace, Scalar, Type};
+use crate::vecmath::RealVec64;
 
 /// A scalar runtime value. Integers (including bool) are carried as `i64`
 /// and normalised to their declared width on every operation; floats are
@@ -132,6 +139,149 @@ impl VVal {
     }
 }
 
+/// A lane-batched value: what one virtual register (or private cell) holds
+/// for a whole gang of `W` work-items in the vector engine.
+///
+/// The representation is the engine's dynamic uniformity lattice: values
+/// proven identical across lanes stay in the scalar `Uni` form (computed
+/// once per gang — the §4.6/§4.7 uniform-merging payoff), varying scalar
+/// floats/ints/pointers live in packed structure-of-arrays forms that
+/// lane-batched operators consume without per-lane boxing, and everything
+/// else (short vectors, mixed kinds) falls back to one [`VVal`] per lane.
+#[derive(Debug, Clone)]
+pub enum VLane<const W: usize> {
+    /// Identical on every lane; stored once.
+    Uni(VVal),
+    /// Varying scalar float, one `f64` per lane (`RealVec64`-backed so the
+    /// vecmath layer's SIMD operators apply directly).
+    F(RealVec64<W>),
+    /// Varying scalar integer/bool, one `i64` per lane.
+    I([i64; W]),
+    /// Varying pointer within a single address space, one offset per lane.
+    P(u8, [u64; W]),
+    /// General fallback: one value per lane (short vectors, mixed kinds).
+    Lanes(Box<[VVal; W]>),
+}
+
+/// Bit-level value identity: like `PartialEq` but NaN-stable (two NaN
+/// lanes with the same bit pattern compare identical), so re-uniforming
+/// after divergence never mis-classifies.
+fn val_identical(a: &Val, b: &Val) -> bool {
+    match (a, b) {
+        (Val::F(x), Val::F(y)) => x.to_bits() == y.to_bits(),
+        _ => a == b,
+    }
+}
+
+fn vval_identical(a: &VVal, b: &VVal) -> bool {
+    match (a, b) {
+        (VVal::S(x), VVal::S(y)) => val_identical(x, y),
+        (VVal::V(x), VVal::V(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| val_identical(p, q))
+        }
+        _ => false,
+    }
+}
+
+impl<const W: usize> VLane<W> {
+    /// The value lane `lane` observes.
+    pub fn get(&self, lane: usize) -> VVal {
+        match self {
+            VLane::Uni(v) => v.clone(),
+            VLane::F(rv) => VVal::S(Val::F(rv.0[lane])),
+            VLane::I(a) => VVal::S(Val::I(a[lane])),
+            VLane::P(sp, o) => VVal::S(Val::Ptr { space: *sp, offset: o[lane] }),
+            VLane::Lanes(ls) => ls[lane].clone(),
+        }
+    }
+
+    /// True for the uniform (computed-once) form.
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, VLane::Uni(_))
+    }
+
+    /// Pack per-lane values into the tightest representation: uniform if
+    /// all lanes are identical, else an SoA form, else the general form.
+    pub fn from_lanes(lanes: Vec<VVal>) -> VLane<W> {
+        debug_assert_eq!(lanes.len(), W);
+        if lanes.iter().all(|v| vval_identical(v, &lanes[0])) {
+            return VLane::Uni(lanes.into_iter().next().expect("non-empty gang"));
+        }
+        if lanes.iter().all(|v| matches!(v, VVal::S(Val::F(_)))) {
+            let mut a = [0.0f64; W];
+            for (slot, v) in a.iter_mut().zip(&lanes) {
+                if let VVal::S(Val::F(x)) = v {
+                    *slot = *x;
+                }
+            }
+            return VLane::F(RealVec64(a));
+        }
+        if lanes.iter().all(|v| matches!(v, VVal::S(Val::I(_)))) {
+            let mut a = [0i64; W];
+            for (slot, v) in a.iter_mut().zip(&lanes) {
+                if let VVal::S(Val::I(x)) = v {
+                    *slot = *x;
+                }
+            }
+            return VLane::I(a);
+        }
+        if let VVal::S(Val::Ptr { space, .. }) = lanes[0] {
+            if lanes.iter().all(
+                |v| matches!(v, VVal::S(Val::Ptr { space: s, .. }) if *s == space),
+            ) {
+                let mut a = [0u64; W];
+                for (slot, v) in a.iter_mut().zip(&lanes) {
+                    if let VVal::S(Val::Ptr { offset, .. }) = v {
+                        *slot = *offset;
+                    }
+                }
+                return VLane::P(space, a);
+            }
+        }
+        let arr: [VVal; W] = match lanes.try_into() {
+            Ok(a) => a,
+            Err(_) => unreachable!("lane count matches W"),
+        };
+        VLane::Lanes(Box::new(arr))
+    }
+
+    /// Overwrite one lane, demoting the representation if needed.
+    pub fn set_lane(&mut self, lane: usize, v: VVal) {
+        match self {
+            VLane::F(rv) => {
+                if let VVal::S(Val::F(x)) = &v {
+                    rv.0[lane] = *x;
+                    return;
+                }
+            }
+            VLane::I(a) => {
+                if let VVal::S(Val::I(x)) = &v {
+                    a[lane] = *x;
+                    return;
+                }
+            }
+            VLane::P(sp, o) => {
+                if let VVal::S(Val::Ptr { space, offset }) = &v {
+                    if space == sp {
+                        o[lane] = *offset;
+                        return;
+                    }
+                }
+            }
+            VLane::Lanes(ls) => {
+                ls[lane] = v;
+                return;
+            }
+            VLane::Uni(_) => {}
+        }
+        // Representation mismatch (or uniform being split): demote to the
+        // general per-lane form and retry.
+        let mut lanes: Vec<VVal> = (0..W).map(|l| self.get(l)).collect();
+        lanes[lane] = v;
+        *self = VLane::from_lanes(lanes);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +307,29 @@ mod tests {
         assert_eq!(v.lanes(), 2);
         assert_eq!(v.lane(1), Val::F(2.0));
         assert_eq!(VVal::i(3).lane(0), Val::I(3));
+    }
+
+    #[test]
+    fn vlane_packing_and_access() {
+        let u = VLane::<4>::from_lanes(vec![VVal::i(3); 4]);
+        assert!(u.is_uniform());
+        let f = VLane::<4>::from_lanes((0..4).map(|i| VVal::f(i as f64)).collect());
+        assert!(matches!(f, VLane::F(_)));
+        assert_eq!(f.get(2), VVal::f(2.0));
+        let p = VLane::<4>::from_lanes((0..4).map(|i| VVal::ptr(SP_GLOBAL, i * 8)).collect());
+        assert!(matches!(p, VLane::P(SP_GLOBAL, _)));
+    }
+
+    #[test]
+    fn vlane_set_lane_demotes_uniform() {
+        let mut v = VLane::<4>::Uni(VVal::i(1));
+        v.set_lane(2, VVal::i(9));
+        assert!(!v.is_uniform());
+        assert_eq!(v.get(0), VVal::i(1));
+        assert_eq!(v.get(2), VVal::i(9));
+        // Re-packing detects identical lanes, NaN included.
+        let nan = f64::NAN;
+        let w = VLane::<2>::from_lanes(vec![VVal::f(nan), VVal::f(nan)]);
+        assert!(w.is_uniform());
     }
 }

@@ -1,5 +1,22 @@
 //! The pocl kernel compiler (§4): parallel region formation separated from
 //! target-specific parallel mapping.
+//!
+//! The compiler's outputs and their consumers (the execution-engine
+//! matrix; see also `exec`):
+//!
+//! * `reg_fn` + `regions` — consumed by the region-level engines: the
+//!   per-lane `gang` executor, the lane-batched `vecgang` executor (which
+//!   keeps uniform registers and merged uniform slots scalar, computed
+//!   once per gang, and widens only varying values), and the `fiber`
+//!   baseline. The §4.6 uniformity exports
+//!   (`WorkGroupFunction::reg_uniform`, `region_divergent`) are the
+//!   static contract behind `vecgang`'s dynamic uniformity lattice —
+//!   surfaced through `CompileStats`/`--stats` and asserted by tests; an
+//!   AOT vectorising backend would consume them directly.
+//! * `loop_fn` + `wi_loops` metadata — consumed by the WI-loop engines:
+//!   the serial interpreter and the TTA scheduler (`devices::ttasim`).
+//! * SPMD mode (`CompileOptions::spmd`) skips WI-loop materialisation for
+//!   devices that execute work-items themselves (`devices::pjrt`).
 
 pub mod barriers;
 pub mod bloops;

@@ -72,6 +72,13 @@ pub struct CompileStats {
     pub wi_loops: usize,
     /// Barriers requiring the peeling treatment.
     pub peeled_barriers: usize,
+    /// Registers of `reg_fn` classified uniform (lane-invariant) — the
+    /// values the vector engine keeps scalar, computed once per gang.
+    pub uniform_regs: usize,
+    /// Parallel regions containing at least one potentially-divergent
+    /// branch (the regions where the vector engine may have to fall back
+    /// to per-lane execution).
+    pub divergent_regions: usize,
 }
 
 /// A compiled work-group function, specialised for one local size (§4.1:
@@ -88,6 +95,14 @@ pub struct WorkGroupFunction {
     pub loop_fn: Function,
     /// The local size this work-group function is specialised for.
     pub local_size: [usize; 3],
+    /// Per-register uniformity of `reg_fn`, indexed by register number
+    /// (§4.6 exported as IR metadata): `true` = provably identical across
+    /// all work-items, so SIMD mappings keep it scalar.
+    pub reg_uniform: Vec<bool>,
+    /// Per-region divergence verdict, indexed like `regions`: `true` when
+    /// the region contains a branch whose condition could not be proven
+    /// uniform (the vector engine's per-lane fallback may trigger there).
+    pub region_divergent: Vec<bool>,
     /// Pass statistics.
     pub stats: CompileStats,
 }
@@ -140,8 +155,21 @@ pub fn compile_workgroup(
     stats.uniform_slots = p.merged_uniform;
     crate::ir::verify::verify(&f)?;
 
-    // Target-specific parallel mapping: materialise WI loops.
+    // Export the uniformity analysis on the final region form (§4.6 "kept
+    // as metadata"): per-register classification plus a per-region
+    // divergence verdict. Slot ids are stable across the barrier passes,
+    // so the early slot-uniformity result carries over; the register table
+    // must be recomputed here because tail duplication renamed registers.
     let reg_fn = f.clone();
+    let reg_uniform = uniformity::classify_regs(&reg_fn, &uni.uniform_slots);
+    let region_divergent: Vec<bool> = regions
+        .iter()
+        .map(|r| r.blocks.iter().any(|&b| !uni.uniform_branch(&reg_fn, b)))
+        .collect();
+    stats.uniform_regs = reg_uniform.iter().filter(|&&u| u).count();
+    stats.divergent_regions = region_divergent.iter().filter(|&&d| d).count();
+
+    // Target-specific parallel mapping: materialise WI loops.
     let (loop_fn, wstats) = if opts.spmd {
         // SPMD devices run the single-WI function themselves; strip
         // barriers only (the device hardware provides their semantics).
@@ -162,6 +190,8 @@ pub fn compile_workgroup(
         regions,
         loop_fn,
         local_size,
+        reg_uniform,
+        region_divergent,
         stats,
     })
 }
@@ -194,6 +224,26 @@ mod tests {
         assert_eq!(w.loop_fn.wi_loops.len(), 1);
         assert!(w.loop_fn.wi_loops[0].parallel);
         assert_eq!(w.loop_fn.wi_loops[0].trip_count, Some(8));
+        // Uniformity metadata: the straight-line vecadd body has no
+        // divergent region, and the pointer args yield uniform registers.
+        assert_eq!(w.reg_uniform.len(), w.reg_fn.reg_count() as usize);
+        assert_eq!(w.region_divergent.len(), w.regions.len());
+        assert!(w.stats.uniform_regs > 0, "{:?}", w.stats);
+        assert_eq!(w.stats.divergent_regions, 0, "{:?}", w.stats);
+    }
+
+    #[test]
+    fn divergent_branch_marks_its_region() {
+        let w = wg(
+            "__kernel void k(__global float *x, uint w) {
+                 float v = x[get_global_id(0)];
+                 if (get_global_id(0) > (size_t)w) { v = v * 2.0f; }
+                 x[get_global_id(0)] = v;
+             }",
+            [8, 1, 1],
+        );
+        assert!(w.stats.divergent_regions >= 1, "{:?}", w.stats);
+        assert!(w.region_divergent.iter().any(|&d| d));
     }
 
     #[test]

@@ -114,6 +114,33 @@ pub fn analyze(f: &Function) -> Uniformity {
     u
 }
 
+/// Function-wide register uniformity classification.
+///
+/// Registers are single-def and block-local (IR invariant), so one flat
+/// table indexed by register number is exact. A register is uniform when
+/// its defining instruction produces a provably lane-invariant value *and*
+/// the defining block is not under divergent control. The table is the
+/// static projection of the dynamic uniformity lattice the lane-batched
+/// vector engine maintains at run time (`exec::vecgang`): every register
+/// marked uniform here is guaranteed to stay in the engine's scalar
+/// (computed-once-per-gang) form.
+///
+/// `f` may be any (possibly barrier-normalised / tail-duplicated)
+/// function; only the slot-uniformity assumption is carried over, which is
+/// stable across those transforms because slot ids never change.
+pub fn classify_regs(f: &Function, uniform_slots: &[bool]) -> Vec<bool> {
+    let divergent = divergent_blocks(f, uniform_slots);
+    let mut out = vec![false; f.reg_count() as usize];
+    for b in reachable(f) {
+        let div = divergent.contains(&b);
+        let kinds = block_value_kinds(f, b, uniform_slots);
+        for (r, k) in kinds {
+            out[r.0 as usize] = !div && k.uniform();
+        }
+    }
+    out
+}
+
 /// Slots that are loaded before being stored within a single block chain —
 /// the read-modify-write pattern (`i = i + 1`, `acc += ...`).
 fn accumulating(f: &Function) -> Vec<bool> {
@@ -470,6 +497,41 @@ mod tests {
             .next_back()
             .unwrap();
         assert!(!u.divergent_blocks.contains(&last_store_block));
+    }
+
+    #[test]
+    fn register_classification_splits_uniform_and_varying() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x, uint w) {
+                 uint lim = w * 2u;
+                 x[get_global_id(0)] = (float)lim;
+             }",
+        );
+        let regs = classify_regs(&f, &u.uniform_slots);
+        assert_eq!(regs.len(), f.reg_count() as usize);
+        assert!(regs.iter().any(|&r| r), "arg-derived registers are uniform");
+        assert!(!regs.iter().all(|&r| r), "the global-id address chain is varying");
+    }
+
+    #[test]
+    fn registers_under_divergent_control_are_varying() {
+        let (f, u) = analyzed(
+            "__kernel void k(__global float *x, uint w) {
+                 if (get_global_id(0) > (size_t)w) { x[0] = (float)(w * 3u); }
+             }",
+        );
+        let regs = classify_regs(&f, &u.uniform_slots);
+        // The `w * 3u` computation has uniform operands but sits inside a
+        // divergently-controlled block, so it must not be marked uniform.
+        for b in crate::ir::cfg::reachable(&f) {
+            if u.divergent_blocks.contains(&b) {
+                for (def, _) in &f.block(b).insts {
+                    if let Some(r) = def {
+                        assert!(!regs[r.0 as usize], "r{} in divergent block", r.0);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

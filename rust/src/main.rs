@@ -2,11 +2,15 @@
 //! suite runs.
 //!
 //! ```text
-//! poclrs devices                 # Table 1 capability table
-//! poclrs run <App> [device]      # run + verify one suite app
-//! poclrs compile <file.cl> [LX]  # show compile stats + IR for a kernel
-//! poclrs suite [device]          # run + verify the whole suite
+//! poclrs devices                      # Table 1 capability table
+//! poclrs run <App> [device] [--stats] # run + verify one suite app
+//! poclrs compile <file.cl> [LX]       # show compile stats + IR for a kernel
+//! poclrs suite [device]               # run + verify the whole suite
 //! ```
+//!
+//! `--stats` prints the uniformity/divergence compile counters and the
+//! engine dispatch counters (gangs, diverged, vectorised/uniform/per-lane
+//! instruction dispatches) for the run.
 
 use std::sync::Arc;
 
@@ -22,17 +26,56 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             println!("platform `{}`\n{}", platform.name, platform.capability_table());
         }
         Some("run") => {
-            let name =
-                args.get(1).ok_or_else(|| String::from("usage: run <App> [device]"))?;
-            let dev = args.get(2).map(|s| s.as_str()).unwrap_or("pthread-gang(8)");
+            let mut rest: Vec<&str> = args[1..].iter().map(|s| s.as_str()).collect();
+            let want_stats = if let Some(i) = rest.iter().position(|a| *a == "--stats") {
+                rest.remove(i);
+                true
+            } else {
+                false
+            };
+            let name = *rest
+                .first()
+                .ok_or_else(|| String::from("usage: run <App> [device] [--stats]"))?;
+            let dev = rest.get(1).copied().unwrap_or("pthread-gang(8)");
             let device = platform.find_device(dev)?;
             let app = app_by_name(name, SizeClass::Bench)
                 .ok_or_else(|| format!("no app named `{name}`"))?;
-            let r = runner::run_and_verify(&app, device)?;
+            let r = runner::run_and_verify(&app, device.clone())?;
             println!(
                 "{name}: OK on {dev} ({} work-groups, {:?} kernel time)",
                 r.stats.workgroups, r.kernel_time
             );
+            if want_stats {
+                // Compile-side counters: one line per kernel launch pass,
+                // at the pass's enqueue-time local size.
+                let module = poclrs::frontend::compile(app.source)?;
+                let opts = device.compile_options();
+                for pass in &app.passes {
+                    let Some(k) = module.kernel(pass.kernel) else { continue };
+                    let wgf = compile_workgroup(k, pass.local, &opts)?;
+                    println!(
+                        "compile `{}` @ {:?}: regions={} uniform slots={} uniform regs={} divergent regions={}",
+                        pass.kernel,
+                        pass.local,
+                        wgf.stats.regions,
+                        wgf.stats.uniform_slots,
+                        wgf.stats.uniform_regs,
+                        wgf.stats.divergent_regions,
+                    );
+                }
+                // Engine-side counters for the whole run.
+                let s = &r.stats;
+                println!(
+                    "exec: workgroups={} gangs={} diverged={} dispatches={} (vectorised={} uniform={} per-lane={})",
+                    s.workgroups,
+                    s.gangs,
+                    s.diverged_gangs,
+                    s.dispatches(),
+                    s.vector_insts,
+                    s.uniform_insts,
+                    s.lane_insts,
+                );
+            }
         }
         Some("suite") => {
             let dev = args.get(1).map(|s| s.as_str()).unwrap_or("pthread-gang(8)");

@@ -7,6 +7,7 @@ use std::sync::{Arc, Mutex};
 use crate::cl::error::{Error, Result};
 
 use super::executable::LoadedExecutable;
+use super::xla;
 
 /// A process-wide PJRT runtime holding the CPU client and a cache of
 /// compiled executables keyed by artifact path.

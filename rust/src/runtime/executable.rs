@@ -4,6 +4,8 @@ use std::path::Path;
 
 use crate::cl::error::{Error, Result};
 
+use super::xla;
+
 /// Shape + dtype of one executable argument, used to marshal flat host
 /// buffers into PJRT literals.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -5,6 +5,17 @@
 //! loads the text with `HloModuleProto::from_text_file`, compiles it once on
 //! the PJRT CPU client, and exposes a typed `execute` over `f32`/`i32`
 //! host buffers. Python never runs on the request path.
+//!
+//! The `xla` dependency is gated twice: the `pjrt` feature compiles this
+//! module against a type-compatible stub (so dependency-free environments
+//! and CI can build the full API surface; execution errors at run time),
+//! and the `xla-backend` feature swaps in the real vendored crate.
+
+#[cfg(feature = "xla-backend")]
+pub(crate) use ::xla;
+#[cfg(not(feature = "xla-backend"))]
+#[path = "xla_stub.rs"]
+pub(crate) mod xla;
 
 mod client;
 mod executable;

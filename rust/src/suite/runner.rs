@@ -108,9 +108,7 @@ pub fn run_on_device_with_queue(
     let mut kernel_time = Duration::ZERO;
     for ev in &kernel_events {
         let s = ev.wait()?;
-        stats.workgroups += s.workgroups;
-        stats.diverged_gangs += s.diverged_gangs;
-        stats.cycles += s.cycles;
+        stats.accumulate(&s);
         kernel_time += Duration::from_nanos(ev.duration_ns() as u64);
     }
     queue.finish()?;

@@ -1,0 +1,131 @@
+//! Counter assertions for the lane-batched vector engine: the compile-side
+//! uniformity export, the ≥width× interpreter-dispatch reduction on a
+//! uniform-control kernel (the ISSUE acceptance criterion), and the
+//! divergence fallback accounting.
+
+use poclrs::exec::value::SP_GLOBAL;
+use poclrs::exec::{gang, mem, vecgang, LaunchCtx, MemoryRefs, VVal};
+use poclrs::frontend::compile;
+use poclrs::kcc::{compile_workgroup, CompileOptions, WorkGroupFunction};
+
+const VECADD: &str = "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
+    size_t i = get_global_id(0);
+    c[i] = a[i] + b[i];
+}";
+
+const DIVERGE: &str = "__kernel void dv(__global float *x) {
+    size_t i = get_global_id(0);
+    float v = x[i];
+    if (v > 4.0f) { v = v * 2.0f; } else { v = v - 1.0f; }
+    x[i] = v;
+}";
+
+const N: usize = 32;
+const LOCAL: usize = 8;
+
+/// Compile `src` for an N-element 1D launch and run it with either gang
+/// engine over `bufs` f32 buffers laid out back to back in global memory.
+/// Returns the accumulated stats and the final contents of every buffer.
+fn run_gangs(
+    src: &str,
+    bufs: &[Vec<f32>],
+    vector: bool,
+    width: usize,
+) -> (gang::GangStats, Vec<Vec<f32>>) {
+    let m = compile(src).unwrap();
+    let wgf =
+        compile_workgroup(&m.kernels[0], [LOCAL, 1, 1], &CompileOptions::default()).unwrap();
+    let mut global = vec![0u8; bufs.iter().map(|b| b.len() * 4).sum::<usize>()];
+    let mut args = Vec::new();
+    let mut offsets = Vec::new();
+    let mut off = 0usize;
+    for b in bufs {
+        mem::write_f32s(&mut global, off, b);
+        args.push(VVal::ptr(SP_GLOBAL, off as u64));
+        offsets.push((off, b.len()));
+        off += b.len() * 4;
+    }
+    let mut local_mem = vec![0u8; 1];
+    let mut total = gang::GangStats::default();
+    for g in 0..N / LOCAL {
+        let ctx = LaunchCtx {
+            group_id: [g as u64, 0, 0],
+            num_groups: [(N / LOCAL) as u64, 1, 1],
+            global_offset: [0; 3],
+            local_size: [LOCAL, 1, 1],
+            work_dim: 1,
+        };
+        let mut mem_refs = MemoryRefs { global: &mut global, local: &mut local_mem };
+        let s = if vector {
+            vecgang::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap()
+        } else {
+            gang::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap()
+        };
+        total.gangs += s.gangs;
+        total.diverged += s.diverged;
+        total.vector_insts += s.vector_insts;
+        total.uniform_insts += s.uniform_insts;
+        total.lane_insts += s.lane_insts;
+    }
+    let out = offsets.iter().map(|&(o, n)| mem::read_f32s(&global, o, n)).collect();
+    (total, out)
+}
+
+fn vecadd_bufs() -> Vec<Vec<f32>> {
+    vec![
+        (0..N).map(|i| i as f32).collect(),
+        (0..N).map(|i| (i * 3) as f32).collect(),
+        vec![0.0; N],
+    ]
+}
+
+#[test]
+fn vector_engine_cuts_dispatches_by_width_on_uniform_kernel() {
+    let width = 8;
+    let (scalar, out_s) = run_gangs(VECADD, &vecadd_bufs(), false, width);
+    let (vector, out_v) = run_gangs(VECADD, &vecadd_bufs(), true, width);
+    let expect: Vec<f32> = (0..N).map(|i| (i + i * 3) as f32).collect();
+    assert_eq!(out_s[2], expect);
+    assert_eq!(out_v[2], expect);
+    assert_eq!(vector.diverged, 0, "vecadd has uniform control flow");
+    assert!(vector.vector_insts > 0, "lane-batched dispatches recorded");
+    assert!(vector.uniform_insts > 0, "once-per-gang uniform dispatches recorded");
+    assert_eq!(vector.lane_insts, 0, "no per-lane fallback on a uniform kernel");
+    // ISSUE acceptance criterion: ≥ width× fewer interpreter dispatches
+    // than the per-lane gang engine on a uniform-control kernel.
+    assert!(
+        scalar.dispatches() >= width * vector.dispatches(),
+        "scalar {} vs vector {} (width {width})",
+        scalar.dispatches(),
+        vector.dispatches()
+    );
+}
+
+#[test]
+fn divergent_kernel_falls_back_per_lane_and_still_agrees() {
+    let width = 8;
+    let input: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let (scalar, out_s) = run_gangs(DIVERGE, &[input.clone()], false, width);
+    let (vector, out_v) = run_gangs(DIVERGE, &[input], true, width);
+    assert_eq!(out_s[0], out_v[0], "divergent fallback preserves semantics");
+    assert!(vector.diverged > 0, "the v>4 branch splits at least one gang");
+    assert!(vector.lane_insts > 0, "fallback dispatches are per-lane");
+    assert_eq!(scalar.gangs, vector.gangs, "same gang partition in both engines");
+}
+
+#[test]
+fn workgroup_function_exports_uniformity_metadata() {
+    let m = compile(VECADD).unwrap();
+    let wgf: WorkGroupFunction =
+        compile_workgroup(&m.kernels[0], [LOCAL, 1, 1], &CompileOptions::default()).unwrap();
+    assert_eq!(wgf.reg_uniform.len(), wgf.reg_fn.reg_count() as usize);
+    assert_eq!(wgf.region_divergent.len(), wgf.regions.len());
+    assert!(wgf.stats.uniform_regs > 0, "{:?}", wgf.stats);
+    assert_eq!(wgf.stats.divergent_regions, 0, "{:?}", wgf.stats);
+
+    let m = compile(DIVERGE).unwrap();
+    let wgf =
+        compile_workgroup(&m.kernels[0], [LOCAL, 1, 1], &CompileOptions::default()).unwrap();
+    assert!(wgf.stats.divergent_regions >= 1, "{:?}", wgf.stats);
+    assert!(wgf.region_divergent.iter().any(|&d| d));
+}

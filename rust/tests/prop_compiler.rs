@@ -1,7 +1,8 @@
 //! Property tests over the kernel compiler: for a family of generated
 //! kernels (random barrier placement, conditional barriers, b-loops) and
 //! random launch geometries, (1) the structural invariants hold and
-//! (2) all engines agree bit-for-bit.
+//! (2) all engines — serial, fiber, per-lane gang, and the lane-batched
+//! vector gang — agree bit-for-bit.
 
 use std::sync::Arc;
 
@@ -68,7 +69,13 @@ fn prop_engines_agree_on_random_barrier_kernels() {
         let input = rng.f32s(n, 0.0, 4.0);
         let c = rng.below(3) as i32;
         let serial = run_engine(&src, EngineKind::Serial, &input, local, c);
-        for engine in [EngineKind::Gang(4), EngineKind::Gang(8), EngineKind::Fiber] {
+        for engine in [
+            EngineKind::Gang(4),
+            EngineKind::Gang(8),
+            EngineKind::GangVector(4),
+            EngineKind::GangVector(8),
+            EngineKind::Fiber,
+        ] {
             let got = run_engine(&src, engine, &input, local, c);
             assert_eq!(serial, got, "engine {engine:?} disagrees\nkernel:\n{src}");
         }

@@ -13,8 +13,11 @@ fn devices() -> Vec<(&'static str, Arc<dyn Device>)> {
         ("basic-serial", Arc::new(BasicDevice::new(EngineKind::Serial)) as Arc<dyn Device>),
         ("basic-gang8", Arc::new(BasicDevice::new(EngineKind::Gang(8)))),
         ("basic-gang4", Arc::new(BasicDevice::new(EngineKind::Gang(4)))),
+        ("basic-gangvector8", Arc::new(BasicDevice::new(EngineKind::GangVector(8)))),
+        ("basic-gangvector4", Arc::new(BasicDevice::new(EngineKind::GangVector(4)))),
         ("basic-fiber", Arc::new(BasicDevice::new(EngineKind::Fiber))),
         ("pthread-gang8", Arc::new(ThreadedDevice::new(EngineKind::Gang(8), 4))),
+        ("pthread-gangvector8", Arc::new(ThreadedDevice::new(EngineKind::GangVector(8), 4))),
     ]
 }
 
