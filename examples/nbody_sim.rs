@@ -48,11 +48,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
     }
     queue.finish()?;
-    println!(
-        "{} enqueues, kernel compiled once (cache hits: {})",
-        steps,
-        *program.cache_hits.lock().unwrap()
-    );
-    assert_eq!(*program.cache_misses.lock().unwrap(), 1);
+    let s = program.cache_stats();
+    println!("{} enqueues, kernel compiled once (cache hits: {})", steps, s.hits());
+    assert_eq!(s.misses, 1);
     Ok(())
 }

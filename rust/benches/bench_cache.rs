@@ -1,0 +1,129 @@
+//! Cold vs warm kernel-compilation cost through the persistent cache,
+//! emitting a `BENCH_cache.json` snapshot (the ISSUE 5 criterion: warm
+//! build time < 20% of cold).
+//!
+//! Three build paths are timed per app, specialising every pass kernel
+//! at several local sizes (the repeat-traffic shape the cache targets):
+//!
+//! * `cold`        — frontend + `compile_workgroup` for every
+//!                   specialisation, empty cache directory.
+//! * `warm`        — fresh `Program` from the same source against the
+//!                   now-populated directory: frontend still runs, every
+//!                   specialisation is a disk hit (decode, no compile).
+//! * `from_binary` — `Program::from_binary` of the exported program
+//!                   binary: no frontend, no compile, pure decode.
+//!
+//! Run with `cargo bench --bench bench_cache`. Uses a private temp
+//! directory; the user-level default cache is never touched.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use poclrs::cache::DiskCache;
+use poclrs::cl::Program;
+use poclrs::kcc::CompileOptions;
+use poclrs::suite::{app_by_name, SizeClass};
+
+const ITERS: usize = 5;
+const LOCAL_XS: [usize; 4] = [4, 8, 16, 32];
+
+/// Specialise every pass kernel at each bench local size.
+fn specialize(program: &Program, app: &poclrs::suite::App) {
+    let opts = CompileOptions::default();
+    for pass in &app.passes {
+        for lx in LOCAL_XS {
+            let local = [lx, pass.local[1], pass.local[2]];
+            program
+                .workgroup_function(pass.kernel, local, &opts)
+                .expect("specialisation failed");
+        }
+    }
+}
+
+fn time_ms(f: impl FnOnce()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("poclrs-bench-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let apps = ["DCT", "BinomialOption", "NBody", "BitonicSort"];
+
+    println!("== Persistent kernel cache: cold vs warm program builds ==\n");
+    let mut json = String::from("{\n  \"bench\": \"cache\",\n  \"apps\": [\n");
+    let mut first = true;
+    let mut worst_ratio: f64 = 0.0;
+    for name in apps {
+        let Some(app) = app_by_name(name, SizeClass::Small) else {
+            println!("{name:<18} SKIP (unknown app)");
+            continue;
+        };
+        let disk = Arc::new(DiskCache::at(&dir).expect("cache dir"));
+        let specs = app.passes.len() * LOCAL_XS.len();
+
+        // Cold: clear the directory every iteration so each build pays
+        // the full frontend + kernel-compiler cost.
+        let mut cold = f64::MAX;
+        for _ in 0..ITERS {
+            disk.clear().expect("clear");
+            cold = cold.min(time_ms(|| {
+                let p = Program::build_cached(app.source, Some(disk.clone())).unwrap();
+                specialize(&p, &app);
+            }));
+        }
+
+        // Warm: the directory now holds every specialisation; a fresh
+        // program (same source) must hit disk for all of them.
+        let mut warm = f64::MAX;
+        for _ in 0..ITERS {
+            let mut misses = 0;
+            warm = warm.min(time_ms(|| {
+                let p = Program::build_cached(app.source, Some(disk.clone())).unwrap();
+                specialize(&p, &app);
+                misses = p.cache_stats().misses;
+            }));
+            assert_eq!(misses, 0, "{name}: warm build must not compile");
+        }
+
+        // Program-binary path: skip the frontend entirely.
+        let exporter = Program::build_cached(app.source, Some(disk.clone())).unwrap();
+        specialize(&exporter, &app);
+        let bytes = exporter.binaries();
+        let mut from_binary = f64::MAX;
+        for _ in 0..ITERS {
+            from_binary = from_binary.min(time_ms(|| {
+                let p = Program::from_binary(&bytes).unwrap();
+                specialize(&p, &app);
+                assert_eq!(p.cache_stats().misses, 0);
+            }));
+        }
+
+        let ratio = warm / cold;
+        worst_ratio = worst_ratio.max(ratio);
+        println!(
+            "{name:<18} specs={specs:<3} cold={cold:8.3}ms  warm={warm:8.3}ms ({:5.1}% of cold)  from_binary={from_binary:8.3}ms",
+            ratio * 100.0
+        );
+        if !first {
+            let _ = writeln!(json, ",");
+        }
+        first = false;
+        let _ = write!(
+            json,
+            "    {{\"name\": \"{name}\", \"specializations\": {specs}, \"cold_ms\": {cold:.4}, \"warm_ms\": {warm:.4}, \"warm_ratio\": {ratio:.4}, \"from_binary_ms\": {from_binary:.4}, \"binary_bytes\": {}}}",
+            bytes.len()
+        );
+    }
+    let _ = writeln!(json, "\n  ],\n  \"worst_warm_ratio\": {worst_ratio:.4}\n}}");
+    match std::fs::write("BENCH_cache.json", &json) {
+        Ok(()) => println!("\nsnapshot written to BENCH_cache.json"),
+        Err(e) => println!("\ncould not write BENCH_cache.json: {e}"),
+    }
+    println!(
+        "(expectation: warm < 20% of cold on every row — deserialising a poclbin\n entry skips the whole §4 pass pipeline; from_binary also skips the frontend)"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

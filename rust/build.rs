@@ -1,0 +1,54 @@
+//! Embeds a fingerprint of the crate's own source into the build as
+//! `POCLRS_BUILD_ID`. The persistent kernel cache folds it into every
+//! on-disk key (see `cache::key`), so artifacts compiled by a *different
+//! build of the compiler* — e.g. after editing a `kcc` pass without
+//! bumping any version — can never be served (pocl hashes its build into
+//! `POCL_CACHE_DIR` keys for exactly this reason). The fingerprint is a
+//! content hash, not a timestamp: identical sources produce identical
+//! ids, so the cache survives clean rebuilds and is shared across
+//! machines building the same code.
+//!
+//! No `cargo:rerun-if` directives are emitted on purpose: cargo then
+//! re-runs this script whenever any file in the package changes, which
+//! is precisely when the fingerprint must be recomputed.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    if let Ok(rd) = fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                collect_rs(&p, out);
+            } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push(p);
+            }
+        }
+    }
+}
+
+fn main() {
+    let mut files = Vec::new();
+    collect_rs(Path::new("src"), &mut files);
+    files.sort();
+    let mut h = FNV_OFFSET;
+    for f in &files {
+        h = fnv_bytes(h, f.to_string_lossy().as_bytes());
+        if let Ok(bytes) = fs::read(f) {
+            h = fnv_bytes(h, &bytes);
+        }
+    }
+    println!("cargo:rustc-env=POCLRS_BUILD_ID={h:016x}");
+}

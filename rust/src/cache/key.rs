@@ -1,0 +1,213 @@
+//! Content-addressed cache keys.
+//!
+//! A [`CacheKey`] identifies one compiled work-group function on disk. It
+//! is a 128-bit FNV-1a digest over everything that can influence the
+//! compiled artifact:
+//!
+//! * the full program **source** text,
+//! * the **kernel** name,
+//! * the enqueue-time **local size**,
+//! * the **full** [`CompileOptions`] — every knob, including the device
+//!   kind ([`TargetKind`]) and gang width (pocl folds the target device
+//!   into its cache hash the same way),
+//! * the `poclbin` **format version**, the crate version, and the
+//!   compiler build's own source fingerprint (`POCLRS_BUILD_ID`, from
+//!   `build.rs`) — so neither format changes nor compiler-behavior
+//!   changes can resurrect stale artifacts, with or without a version
+//!   bump.
+//!
+//! FNV-1a is used because the crate is dependency-free; 128 bits makes
+//! accidental collisions across a cache directory implausible, and a
+//! corrupted payload is independently rejected by the `poclbin` header's
+//! payload digest.
+
+use std::fmt;
+
+use crate::kcc::{CompileOptions, TargetKind};
+
+/// 128-bit FNV-1a offset basis.
+const FNV_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// 128-bit FNV-1a prime.
+const FNV_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+/// Incremental 128-bit FNV-1a hasher (deterministic across runs and
+/// platforms, unlike `std::hash`).
+#[derive(Debug, Clone)]
+pub struct Fnv128 {
+    state: u128,
+}
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Fnv128 { state: FNV_OFFSET }
+    }
+}
+
+impl Fnv128 {
+    /// Fresh hasher.
+    pub fn new() -> Fnv128 {
+        Fnv128::default()
+    }
+
+    /// Fold raw bytes into the digest.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Fold a length-prefixed string (prefixing keeps `("ab","c")` and
+    /// `("a","bc")` distinct).
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    /// Fold a u64 (little-endian).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Final digest.
+    pub fn finish(&self) -> u128 {
+        self.state
+    }
+}
+
+/// One-shot digest of a byte string.
+pub fn fnv128(bytes: &[u8]) -> u128 {
+    let mut h = Fnv128::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// The in-memory specialisation key: everything `compile_workgroup`
+/// depends on besides the module itself. Keying on the **full**
+/// [`CompileOptions`] (not a projection of it) is what prevents two
+/// devices with different options from sharing a wrong entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SpecKey {
+    /// Kernel name within the program.
+    pub kernel: String,
+    /// Enqueue-time local size.
+    pub local: [usize; 3],
+    /// Full per-device compile options.
+    pub opts: CompileOptions,
+}
+
+/// A content-addressed on-disk cache key (hex digest = file stem).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey(pub u128);
+
+impl CacheKey {
+    /// Key for one work-group-function artifact. `source_hash` is the
+    /// digest of the program source (so the source text itself need not
+    /// be re-hashed per specialisation).
+    pub fn for_spec(source_hash: u128, spec: &SpecKey) -> CacheKey {
+        let mut h = Fnv128::new();
+        // Format version, crate version, and the build's own source
+        // fingerprint (`POCLRS_BUILD_ID` from build.rs): artifacts
+        // compiled by a different build of the kernel compiler — even at
+        // the same crate version — can never be served.
+        h.write_u64(super::poclbin::POCLBIN_VERSION as u64);
+        h.write_str(env!("CARGO_PKG_VERSION"));
+        h.write_str(option_env!("POCLRS_BUILD_ID").unwrap_or("dev"));
+        h.write(&source_hash.to_le_bytes());
+        h.write_str(&spec.kernel);
+        for d in spec.local {
+            h.write_u64(d as u64);
+        }
+        let o = &spec.opts;
+        h.write_u64(o.horizontal as u64);
+        h.write_u64(o.work_dim as u64);
+        h.write_u64(o.spmd as u64);
+        h.write_u64(match o.target {
+            TargetKind::Cpu => 0,
+            TargetKind::Tta => 1,
+            TargetKind::Spmd => 2,
+        });
+        h.write_u64(o.gang_width as u64);
+        CacheKey(h.finish())
+    }
+
+    /// 32-hex-digit file stem.
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    /// Parse a 32-hex-digit stem back into a key.
+    pub fn from_hex(s: &str) -> Option<CacheKey> {
+        if s.len() != 32 {
+            return None;
+        }
+        u128::from_str_radix(s, 16).ok().map(CacheKey)
+    }
+}
+
+impl fmt::Display for CacheKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.hex())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kernel: &str, local: [usize; 3], opts: CompileOptions) -> SpecKey {
+        SpecKey { kernel: kernel.to_string(), local, opts }
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_input_sensitive() {
+        assert_eq!(fnv128(b"abc"), fnv128(b"abc"));
+        assert_ne!(fnv128(b"abc"), fnv128(b"abd"));
+        // Length prefixing keeps concatenations apart.
+        let mut a = Fnv128::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv128::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn key_covers_every_option_field() {
+        let src = fnv128(b"__kernel void k() {}");
+        let base = CacheKey::for_spec(src, &spec("k", [8, 1, 1], CompileOptions::default()));
+        // Same inputs → same key.
+        assert_eq!(
+            base,
+            CacheKey::for_spec(src, &spec("k", [8, 1, 1], CompileOptions::default()))
+        );
+        // Each key component flips the digest.
+        let variants = [
+            CompileOptions { horizontal: false, ..Default::default() },
+            CompileOptions { work_dim: 2, ..Default::default() },
+            CompileOptions { spmd: true, ..Default::default() },
+            CompileOptions { target: TargetKind::Tta, ..Default::default() },
+            CompileOptions { gang_width: 8, ..Default::default() },
+        ];
+        for v in variants {
+            assert_ne!(base, CacheKey::for_spec(src, &spec("k", [8, 1, 1], v)));
+        }
+        let dflt = CompileOptions::default;
+        assert_ne!(base, CacheKey::for_spec(src, &spec("k", [16, 1, 1], dflt())));
+        assert_ne!(base, CacheKey::for_spec(src, &spec("j", [8, 1, 1], dflt())));
+        assert_ne!(
+            base,
+            CacheKey::for_spec(fnv128(b"other source"), &spec("k", [8, 1, 1], dflt()))
+        );
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let k = CacheKey(0x0123_4567_89ab_cdef_0011_2233_4455_6677);
+        assert_eq!(CacheKey::from_hex(&k.hex()), Some(k));
+        assert_eq!(k.hex().len(), 32);
+        assert_eq!(CacheKey::from_hex("nope"), None);
+        assert_eq!(CacheKey::from_hex(&"f".repeat(33)), None);
+    }
+}

@@ -1,0 +1,55 @@
+//! Persistent kernel-binary cache — the `POCL_CACHE_DIR` analog.
+//!
+//! The paper's §4.1 flow specialises work-group functions at enqueue
+//! time; pocl amortises that cost across *processes* with a
+//! content-addressed on-disk kernel cache plus a program-binary format.
+//! This module reproduces both, dependency-free:
+//!
+//! * [`poclbin`] — the versioned binary serialization of
+//!   [`ir::Module`](crate::ir::Module) and compiled
+//!   [`WorkGroupFunction`](crate::kcc::WorkGroupFunction)s (magic +
+//!   format version + payload digest; round-trip tested against
+//!   `ir::print`).
+//! * [`key`] — deterministic 128-bit FNV-1a content hashing:
+//!   [`SpecKey`] (kernel + local size + the **full**
+//!   [`CompileOptions`](crate::kcc::CompileOptions), device kind and
+//!   gang width included) and the on-disk [`CacheKey`] derived from it
+//!   plus the source digest.
+//! * [`store`] — the [`DiskCache`]: one `poclbin` file per compiled
+//!   work-group function under `POCLRS_CACHE_DIR` (default
+//!   `~/.cache/poclrs`), atomic tmp-file+rename writes, corrupt or
+//!   version-mismatched entries treated as misses, size-capped with
+//!   oldest-first eviction, and [`CacheStats`] counters.
+//!
+//! # Who persists what
+//!
+//! A cache entry stores the *whole* work-group function —
+//! `reg_fn` + regions + uniformity
+//! metadata for the region-level engines (gang/vecgang/fiber) and
+//! `loop_fn` + `wi_loops` for the WI-loop engines (serial/ttasim) — so
+//! one warm entry serves every engine that shares the same compile
+//! options. Program-level exchange (`Program::binaries()` /
+//! `Program::from_binary`, the `clCreateProgramWithBinary` analog)
+//! additionally carries the IR module itself, so a binary-built program
+//! can still specialise *new* local sizes without any source.
+//!
+//! # Flow
+//!
+//! ```text
+//! Program::workgroup_function(kernel, local, opts)
+//!   ├─ in-memory map hit  ──────────────► Arc clone          (per process)
+//!   ├─ DiskCache::load(CacheKey) hit ───► decode poclbin     (per machine)
+//!   └─ miss ──► compile_workgroup ──► DiskCache::store (atomic write-back)
+//! ```
+//!
+//! Environment knobs: `POCLRS_CACHE_DIR` (location),
+//! `POCLRS_CACHE_MAX_BYTES` (eviction cap, default 256 MiB),
+//! `POCLRS_CACHE=0` (disable the default cache entirely).
+
+pub mod key;
+pub mod poclbin;
+pub mod store;
+
+pub use key::{fnv128, CacheKey, Fnv128, SpecKey};
+pub use poclbin::{ProgramBinary, POCLBIN_MAGIC, POCLBIN_VERSION};
+pub use store::{default_cache, CacheEntry, CacheStats, DiskCache};

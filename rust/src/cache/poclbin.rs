@@ -1,0 +1,1084 @@
+//! The `poclbin` binary format: a versioned, deterministic serialization
+//! of compiled kernel artifacts, with **no external dependencies**.
+//!
+//! Three payload kinds share one envelope:
+//!
+//! * an [`ir::Module`](crate::ir::Module) (frontend output),
+//! * a [`WorkGroupFunction`] (one §4.1 enqueue-time specialisation —
+//!   this is what the on-disk kernel cache stores per [`CacheKey`]
+//!   (see `cache::key`)),
+//! * a [`ProgramBinary`] (module + all cached specialisations — what
+//!   `Program::binaries()` / `Program::from_binary` exchange, the
+//!   `clGetProgramInfo(CL_PROGRAM_BINARIES)` / `clCreateProgramWithBinary`
+//!   analog).
+//!
+//! # Envelope
+//!
+//! ```text
+//! offset size  field
+//! 0      8     magic  b"POCLBIN\0"
+//! 8      4     format version (u32 LE) = POCLBIN_VERSION
+//! 12     1     payload kind (module / wgf / program)
+//! 13     8     payload length (u64 LE)
+//! 21     16    payload digest (128-bit FNV-1a, LE)
+//! 37     ...   payload
+//! ```
+//!
+//! Decoding checks magic, version, kind, length and digest **before**
+//! touching the payload, so truncated, corrupted, or version-bumped
+//! files fail with [`Error::BadBinary`] (the disk cache maps that to a
+//! miss). All integers are little-endian; floats are serialized as IEEE
+//! bit patterns, so round-trips are bit-exact (NaNs included).
+//!
+//! The encoding is deterministic — the same in-memory value always
+//! produces the same bytes — which is what makes content-addressed
+//! storage and the round-trip-vs-`ir::print` golden tests possible.
+
+use crate::cl::error::{Error, Result};
+use crate::ir::{
+    AddrSpace, AllocaInfo, BarrierKind, BinOp, Block, BlockId, Function, Imm, Inst, MathFn,
+    Module, Operand, Param, Reg, Scalar, SlotId, Term, Type, UnOp, WiFn, WiLoopMeta,
+};
+use crate::kcc::{CompileOptions, CompileStats, Region, TargetKind, WorkGroupFunction};
+
+use super::key::{fnv128, SpecKey};
+
+/// File magic.
+pub const POCLBIN_MAGIC: [u8; 8] = *b"POCLBIN\0";
+/// Format version. Bump on any encoding change: old files then decode as
+/// [`Error::BadBinary`] and cache lookups fall back to a clean recompile.
+pub const POCLBIN_VERSION: u32 = 1;
+
+/// Envelope size in bytes (magic + version + kind + length + digest).
+pub const HEADER_LEN: usize = 8 + 4 + 1 + 8 + 16;
+
+const KIND_MODULE: u8 = 1;
+const KIND_WGF: u8 = 2;
+const KIND_PROGRAM: u8 = 3;
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::BadBinary(msg.into())
+}
+
+// ---------------------------------------------------------------------
+// Byte-level writer / reader
+// ---------------------------------------------------------------------
+
+/// Append-only payload writer.
+struct W {
+    buf: Vec<u8>,
+}
+
+impl W {
+    fn new() -> W {
+        W { buf: Vec::with_capacity(1024) }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Checked payload reader: every read fails cleanly on truncation.
+struct R<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn new(buf: &'a [u8]) -> R<'a> {
+        R { buf, pos: 0 }
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(bad(format!(
+                "truncated payload: need {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(bad(format!("bad bool byte {v}"))),
+        }
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| bad("non-UTF-8 string"))
+    }
+    /// A u32 length prefix, sanity-capped by the bytes actually left so a
+    /// bogus length can never trigger a huge allocation.
+    fn len_prefix(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() {
+            return Err(bad(format!(
+                "length prefix {n} exceeds {} remaining bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+    fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(bad(format!("{} trailing payload bytes", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-type codec
+// ---------------------------------------------------------------------
+
+/// Symmetric encode/decode for one IR type. Field order in `put` and
+/// `get` must match exactly; the round-trip tests hold this invariant.
+trait Codec: Sized {
+    fn put(&self, w: &mut W);
+    fn get(r: &mut R) -> Result<Self>;
+}
+
+/// Codec for a fieldless enum as a single tag byte, with strict
+/// rejection of unknown tags on decode.
+macro_rules! tag_enum {
+    ($ty:ident { $($variant:ident = $tag:literal),+ $(,)? }) => {
+        impl Codec for $ty {
+            fn put(&self, w: &mut W) {
+                w.u8(match self { $( $ty::$variant => $tag, )+ });
+            }
+            fn get(r: &mut R) -> Result<Self> {
+                Ok(match r.u8()? {
+                    $( $tag => $ty::$variant, )+
+                    t => return Err(bad(format!("bad {} tag {t}", stringify!($ty)))),
+                })
+            }
+        }
+    };
+}
+
+tag_enum!(Scalar { Bool = 0, I32 = 1, U32 = 2, I64 = 3, U64 = 4, F32 = 5, F64 = 6 });
+tag_enum!(AddrSpace { Global = 0, Local = 1, Constant = 2, Private = 3 });
+tag_enum!(UnOp { Neg = 0, Not = 1, LNot = 2 });
+tag_enum!(BarrierKind { Explicit = 0, Implicit = 1 });
+tag_enum!(TargetKind { Cpu = 0, Tta = 1, Spmd = 2 });
+tag_enum!(BinOp {
+    Add = 0, Sub = 1, Mul = 2, Div = 3, Rem = 4, And = 5, Or = 6, Xor = 7,
+    Shl = 8, Shr = 9, Eq = 10, Ne = 11, Lt = 12, Le = 13, Gt = 14, Ge = 15,
+    LAnd = 16, LOr = 17,
+});
+tag_enum!(WiFn {
+    GlobalId = 0, LocalId = 1, GroupId = 2, GlobalSize = 3, LocalSize = 4,
+    NumGroups = 5, WorkDim = 6, GlobalOffset = 7,
+});
+tag_enum!(MathFn {
+    Sqrt = 0, RSqrt = 1, Exp = 2, Exp2 = 3, Log = 4, Log2 = 5, Sin = 6,
+    Cos = 7, Tan = 8, Fabs = 9, Floor = 10, Ceil = 11, Round = 12,
+    Trunc = 13, Pow = 14, Fmin = 15, Fmax = 16, Fmod = 17, Mad = 18,
+    Fma = 19, Min = 20, Max = 21, Clamp = 22, Abs = 23, Mix = 24, Dot = 25,
+    Length = 26, Normalize = 27, Distance = 28, NativeSqrt = 29,
+    NativeRSqrt = 30, NativeExp = 31, NativeLog = 32, NativeSin = 33,
+    NativeCos = 34, NativeDivide = 35, NativeRecip = 36,
+});
+
+impl Codec for usize {
+    fn put(&self, w: &mut W) {
+        w.u64(*self as u64);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(r.u64()? as usize)
+    }
+}
+
+impl Codec for bool {
+    fn put(&self, w: &mut W) {
+        w.bool(*self);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        r.bool()
+    }
+}
+
+impl Codec for Reg {
+    fn put(&self, w: &mut W) {
+        w.u32(self.0);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(Reg(r.u32()?))
+    }
+}
+
+impl Codec for BlockId {
+    fn put(&self, w: &mut W) {
+        w.u32(self.0);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(BlockId(r.u32()?))
+    }
+}
+
+impl Codec for SlotId {
+    fn put(&self, w: &mut W) {
+        w.u32(self.0);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(SlotId(r.u32()?))
+    }
+}
+
+impl<T: Codec> Codec for Option<T> {
+    fn put(&self, w: &mut W) {
+        match self {
+            None => w.u8(0),
+            Some(v) => {
+                w.u8(1);
+                v.put(w);
+            }
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::get(r)?)),
+            t => Err(bad(format!("bad Option tag {t}"))),
+        }
+    }
+}
+
+impl<T: Codec> Codec for Vec<T> {
+    fn put(&self, w: &mut W) {
+        w.u32(self.len() as u32);
+        for v in self {
+            v.put(w);
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        let n = r.len_prefix()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(T::get(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Codec for Type {
+    fn put(&self, w: &mut W) {
+        match self {
+            Type::Void => w.u8(0),
+            Type::Scalar(s) => {
+                w.u8(1);
+                s.put(w);
+            }
+            Type::Vec(s, n) => {
+                w.u8(2);
+                s.put(w);
+                w.u8(*n);
+            }
+            Type::Ptr(elem, sp) => {
+                w.u8(3);
+                elem.put(w);
+                sp.put(w);
+            }
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(match r.u8()? {
+            0 => Type::Void,
+            1 => Type::Scalar(Scalar::get(r)?),
+            2 => Type::Vec(Scalar::get(r)?, r.u8()?),
+            3 => Type::Ptr(Box::new(Type::get(r)?), AddrSpace::get(r)?),
+            t => return Err(bad(format!("bad Type tag {t}"))),
+        })
+    }
+}
+
+impl Codec for Imm {
+    fn put(&self, w: &mut W) {
+        match self {
+            Imm::Int(v, s) => {
+                w.u8(0);
+                w.i64(*v);
+                s.put(w);
+            }
+            Imm::Float(v, s) => {
+                w.u8(1);
+                w.u64(v.to_bits());
+                s.put(w);
+            }
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(match r.u8()? {
+            0 => Imm::Int(r.i64()?, Scalar::get(r)?),
+            1 => Imm::Float(f64::from_bits(r.u64()?), Scalar::get(r)?),
+            t => return Err(bad(format!("bad Imm tag {t}"))),
+        })
+    }
+}
+
+impl Codec for Operand {
+    fn put(&self, w: &mut W) {
+        match self {
+            Operand::Reg(v) => {
+                w.u8(0);
+                v.put(w);
+            }
+            Operand::Imm(v) => {
+                w.u8(1);
+                v.put(w);
+            }
+            Operand::Arg(v) => {
+                w.u8(2);
+                w.u32(*v);
+            }
+            Operand::Slot(v) => {
+                w.u8(3);
+                v.put(w);
+            }
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(match r.u8()? {
+            0 => Operand::Reg(Reg::get(r)?),
+            1 => Operand::Imm(Imm::get(r)?),
+            2 => Operand::Arg(r.u32()?),
+            3 => Operand::Slot(SlotId::get(r)?),
+            t => return Err(bad(format!("bad Operand tag {t}"))),
+        })
+    }
+}
+
+impl Codec for Inst {
+    fn put(&self, w: &mut W) {
+        match self {
+            Inst::Bin { op, ty, a, b } => {
+                w.u8(0);
+                op.put(w);
+                ty.put(w);
+                a.put(w);
+                b.put(w);
+            }
+            Inst::Un { op, ty, a } => {
+                w.u8(1);
+                op.put(w);
+                ty.put(w);
+                a.put(w);
+            }
+            Inst::Cast { to, from, a } => {
+                w.u8(2);
+                to.put(w);
+                from.put(w);
+                a.put(w);
+            }
+            Inst::Load { ty, ptr } => {
+                w.u8(3);
+                ty.put(w);
+                ptr.put(w);
+            }
+            Inst::Store { ty, ptr, val } => {
+                w.u8(4);
+                ty.put(w);
+                ptr.put(w);
+                val.put(w);
+            }
+            Inst::Gep { elem, base, idx } => {
+                w.u8(5);
+                elem.put(w);
+                base.put(w);
+                idx.put(w);
+            }
+            Inst::Wi { func, dim } => {
+                w.u8(6);
+                func.put(w);
+                w.u32(*dim);
+            }
+            Inst::Math { func, ty, args } => {
+                w.u8(7);
+                func.put(w);
+                ty.put(w);
+                args.put(w);
+            }
+            Inst::Select { ty, cond, a, b } => {
+                w.u8(8);
+                ty.put(w);
+                cond.put(w);
+                a.put(w);
+                b.put(w);
+            }
+            Inst::VecBuild { ty, elems } => {
+                w.u8(9);
+                ty.put(w);
+                elems.put(w);
+            }
+            Inst::VecExtract { elem, a, lane } => {
+                w.u8(10);
+                elem.put(w);
+                a.put(w);
+                w.u32(*lane);
+            }
+            Inst::VecInsert { ty, a, lane, v } => {
+                w.u8(11);
+                ty.put(w);
+                a.put(w);
+                w.u32(*lane);
+                v.put(w);
+            }
+            Inst::Splat { ty, a } => {
+                w.u8(12);
+                ty.put(w);
+                a.put(w);
+            }
+            Inst::Barrier { kind } => {
+                w.u8(13);
+                kind.put(w);
+            }
+            Inst::Marker { label } => {
+                w.u8(14);
+                w.u32(*label);
+            }
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(match r.u8()? {
+            0 => Inst::Bin {
+                op: BinOp::get(r)?,
+                ty: Type::get(r)?,
+                a: Operand::get(r)?,
+                b: Operand::get(r)?,
+            },
+            1 => Inst::Un { op: UnOp::get(r)?, ty: Type::get(r)?, a: Operand::get(r)? },
+            2 => Inst::Cast { to: Type::get(r)?, from: Type::get(r)?, a: Operand::get(r)? },
+            3 => Inst::Load { ty: Type::get(r)?, ptr: Operand::get(r)? },
+            4 => Inst::Store { ty: Type::get(r)?, ptr: Operand::get(r)?, val: Operand::get(r)? },
+            5 => Inst::Gep { elem: Type::get(r)?, base: Operand::get(r)?, idx: Operand::get(r)? },
+            6 => Inst::Wi { func: WiFn::get(r)?, dim: r.u32()? },
+            7 => Inst::Math { func: MathFn::get(r)?, ty: Type::get(r)?, args: Vec::get(r)? },
+            8 => Inst::Select {
+                ty: Type::get(r)?,
+                cond: Operand::get(r)?,
+                a: Operand::get(r)?,
+                b: Operand::get(r)?,
+            },
+            9 => Inst::VecBuild { ty: Type::get(r)?, elems: Vec::get(r)? },
+            10 => Inst::VecExtract { elem: Type::get(r)?, a: Operand::get(r)?, lane: r.u32()? },
+            11 => Inst::VecInsert {
+                ty: Type::get(r)?,
+                a: Operand::get(r)?,
+                lane: r.u32()?,
+                v: Operand::get(r)?,
+            },
+            12 => Inst::Splat { ty: Type::get(r)?, a: Operand::get(r)? },
+            13 => Inst::Barrier { kind: BarrierKind::get(r)? },
+            14 => Inst::Marker { label: r.u32()? },
+            t => return Err(bad(format!("bad Inst tag {t}"))),
+        })
+    }
+}
+
+impl Codec for Term {
+    fn put(&self, w: &mut W) {
+        match self {
+            Term::Jump(b) => {
+                w.u8(0);
+                b.put(w);
+            }
+            Term::Br { cond, t, f } => {
+                w.u8(1);
+                cond.put(w);
+                t.put(w);
+                f.put(w);
+            }
+            Term::Ret => w.u8(2),
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(match r.u8()? {
+            0 => Term::Jump(BlockId::get(r)?),
+            1 => Term::Br { cond: Operand::get(r)?, t: BlockId::get(r)?, f: BlockId::get(r)? },
+            2 => Term::Ret,
+            t => return Err(bad(format!("bad Term tag {t}"))),
+        })
+    }
+}
+
+impl Codec for Block {
+    fn put(&self, w: &mut W) {
+        w.str(&self.name);
+        w.u32(self.insts.len() as u32);
+        for (reg, inst) in &self.insts {
+            reg.put(w);
+            inst.put(w);
+        }
+        self.term.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        let name = r.str()?;
+        let n = r.len_prefix()?;
+        let mut insts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let reg = Option::<Reg>::get(r)?;
+            let inst = Inst::get(r)?;
+            insts.push((reg, inst));
+        }
+        let term = Term::get(r)?;
+        Ok(Block { name, insts, term })
+    }
+}
+
+impl Codec for Param {
+    fn put(&self, w: &mut W) {
+        w.str(&self.name);
+        self.ty.put(w);
+        w.bool(self.is_local_buf);
+        self.auto_local_size.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(Param {
+            name: r.str()?,
+            ty: Type::get(r)?,
+            is_local_buf: r.bool()?,
+            auto_local_size: Option::get(r)?,
+        })
+    }
+}
+
+impl Codec for AllocaInfo {
+    fn put(&self, w: &mut W) {
+        w.str(&self.name);
+        self.ty.put(w);
+        self.count.put(w);
+        w.bool(self.privatized);
+        w.bool(self.uniform);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(AllocaInfo {
+            name: r.str()?,
+            ty: Type::get(r)?,
+            count: usize::get(r)?,
+            privatized: r.bool()?,
+            uniform: r.bool()?,
+        })
+    }
+}
+
+impl Codec for WiLoopMeta {
+    fn put(&self, w: &mut W) {
+        self.region.put(w);
+        w.u32(self.dim);
+        self.header.put(w);
+        self.latch.put(w);
+        self.trip_count.put(w);
+        w.bool(self.parallel);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(WiLoopMeta {
+            region: usize::get(r)?,
+            dim: r.u32()?,
+            header: BlockId::get(r)?,
+            latch: BlockId::get(r)?,
+            trip_count: Option::get(r)?,
+            parallel: r.bool()?,
+        })
+    }
+}
+
+impl Codec for Function {
+    fn put(&self, w: &mut W) {
+        w.str(&self.name);
+        self.params.put(w);
+        self.entry.put(w);
+        self.blocks.put(w);
+        self.slots.put(w);
+        w.u32(self.reg_count());
+        self.wi_loops.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        let name = r.str()?;
+        let params = Vec::get(r)?;
+        let entry = BlockId::get(r)?;
+        let blocks: Vec<Block> = Vec::get(r)?;
+        let slots = Vec::get(r)?;
+        let reg_count = r.u32()?;
+        let wi_loops: Vec<WiLoopMeta> = Vec::get(r)?;
+        if (entry.0 as usize) >= blocks.len() {
+            return Err(bad(format!("entry bb{} out of range ({} blocks)", entry.0, blocks.len())));
+        }
+        for m in &wi_loops {
+            if m.header.0 as usize >= blocks.len() || m.latch.0 as usize >= blocks.len() {
+                return Err(bad(format!("wi-loop block ids out of range in `{name}`")));
+            }
+        }
+        // Every register the engines will index must fit the frame the
+        // serialized high-water mark sizes. The verifier guarantees uses
+        // are covered by block-local defs, so checking defs (plus branch
+        // conditions, for belt and braces) bounds every register id.
+        for b in &blocks {
+            for (def, _) in &b.insts {
+                if let Some(rg) = def {
+                    if rg.0 >= reg_count {
+                        return Err(bad(format!(
+                            "register r{} exceeds the declared count {reg_count}",
+                            rg.0
+                        )));
+                    }
+                }
+            }
+            if let Term::Br { cond: Operand::Reg(rg), .. } = &b.term {
+                if rg.0 >= reg_count {
+                    return Err(bad(format!(
+                        "branch register r{} exceeds the declared count {reg_count}",
+                        rg.0
+                    )));
+                }
+            }
+        }
+        let f = Function::from_raw_parts(name, params, blocks, entry, slots, reg_count, wi_loops);
+        // Full structural verification (terminator targets, slot/arg
+        // ranges, register block-locality): a digest only proves the file
+        // is what somebody wrote, not that what they wrote is an IR the
+        // engines can index into safely.
+        crate::ir::verify::verify(&f)
+            .map_err(|e| bad(format!("embedded function `{}` rejected: {e}", f.name)))?;
+        Ok(f)
+    }
+}
+
+impl Codec for Region {
+    fn put(&self, w: &mut W) {
+        self.id.put(w);
+        self.pre.put(w);
+        self.post.put(w);
+        self.blocks.put(w);
+        w.bool(self.via_back_edge);
+        w.bool(self.needs_peeling);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(Region {
+            id: usize::get(r)?,
+            pre: BlockId::get(r)?,
+            post: BlockId::get(r)?,
+            blocks: Vec::get(r)?,
+            via_back_edge: r.bool()?,
+            needs_peeling: r.bool()?,
+        })
+    }
+}
+
+impl Codec for CompileStats {
+    fn put(&self, w: &mut W) {
+        self.regions.put(w);
+        self.horizontal_loops.put(w);
+        self.b_loops.put(w);
+        self.taildup_barriers.put(w);
+        self.taildup_blocks.put(w);
+        self.privatized_slots.put(w);
+        self.uniform_slots.put(w);
+        self.wi_loops.put(w);
+        self.peeled_barriers.put(w);
+        self.uniform_regs.put(w);
+        self.divergent_regions.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(CompileStats {
+            regions: usize::get(r)?,
+            horizontal_loops: usize::get(r)?,
+            b_loops: usize::get(r)?,
+            taildup_barriers: usize::get(r)?,
+            taildup_blocks: usize::get(r)?,
+            privatized_slots: usize::get(r)?,
+            uniform_slots: usize::get(r)?,
+            wi_loops: usize::get(r)?,
+            peeled_barriers: usize::get(r)?,
+            uniform_regs: usize::get(r)?,
+            divergent_regions: usize::get(r)?,
+        })
+    }
+}
+
+impl Codec for CompileOptions {
+    fn put(&self, w: &mut W) {
+        w.bool(self.horizontal);
+        w.u32(self.work_dim);
+        w.bool(self.spmd);
+        self.target.put(w);
+        self.gang_width.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(CompileOptions {
+            horizontal: r.bool()?,
+            work_dim: r.u32()?,
+            spmd: r.bool()?,
+            target: TargetKind::get(r)?,
+            gang_width: usize::get(r)?,
+        })
+    }
+}
+
+impl Codec for WorkGroupFunction {
+    fn put(&self, w: &mut W) {
+        w.str(&self.name);
+        self.reg_fn.put(w);
+        self.regions.put(w);
+        self.loop_fn.put(w);
+        for d in self.local_size {
+            d.put(w);
+        }
+        self.reg_uniform.put(w);
+        self.region_divergent.put(w);
+        self.stats.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        let name = r.str()?;
+        let reg_fn = Function::get(r)?;
+        let regions: Vec<Region> = Vec::get(r)?;
+        let loop_fn = Function::get(r)?;
+        let local_size = [usize::get(r)?, usize::get(r)?, usize::get(r)?];
+        let reg_uniform: Vec<bool> = Vec::get(r)?;
+        let region_divergent: Vec<bool> = Vec::get(r)?;
+        let stats = CompileStats::get(r)?;
+        // Metadata consistency: the engines index these without bounds
+        // checks of their own.
+        let nblocks = reg_fn.blocks.len() as u32;
+        for rg in &regions {
+            if rg.pre.0 >= nblocks
+                || rg.post.0 >= nblocks
+                || rg.blocks.iter().any(|b| b.0 >= nblocks)
+            {
+                return Err(bad(format!("region {} block ids out of range", rg.id)));
+            }
+        }
+        if reg_uniform.len() != reg_fn.reg_count() as usize {
+            return Err(bad("reg_uniform length does not match the register count"));
+        }
+        if region_divergent.len() != regions.len() {
+            return Err(bad("region_divergent length does not match the region count"));
+        }
+        Ok(WorkGroupFunction {
+            name,
+            reg_fn,
+            regions,
+            loop_fn,
+            local_size,
+            reg_uniform,
+            region_divergent,
+            stats,
+        })
+    }
+}
+
+impl Codec for SpecKey {
+    fn put(&self, w: &mut W) {
+        w.str(&self.kernel);
+        for d in self.local {
+            d.put(w);
+        }
+        self.opts.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(SpecKey {
+            kernel: r.str()?,
+            local: [usize::get(r)?, usize::get(r)?, usize::get(r)?],
+            opts: CompileOptions::get(r)?,
+        })
+    }
+}
+
+impl Codec for Module {
+    fn put(&self, w: &mut W) {
+        self.kernels.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(Module { kernels: Vec::get(r)? })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Envelope + public API
+// ---------------------------------------------------------------------
+
+/// A whole program as exchanged by `Program::binaries()` /
+/// `Program::from_binary`: the IR module plus every cached §4.1
+/// specialisation, tagged with the source digest so a reconstructed
+/// program keeps addressing the same on-disk cache entries.
+#[derive(Debug, Clone)]
+pub struct ProgramBinary {
+    /// FNV-1a digest of the original MiniCL source text.
+    pub source_hash: u128,
+    /// Frontend output (single-work-item kernels).
+    pub module: Module,
+    /// Cached specialisations at export time.
+    pub entries: Vec<(SpecKey, WorkGroupFunction)>,
+}
+
+fn seal(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&POCLBIN_MAGIC);
+    out.extend_from_slice(&POCLBIN_VERSION.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv128(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn open(bytes: &[u8], want_kind: u8) -> Result<&[u8]> {
+    if bytes.len() < HEADER_LEN {
+        return Err(bad(format!("{} bytes is too short for a poclbin header", bytes.len())));
+    }
+    if bytes[0..8] != POCLBIN_MAGIC {
+        return Err(bad("bad magic (not a poclbin file)"));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != POCLBIN_VERSION {
+        return Err(bad(format!("format version {version}, this build reads {POCLBIN_VERSION}")));
+    }
+    let kind = bytes[12];
+    if kind != want_kind {
+        return Err(bad(format!("payload kind {kind}, expected {want_kind}")));
+    }
+    let len = u64::from_le_bytes(bytes[13..21].try_into().unwrap()) as usize;
+    let digest = u128::from_le_bytes(bytes[21..37].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    if payload.len() != len {
+        return Err(bad(format!("payload length {} != header length {len}", payload.len())));
+    }
+    if fnv128(payload) != digest {
+        return Err(bad("payload digest mismatch (corrupt file)"));
+    }
+    Ok(payload)
+}
+
+fn encode<T: Codec>(kind: u8, value: &T) -> Vec<u8> {
+    let mut w = W::new();
+    value.put(&mut w);
+    seal(kind, &w.buf)
+}
+
+fn decode<T: Codec>(kind: u8, bytes: &[u8]) -> Result<T> {
+    let payload = open(bytes, kind)?;
+    let mut r = R::new(payload);
+    let value = T::get(&mut r)?;
+    r.finish()?;
+    Ok(value)
+}
+
+/// Serialize an IR module.
+pub fn encode_module(m: &Module) -> Vec<u8> {
+    encode(KIND_MODULE, m)
+}
+
+/// Deserialize an IR module.
+pub fn decode_module(bytes: &[u8]) -> Result<Module> {
+    decode(KIND_MODULE, bytes)
+}
+
+/// Serialize one compiled work-group function (the on-disk cache entry
+/// payload).
+pub fn encode_wgf(wgf: &WorkGroupFunction) -> Vec<u8> {
+    encode(KIND_WGF, wgf)
+}
+
+/// Deserialize one compiled work-group function.
+pub fn decode_wgf(bytes: &[u8]) -> Result<WorkGroupFunction> {
+    decode(KIND_WGF, bytes)
+}
+
+/// Serialize a whole program (module + cached specialisations).
+pub fn encode_program(p: &ProgramBinary) -> Vec<u8> {
+    let entries: Vec<(&SpecKey, &WorkGroupFunction)> =
+        p.entries.iter().map(|(k, w)| (k, w)).collect();
+    encode_program_parts(p.source_hash, &p.module, &entries)
+}
+
+/// Serialize a program from borrowed parts — `Program::binaries()` uses
+/// this to export straight out of its cache map without cloning any IR.
+pub fn encode_program_parts(
+    source_hash: u128,
+    module: &Module,
+    entries: &[(&SpecKey, &WorkGroupFunction)],
+) -> Vec<u8> {
+    let mut w = W::new();
+    w.u128(source_hash);
+    module.put(&mut w);
+    w.u32(entries.len() as u32);
+    for (spec, wgf) in entries {
+        spec.put(&mut w);
+        wgf.put(&mut w);
+    }
+    seal(KIND_PROGRAM, &w.buf)
+}
+
+/// Deserialize a whole program.
+pub fn decode_program(bytes: &[u8]) -> Result<ProgramBinary> {
+    let payload = open(bytes, KIND_PROGRAM)?;
+    let mut r = R::new(payload);
+    let source_hash = r.u128()?;
+    let module = Module::get(&mut r)?;
+    let n = r.len_prefix()?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let spec = SpecKey::get(&mut r)?;
+        let wgf = WorkGroupFunction::get(&mut r)?;
+        if spec.kernel != wgf.name || spec.local != wgf.local_size {
+            return Err(bad(format!(
+                "entry key `{}` @ {:?} does not match its function `{}` @ {:?}",
+                spec.kernel, spec.local, wgf.name, wgf.local_size
+            )));
+        }
+        entries.push((spec, wgf));
+    }
+    r.finish()?;
+    Ok(ProgramBinary { source_hash, module, entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend;
+    use crate::ir::print::print_function;
+    use crate::kcc::compile_workgroup;
+
+    const SRC: &str = "__kernel void k(__global float *x, __local float *t, uint n) {
+        size_t i = get_local_id(0);
+        t[i] = x[i] * 2.0f;
+        barrier(CLK_LOCAL_MEM_FENCE);
+        if (i < (size_t)n) { x[i] = t[0] + sqrt(t[i]); }
+    }";
+
+    fn wgf() -> WorkGroupFunction {
+        let m = frontend::compile(SRC).unwrap();
+        compile_workgroup(&m.kernels[0], [8, 1, 1], &CompileOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn module_roundtrips_against_printer() {
+        let m = frontend::compile(SRC).unwrap();
+        let bytes = encode_module(&m);
+        let back = decode_module(&bytes).unwrap();
+        assert_eq!(m.kernels.len(), back.kernels.len());
+        for (a, b) in m.kernels.iter().zip(&back.kernels) {
+            assert_eq!(print_function(a), print_function(b));
+            assert_eq!(a.reg_count(), b.reg_count());
+        }
+    }
+
+    #[test]
+    fn wgf_roundtrips_against_printer() {
+        let w = wgf();
+        let bytes = encode_wgf(&w);
+        let back = decode_wgf(&bytes).unwrap();
+        assert_eq!(print_function(&w.reg_fn), print_function(&back.reg_fn));
+        assert_eq!(print_function(&w.loop_fn), print_function(&back.loop_fn));
+        assert_eq!(w.local_size, back.local_size);
+        assert_eq!(w.reg_uniform, back.reg_uniform);
+        assert_eq!(w.region_divergent, back.region_divergent);
+        assert_eq!(w.regions.len(), back.regions.len());
+        for (x, y) in w.regions.iter().zip(&back.regions) {
+            assert_eq!((x.id, x.pre, x.post), (y.id, y.pre, y.post));
+            assert_eq!(x.blocks, y.blocks);
+            assert_eq!(x.via_back_edge, y.via_back_edge);
+            assert_eq!(x.needs_peeling, y.needs_peeling);
+        }
+        assert_eq!(format!("{:?}", w.stats), format!("{:?}", back.stats));
+        // Determinism: encoding the decoded value reproduces the bytes.
+        assert_eq!(bytes, encode_wgf(&back));
+    }
+
+    #[test]
+    fn program_roundtrips() {
+        let m = frontend::compile(SRC).unwrap();
+        let w = wgf();
+        let spec = SpecKey {
+            kernel: "k".into(),
+            local: [8, 1, 1],
+            opts: CompileOptions::default(),
+        };
+        let p = ProgramBinary {
+            source_hash: super::super::key::fnv128(SRC.as_bytes()),
+            module: m,
+            entries: vec![(spec.clone(), w)],
+        };
+        let bytes = encode_program(&p);
+        let back = decode_program(&bytes).unwrap();
+        assert_eq!(back.source_hash, p.source_hash);
+        assert_eq!(back.entries.len(), 1);
+        assert_eq!(back.entries[0].0, spec);
+        assert_eq!(
+            print_function(&p.module.kernels[0]),
+            print_function(&back.module.kernels[0])
+        );
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected() {
+        let bytes = encode_wgf(&wgf());
+        // Flip one payload byte: the digest check must catch it.
+        let mut corrupt = bytes.clone();
+        let i = HEADER_LEN + corrupt[HEADER_LEN..].len() / 2;
+        corrupt[i] ^= 0x40;
+        assert!(matches!(decode_wgf(&corrupt), Err(Error::BadBinary(_))));
+        // Truncation is rejected too.
+        assert!(matches!(decode_wgf(&bytes[..bytes.len() - 1]), Err(Error::BadBinary(_))));
+        assert!(matches!(decode_wgf(&bytes[..10]), Err(Error::BadBinary(_))));
+        // Wrong kind: a module envelope is not a wgf.
+        let m = frontend::compile(SRC).unwrap();
+        assert!(matches!(decode_wgf(&encode_module(&m)), Err(Error::BadBinary(_))));
+    }
+
+    #[test]
+    fn version_bump_is_rejected() {
+        let mut bytes = encode_wgf(&wgf());
+        let bumped = (POCLBIN_VERSION + 1).to_le_bytes();
+        bytes[8..12].copy_from_slice(&bumped);
+        match decode_wgf(&bytes) {
+            Err(Error::BadBinary(msg)) => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("expected BadBinary, got {other:?}"),
+        }
+        // Bad magic.
+        let mut bytes = encode_wgf(&wgf());
+        bytes[0] = b'X';
+        assert!(matches!(decode_wgf(&bytes), Err(Error::BadBinary(_))));
+    }
+}

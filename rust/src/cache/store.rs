@@ -1,0 +1,408 @@
+//! The persistent kernel-binary store: a content-addressed directory of
+//! `poclbin` files (the `POCL_CACHE_DIR` analog).
+//!
+//! Layout: one file per compiled work-group function,
+//! `<dir>/<32-hex-key>.poclbin`, where the key is
+//! [`CacheKey::for_spec`](super::key::CacheKey::for_spec) — a digest of
+//! source, kernel, local size, and the full compile options (device kind
+//! and gang width included). There is no index file: the directory *is*
+//! the index, which keeps concurrent processes safe.
+//!
+//! Guarantees:
+//!
+//! * **Atomic writes** — entries are written to a unique `*.tmp` file in
+//!   the same directory and `rename`d into place, so readers never see a
+//!   partial entry (POSIX rename atomicity). A crash leaves at worst a
+//!   stray tmp file, which the next directory scan (any write-back's
+//!   eviction pass, or `cache clear`) removes once it is older than
+//!   [`STALE_TMP_SECS`].
+//! * **Corruption safety** — a load that fails the `poclbin` magic,
+//!   version, length, or digest checks counts as a miss (and the bad
+//!   entry is deleted); the caller recompiles and overwrites it.
+//! * **Bounded size** — after a write pushes the directory over
+//!   `POCLRS_CACHE_MAX_BYTES` (default 256 MiB), oldest-modified entries
+//!   are evicted until the total fits again.
+//!
+//! Every handle keeps [`CacheStats`] counters; `poclrs cache stats` and
+//! `poclrs run --stats` surface them.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::SystemTime;
+
+use crate::cl::error::{Error, Result};
+use crate::kcc::WorkGroupFunction;
+
+use super::key::CacheKey;
+use super::poclbin;
+
+/// File extension of cache entries.
+pub const ENTRY_EXT: &str = "poclbin";
+/// Default size cap when `POCLRS_CACHE_MAX_BYTES` is unset.
+pub const DEFAULT_MAX_BYTES: u64 = 256 << 20;
+/// Age (seconds) after which an orphaned tmp file from a crashed writer
+/// is swept by the next directory scan.
+pub const STALE_TMP_SECS: u64 = 600;
+
+/// Cumulative counters for one [`DiskCache`] handle.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Entries found on disk and successfully decoded.
+    pub hits: u64,
+    /// Lookups that found nothing usable (absent, corrupt, or
+    /// version-mismatched — the latter two also count in `rejected`).
+    pub misses: u64,
+    /// Misses caused by a present-but-unusable entry.
+    pub rejected: u64,
+    /// Entries written.
+    pub writes: u64,
+    /// Bytes read by successful hits.
+    pub bytes_read: u64,
+    /// Bytes written by stores.
+    pub bytes_written: u64,
+    /// Entries evicted by the size cap.
+    pub evictions: u64,
+}
+
+/// One entry as listed by [`DiskCache::entries`].
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    /// Content-addressed key (file stem).
+    pub key: CacheKey,
+    /// File size in bytes.
+    pub bytes: u64,
+    /// Last-modified time.
+    pub modified: SystemTime,
+    /// Kernel name, if the entry decodes (`None` = corrupt/foreign file).
+    pub kernel: Option<String>,
+    /// Specialised local size, if the entry decodes.
+    pub local_size: Option<[usize; 3]>,
+}
+
+/// A content-addressed on-disk cache of compiled work-group functions.
+pub struct DiskCache {
+    dir: PathBuf,
+    max_bytes: u64,
+    stats: Mutex<CacheStats>,
+}
+
+/// Process-unique suffix source for tmp files.
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl DiskCache {
+    /// Open (creating if needed) a cache at `dir`.
+    pub fn at(dir: impl Into<PathBuf>) -> Result<DiskCache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| Error::Io(format!("cannot create cache dir {}: {e}", dir.display())))?;
+        let max_bytes = std::env::var("POCLRS_CACHE_MAX_BYTES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_MAX_BYTES);
+        Ok(DiskCache { dir, max_bytes, stats: Mutex::new(CacheStats::default()) })
+    }
+
+    /// The default cache directory: `POCLRS_CACHE_DIR` if set, else
+    /// `$HOME/.cache/poclrs`, else a `poclrs-cache` directory under the
+    /// system temp dir.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("POCLRS_CACHE_DIR") {
+            if !dir.is_empty() {
+                return PathBuf::from(dir);
+            }
+        }
+        if let Ok(home) = std::env::var("HOME") {
+            if !home.is_empty() {
+                return Path::new(&home).join(".cache").join("poclrs");
+            }
+        }
+        std::env::temp_dir().join("poclrs-cache")
+    }
+
+    /// Directory this cache lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Size cap in bytes.
+    pub fn max_bytes(&self) -> u64 {
+        self.max_bytes
+    }
+
+    fn entry_path(&self, key: CacheKey) -> PathBuf {
+        self.dir.join(format!("{}.{ENTRY_EXT}", key.hex()))
+    }
+
+    /// Look up a compiled work-group function. Absent, corrupt, or
+    /// version-mismatched entries are misses; unusable files are removed
+    /// so the follow-up write-back replaces them.
+    pub fn load(&self, key: CacheKey) -> Option<WorkGroupFunction> {
+        let path = self.entry_path(key);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.stats.lock().unwrap().misses += 1;
+                return None;
+            }
+        };
+        match poclbin::decode_wgf(&bytes) {
+            Ok(wgf) => {
+                let mut s = self.stats.lock().unwrap();
+                s.hits += 1;
+                s.bytes_read += bytes.len() as u64;
+                Some(wgf)
+            }
+            Err(_) => {
+                // Stale format or bit rot: drop the entry and recompile.
+                let _ = std::fs::remove_file(&path);
+                let mut s = self.stats.lock().unwrap();
+                s.misses += 1;
+                s.rejected += 1;
+                None
+            }
+        }
+    }
+
+    /// Write (or overwrite) an entry atomically: serialize, write to a
+    /// unique tmp file in the cache dir, then rename into place.
+    pub fn store(&self, key: CacheKey, wgf: &WorkGroupFunction) -> Result<()> {
+        let bytes = poclbin::encode_wgf(wgf);
+        let tmp = self.dir.join(format!(
+            ".{}-{}-{}.tmp",
+            key.hex(),
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        let path = self.entry_path(key);
+        std::fs::write(&tmp, &bytes)
+            .map_err(|e| Error::Io(format!("cache write {}: {e}", tmp.display())))?;
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(Error::Io(format!("cache rename {}: {e}", path.display())));
+        }
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.writes += 1;
+            s.bytes_written += bytes.len() as u64;
+        }
+        self.evict_over_cap();
+        Ok(())
+    }
+
+    /// Lightweight directory scan (sorted newest-first): file metadata
+    /// only, nothing is read or decoded — this is what eviction and
+    /// `total_bytes` run on every write-back. As a side effect, stale
+    /// tmp files left behind by crashed writers are removed (no healthy
+    /// writer holds a tmp file for anywhere near [`STALE_TMP_SECS`]).
+    fn scan(&self) -> Result<Vec<CacheEntry>> {
+        let mut out = Vec::new();
+        let now = SystemTime::now();
+        let rd = std::fs::read_dir(&self.dir)
+            .map_err(|e| Error::Io(format!("cache dir {}: {e}", self.dir.display())))?;
+        for item in rd.flatten() {
+            let path = item.path();
+            let ext = path.extension().and_then(|e| e.to_str());
+            let Ok(meta) = item.metadata() else { continue };
+            let modified = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            if ext == Some("tmp") {
+                let stale = now
+                    .duration_since(modified)
+                    .map(|d| d.as_secs() > STALE_TMP_SECS)
+                    .unwrap_or(false);
+                if stale {
+                    let _ = std::fs::remove_file(&path);
+                }
+                continue;
+            }
+            if ext != Some(ENTRY_EXT) {
+                continue;
+            }
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else { continue };
+            let Some(key) = CacheKey::from_hex(stem) else { continue };
+            out.push(CacheEntry {
+                key,
+                bytes: meta.len(),
+                modified,
+                kernel: None,
+                local_size: None,
+            });
+        }
+        out.sort_by(|a, b| b.modified.cmp(&a.modified).then(a.key.cmp(&b.key)));
+        Ok(out)
+    }
+
+    /// List entries (sorted newest-first) with decoded kernel metadata —
+    /// the `cache ls` view. Files that do not decode are listed with
+    /// `kernel: None` rather than skipped, so bit-rotted entries show up
+    /// instead of hiding. This decodes every entry; size accounting
+    /// (`total_bytes`, eviction) uses the metadata-only scan instead.
+    pub fn entries(&self) -> Result<Vec<CacheEntry>> {
+        let mut out = self.scan()?;
+        for e in &mut out {
+            let path = self.entry_path(e.key);
+            let decoded = std::fs::read(&path).ok().and_then(|b| poclbin::decode_wgf(&b).ok());
+            if let Some(w) = decoded {
+                e.kernel = Some(w.name);
+                e.local_size = Some(w.local_size);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total bytes of all entries (metadata scan, no decoding).
+    pub fn total_bytes(&self) -> u64 {
+        self.scan().map(|es| es.iter().map(|e| e.bytes).sum()).unwrap_or(0)
+    }
+
+    /// Remove every entry (and stray tmp files). Returns the number of
+    /// entries removed.
+    pub fn clear(&self) -> Result<usize> {
+        let mut removed = 0;
+        let rd = std::fs::read_dir(&self.dir)
+            .map_err(|e| Error::Io(format!("cache dir {}: {e}", self.dir.display())))?;
+        for item in rd.flatten() {
+            let path = item.path();
+            let ext = path.extension().and_then(|e| e.to_str());
+            if ext == Some(ENTRY_EXT) {
+                if std::fs::remove_file(&path).is_ok() {
+                    removed += 1;
+                }
+            } else if ext == Some("tmp") {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Evict oldest-modified entries until the directory fits the cap
+    /// (metadata scan only — nothing is decoded on the write path).
+    fn evict_over_cap(&self) {
+        let Ok(mut entries) = self.scan() else { return };
+        let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
+        if total <= self.max_bytes {
+            return;
+        }
+        // scan() sorts newest-first; evict from the back (oldest).
+        while total > self.max_bytes {
+            let Some(oldest) = entries.pop() else { break };
+            if std::fs::remove_file(self.entry_path(oldest.key)).is_ok() {
+                total = total.saturating_sub(oldest.bytes);
+                self.stats.lock().unwrap().evictions += 1;
+            }
+        }
+    }
+
+    /// Snapshot of this handle's counters.
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// The process-wide default cache used for transparent read-through in
+/// `Program::build_cached(..)` callers (suite runner, CLI): opened once
+/// at [`DiskCache::default_dir`], shared by every program. `None` when
+/// caching is disabled (`POCLRS_CACHE=0`/`off`) or the directory cannot
+/// be created (e.g. read-only filesystem) — callers then compile as
+/// before, the cache is strictly an accelerator.
+pub fn default_cache() -> Option<Arc<DiskCache>> {
+    static DEFAULT: OnceLock<Option<Arc<DiskCache>>> = OnceLock::new();
+    DEFAULT
+        .get_or_init(|| {
+            if let Ok(v) = std::env::var("POCLRS_CACHE") {
+                let v = v.to_ascii_lowercase();
+                if v == "0" || v == "off" || v == "no" || v == "false" {
+                    return None;
+                }
+            }
+            DiskCache::at(DiskCache::default_dir()).ok().map(Arc::new)
+        })
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kcc::{compile_workgroup, CompileOptions};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "poclrs-store-test-{tag}-{}-{}",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_wgf(local: usize) -> WorkGroupFunction {
+        let m = crate::frontend::compile(
+            "__kernel void k(__global float *x) { x[get_global_id(0)] = 1.0f; }",
+        )
+        .unwrap();
+        compile_workgroup(&m.kernels[0], [local, 1, 1], &CompileOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn store_load_roundtrip_and_stats() {
+        let dir = tmpdir("roundtrip");
+        let cache = DiskCache::at(&dir).unwrap();
+        let key = CacheKey(42);
+        assert!(cache.load(key).is_none(), "cold cache misses");
+        let wgf = sample_wgf(8);
+        cache.store(key, &wgf).unwrap();
+        let back = cache.load(key).expect("warm cache hits");
+        assert_eq!(back.name, wgf.name);
+        assert_eq!(back.local_size, wgf.local_size);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.writes), (1, 1, 1));
+        assert!(s.bytes_written > 0 && s.bytes_read > 0);
+        // Listing sees the entry with its kernel metadata.
+        let es = cache.entries().unwrap();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].key, key);
+        assert_eq!(es[0].kernel.as_deref(), Some("k"));
+        assert_eq!(cache.clear().unwrap(), 1);
+        assert!(cache.entries().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_entry_is_a_miss_and_gets_removed() {
+        let dir = tmpdir("corrupt");
+        let cache = DiskCache::at(&dir).unwrap();
+        let key = CacheKey(7);
+        cache.store(key, &sample_wgf(4)).unwrap();
+        // Corrupt the file in place.
+        let path = dir.join(format!("{}.{ENTRY_EXT}", key.hex()));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(cache.load(key).is_none(), "corrupt entry must miss");
+        assert!(!path.exists(), "corrupt entry must be removed");
+        let s = cache.stats();
+        assert_eq!(s.rejected, 1);
+        // Write-back then hits again.
+        cache.store(key, &sample_wgf(4)).unwrap();
+        assert!(cache.load(key).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_keeps_directory_under_cap() {
+        let dir = tmpdir("evict");
+        let mut cache = DiskCache::at(&dir).unwrap();
+        let wgf = sample_wgf(8);
+        let entry_len = poclbin::encode_wgf(&wgf).len() as u64;
+        // Cap at ~3 entries.
+        cache.max_bytes = entry_len * 3 + entry_len / 2;
+        for i in 0..6u128 {
+            cache.store(CacheKey(i), &wgf).unwrap();
+        }
+        assert!(cache.total_bytes() <= cache.max_bytes, "cap respected");
+        let s = cache.stats();
+        assert!(s.evictions >= 2, "evictions counted: {s:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

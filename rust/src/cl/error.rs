@@ -31,6 +31,10 @@ pub enum Error {
     Pjrt(String),
     /// I/O failure (artifact files, kernel sources).
     Io(String),
+    /// Malformed, corrupt, or version-incompatible `poclbin` data
+    /// (`CL_INVALID_BINARY`). The on-disk cache treats this as a miss;
+    /// `Program::from_binary` surfaces it to the caller.
+    BadBinary(String),
 }
 
 impl fmt::Display for Error {
@@ -48,6 +52,7 @@ impl fmt::Display for Error {
             }
             Error::Pjrt(m) => write!(f, "PJRT error: {m}"),
             Error::Io(m) => write!(f, "I/O error: {m}"),
+            Error::BadBinary(m) => write!(f, "invalid program binary: {m}"),
         }
     }
 }

@@ -1,8 +1,13 @@
 //! Host layer (§3, Fig. 2): the `cl*`-style API.
 //!
 //! `Platform` → `Context` (+ `Buffer` via Bufalloc) → `Program` (+ the
-//! §4.1 per-local-size specialisation cache) → `Kernel` → `CommandQueue`
-//! (+ live `Event`s).
+//! §4.1 specialisation cache, optionally persistent via `cache`) →
+//! `Kernel` → `CommandQueue` (+ live `Event`s).
+//!
+//! Programs are built from source (`Program::build` /
+//! `Program::build_cached`) or reconstructed from a `poclbin` program
+//! binary (`Program::from_binary`, the `clCreateProgramWithBinary`
+//! analog, paired with `Program::binaries`).
 //!
 //! # Command lifecycle
 //!
@@ -49,5 +54,5 @@ pub use context::{Buffer, Context, Scalar};
 pub use error::{Error, Result};
 pub use event::{CommandStatus, Event, EventProfile};
 pub use platform::Platform;
-pub use program::{Kernel, KernelArg, Program};
+pub use program::{Kernel, KernelArg, Program, ProgramCacheStats};
 pub use queue::{CommandQueue, QueueProperties};

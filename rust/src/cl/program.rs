@@ -1,37 +1,128 @@
 //! Programs and kernels (`clCreateProgramWithSource` / `clBuildProgram` /
-//! `clCreateKernel` / `clSetKernelArg` analogs), including the §4.1
-//! enqueue-time work-group-function specialisation cache.
+//! `clCreateProgramWithBinary` / `clCreateKernel` / `clSetKernelArg`
+//! analogs), including the §4.1 enqueue-time work-group-function
+//! specialisation cache.
+//!
+//! Specialisations are keyed by [`SpecKey`] — kernel name, local size,
+//! and the **full** [`CompileOptions`] — so two devices that disagree on
+//! any compile knob can never share an entry. Lookups go memory → disk
+//! (when a [`DiskCache`] is attached) → compile, with compiled results
+//! written back to disk; see the `cache` module docs for the flow.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::cache::poclbin;
+use crate::cache::{fnv128, CacheKey, DiskCache, SpecKey};
 use crate::cl::context::Buffer;
 use crate::cl::error::{Error, Result};
 use crate::ir::Module;
 use crate::kcc::{compile_workgroup, CompileOptions, WorkGroupFunction};
 
-/// A built program: the IR module plus the per-local-size cache of
-/// specialised work-group functions.
+/// Specialisation-cache counters for one program (the §4.1 integration
+/// tests and `run --stats` report these).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProgramCacheStats {
+    /// Lookups served from the in-process map.
+    pub memory_hits: usize,
+    /// Lookups served by decoding a persistent `poclbin` entry.
+    pub disk_hits: usize,
+    /// Lookups that ran `compile_workgroup` (including entries that came
+    /// pre-populated from neither source).
+    pub misses: usize,
+}
+
+impl ProgramCacheStats {
+    /// All lookups that avoided a compile.
+    pub fn hits(&self) -> usize {
+        self.memory_hits + self.disk_hits
+    }
+}
+
+/// The cache map plus its counters behind one lock, so hit/miss counts
+/// can never drift from the map contents.
+struct ProgState {
+    specs: HashMap<SpecKey, Arc<WorkGroupFunction>>,
+    stats: ProgramCacheStats,
+}
+
+/// A built program: the IR module plus the specialisation cache of
+/// work-group functions (in-memory always; persistent when a
+/// [`DiskCache`] is attached).
 pub struct Program {
     /// Frontend output (single-work-item kernels).
     pub module: Module,
-    cache: Mutex<HashMap<(String, [usize; 3], bool), Arc<WorkGroupFunction>>>,
-    /// Cache statistics (tested by the §4.1 integration test).
-    pub cache_hits: Mutex<usize>,
-    /// Cache misses = actual compilations.
-    pub cache_misses: Mutex<usize>,
+    /// Digest of the source text (stable across processes; binary-built
+    /// programs inherit it from their
+    /// [`ProgramBinary`](crate::cache::poclbin::ProgramBinary)).
+    source_hash: u128,
+    /// Optional persistent kernel-binary cache (read-through/write-back).
+    disk: Option<Arc<DiskCache>>,
+    state: Mutex<ProgState>,
 }
 
 impl Program {
-    /// Build from MiniCL source (the `clBuildProgram` moment).
+    /// Build from MiniCL source (the `clBuildProgram` moment), without a
+    /// persistent cache: every specialisation is compiled at most once
+    /// per program object.
     pub fn build(source: &str) -> Result<Program> {
+        Program::build_cached(source, None)
+    }
+
+    /// Build from MiniCL source with an optional persistent cache.
+    /// Specialisation lookups then read through to `disk` and compiled
+    /// results are written back, so a later process (or a later program
+    /// object) skips `compile_workgroup` entirely.
+    pub fn build_cached(source: &str, disk: Option<Arc<DiskCache>>) -> Result<Program> {
         let module = crate::frontend::compile(source)?;
         Ok(Program {
             module,
-            cache: Mutex::new(HashMap::new()),
-            cache_hits: Mutex::new(0),
-            cache_misses: Mutex::new(0),
+            source_hash: fnv128(source.as_bytes()),
+            disk,
+            state: Mutex::new(ProgState {
+                specs: HashMap::new(),
+                stats: ProgramCacheStats::default(),
+            }),
         })
+    }
+
+    /// Reconstruct a program from [`Program::binaries`] output — the
+    /// `clCreateProgramWithBinary` analog. No frontend work happens: the
+    /// module and every embedded specialisation are decoded directly,
+    /// and the embedded specialisations are served as memory hits.
+    pub fn from_binary(bytes: &[u8]) -> Result<Program> {
+        Program::from_binary_cached(bytes, None)
+    }
+
+    /// [`Program::from_binary`] with a persistent cache attached; the
+    /// source digest stored in the binary keeps disk keys identical to
+    /// the source-built program's.
+    pub fn from_binary_cached(bytes: &[u8], disk: Option<Arc<DiskCache>>) -> Result<Program> {
+        let bin = poclbin::decode_program(bytes)?;
+        let specs: HashMap<SpecKey, Arc<WorkGroupFunction>> =
+            bin.entries.into_iter().map(|(k, w)| (k, Arc::new(w))).collect();
+        Ok(Program {
+            module: bin.module,
+            source_hash: bin.source_hash,
+            disk,
+            state: Mutex::new(ProgState { specs, stats: ProgramCacheStats::default() }),
+        })
+    }
+
+    /// Export the program as a `poclbin` program binary: the IR module
+    /// plus every specialisation cached so far (the
+    /// `clGetProgramInfo(CL_PROGRAM_BINARIES)` analog). Feeding the
+    /// bytes to [`Program::from_binary`] yields a program that performs
+    /// zero compiles for the exported specialisations.
+    pub fn binaries(&self) -> Vec<u8> {
+        let state = self.state.lock().unwrap();
+        let mut entries: Vec<(&SpecKey, &WorkGroupFunction)> =
+            state.specs.iter().map(|(k, w)| (k, &**w)).collect();
+        // Deterministic export order (HashMap iteration is not). SpecKey's
+        // full Ord covers options too, so two entries sharing kernel and
+        // local size still export in a stable order.
+        entries.sort_by(|a, b| a.0.cmp(b.0));
+        poclbin::encode_program_parts(self.source_hash, &self.module, &entries)
     }
 
     /// Kernel names available in this program.
@@ -39,28 +130,75 @@ impl Program {
         self.module.kernels.iter().map(|k| k.name.clone()).collect()
     }
 
+    /// Cache counters so far.
+    pub fn cache_stats(&self) -> ProgramCacheStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// Digest of the program source (on-disk cache key component).
+    pub fn source_hash(&self) -> u128 {
+        self.source_hash
+    }
+
+    /// Snapshot of the cached specialisations, sorted by kernel name and
+    /// local size (deterministic for reporting).
+    pub fn cached_specializations(&self) -> Vec<(SpecKey, Arc<WorkGroupFunction>)> {
+        let state = self.state.lock().unwrap();
+        let mut out: Vec<(SpecKey, Arc<WorkGroupFunction>)> =
+            state.specs.iter().map(|(k, w)| (k.clone(), w.clone())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
     /// Get (or compile) the work-group function for a kernel at a local
     /// size — "the work-group function generation is performed at kernel
-    /// enqueue time, when the local size is known" (§4.1). One function is
-    /// generated per local size; re-enqueues hit the cache.
+    /// enqueue time, when the local size is known" (§4.1). One function
+    /// is generated per (local size, compile options); re-enqueues hit
+    /// the in-memory map, fresh processes hit the persistent cache.
     pub fn workgroup_function(
         &self,
         kernel: &str,
         local: [usize; 3],
         opts: &CompileOptions,
     ) -> Result<Arc<WorkGroupFunction>> {
-        let key = (kernel.to_string(), local, opts.horizontal && !opts.spmd);
-        if let Some(w) = self.cache.lock().unwrap().get(&key) {
-            *self.cache_hits.lock().unwrap() += 1;
-            return Ok(w.clone());
+        let spec = SpecKey { kernel: kernel.to_string(), local, opts: opts.clone() };
+        // One lock covers lookup, compile, and insert: counters stay
+        // exact and concurrent enqueues never compile the same
+        // specialisation twice.
+        let mut state = self.state.lock().unwrap();
+        if let Some(w) = state.specs.get(&spec) {
+            let w = w.clone();
+            state.stats.memory_hits += 1;
+            return Ok(w);
+        }
+        if let Some(disk) = &self.disk {
+            let key = CacheKey::for_spec(self.source_hash, &spec);
+            if let Some(wgf) = disk.load(key) {
+                // Belt and braces against key collisions or shuffled
+                // files: a served entry must actually be this kernel at
+                // this local size, else fall through and recompile.
+                if wgf.name == spec.kernel && wgf.local_size == spec.local {
+                    let wgf = Arc::new(wgf);
+                    state.stats.disk_hits += 1;
+                    state.specs.insert(spec, wgf.clone());
+                    return Ok(wgf);
+                }
+            }
         }
         let k = self
             .module
             .kernel(kernel)
             .ok_or_else(|| Error::NotFound(format!("kernel `{kernel}`")))?;
         let wgf = Arc::new(compile_workgroup(k, local, opts)?);
-        *self.cache_misses.lock().unwrap() += 1;
-        self.cache.lock().unwrap().insert(key, wgf.clone());
+        state.stats.misses += 1;
+        state.specs.insert(spec.clone(), wgf.clone());
+        drop(state);
+        // Write-back outside the lock; persistence is best-effort (a
+        // full disk must not fail the enqueue).
+        if let Some(disk) = &self.disk {
+            let key = CacheKey::for_spec(self.source_hash, &spec);
+            let _ = disk.store(key, &wgf);
+        }
         Ok(wgf)
     }
 }
@@ -121,6 +259,7 @@ impl Kernel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kcc::TargetKind;
 
     const SRC: &str = "__kernel void k(__global float *x, uint n) { x[get_global_id(0)] = (float)n; }";
 
@@ -138,8 +277,60 @@ mod tests {
         let _ = p.workgroup_function("k", [8, 1, 1], &opts).unwrap();
         let _ = p.workgroup_function("k", [8, 1, 1], &opts).unwrap();
         let _ = p.workgroup_function("k", [16, 1, 1], &opts).unwrap();
-        assert_eq!(*p.cache_misses.lock().unwrap(), 2, "one compile per local size");
-        assert_eq!(*p.cache_hits.lock().unwrap(), 1);
+        let s = p.cache_stats();
+        assert_eq!(s.misses, 2, "one compile per local size");
+        assert_eq!(s.memory_hits, 1);
+        assert_eq!(s.disk_hits, 0, "no persistent cache attached");
+    }
+
+    #[test]
+    fn full_options_split_cache_entries() {
+        // The stale-cache regression: the old key was
+        // (kernel, local, horizontal && !spmd), so options differing in
+        // any other field shared one entry. Every field must split now.
+        let p = Program::build(SRC).unwrap();
+        let base = CompileOptions::default();
+        let variants = [
+            CompileOptions { horizontal: false, ..base.clone() },
+            CompileOptions { work_dim: 2, ..base.clone() },
+            CompileOptions { spmd: true, ..base.clone() },
+            CompileOptions { target: TargetKind::Tta, ..base.clone() },
+            CompileOptions { gang_width: 8, ..base.clone() },
+        ];
+        let _ = p.workgroup_function("k", [8, 1, 1], &base).unwrap();
+        for v in &variants {
+            let _ = p.workgroup_function("k", [8, 1, 1], v).unwrap();
+        }
+        let s = p.cache_stats();
+        assert_eq!(s.misses, 1 + variants.len(), "every option variant compiles separately");
+        assert_eq!(s.memory_hits, 0);
+        // Re-querying any variant hits.
+        let _ = p.workgroup_function("k", [8, 1, 1], &variants[3]).unwrap();
+        assert_eq!(p.cache_stats().memory_hits, 1);
+    }
+
+    #[test]
+    fn binaries_roundtrip_without_recompiling() {
+        let p = Program::build(SRC).unwrap();
+        let opts = CompileOptions::default();
+        let _ = p.workgroup_function("k", [8, 1, 1], &opts).unwrap();
+        let _ = p.workgroup_function("k", [16, 1, 1], &opts).unwrap();
+        let bytes = p.binaries();
+
+        let q = Program::from_binary(&bytes).unwrap();
+        assert_eq!(q.kernel_names(), vec!["k"]);
+        assert_eq!(q.source_hash(), p.source_hash());
+        let w = q.workgroup_function("k", [8, 1, 1], &opts).unwrap();
+        assert_eq!(w.local_size, [8, 1, 1]);
+        let _ = q.workgroup_function("k", [16, 1, 1], &opts).unwrap();
+        let s = q.cache_stats();
+        assert_eq!(s.misses, 0, "embedded specialisations: zero compiles");
+        assert_eq!(s.memory_hits, 2);
+        // A *new* local size still compiles from the embedded module.
+        let _ = q.workgroup_function("k", [32, 1, 1], &opts).unwrap();
+        assert_eq!(q.cache_stats().misses, 1);
+        // Garbage input is rejected, not misinterpreted.
+        assert!(matches!(Program::from_binary(b"junk"), Err(Error::BadBinary(_))));
     }
 
     #[test]

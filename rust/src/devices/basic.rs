@@ -2,6 +2,7 @@
 //! one work-group at a time.
 
 use crate::cl::error::Result;
+use crate::kcc::CompileOptions;
 
 use super::{Device, DeviceInfo, EngineKind, LaunchRequest, LaunchStats};
 
@@ -41,6 +42,10 @@ impl Device for BasicDevice {
             global_mem: self.global_mem,
             local_mem: self.local_mem,
         }
+    }
+
+    fn compile_options(&self) -> CompileOptions {
+        super::cpu_compile_options(self.engine)
     }
 
     fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {

@@ -19,7 +19,7 @@ use std::sync::Arc;
 
 use crate::cl::error::Result;
 use crate::exec::{LaunchCtx, VVal};
-use crate::kcc::{CompileOptions, WorkGroupFunction};
+use crate::kcc::{CompileOptions, TargetKind, WorkGroupFunction};
 
 /// Which work-group execution engine a CPU-style device uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,6 +57,19 @@ pub fn native_gang_width() -> usize {
         }
     }
     4
+}
+
+/// Compile options for a CPU device running `engine`: the CPU target
+/// class plus the engine's gang width. Both are cache-key components
+/// (see `cache::key`), so a width-8 gang device and a serial device
+/// keep separate persistent-cache entries even though today's engines
+/// consume the same compiled forms.
+pub fn cpu_compile_options(engine: EngineKind) -> CompileOptions {
+    let gang_width = match engine {
+        EngineKind::Gang(w) | EngineKind::GangVector(w) => w,
+        EngineKind::Serial | EngineKind::Fiber => 0,
+    };
+    CompileOptions { target: TargetKind::Cpu, gang_width, ..Default::default() }
 }
 
 /// Table 1-style device description.

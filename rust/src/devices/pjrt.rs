@@ -153,7 +153,11 @@ impl Device for PjrtDevice {
     }
 
     fn compile_options(&self) -> crate::kcc::CompileOptions {
-        crate::kcc::CompileOptions { spmd: true, ..Default::default() }
+        crate::kcc::CompileOptions {
+            spmd: true,
+            target: crate::kcc::TargetKind::Spmd,
+            ..Default::default()
+        }
     }
 
     fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {

@@ -8,6 +8,7 @@
 //! racy kernels are UB per the OpenCL spec, exactly like on real devices.
 
 use crate::cl::error::{Error, Result};
+use crate::kcc::CompileOptions;
 
 use super::{Device, DeviceInfo, EngineKind, LaunchRequest, LaunchStats};
 
@@ -60,6 +61,10 @@ impl Device for ThreadedDevice {
             global_mem: self.global_mem,
             local_mem: self.local_mem,
         }
+    }
+
+    fn compile_options(&self) -> CompileOptions {
+        super::cpu_compile_options(self.engine)
     }
 
     fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {

@@ -268,7 +268,11 @@ impl TtaSimDevice {
     pub fn new(horizontal: bool) -> TtaSimDevice {
         TtaSimDevice {
             config: TtaConfig::default(),
-            opts: crate::kcc::CompileOptions { horizontal, ..Default::default() },
+            opts: crate::kcc::CompileOptions {
+                horizontal,
+                target: crate::kcc::TargetKind::Tta,
+                ..Default::default()
+            },
         }
     }
 

@@ -114,6 +114,23 @@ impl Function {
         }
     }
 
+    /// Rebuild a function from its serialized parts (`cache::poclbin`
+    /// deserialization). `reg_count` restores the fresh-register
+    /// high-water mark so engines size their frames correctly and later
+    /// `fresh_reg` calls never collide with deserialized registers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_raw_parts(
+        name: String,
+        params: Vec<Param>,
+        blocks: Vec<Block>,
+        entry: BlockId,
+        slots: Vec<AllocaInfo>,
+        reg_count: u32,
+        wi_loops: Vec<WiLoopMeta>,
+    ) -> Function {
+        Function { name, params, blocks, entry, slots, next_reg: reg_count, wi_loops }
+    }
+
     /// Access a block.
     pub fn block(&self, id: BlockId) -> &Block {
         &self.blocks[id.0 as usize]

@@ -28,5 +28,5 @@ pub mod taildup;
 pub mod uniformity;
 pub mod wiloops;
 
-pub use passes::{compile_workgroup, CompileOptions, CompileStats, WorkGroupFunction};
+pub use passes::{compile_workgroup, CompileOptions, CompileStats, TargetKind, WorkGroupFunction};
 pub use regions::Region;

@@ -30,8 +30,26 @@ use super::taildup;
 use super::uniformity;
 use super::wiloops;
 
+/// Coarse device-class tag carried in [`CompileOptions`] so compiled
+/// artifacts are keyed per device kind (pocl's on-disk kernel cache
+/// likewise folds the target device into its build hash). Artifacts
+/// compiled for one class are never served to another.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TargetKind {
+    /// CPU interpreter devices (`basic`/`pthread`, any engine).
+    Cpu,
+    /// Static multi-issue TTA simulator (`ttasim`).
+    Tta,
+    /// SPMD offload devices (`pjrt`) — work-items execute device-side.
+    Spmd,
+}
+
 /// Compilation options (per-device knobs).
-#[derive(Debug, Clone)]
+///
+/// The struct derives `Hash`/`Eq` and is hashed **in full** into every
+/// specialisation-cache key (in-memory and on-disk): two devices that
+/// disagree on *any* knob can never share a compiled artifact.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CompileOptions {
     /// Enable horizontal inner-loop parallelisation (§4.6). The §6.4 TTA
     /// experiment toggles this.
@@ -42,11 +60,23 @@ pub struct CompileOptions {
     /// region formation runs; `loop_fn` equals the single-WI kernel with
     /// barriers stripped. Used when the device executes work-items itself.
     pub spmd: bool,
+    /// Device class requesting the compile (cache-key component).
+    pub target: TargetKind,
+    /// SIMD gang width of the requesting engine, 0 when not ganged
+    /// (cache-key component: a width-8 artifact slot is distinct from a
+    /// width-4 one even though today's engines consume the same forms).
+    pub gang_width: usize,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { horizontal: true, work_dim: 1, spmd: false }
+        CompileOptions {
+            horizontal: true,
+            work_dim: 1,
+            spmd: false,
+            target: TargetKind::Cpu,
+            gang_width: 0,
+        }
     }
 }
 

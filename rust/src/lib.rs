@@ -26,6 +26,10 @@
 //!   (SPMD-style offload of AOT-compiled Pallas/XLA kernels).
 //! * [`runtime`] — the PJRT client wrapper used by the `pjrt` device to
 //!   load and execute `artifacts/*.hlo.txt` produced by `python/compile`.
+//! * [`cache`] — the persistent kernel-binary cache (the
+//!   `POCL_CACHE_DIR` analog): the `poclbin` serialization format plus a
+//!   content-addressed on-disk store, so built kernels survive the
+//!   process and warm starts skip the kernel compiler entirely.
 //! * [`bufalloc`] — the chunked first-fit buffer allocator of §3.
 //! * [`vecmath`] — the Vecmathlib port of §5: vectorised elementary
 //!   functions over software-SIMD `RealVec` types.
@@ -37,6 +41,7 @@
 
 pub mod bench;
 pub mod bufalloc;
+pub mod cache;
 pub mod cl;
 pub mod devices;
 pub mod exec;

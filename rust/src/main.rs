@@ -1,22 +1,34 @@
-//! pocl-rs CLI: device discovery, kernel compilation inspection, and
-//! suite runs.
+//! pocl-rs CLI: device discovery, kernel compilation inspection, suite
+//! runs, and persistent kernel-cache management.
 //!
 //! ```text
 //! poclrs devices                      # Table 1 capability table
 //! poclrs run <App> [device] [--stats] # run + verify one suite app
 //! poclrs compile <file.cl> [LX]       # show compile stats + IR for a kernel
 //! poclrs suite [device]               # run + verify the whole suite
+//! poclrs cache ls                     # list persistent kernel-cache entries
+//! poclrs cache stats                  # cache directory, size, hit counters
+//! poclrs cache clear                  # drop every cached kernel binary
 //! ```
 //!
-//! `--stats` prints the uniformity/divergence compile counters and the
+//! `--stats` prints the uniformity/divergence compile counters, the
+//! specialisation-cache counters (memory/disk hits vs compiles), and the
 //! engine dispatch counters (gangs, diverged, vectorised/uniform/per-lane
 //! instruction dispatches) for the run.
+//!
+//! Environment: `POCLRS_CACHE_DIR` relocates the persistent kernel
+//! cache (default `~/.cache/poclrs`), `POCLRS_CACHE_MAX_BYTES` caps its
+//! size (default 256 MiB), and `POCLRS_CACHE=0` disables it.
 
 use std::sync::Arc;
 
+use poclrs::cache;
 use poclrs::cl::Platform;
 use poclrs::kcc::{compile_workgroup, CompileOptions};
 use poclrs::suite::{all_apps, app_by_name, runner, SizeClass};
+
+const USAGE: &str =
+    "usage: poclrs devices | run <App> [device] [--stats] | suite [device] | compile <file.cl> [LX] | cache ls|stats|clear";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -46,21 +58,35 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 r.stats.workgroups, r.kernel_time
             );
             if want_stats {
-                // Compile-side counters: one line per kernel launch pass,
-                // at the pass's enqueue-time local size.
-                let module = poclrs::frontend::compile(app.source)?;
-                let opts = device.compile_options();
-                for pass in &app.passes {
-                    let Some(k) = module.kernel(pass.kernel) else { continue };
-                    let wgf = compile_workgroup(k, pass.local, &opts)?;
+                // Compile-side counters come straight from the run's
+                // program cache — the exact work-group functions the
+                // launches used, with zero re-compilation.
+                for (spec, wgf) in r.program.cached_specializations() {
                     println!(
                         "compile `{}` @ {:?}: regions={} uniform slots={} uniform regs={} divergent regions={}",
-                        pass.kernel,
-                        pass.local,
+                        spec.kernel,
+                        spec.local,
                         wgf.stats.regions,
                         wgf.stats.uniform_slots,
                         wgf.stats.uniform_regs,
                         wgf.stats.divergent_regions,
+                    );
+                }
+                let c = r.program.cache_stats();
+                println!(
+                    "cache: memory-hits={} disk-hits={} compiles={}",
+                    c.memory_hits, c.disk_hits, c.misses
+                );
+                if let Some(disk) = cache::default_cache() {
+                    let s = disk.stats();
+                    println!(
+                        "cache disk [{}]: hits={} misses={} read={}B written={}B evictions={}",
+                        disk.dir().display(),
+                        s.hits,
+                        s.misses,
+                        s.bytes_read,
+                        s.bytes_written,
+                        s.evictions,
                     );
                 }
                 // Engine-side counters for the whole run.
@@ -100,8 +126,47 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 println!("--- WI-loop form ---\n{}", poclrs::ir::print::print_function(&wgf.loop_fn));
             }
         }
+        Some("cache") => {
+            let sub = args.get(1).map(|s| s.as_str()).unwrap_or("stats");
+            let disk = cache::DiskCache::at(cache::DiskCache::default_dir())?;
+            match sub {
+                "ls" => {
+                    let entries = disk.entries()?;
+                    if entries.is_empty() {
+                        println!("cache [{}] is empty", disk.dir().display());
+                    } else {
+                        println!("cache [{}]: {} entries", disk.dir().display(), entries.len());
+                        for e in &entries {
+                            let what = match (&e.kernel, e.local_size) {
+                                (Some(k), Some(l)) => format!("kernel `{k}` @ {l:?}"),
+                                _ => "unreadable (stale format or corrupt)".to_string(),
+                            };
+                            println!("  {}  {:>8} B  {}", e.key, e.bytes, what);
+                        }
+                    }
+                }
+                "clear" => {
+                    let n = disk.clear()?;
+                    println!("removed {n} entries from {}", disk.dir().display());
+                }
+                "stats" => {
+                    let entries = disk.entries()?;
+                    let total: u64 = entries.iter().map(|e| e.bytes).sum();
+                    println!(
+                        "dir:     {}\nentries: {}\nbytes:   {total} (cap {})\nformat:  poclbin v{}",
+                        disk.dir().display(),
+                        entries.len(),
+                        disk.max_bytes(),
+                        cache::POCLBIN_VERSION,
+                    );
+                }
+                other => {
+                    eprintln!("unknown cache subcommand `{other}`\n{USAGE}");
+                }
+            }
+        }
         _ => {
-            eprintln!("usage: poclrs devices | run <App> [device] | suite [device] | compile <file.cl> [LX]");
+            eprintln!("{USAGE}");
         }
     }
     Ok(())

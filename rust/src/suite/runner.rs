@@ -26,6 +26,10 @@ pub struct RunResult {
     pub kernel_time: Duration,
     /// Aggregate device stats.
     pub stats: LaunchStats,
+    /// The program the run built — callers report its specialisation
+    /// cache counters and compiled-kernel stats from here instead of
+    /// recompiling anything.
+    pub program: Program,
 }
 
 /// Run all passes of `app` once on `device` (out-of-order queue: uploads
@@ -35,14 +39,29 @@ pub fn run_on_device(app: &App, device: Arc<dyn Device>) -> Result<RunResult> {
 }
 
 /// Run all passes of `app` once on `device` with an explicit queue mode.
+/// The program reads through the process-default persistent kernel
+/// cache (see `cache::default_cache`), so repeat runs of a suite app —
+/// in this process or a later one — skip the kernel compiler.
 pub fn run_on_device_with_queue(
     app: &App,
     device: Arc<dyn Device>,
     props: QueueProperties,
 ) -> Result<RunResult> {
+    let program = Program::build_cached(app.source, crate::cache::default_cache())?;
+    run_with_program(app, device, props, program)
+}
+
+/// Run all passes of `app` through an explicit pre-built `program`
+/// (e.g. one reconstructed via `Program::from_binary`), returning it in
+/// the result.
+pub fn run_with_program(
+    app: &App,
+    device: Arc<dyn Device>,
+    props: QueueProperties,
+    program: Program,
+) -> Result<RunResult> {
     let ctx = Arc::new(Context::new(device));
     let queue = CommandQueue::with_properties(ctx.clone(), props);
-    let program = Program::build(app.source)?;
 
     // Create buffers and enqueue all uploads, dependency-free: they can
     // overlap with each other and with any pass that doesn't touch them.
@@ -112,7 +131,7 @@ pub fn run_on_device_with_queue(
         kernel_time += Duration::from_nanos(ev.duration_ns() as u64);
     }
     queue.finish()?;
-    Ok(RunResult { buffers: out, kernel_time, stats })
+    Ok(RunResult { buffers: out, kernel_time, stats, program })
 }
 
 /// Time the native baseline.

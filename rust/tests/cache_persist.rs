@@ -1,0 +1,167 @@
+//! Persistent kernel-binary cache integration tests: the `poclbin`
+//! round-trip property over the whole suite, execution equivalence of
+//! deserialized work-group functions on the serial/gang/vecgang engines,
+//! and the warm-start acceptance criterion (a fresh `Program` against a
+//! warm on-disk cache performs **zero** `compile_workgroup` calls).
+//!
+//! Every test uses its own temp directory — nothing here touches the
+//! user-level default cache.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use poclrs::cache::{poclbin, DiskCache};
+use poclrs::cl::{Program, QueueProperties};
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::ir::print::print_function;
+use poclrs::kcc::{compile_workgroup, CompileOptions};
+use poclrs::suite::runner::RunResult;
+use poclrs::suite::{all_apps, app_by_name, runner, App, BufInit, SizeClass};
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("poclrs-cache-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Run `app` on `device` through an explicit program, in-order.
+fn run(app: &App, device: &Arc<dyn Device>, program: Program) -> RunResult {
+    runner::run_with_program(app, device.clone(), QueueProperties::InOrder, program).unwrap()
+}
+
+fn assert_bit_identical(a: &[BufInit], b: &[BufInit], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: buffer count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (BufInit::F32(u), BufInit::F32(v)) => {
+                assert_eq!(u.len(), v.len(), "{what}: buffer {i} length");
+                for (j, (p, q)) in u.iter().zip(v).enumerate() {
+                    assert_eq!(
+                        p.to_bits(),
+                        q.to_bits(),
+                        "{what}: buffer {i}[{j}] {p} vs {q} not bit-identical"
+                    );
+                }
+            }
+            (BufInit::U32(u), BufInit::U32(v)) => assert_eq!(u, v, "{what}: buffer {i}"),
+            _ => panic!("{what}: buffer {i} type mismatch"),
+        }
+    }
+}
+
+/// Property: `poclbin` round-trips every suite app's module and every
+/// pass's compiled work-group function, byte-for-byte deterministic and
+/// identical under `ir::print`.
+#[test]
+fn poclbin_roundtrips_every_suite_app() {
+    for app in all_apps(SizeClass::Small) {
+        let module = poclrs::frontend::compile(app.source).unwrap();
+        let bytes = poclbin::encode_module(&module);
+        assert_eq!(bytes, poclbin::encode_module(&module), "{}: deterministic", app.name);
+        let back = poclbin::decode_module(&bytes).unwrap();
+        assert_eq!(module.kernels.len(), back.kernels.len(), "{}", app.name);
+        for (a, b) in module.kernels.iter().zip(&back.kernels) {
+            assert_eq!(print_function(a), print_function(b), "{}: module kernel", app.name);
+            assert_eq!(a.reg_count(), b.reg_count(), "{}: reg high-water mark", app.name);
+        }
+        for pass in &app.passes {
+            let k = module.kernel(pass.kernel).unwrap();
+            let wgf = compile_workgroup(k, pass.local, &CompileOptions::default()).unwrap();
+            let decoded = poclbin::decode_wgf(&poclbin::encode_wgf(&wgf)).unwrap();
+            let ctx = format!("{}::{} @ {:?}", app.name, pass.kernel, pass.local);
+            assert_eq!(print_function(&wgf.reg_fn), print_function(&decoded.reg_fn), "{ctx}");
+            assert_eq!(print_function(&wgf.loop_fn), print_function(&decoded.loop_fn), "{ctx}");
+            assert_eq!(wgf.local_size, decoded.local_size, "{ctx}");
+            assert_eq!(wgf.reg_uniform, decoded.reg_uniform, "{ctx}");
+            assert_eq!(wgf.region_divergent, decoded.region_divergent, "{ctx}");
+            assert_eq!(wgf.regions.len(), decoded.regions.len(), "{ctx}");
+            assert_eq!(format!("{:?}", wgf.stats), format!("{:?}", decoded.stats), "{ctx}");
+        }
+    }
+}
+
+/// Deserialized work-group functions must execute bit-identically to the
+/// in-memory build on every CPU engine class (serial WI loops, per-lane
+/// gang, lane-batched vector gang).
+#[test]
+fn deserialized_programs_execute_bit_identically() {
+    let engines = [EngineKind::Serial, EngineKind::Gang(4), EngineKind::GangVector(4)];
+    for app in all_apps(SizeClass::Small) {
+        for engine in engines {
+            let device: Arc<dyn Device> = Arc::new(BasicDevice::new(engine));
+            let what = format!("{} on {:?}", app.name, engine);
+
+            // In-memory build + run.
+            let p1 = Program::build(app.source).unwrap();
+            let r1 = run(&app, &device, p1);
+            runner::verify(&app, &r1.buffers).unwrap();
+
+            // Serialize program + specialisations, rebuild, rerun.
+            let bytes = r1.program.binaries();
+            let p2 = Program::from_binary(&bytes).unwrap();
+            let r2 = run(&app, &device, p2);
+            let s2 = r2.program.cache_stats();
+            assert_eq!(s2.misses, 0, "{what}: binary-built program must not compile");
+            assert!(s2.memory_hits > 0, "{what}: embedded entries must be used");
+            assert_bit_identical(&r1.buffers, &r2.buffers, &what);
+        }
+    }
+}
+
+/// Acceptance criterion: a fresh `Program` built from the same source
+/// against a warm on-disk cache performs zero `compile_workgroup` calls,
+/// across single-pass, multi-pass, and barrier-heavy apps.
+#[test]
+fn warm_disk_cache_compiles_nothing() {
+    let dir = tmpdir("warm");
+    let device: Arc<dyn Device> = Arc::new(BasicDevice::new(EngineKind::Serial));
+    for name in ["DCT", "BitonicSort", "Reduction"] {
+        let app = app_by_name(name, SizeClass::Small).unwrap();
+
+        // Cold process: empty cache, everything compiles + writes back.
+        let disk1 = Arc::new(DiskCache::at(&dir).unwrap());
+        let p1 = Program::build_cached(app.source, Some(disk1.clone())).unwrap();
+        let r1 = run(&app, &device, p1);
+        let s1 = r1.program.cache_stats();
+        assert!(s1.misses > 0, "{name}: cold start compiles");
+        assert_eq!(s1.disk_hits, 0, "{name}: cold cache has nothing to offer");
+        assert_eq!(disk1.stats().writes as usize, s1.misses, "{name}: every compile written back");
+
+        // Warm "process": fresh Program, fresh DiskCache handle, same dir.
+        let disk2 = Arc::new(DiskCache::at(&dir).unwrap());
+        let p2 = Program::build_cached(app.source, Some(disk2.clone())).unwrap();
+        let r2 = run(&app, &device, p2);
+        let s2 = r2.program.cache_stats();
+        assert_eq!(s2.misses, 0, "{name}: warm start performs ZERO compile_workgroup calls");
+        assert_eq!(s2.disk_hits as u64, disk2.stats().hits, "{name}: warm lookups hit disk");
+        assert!(s2.disk_hits > 0, "{name}: disk served the specialisations");
+        assert_bit_identical(&r1.buffers, &r2.buffers, name);
+        runner::verify(&app, &r2.buffers).unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Options that differ in any field address different disk entries: a
+/// gang-width-8 device never reads a serial device's artifact.
+#[test]
+fn disk_entries_are_split_by_device_options() {
+    let dir = tmpdir("split");
+    let app = app_by_name("SimpleConvolution", SizeClass::Small).unwrap();
+    let serial: Arc<dyn Device> = Arc::new(BasicDevice::new(EngineKind::Serial));
+    let vec8: Arc<dyn Device> = Arc::new(BasicDevice::new(EngineKind::GangVector(8)));
+
+    let disk = Arc::new(DiskCache::at(&dir).unwrap());
+    let p1 = Program::build_cached(app.source, Some(disk.clone())).unwrap();
+    let r1 = run(&app, &serial, p1);
+    let compiled_serial = r1.program.cache_stats().misses;
+    assert!(compiled_serial > 0);
+
+    // Same source, different device class → different keys → fresh compiles.
+    let p2 = Program::build_cached(app.source, Some(disk.clone())).unwrap();
+    let r2 = run(&app, &vec8, p2);
+    let s2 = r2.program.cache_stats();
+    assert_eq!(s2.disk_hits, 0, "gang-width-8 options must not hit serial entries");
+    assert_eq!(s2.misses, compiled_serial, "same kernels compile afresh for the new options");
+    let _ = std::fs::remove_dir_all(&dir);
+}

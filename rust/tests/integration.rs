@@ -25,8 +25,10 @@ fn specialization_cache_shared_across_enqueues() {
     q.enqueue_nd_range(&program, &k, [64, 1, 1], [32, 1, 1], &[]).unwrap();
     // Work-group functions are specialised at *enqueue* time (§4.1), so
     // the cache counters are exact before the queue even flushes.
-    assert_eq!(*program.cache_misses.lock().unwrap(), 2, "two local sizes → two compiles");
-    assert_eq!(*program.cache_hits.lock().unwrap(), 4);
+    let s = program.cache_stats();
+    assert_eq!(s.misses, 2, "two local sizes → two compiles");
+    assert_eq!(s.memory_hits, 4);
+    assert_eq!(s.disk_hits, 0, "no persistent cache attached to Program::build");
     q.finish().unwrap();
     let out = ctx.read_f32(buf, 64).unwrap();
     assert!(out.iter().all(|&v| v == 6.0));
