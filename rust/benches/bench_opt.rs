@@ -1,0 +1,117 @@
+//! Optimizer impact — O0 vs O2 per suite app per engine, emitting a
+//! `BENCH_opt.json` snapshot (the ISSUE 6 criterion: O2 cuts interpreter
+//! dispatches by ≥20% on at least half the suite apps, and the dispatch
+//! reduction shows up as wall-clock on every engine).
+//!
+//! Run with `cargo bench --bench bench_opt`; `POCLRS_BENCH_MS` bounds the
+//! per-case sampling budget (default 300 ms).
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Duration;
+
+use poclrs::bench::{bench_fn, BenchResult};
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind, LaunchStats};
+use poclrs::kcc::OptLevel;
+use poclrs::suite::{all_apps, runner, SizeClass};
+
+const WIDTH: usize = 8;
+
+/// One (level, timing, launch counters) measurement cell.
+type Cell = (OptLevel, BenchResult, LaunchStats);
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("POCLRS_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(300),
+    );
+    let engines: Vec<(&str, EngineKind)> = vec![
+        ("serial", EngineKind::Serial),
+        ("gang-scalar8", EngineKind::Gang(WIDTH)),
+        ("gang-vector8", EngineKind::GangVector(WIDTH)),
+    ];
+
+    println!("== Optimizer impact: O0 vs O2, per app, per engine (width {WIDTH}) ==\n");
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"opt\",\n  \"width\": {WIDTH},\n  \"apps\": [");
+    let mut first_app = true;
+    for app in all_apps(SizeClass::Bench) {
+        let name = app.name;
+        let mut rows: Vec<(&str, Cell, Cell)> = Vec::new();
+        for (label, engine) in &engines {
+            let mut cells: Vec<Cell> = Vec::new();
+            for level in [OptLevel::O0, OptLevel::O2] {
+                // Pin the level on the device (not via POCLRS_OPT) so the
+                // two runs are isolated and their cache keys distinct.
+                let device: Arc<dyn Device> =
+                    Arc::new(BasicDevice::with_opt_level(*engine, level));
+                match runner::run_and_verify(&app, device.clone()) {
+                    Ok(r) => {
+                        let bench = bench_fn(
+                            format!("{name}/{label}/O{}", level.as_u32()),
+                            1,
+                            15,
+                            budget,
+                            || {
+                                let _ = runner::run_on_device(&app, device.clone()).unwrap();
+                            },
+                        );
+                        cells.push((level, bench, r.stats));
+                    }
+                    Err(e) => println!("{name:<22} {label} O{}: FAILED {e}", level.as_u32()),
+                }
+            }
+            if let [o0, o2] = cells.as_slice() {
+                rows.push((*label, o0.clone(), o2.clone()));
+            }
+        }
+        if rows.is_empty() {
+            continue;
+        }
+        let cells: Vec<String> = rows
+            .iter()
+            .map(|(l, o0, o2)| {
+                let disp0 = o0.2.dispatches().max(1);
+                format!(
+                    "{l}: {:.2}ms -> {:.2}ms ({:.2}x, dispatches -{:.0}%)",
+                    o0.1.ms(),
+                    o2.1.ms(),
+                    o0.1.ms() / o2.1.ms(),
+                    100.0 * (1.0 - o2.2.dispatches() as f64 / disp0 as f64),
+                )
+            })
+            .collect();
+        println!("{name:<22} {}", cells.join("  "));
+
+        if !first_app {
+            let _ = writeln!(json, ",");
+        }
+        first_app = false;
+        let _ = write!(json, "    {{\"name\": \"{name}\", \"engines\": [");
+        for (i, (label, o0, o2)) in rows.iter().enumerate() {
+            if i > 0 {
+                let _ = write!(json, ", ");
+            }
+            let _ = write!(
+                json,
+                "{{\"engine\": \"{label}\", \
+                 \"o0\": {{\"ms\": {:.4}, \"dispatches\": {}}}, \
+                 \"o2\": {{\"ms\": {:.4}, \"dispatches\": {}}}, \
+                 \"dispatch_reduction\": {:.4}}}",
+                o0.1.ms(),
+                o0.2.dispatches(),
+                o2.1.ms(),
+                o2.2.dispatches(),
+                1.0 - o2.2.dispatches() as f64 / o0.2.dispatches().max(1) as f64,
+            );
+        }
+        let _ = write!(json, "]}}");
+    }
+    let _ = writeln!(json, "\n  ]\n}}");
+    match std::fs::write("BENCH_opt.json", &json) {
+        Ok(()) => println!("\nsnapshot written to BENCH_opt.json"),
+        Err(e) => println!("\ncould not write BENCH_opt.json: {e}"),
+    }
+    println!(
+        "(expectation: dispatches drop >=20% on at least half the apps —\n the tests/opt_verify.rs acceptance criterion — and O2 never loses)"
+    );
+}

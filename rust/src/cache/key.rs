@@ -128,6 +128,7 @@ impl CacheKey {
             TargetKind::Spmd => 2,
         });
         h.write_u64(o.gang_width as u64);
+        h.write_u64(o.opt_level.as_u32() as u64);
         CacheKey(h.finish())
     }
 
@@ -183,12 +184,19 @@ mod tests {
             CacheKey::for_spec(src, &spec("k", [8, 1, 1], CompileOptions::default()))
         );
         // Each key component flips the digest.
+        // Pick an opt level that differs from the (env-derived) default.
+        let other_level = if CompileOptions::default().opt_level == crate::kcc::OptLevel::O0 {
+            crate::kcc::OptLevel::O2
+        } else {
+            crate::kcc::OptLevel::O0
+        };
         let variants = [
             CompileOptions { horizontal: false, ..Default::default() },
             CompileOptions { work_dim: 2, ..Default::default() },
             CompileOptions { spmd: true, ..Default::default() },
             CompileOptions { target: TargetKind::Tta, ..Default::default() },
             CompileOptions { gang_width: 8, ..Default::default() },
+            CompileOptions { opt_level: other_level, ..Default::default() },
         ];
         for v in variants {
             assert_ne!(base, CacheKey::for_spec(src, &spec("k", [8, 1, 1], v)));

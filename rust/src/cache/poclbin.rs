@@ -39,7 +39,9 @@ use crate::ir::{
     AddrSpace, AllocaInfo, BarrierKind, BinOp, Block, BlockId, Function, Imm, Inst, MathFn,
     Module, Operand, Param, Reg, Scalar, SlotId, Term, Type, UnOp, WiFn, WiLoopMeta,
 };
-use crate::kcc::{CompileOptions, CompileStats, Region, TargetKind, WorkGroupFunction};
+use crate::kcc::{
+    CompileOptions, CompileStats, OptLevel, OptStats, Region, TargetKind, WorkGroupFunction,
+};
 
 use super::key::{fnv128, SpecKey};
 
@@ -47,7 +49,8 @@ use super::key::{fnv128, SpecKey};
 pub const POCLBIN_MAGIC: [u8; 8] = *b"POCLBIN\0";
 /// Format version. Bump on any encoding change: old files then decode as
 /// [`Error::BadBinary`] and cache lookups fall back to a clean recompile.
-pub const POCLBIN_VERSION: u32 = 1;
+/// v2: `CompileOptions::opt_level` + `CompileStats::opt` (optimizer).
+pub const POCLBIN_VERSION: u32 = 2;
 
 /// Envelope size in bytes (magic + version + kind + length + digest).
 pub const HEADER_LEN: usize = 8 + 4 + 1 + 8 + 16;
@@ -203,6 +206,7 @@ tag_enum!(AddrSpace { Global = 0, Local = 1, Constant = 2, Private = 3 });
 tag_enum!(UnOp { Neg = 0, Not = 1, LNot = 2 });
 tag_enum!(BarrierKind { Explicit = 0, Implicit = 1 });
 tag_enum!(TargetKind { Cpu = 0, Tta = 1, Spmd = 2 });
+tag_enum!(OptLevel { O0 = 0, O1 = 1, O2 = 2 });
 tag_enum!(BinOp {
     Add = 0, Sub = 1, Mul = 2, Div = 3, Rem = 4, And = 5, Or = 6, Xor = 7,
     Shl = 8, Shr = 9, Eq = 10, Ne = 11, Lt = 12, Le = 13, Gt = 14, Ge = 15,
@@ -719,6 +723,7 @@ impl Codec for CompileStats {
         self.peeled_barriers.put(w);
         self.uniform_regs.put(w);
         self.divergent_regions.put(w);
+        self.opt.put(w);
     }
     fn get(r: &mut R) -> Result<Self> {
         Ok(CompileStats {
@@ -733,6 +738,40 @@ impl Codec for CompileStats {
             peeled_barriers: usize::get(r)?,
             uniform_regs: usize::get(r)?,
             divergent_regions: usize::get(r)?,
+            opt: OptStats::get(r)?,
+        })
+    }
+}
+
+impl Codec for OptStats {
+    fn put(&self, w: &mut W) {
+        self.insts_before.put(w);
+        self.insts_after.put(w);
+        self.blocks_before.put(w);
+        self.blocks_after.put(w);
+        self.iterations.put(w);
+        self.cfg_simplified.put(w);
+        self.folded.put(w);
+        self.algebraic.put(w);
+        self.propagated.put(w);
+        self.cse_hits.put(w);
+        self.loads_forwarded.put(w);
+        self.dce_removed.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(OptStats {
+            insts_before: usize::get(r)?,
+            insts_after: usize::get(r)?,
+            blocks_before: usize::get(r)?,
+            blocks_after: usize::get(r)?,
+            iterations: usize::get(r)?,
+            cfg_simplified: usize::get(r)?,
+            folded: usize::get(r)?,
+            algebraic: usize::get(r)?,
+            propagated: usize::get(r)?,
+            cse_hits: usize::get(r)?,
+            loads_forwarded: usize::get(r)?,
+            dce_removed: usize::get(r)?,
         })
     }
 }
@@ -744,6 +783,7 @@ impl Codec for CompileOptions {
         w.bool(self.spmd);
         self.target.put(w);
         self.gang_width.put(w);
+        self.opt_level.put(w);
     }
     fn get(r: &mut R) -> Result<Self> {
         Ok(CompileOptions {
@@ -752,6 +792,7 @@ impl Codec for CompileOptions {
             spmd: r.bool()?,
             target: TargetKind::get(r)?,
             gang_width: usize::get(r)?,
+            opt_level: OptLevel::get(r)?,
         })
     }
 }

@@ -296,6 +296,14 @@ mod tests {
             CompileOptions { spmd: true, ..base.clone() },
             CompileOptions { target: TargetKind::Tta, ..base.clone() },
             CompileOptions { gang_width: 8, ..base.clone() },
+            CompileOptions {
+                opt_level: if base.opt_level == crate::kcc::OptLevel::O0 {
+                    crate::kcc::OptLevel::O2
+                } else {
+                    crate::kcc::OptLevel::O0
+                },
+                ..base.clone()
+            },
         ];
         let _ = p.workgroup_function("k", [8, 1, 1], &base).unwrap();
         for v in &variants {

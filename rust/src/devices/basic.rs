@@ -2,7 +2,7 @@
 //! one work-group at a time.
 
 use crate::cl::error::Result;
-use crate::kcc::CompileOptions;
+use crate::kcc::{CompileOptions, OptLevel};
 
 use super::{Device, DeviceInfo, EngineKind, LaunchRequest, LaunchStats};
 
@@ -14,12 +14,21 @@ pub struct BasicDevice {
     pub global_mem: usize,
     /// Local memory per work-group.
     pub local_mem: usize,
+    /// Optimizer level override. `None` follows the process default
+    /// (`POCLRS_OPT` / O2); tests use `Some` to pin a level without
+    /// racing on environment variables.
+    pub opt_level: Option<OptLevel>,
 }
 
 impl BasicDevice {
     /// Default basic device: serial engine, 256 MiB global, 64 KiB local.
     pub fn new(engine: EngineKind) -> BasicDevice {
-        BasicDevice { engine, global_mem: 256 << 20, local_mem: 64 << 10 }
+        BasicDevice { engine, global_mem: 256 << 20, local_mem: 64 << 10, opt_level: None }
+    }
+
+    /// Basic device pinned to a specific optimizer level.
+    pub fn with_opt_level(engine: EngineKind, level: OptLevel) -> BasicDevice {
+        BasicDevice { opt_level: Some(level), ..BasicDevice::new(engine) }
     }
 }
 
@@ -45,7 +54,11 @@ impl Device for BasicDevice {
     }
 
     fn compile_options(&self) -> CompileOptions {
-        super::cpu_compile_options(self.engine)
+        let mut opts = super::cpu_compile_options(self.engine);
+        if let Some(level) = self.opt_level {
+            opts.opt_level = level;
+        }
+        opts
     }
 
     fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {

@@ -76,6 +76,7 @@ impl Device for ThreadedDevice {
                 engine: self.engine,
                 global_mem: self.global_mem,
                 local_mem: self.local_mem,
+                opt_level: None,
             };
             return basic.launch(global, req);
         }

@@ -21,6 +21,7 @@
 pub mod barriers;
 pub mod bloops;
 pub mod horizontal;
+pub mod opt;
 pub mod passes;
 pub mod privatize;
 pub mod regions;
@@ -28,5 +29,6 @@ pub mod taildup;
 pub mod uniformity;
 pub mod wiloops;
 
+pub use opt::{OptLevel, OptStats};
 pub use passes::{compile_workgroup, CompileOptions, CompileStats, TargetKind, WorkGroupFunction};
 pub use regions::Region;

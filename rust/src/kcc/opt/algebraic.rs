@@ -1,0 +1,355 @@
+//! Algebraic simplification and strength reduction — integer types only.
+//!
+//! Float "identities" (`x+0.0`, `x*1.0`) are deliberately never
+//! rewritten: they are not bit-exact under IEEE semantics (`-0.0 + 0.0`,
+//! NaN payloads), and bit-identical O0/O2 results are an acceptance
+//! criterion of this optimizer.
+//!
+//! Integer identities need one extra proof: the interpreter normalises
+//! both operands to the instruction's scalar type before operating, so
+//! replacing `x + 0` with `x` is only exact when `x`'s runtime value is
+//! already normalised to that type. That holds when `x` is defined by a
+//! normalising instruction (`Bin`/`Un`/`Cast`/`Math` normalise their
+//! outputs; `Wi` produces a u64) of the same scalar type, or is an
+//! immediate of that type — private loads return raw cells and are
+//! excluded.
+//!
+//! Strength reductions (`x * 2^k → x << k`, unsigned `x / 2^k → x >> k`,
+//! unsigned `x % 2^k → x & (2^k-1)`) rewrite the instruction in place;
+//! the wrapping/normalising semantics of both forms coincide.
+
+use std::collections::HashMap;
+
+use crate::exec::value::norm_int;
+use crate::ir::func::Function;
+use crate::ir::inst::{BinOp, Imm, Inst, Operand};
+use crate::ir::types::{Scalar, Type};
+
+use super::{normalized_result, Subst};
+
+/// Run algebraic simplification over every block. Returns the number of
+/// operand rewrites plus in-place strength reductions.
+pub fn run(f: &mut Function) -> usize {
+    let mut changed = 0;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let block = f.block_mut(bb);
+        let mut env = Subst::new();
+        // Registers whose runtime value is provably normalised, with
+        // their (scalar) result type.
+        let mut normed: HashMap<u32, Type> = HashMap::new();
+        for (def, inst) in block.insts.iter_mut() {
+            changed += env.apply(inst);
+            if inst.is_barrier() {
+                env.flush_regs();
+                continue;
+            }
+            if let Some(d) = def {
+                if let Some(rewrite) = simplify(inst, &normed) {
+                    match rewrite {
+                        Rewrite::Value(op) => env.set(*d, op),
+                        Rewrite::Inst(new) => {
+                            *inst = new;
+                            changed += 1;
+                        }
+                    }
+                }
+                if let Some(ty) = normalized_result(inst) {
+                    normed.insert(d.0, ty);
+                }
+            }
+        }
+        changed += env.apply_term(&mut block.term);
+    }
+    changed
+}
+
+enum Rewrite {
+    /// The defined register equals this operand (identity / annihilator).
+    Value(Operand),
+    /// Replace the instruction with a cheaper equivalent.
+    Inst(Inst),
+}
+
+/// The normalised integer constant an operand denotes, if it is an
+/// integer immediate.
+fn int_const(op: &Operand, s: Scalar) -> Option<i64> {
+    match op {
+        Operand::Imm(Imm::Int(v, si)) => Some(norm_int(norm_int(*v, *si), s)),
+        _ => None,
+    }
+}
+
+/// True when substituting `op` for a result of scalar type `s` is exact:
+/// the operand's runtime value is already normalised to `s`.
+fn matches_ty(op: &Operand, s: Scalar, normed: &HashMap<u32, Type>) -> bool {
+    let want = Type::Scalar(s);
+    match op {
+        Operand::Reg(r) => normed.get(&r.0) == Some(&want),
+        Operand::Imm(i) => i.ty() == want,
+        // Arguments are bound by the launcher and loads return raw
+        // cells; neither is provably normalised.
+        Operand::Arg(_) | Operand::Slot(_) => false,
+    }
+}
+
+/// Try to simplify one scalar integer `Bin`.
+fn simplify(inst: &Inst, normed: &HashMap<u32, Type>) -> Option<Rewrite> {
+    let Inst::Bin { op, ty, a, b } = inst else { return None };
+    if ty.lanes() != 1 {
+        return None;
+    }
+    let s = ty.elem_scalar()?;
+    if !s.is_int() {
+        return None;
+    }
+    let ca = int_const(a, s);
+    let cb = int_const(b, s);
+    let zero = || Rewrite::Value(Operand::Imm(Imm::Int(0, s)));
+    let ident = |x: &Operand| matches_ty(x, s, normed).then(|| Rewrite::Value(*x));
+    let same_reg = matches!((a, b), (Operand::Reg(x), Operand::Reg(y)) if x == y);
+    let all_ones = norm_int(-1, s);
+    match op {
+        BinOp::Add => {
+            if cb == Some(0) {
+                return ident(a);
+            }
+            if ca == Some(0) {
+                return ident(b);
+            }
+        }
+        BinOp::Sub => {
+            if same_reg && s != Scalar::Bool {
+                return Some(zero());
+            }
+            if cb == Some(0) {
+                return ident(a);
+            }
+        }
+        BinOp::Mul => {
+            if ca == Some(0) || cb == Some(0) {
+                return Some(zero());
+            }
+            if cb == Some(1) {
+                return ident(a);
+            }
+            if ca == Some(1) {
+                return ident(b);
+            }
+            if s != Scalar::Bool {
+                if let Some(k) = power_of_two(cb) {
+                    return Some(shl(ty, a, k, s));
+                }
+                if let Some(k) = power_of_two(ca) {
+                    return Some(shl(ty, b, k, s));
+                }
+            }
+        }
+        BinOp::Div => {
+            if cb == Some(1) {
+                return ident(a);
+            }
+            if matches!(s, Scalar::U32 | Scalar::U64) {
+                if let Some(k) = power_of_two(cb) {
+                    return Some(Rewrite::Inst(Inst::Bin {
+                        op: BinOp::Shr,
+                        ty: ty.clone(),
+                        a: *a,
+                        b: Operand::Imm(Imm::Int(k, s)),
+                    }));
+                }
+            }
+        }
+        BinOp::Rem => {
+            if matches!(s, Scalar::U32 | Scalar::U64) {
+                if let Some(c) = cb {
+                    if power_of_two(cb).is_some() {
+                        return Some(Rewrite::Inst(Inst::Bin {
+                            op: BinOp::And,
+                            ty: ty.clone(),
+                            a: *a,
+                            b: Operand::Imm(Imm::Int(c - 1, s)),
+                        }));
+                    }
+                }
+            }
+        }
+        BinOp::And => {
+            if ca == Some(0) || cb == Some(0) {
+                return Some(zero());
+            }
+            if cb == Some(all_ones) {
+                return ident(a);
+            }
+            if ca == Some(all_ones) {
+                return ident(b);
+            }
+        }
+        BinOp::Or => {
+            if cb == Some(0) {
+                return ident(a);
+            }
+            if ca == Some(0) {
+                return ident(b);
+            }
+        }
+        BinOp::Xor => {
+            if same_reg {
+                return Some(zero());
+            }
+            if cb == Some(0) {
+                return ident(a);
+            }
+            if ca == Some(0) {
+                return ident(b);
+            }
+        }
+        BinOp::Shl | BinOp::Shr => {
+            if cb == Some(0) {
+                return ident(a);
+            }
+        }
+        BinOp::LAnd => {
+            if ca == Some(0) || cb == Some(0) {
+                return Some(zero());
+            }
+        }
+        BinOp::LOr => {
+            if ca.map(|c| c != 0).unwrap_or(false) || cb.map(|c| c != 0).unwrap_or(false) {
+                return Some(Rewrite::Value(Operand::Imm(Imm::Int(1, Scalar::Bool))));
+            }
+        }
+        _ => {}
+    }
+    None
+}
+
+/// `log2(c)` when the constant is a power of two ≥ 2 that fits the
+/// shift-equivalence argument (positive as i64, exponent < 63).
+fn power_of_two(c: Option<i64>) -> Option<i64> {
+    let c = c?;
+    if c >= 2 && (c as u64).is_power_of_two() {
+        Some((c as u64).trailing_zeros() as i64)
+    } else {
+        None
+    }
+}
+
+fn shl(ty: &Type, a: &Operand, k: i64, s: Scalar) -> Rewrite {
+    Rewrite::Inst(Inst::Bin {
+        op: BinOp::Shl,
+        ty: ty.clone(),
+        a: *a,
+        b: Operand::Imm(Imm::Int(k, s)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verify::verify;
+
+    fn bin(op: BinOp, a: Operand, b: Operand) -> Inst {
+        Inst::Bin { op, ty: Type::I32, a, b }
+    }
+
+    #[test]
+    fn mul_by_zero_annihilates() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let x = f.push_val(e, bin(BinOp::Add, Operand::Arg(0), Operand::ci32(1)));
+        f.params.push(crate::ir::func::Param {
+            name: "n".into(),
+            ty: Type::I32,
+            is_local_buf: false,
+            auto_local_size: None,
+        });
+        let m = f.push_val(e, bin(BinOp::Mul, Operand::Reg(x), Operand::ci32(0)));
+        f.push(e, bin(BinOp::Add, Operand::Reg(m), Operand::ci32(5)));
+        assert_eq!(run(&mut f), 1);
+        match f.block(e).insts[2].1 {
+            Inst::Bin { a: Operand::Imm(Imm::Int(0, _)), .. } => {}
+            ref other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn add_zero_identity_requires_normalized_source() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::I32, 1);
+        let e = f.entry;
+        // A load is NOT a normalised source: no identity rewrite.
+        let l = f.push_val(e, Inst::Load { ty: Type::I32, ptr: Operand::Slot(s) });
+        let a1 = f.push_val(e, bin(BinOp::Add, Operand::Reg(l), Operand::ci32(0)));
+        // A Bin IS: identity fires on the second one.
+        let a2 = f.push_val(e, bin(BinOp::Add, Operand::Reg(a1), Operand::ci32(0)));
+        f.push(e, bin(BinOp::Mul, Operand::Reg(a2), Operand::ci32(3)));
+        assert_eq!(run(&mut f), 1, "only the normalised add is propagated");
+        match f.block(e).insts[3].1 {
+            Inst::Bin { a: Operand::Reg(r), .. } => assert_eq!(r, a1),
+            ref other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn mul_by_power_of_two_becomes_shift() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::U32, 1);
+        let e = f.entry;
+        let l = f.push_val(e, Inst::Load { ty: Type::U32, ptr: Operand::Slot(s) });
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Mul, ty: Type::U32, a: Operand::Reg(l), b: Operand::cu32(8) },
+        );
+        assert_eq!(run(&mut f), 1);
+        match f.block(e).insts[1].1 {
+            Inst::Bin { op: BinOp::Shl, b: Operand::Imm(Imm::Int(3, _)), .. } => {}
+            ref other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn unsigned_div_rem_strength_reduce() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::U32, 1);
+        let e = f.entry;
+        let l = f.push_val(e, Inst::Load { ty: Type::U32, ptr: Operand::Slot(s) });
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Div, ty: Type::U32, a: Operand::Reg(l), b: Operand::cu32(16) },
+        );
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Rem, ty: Type::U32, a: Operand::Reg(l), b: Operand::cu32(16) },
+        );
+        assert_eq!(run(&mut f), 2);
+        assert!(matches!(f.block(e).insts[1].1, Inst::Bin { op: BinOp::Shr, .. }));
+        match f.block(e).insts[2].1 {
+            Inst::Bin { op: BinOp::And, b: Operand::Imm(Imm::Int(15, _)), .. } => {}
+            ref other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn float_identities_are_left_alone() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let x = f.push_val(
+            e,
+            Inst::Bin {
+                op: BinOp::Add,
+                ty: Type::F32,
+                a: Operand::cf32(1.0),
+                b: Operand::cf32(2.0),
+            },
+        );
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::F32, a: Operand::Reg(x), b: Operand::cf32(0.0) },
+        );
+        assert_eq!(run(&mut f), 0);
+    }
+}

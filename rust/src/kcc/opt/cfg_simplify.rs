@@ -1,0 +1,237 @@
+//! CFG simplification: branch folding, jump threading through empty
+//! blocks, single-predecessor block merging, and unreachable-block
+//! removal.
+//!
+//! Runs before region formation, where blocks are referenced only by
+//! terminators and the entry id, so removing and renumbering blocks is
+//! safe. Block merging is the biggest enabler for the block-local passes
+//! (`cse`, `loadfwd`): the frontend splits every `&&`/`||` and `if` into
+//! tiny blocks, and merging them back gives the forward scans real scope.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::cfg::reachable;
+use crate::ir::func::{Block, Function};
+use crate::ir::inst::{BlockId, Operand, Term};
+
+use super::imm_truthy;
+
+/// Run one round of CFG simplification. Returns the number of edits.
+pub fn run(f: &mut Function) -> usize {
+    let mut changed = 0;
+    changed += fold_branches(f);
+    changed += thread_jumps(f);
+    changed += merge_blocks(f);
+    changed += drop_unreachable(f);
+    changed
+}
+
+/// Turn constant-condition and same-target branches into jumps.
+fn fold_branches(f: &mut Function) -> usize {
+    let mut n = 0;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let term = f.block(bb).term.clone();
+        if let Term::Br { cond, t, f: fb } = term {
+            if t == fb {
+                f.set_term(bb, Term::Jump(t));
+                n += 1;
+            } else if let Operand::Imm(imm) = cond {
+                let target = if imm_truthy(&imm) { t } else { fb };
+                f.set_term(bb, Term::Jump(target));
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Final destination of a chain of empty forwarding blocks starting at
+/// `b` (a block with no instructions whose terminator is a plain jump).
+/// Cycles of empty blocks (degenerate infinite loops) stop the walk.
+fn forward_target(f: &Function, b: BlockId) -> BlockId {
+    let mut cur = b;
+    let mut seen = HashSet::new();
+    loop {
+        if !seen.insert(cur) {
+            return cur;
+        }
+        match (&f.block(cur).insts[..], &f.block(cur).term) {
+            ([], Term::Jump(t)) if *t != cur => cur = *t,
+            _ => return cur,
+        }
+    }
+}
+
+/// Redirect edges that point at empty forwarding blocks straight to
+/// their final destination.
+fn thread_jumps(f: &mut Function) -> usize {
+    let targets: HashMap<BlockId, BlockId> =
+        f.block_ids().map(|b| (b, forward_target(f, b))).collect();
+    let mut n = 0;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let mut term = f.block(bb).term.clone();
+        let mut edits = 0;
+        term.map_succs(|s| {
+            let t = targets[&s];
+            if t != s {
+                edits += 1;
+            }
+            t
+        });
+        if edits > 0 {
+            f.set_term(bb, term);
+            n += edits;
+        }
+    }
+    let new_entry = targets[&f.entry];
+    if new_entry != f.entry {
+        f.entry = new_entry;
+        n += 1;
+    }
+    n
+}
+
+/// Merge blocks with a unique jump-predecessor into that predecessor.
+/// The merged block's registers move together with their block-local
+/// uses, so no register invariant is disturbed; the husk left behind is
+/// unreachable and removed by [`drop_unreachable`].
+fn merge_blocks(f: &mut Function) -> usize {
+    let mut n = 0;
+    loop {
+        let live: HashSet<BlockId> = reachable(f).into_iter().collect();
+        let preds = f.preds();
+        let mut merged = false;
+        for a in f.block_ids().collect::<Vec<_>>() {
+            if !live.contains(&a) {
+                continue;
+            }
+            let b = match f.block(a).term {
+                Term::Jump(b) => b,
+                _ => continue,
+            };
+            if b == a || b == f.entry {
+                continue;
+            }
+            let live_preds: Vec<BlockId> = preds[b.0 as usize]
+                .iter()
+                .copied()
+                .filter(|p| live.contains(p))
+                .collect();
+            if live_preds != [a] {
+                continue;
+            }
+            // Move b's body and terminator into a, leaving b an
+            // unreachable empty husk.
+            let husk = Block { name: f.block(b).name.clone(), insts: Vec::new(), term: Term::Ret };
+            let body = std::mem::replace(f.block_mut(b), husk);
+            let ablock = f.block_mut(a);
+            ablock.insts.extend(body.insts);
+            ablock.term = body.term;
+            n += 1;
+            merged = true;
+            break; // preds changed; recompute.
+        }
+        if !merged {
+            return n;
+        }
+    }
+}
+
+/// Remove unreachable blocks entirely, compacting ids. Safe before
+/// region formation: only terminators and `entry` (and, defensively,
+/// `wi_loops`) reference block ids.
+fn drop_unreachable(f: &mut Function) -> usize {
+    let live = reachable(f);
+    if live.len() == f.blocks.len() {
+        return 0;
+    }
+    let keep: HashSet<BlockId> = live.iter().copied().collect();
+    let mut remap: HashMap<BlockId, BlockId> = HashMap::new();
+    let mut next = 0u32;
+    for b in f.block_ids() {
+        if keep.contains(&b) {
+            remap.insert(b, BlockId(next));
+            next += 1;
+        }
+    }
+    let removed = f.blocks.len() - remap.len();
+    let mut blocks = Vec::with_capacity(remap.len());
+    for (i, blk) in std::mem::take(&mut f.blocks).into_iter().enumerate() {
+        if keep.contains(&BlockId(i as u32)) {
+            blocks.push(blk);
+        }
+    }
+    for blk in &mut blocks {
+        blk.term.map_succs(|s| remap[&s]);
+    }
+    f.blocks = blocks;
+    f.entry = remap[&f.entry];
+    // wi_loops is empty at this pipeline stage; remap defensively anyway.
+    f.wi_loops.retain(|w| remap.contains_key(&w.header) && remap.contains_key(&w.latch));
+    for w in &mut f.wi_loops {
+        w.header = remap[&w.header];
+        w.latch = remap[&w.latch];
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::{BinOp, Inst};
+    use crate::ir::types::Type;
+    use crate::ir::verify::verify;
+
+    fn add(a: Operand, b: Operand) -> Inst {
+        Inst::Bin { op: BinOp::Add, ty: Type::I32, a, b }
+    }
+
+    #[test]
+    fn constant_branch_folds_and_dead_block_drops() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let t = f.add_block("t");
+        let x = f.add_block("x");
+        f.push(t, add(Operand::ci32(1), Operand::ci32(2)));
+        f.set_term(e, Term::Br { cond: Operand::cbool(true), t, f: x });
+        f.set_term(t, Term::Ret);
+        let n = run(&mut f);
+        assert!(n >= 2, "branch fold + unreachable removal, got {n}");
+        verify(&f).unwrap();
+        // Entry merged with t (single pred), x removed.
+        assert_eq!(f.blocks.len(), 1);
+        assert_eq!(f.block(f.entry).insts.len(), 1);
+    }
+
+    #[test]
+    fn empty_block_is_threaded_away() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let mid = f.add_block("mid");
+        let end = f.add_block("end");
+        f.push(e, add(Operand::ci32(1), Operand::ci32(2)));
+        f.push(end, add(Operand::ci32(3), Operand::ci32(4)));
+        f.set_term(e, Term::Jump(mid));
+        f.set_term(mid, Term::Jump(end));
+        f.set_term(end, Term::Ret);
+        run(&mut f);
+        verify(&f).unwrap();
+        assert_eq!(f.blocks.len(), 1, "everything merges into entry");
+        assert_eq!(f.block(f.entry).insts.len(), 2);
+    }
+
+    #[test]
+    fn self_loop_survives() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let l = f.add_block("loop");
+        f.set_term(e, Term::Jump(l));
+        f.set_term(l, Term::Jump(l));
+        run(&mut f);
+        verify(&f).unwrap();
+        // The loop must still loop.
+        let le = f.entry;
+        let succs = f.succs(le);
+        assert!(!succs.is_empty());
+    }
+}

@@ -1,0 +1,164 @@
+//! Block-local common-subexpression elimination.
+//!
+//! Pure instructions (arithmetic, casts, GEPs, work-item queries, math
+//! builtins, vector shuffles — everything except loads, stores, barriers
+//! and markers) are keyed structurally; a repeated computation is
+//! replaced by the first definition's register. The value table and any
+//! register-valued substitutions are discarded at barriers, so no value
+//! is reused across a barrier boundary.
+//!
+//! Floating-point immediates are keyed by **bit pattern** (`-0.0` and
+//! `0.0` stay distinct, NaNs compare by payload), which makes reuse
+//! trivially bit-exact: only syntactically identical computations merge.
+
+use std::collections::HashMap;
+
+use crate::ir::func::Function;
+use crate::ir::inst::{BinOp, Imm, Inst, MathFn, Operand, Reg, UnOp, WiFn};
+use crate::ir::types::{Scalar, Type};
+
+use super::Subst;
+
+/// Hashable mirror of [`Operand`] (floats by bit pattern).
+#[derive(PartialEq, Eq, Hash, Clone)]
+enum KOp {
+    R(u32),
+    I(i64, Scalar),
+    F(u64, Scalar),
+    A(u32),
+    S(u32),
+}
+
+fn kop(op: &Operand) -> KOp {
+    match op {
+        Operand::Reg(r) => KOp::R(r.0),
+        Operand::Imm(Imm::Int(v, s)) => KOp::I(*v, *s),
+        Operand::Imm(Imm::Float(v, s)) => KOp::F(v.to_bits(), *s),
+        Operand::Arg(a) => KOp::A(*a),
+        Operand::Slot(s) => KOp::S(s.0),
+    }
+}
+
+/// Structural key of a pure instruction.
+#[derive(PartialEq, Eq, Hash, Clone)]
+enum Key {
+    Bin(BinOp, Type, KOp, KOp),
+    Un(UnOp, Type, KOp),
+    Cast(Type, Type, KOp),
+    Gep(Type, KOp, KOp),
+    Wi(WiFn, u32),
+    Math(MathFn, Type, Vec<KOp>),
+    Select(Type, KOp, KOp, KOp),
+    VecBuild(Type, Vec<KOp>),
+    VecExtract(Type, KOp, u32),
+    VecInsert(Type, KOp, u32, KOp),
+    Splat(Type, KOp),
+}
+
+/// Key of `inst` if it is pure (side-effect free and
+/// deterministic within one work-item invocation), else `None`.
+fn key_of(inst: &Inst) -> Option<Key> {
+    Some(match inst {
+        Inst::Bin { op, ty, a, b } => Key::Bin(*op, ty.clone(), kop(a), kop(b)),
+        Inst::Un { op, ty, a } => Key::Un(*op, ty.clone(), kop(a)),
+        Inst::Cast { to, from, a } => Key::Cast(to.clone(), from.clone(), kop(a)),
+        Inst::Gep { elem, base, idx } => Key::Gep(elem.clone(), kop(base), kop(idx)),
+        Inst::Wi { func, dim } => Key::Wi(*func, *dim),
+        Inst::Math { func, ty, args } => {
+            Key::Math(*func, ty.clone(), args.iter().map(kop).collect())
+        }
+        Inst::Select { ty, cond, a, b } => Key::Select(ty.clone(), kop(cond), kop(a), kop(b)),
+        Inst::VecBuild { ty, elems } => Key::VecBuild(ty.clone(), elems.iter().map(kop).collect()),
+        Inst::VecExtract { elem, a, lane } => Key::VecExtract(elem.clone(), kop(a), *lane),
+        Inst::VecInsert { ty, a, lane, v } => Key::VecInsert(ty.clone(), kop(a), *lane, kop(v)),
+        Inst::Splat { ty, a } => Key::Splat(ty.clone(), kop(a)),
+        Inst::Load { .. } | Inst::Store { .. } | Inst::Barrier { .. } | Inst::Marker { .. } => {
+            return None
+        }
+    })
+}
+
+/// Run CSE over every block. Returns operand rewrites.
+pub fn run(f: &mut Function) -> usize {
+    let mut changed = 0;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let block = f.block_mut(bb);
+        let mut table: HashMap<Key, Reg> = HashMap::new();
+        let mut env = Subst::new();
+        for (def, inst) in block.insts.iter_mut() {
+            changed += env.apply(inst);
+            if inst.is_barrier() {
+                table.clear();
+                env.flush_regs();
+                continue;
+            }
+            let Some(d) = def else { continue };
+            let Some(key) = key_of(inst) else { continue };
+            match table.get(&key) {
+                Some(prev) => env.set(*d, Operand::Reg(*prev)),
+                None => {
+                    table.insert(key, *d);
+                }
+            }
+        }
+        changed += env.apply_term(&mut block.term);
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::BarrierKind;
+    use crate::ir::verify::verify;
+
+    fn add(a: Operand, b: Operand) -> Inst {
+        Inst::Bin { op: BinOp::Add, ty: Type::I32, a, b }
+    }
+
+    #[test]
+    fn duplicate_expression_is_reused() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let r1 = f.push_val(e, add(Operand::Arg(0), Operand::ci32(4)));
+        let r2 = f.push_val(e, add(Operand::Arg(0), Operand::ci32(4)));
+        f.params.push(crate::ir::func::Param {
+            name: "n".into(),
+            ty: Type::I32,
+            is_local_buf: false,
+            auto_local_size: None,
+        });
+        f.push(e, add(Operand::Reg(r1), Operand::Reg(r2)));
+        assert_eq!(run(&mut f), 1, "second use rewritten to the first def");
+        match f.block(e).insts[2].1 {
+            Inst::Bin { a: Operand::Reg(a), b: Operand::Reg(b), .. } => {
+                assert_eq!(a, b, "both operands point at the surviving def");
+            }
+            ref other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn barrier_clears_the_value_table() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let _r1 = f.push_val(e, add(Operand::ci32(1), Operand::ci32(2)));
+        f.push(e, Inst::Barrier { kind: BarrierKind::Explicit });
+        let r2 = f.push_val(e, add(Operand::ci32(1), Operand::ci32(2)));
+        f.push(e, add(Operand::Reg(r2), Operand::ci32(0)));
+        assert_eq!(run(&mut f), 0, "no reuse across the barrier");
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn loads_are_not_merged() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::I32, 1);
+        let e = f.entry;
+        let l1 = f.push_val(e, Inst::Load { ty: Type::I32, ptr: Operand::Slot(s) });
+        let l2 = f.push_val(e, Inst::Load { ty: Type::I32, ptr: Operand::Slot(s) });
+        f.push(e, add(Operand::Reg(l1), Operand::Reg(l2)));
+        assert_eq!(run(&mut f), 0, "memory operations are loadfwd's business");
+    }
+}

@@ -1,0 +1,152 @@
+//! Dead code elimination.
+//!
+//! The rewriting passes (`fold`, `propagate`, `cse`, `algebraic`,
+//! `loadfwd`) replace register *uses* and leave the defining
+//! instructions behind; this pass collects them. A defining instruction
+//! is removed when its register has no remaining uses in the block
+//! (registers are block-local, so a block-local use count is a global
+//! one) and the instruction is side-effect free.
+//!
+//! Side effects that keep an instruction alive:
+//!
+//! * `Store`, `Barrier`, `Marker` — never removed (they produce no
+//!   register anyway).
+//! * Integer `Div`/`Rem` with a possibly-zero divisor — division by zero
+//!   is a **runtime error** in this IR, and the optimizer preserves it.
+//!   A provably non-zero constant divisor makes the division pure.
+//!
+//! The sweep runs in reverse and decrements use counts as it deletes, so
+//! an entire dead expression chain dies in a single pass.
+
+use std::collections::HashMap;
+
+use crate::exec::value::norm_int;
+use crate::ir::func::Function;
+use crate::ir::inst::{BinOp, Imm, Inst, Operand, Term};
+
+/// Run DCE over every block. Returns the number of instructions removed.
+pub fn run(f: &mut Function) -> usize {
+    let mut removed = 0;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let block = f.block_mut(bb);
+        let mut uses: HashMap<u32, usize> = HashMap::new();
+        for (_, inst) in &block.insts {
+            for op in inst.operands() {
+                if let Operand::Reg(r) = op {
+                    *uses.entry(r.0).or_insert(0) += 1;
+                }
+            }
+        }
+        if let Term::Br { cond: Operand::Reg(r), .. } = &block.term {
+            *uses.entry(r.0).or_insert(0) += 1;
+        }
+        let mut keep = vec![true; block.insts.len()];
+        for i in (0..block.insts.len()).rev() {
+            let (def, inst) = &block.insts[i];
+            let Some(d) = def else { continue };
+            if uses.get(&d.0).copied().unwrap_or(0) > 0 || !removable(inst) {
+                continue;
+            }
+            keep[i] = false;
+            removed += 1;
+            for op in inst.operands() {
+                if let Operand::Reg(r) = op {
+                    if let Some(n) = uses.get_mut(&r.0) {
+                        *n = n.saturating_sub(1);
+                    }
+                }
+            }
+        }
+        if keep.iter().any(|k| !k) {
+            let old = std::mem::take(&mut block.insts);
+            block.insts = old
+                .into_iter()
+                .zip(keep)
+                .filter_map(|(inst, k)| k.then_some(inst))
+                .collect();
+        }
+    }
+    removed
+}
+
+/// True when deleting an unused `inst` cannot change observable
+/// behaviour (memory, barriers, or runtime errors).
+fn removable(inst: &Inst) -> bool {
+    match inst {
+        Inst::Store { .. } | Inst::Barrier { .. } | Inst::Marker { .. } => false,
+        Inst::Bin { op: BinOp::Div | BinOp::Rem, ty, b, .. }
+            if ty.elem_scalar().map(|s| s.is_int()).unwrap_or(false) =>
+        {
+            matches!(b, Operand::Imm(Imm::Int(v, s)) if norm_int(*v, *s) != 0)
+        }
+        _ => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::Type;
+    use crate::ir::verify::verify;
+
+    fn add(a: Operand, b: Operand) -> Inst {
+        Inst::Bin { op: BinOp::Add, ty: Type::I32, a, b }
+    }
+
+    #[test]
+    fn dead_chain_dies_in_one_pass() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let a = f.push_val(e, add(Operand::ci32(1), Operand::ci32(2)));
+        let b = f.push_val(e, add(Operand::Reg(a), Operand::ci32(3)));
+        let _c = f.push_val(e, add(Operand::Reg(b), Operand::ci32(4)));
+        let live = f.push_val(e, add(Operand::ci32(5), Operand::ci32(6)));
+        let s = f.add_slot("out", Type::I32, 1);
+        f.push(e, Inst::Store { ty: Type::I32, ptr: Operand::Slot(s), val: Operand::Reg(live) });
+        assert_eq!(run(&mut f), 3, "the whole unused chain goes at once");
+        assert_eq!(f.block(e).insts.len(), 2);
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn possibly_trapping_division_survives() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::I32, 1);
+        let e = f.entry;
+        let l = f.push_val(e, Inst::Load { ty: Type::I32, ptr: Operand::Slot(s) });
+        // Unknown divisor: must survive even though unused.
+        let _d1 = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Div, ty: Type::I32, a: Operand::ci32(8), b: Operand::Reg(l) },
+        );
+        // Constant zero divisor: traps, must survive.
+        let _d2 = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Rem, ty: Type::I32, a: Operand::ci32(8), b: Operand::ci32(0) },
+        );
+        // Constant non-zero divisor: pure, dies.
+        let _d3 = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Div, ty: Type::I32, a: Operand::ci32(8), b: Operand::ci32(2) },
+        );
+        // Float division never traps: dies.
+        let _d4 = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Div, ty: Type::F32, a: Operand::cf32(8.0), b: Operand::cf32(0.0) },
+        );
+        assert_eq!(run(&mut f), 2, "only the pure divisions are removed");
+        assert_eq!(f.block(e).insts.len(), 3);
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn stores_and_barriers_are_untouchable() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::I32, 1);
+        let e = f.entry;
+        f.push(e, Inst::Store { ty: Type::I32, ptr: Operand::Slot(s), val: Operand::ci32(1) });
+        f.push(e, Inst::Barrier { kind: crate::ir::inst::BarrierKind::Explicit });
+        assert_eq!(run(&mut f), 0);
+        assert_eq!(f.block(e).insts.len(), 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Constant folding.
+//!
+//! A pure scalar instruction whose operands are all immediates is
+//! evaluated at compile time **with the interpreter's own kernels**
+//! (`exec::interp::bin_scalar`/`eval_un`/`eval_cast`/`eval_math`), so the
+//! folded constant is bit-identical to what any engine would compute —
+//! including integer wrapping, unsigned comparison rules, and f32
+//! rounding through `norm_float`. Uses of the folded register are
+//! rewritten to the immediate; the defining instruction dies in `dce`.
+//!
+//! Instructions that can fail at runtime (integer division/remainder by
+//! zero) are left alone when evaluation errors, preserving the runtime
+//! error exactly.
+
+use crate::exec::interp::{bin_scalar, eval_cast, eval_math, eval_un};
+use crate::exec::value::VVal;
+use crate::ir::func::Function;
+use crate::ir::inst::{Imm, Inst, Operand};
+use crate::ir::types::Scalar;
+
+use super::{imm_val, val_to_imm, Subst};
+
+/// Run constant folding over every block. Returns operand rewrites.
+pub fn run(f: &mut Function) -> usize {
+    let mut changed = 0;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let block = f.block_mut(bb);
+        let mut env = Subst::new();
+        for (def, inst) in block.insts.iter_mut() {
+            changed += env.apply(inst);
+            if inst.is_barrier() {
+                env.flush_regs();
+                continue;
+            }
+            if let (Some(d), Some(imm)) = (def, try_fold(inst)) {
+                env.set(*d, Operand::Imm(imm));
+            }
+        }
+        changed += env.apply_term(&mut block.term);
+    }
+    changed
+}
+
+/// Immediate operand, if the operand is one.
+fn as_imm(op: &Operand) -> Option<&Imm> {
+    match op {
+        Operand::Imm(i) => Some(i),
+        _ => None,
+    }
+}
+
+/// Evaluate a pure scalar instruction with all-immediate operands.
+/// Returns `None` when the instruction is not foldable (non-scalar,
+/// non-constant operands, pointer-valued result, or runtime error).
+fn try_fold(inst: &Inst) -> Option<Imm> {
+    match inst {
+        Inst::Bin { op, ty, a, b } if ty.lanes() == 1 => {
+            let s = ty.elem_scalar()?;
+            let (ia, ib) = (as_imm(a)?, as_imm(b)?);
+            let v = bin_scalar(*op, s, imm_val(ia), imm_val(ib)).ok()?;
+            let out = if op.is_cmp() { Scalar::Bool } else { s };
+            val_to_imm(v, out)
+        }
+        Inst::Un { op, ty, a } if ty.lanes() == 1 => {
+            let s = ty.elem_scalar()?;
+            let ia = as_imm(a)?;
+            let v = eval_un(*op, ty, &VVal::S(imm_val(ia))).ok()?;
+            val_to_imm(v.scalar(), s)
+        }
+        Inst::Cast { to, from, a } if to.lanes() == 1 => {
+            let s = to.elem_scalar()?;
+            let ia = as_imm(a)?;
+            let v = eval_cast(&VVal::S(imm_val(ia)), from, to);
+            val_to_imm(v.scalar(), s)
+        }
+        Inst::Math { func, ty, args } if ty.lanes() == 1 => {
+            let s = ty.elem_scalar()?;
+            let mut vals = Vec::with_capacity(args.len());
+            for a in args {
+                vals.push(VVal::S(imm_val(as_imm(a)?)));
+            }
+            match eval_math(*func, ty, &vals).ok()? {
+                VVal::S(v) => val_to_imm(v, s),
+                VVal::V(_) => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::{BinOp, Term, UnOp};
+    use crate::ir::types::Type;
+    use crate::ir::verify::verify;
+
+    #[test]
+    fn folds_int_arith_with_wrapping() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let r = f.push_val(
+            e,
+            Inst::Bin {
+                op: BinOp::Add,
+                ty: Type::I32,
+                a: Operand::ci32(i32::MAX),
+                b: Operand::ci32(1),
+            },
+        );
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Mul, ty: Type::I32, a: Operand::Reg(r), b: Operand::ci32(1) },
+        );
+        let n = run(&mut f);
+        assert_eq!(n, 1, "one use rewritten");
+        match f.block(e).insts[1].1 {
+            Inst::Bin { a: Operand::Imm(Imm::Int(v, _)), .. } => {
+                assert_eq!(v, i32::MIN as i64, "wrapping add folded");
+            }
+            ref other => panic!("not folded: {other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn division_by_constant_zero_is_not_folded() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let r = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Div, ty: Type::I32, a: Operand::ci32(7), b: Operand::ci32(0) },
+        );
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::Reg(r), b: Operand::ci32(1) },
+        );
+        assert_eq!(run(&mut f), 0, "the trapping division must survive");
+        assert!(matches!(f.block(e).insts[1].1, Inst::Bin { a: Operand::Reg(_), .. }));
+    }
+
+    #[test]
+    fn folded_condition_reaches_the_branch() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let t = f.add_block("t");
+        let x = f.add_block("x");
+        let c = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Lt, ty: Type::I32, a: Operand::ci32(1), b: Operand::ci32(2) },
+        );
+        f.set_term(e, Term::Br { cond: Operand::Reg(c), t, f: x });
+        assert_eq!(run(&mut f), 1, "branch condition rewritten to an immediate");
+        match &f.block(e).term {
+            Term::Br { cond: Operand::Imm(Imm::Int(1, Scalar::Bool)), .. } => {}
+            other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn float_fold_rounds_through_f32() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let r = f.push_val(
+            e,
+            Inst::Un { op: UnOp::Neg, ty: Type::F32, a: Operand::cf32(1.5) },
+        );
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::F32, a: Operand::Reg(r), b: Operand::cf32(0.25) },
+        );
+        assert_eq!(run(&mut f), 1);
+        match f.block(e).insts[1].1 {
+            Inst::Bin { a: Operand::Imm(Imm::Float(v, Scalar::F32)), .. } => assert_eq!(v, -1.5),
+            ref other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! Private-memory store-to-load forwarding, redundant-load elimination,
+//! and in-block dead-store elimination.
+//!
+//! The frontend lowers every local variable to an `Alloca` slot and
+//! every read to a fresh `Load` — `c[i] = a[i] + b[i]` loads the slot
+//! holding `i` three times. This pass scans each block forward,
+//! tracking what each **private cell** provably contains.
+//!
+//! Private memory is cell-addressed: one cell holds one whole value
+//! (`interp::Machine` stores a `VVal` per cell), so a cell is identified
+//! exactly by `(slot, offset)` and two distinct cells never alias as
+//! long as GEPs stay in bounds — out-of-bounds private access is a
+//! runtime error or UB, which optimised code need not preserve
+//! byte-for-byte.
+//!
+//! Three rewrites, all block-local:
+//!
+//! * **Store-to-load forwarding** — a load from a cell whose stored value
+//!   is known becomes a use of that value. `Store` normalises the value
+//!   to the store type before writing while `Load` returns the raw cell,
+//!   so a value is only forwarded when normalisation is provably the
+//!   identity on it (see [`forwardable`]).
+//! * **Redundant-load elimination** — a second load from an unchanged
+//!   cell reuses the first load's register (always exact: both observe
+//!   the same raw cell).
+//! * **Dead-store elimination** — a store overwritten by a later store to
+//!   the *same* cell with no possibly-aliasing read in between is
+//!   deleted.
+//!
+//! Barriers discard all memory knowledge (and flush register-valued
+//! substitutions): nothing is forwarded across a barrier, and no store
+//! preceding a barrier is ever considered dead.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::exec::value::norm_int;
+use crate::ir::func::Function;
+use crate::ir::inst::{Imm, Inst, Operand};
+use crate::ir::types::{AddrSpace, Type};
+
+use super::{normalized_result, Subst};
+
+/// One private memory cell: `(slot id, cell offset from the slot base)`.
+#[derive(PartialEq, Eq, Hash, Clone, Copy)]
+struct Cell {
+    slot: u32,
+    off: i64,
+}
+
+/// What a pointer-valued operand is known to address.
+#[derive(Clone, Copy)]
+enum Ptr {
+    /// Exactly this private cell.
+    Cell(Cell),
+    /// Somewhere inside this slot (GEP with a non-constant index).
+    SlotUnknown(u32),
+    /// Provably not private memory (global/local/constant buffer).
+    NonPrivate,
+}
+
+/// Run the pass over every block. Returns operand rewrites plus dead
+/// stores removed.
+pub fn run(f: &mut Function) -> usize {
+    // Pointer-typed params with their address space, computed before the
+    // mutable block borrow.
+    let arg_space: Vec<Option<AddrSpace>> = f
+        .params
+        .iter()
+        .map(|p| match &p.ty {
+            Type::Ptr(_, sp) => Some(*sp),
+            _ => None,
+        })
+        .collect();
+    let mut changed = 0;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let block = f.block_mut(bb);
+        let mut env = Subst::new();
+        // Register → pointer knowledge (from Slot operands and GEPs).
+        let mut ptrs: HashMap<u32, Ptr> = HashMap::new();
+        // Cell → operand its current content equals.
+        let mut vals: HashMap<Cell, Operand> = HashMap::new();
+        // Cell → index of the last store to it, not yet read: a DSE
+        // candidate if overwritten before any possibly-aliasing read.
+        let mut pending: HashMap<Cell, usize> = HashMap::new();
+        let mut dead: HashSet<usize> = HashSet::new();
+        // Registers with provably-normalised values (for forwarding).
+        let mut normed: HashMap<u32, Type> = HashMap::new();
+        let resolve = |op: &Operand, ptrs: &HashMap<u32, Ptr>| -> Option<Ptr> {
+            match op {
+                Operand::Slot(s) => Some(Ptr::Cell(Cell { slot: s.0, off: 0 })),
+                Operand::Reg(r) => ptrs.get(&r.0).copied(),
+                Operand::Arg(a) => match arg_space.get(*a as usize).copied().flatten() {
+                    Some(AddrSpace::Private) | None => None,
+                    Some(_) => Some(Ptr::NonPrivate),
+                },
+                Operand::Imm(_) => None,
+            }
+        };
+        for (idx, (def, inst)) in block.insts.iter_mut().enumerate() {
+            changed += env.apply(inst);
+            match inst {
+                Inst::Barrier { .. } => {
+                    vals.clear();
+                    pending.clear();
+                    ptrs.clear();
+                    env.flush_regs();
+                    continue;
+                }
+                Inst::Gep { base, idx: gidx, .. } => {
+                    let Some(d) = *def else { continue };
+                    match resolve(base, &ptrs) {
+                        Some(Ptr::Cell(c)) => {
+                            let p = match gidx {
+                                Operand::Imm(Imm::Int(v, s)) => {
+                                    Ptr::Cell(Cell { slot: c.slot, off: c.off + norm_int(*v, *s) })
+                                }
+                                _ => Ptr::SlotUnknown(c.slot),
+                            };
+                            ptrs.insert(d.0, p);
+                        }
+                        Some(Ptr::SlotUnknown(s)) => {
+                            ptrs.insert(d.0, Ptr::SlotUnknown(s));
+                        }
+                        Some(Ptr::NonPrivate) => {
+                            ptrs.insert(d.0, Ptr::NonPrivate);
+                        }
+                        None => {}
+                    }
+                }
+                // Pointer-identity casts carry pointer knowledge through.
+                Inst::Cast { to, a, .. } if to.elem_scalar().is_none() => {
+                    if let (Some(d), Some(p)) = (def.as_ref(), resolve(a, &ptrs)) {
+                        ptrs.insert(d.0, p);
+                    }
+                }
+                Inst::Load { ptr, .. } => {
+                    let Some(d) = *def else { continue };
+                    match resolve(ptr, &ptrs) {
+                        Some(Ptr::Cell(c)) => {
+                            // The pending store (if any) is read: it is live.
+                            pending.remove(&c);
+                            match vals.get(&c) {
+                                Some(v) => env.set(d, *v),
+                                None => {
+                                    vals.insert(c, Operand::Reg(d));
+                                }
+                            }
+                        }
+                        Some(Ptr::SlotUnknown(s)) => {
+                            pending.retain(|c, _| c.slot != s);
+                        }
+                        Some(Ptr::NonPrivate) => {}
+                        // Unknown pointer: could read any private cell.
+                        None => pending.clear(),
+                    }
+                }
+                Inst::Store { ty, ptr, val } => {
+                    match resolve(ptr, &ptrs) {
+                        Some(Ptr::Cell(c)) => {
+                            // Overwriting an unread store kills it. A later
+                            // same-cell store proves deadness even if an
+                            // unknown write intervened (both overwrite it).
+                            if let Some(prev) = pending.insert(c, idx) {
+                                dead.insert(prev);
+                            }
+                            if forwardable(val, ty, &normed) {
+                                vals.insert(c, *val);
+                            } else {
+                                vals.remove(&c);
+                            }
+                        }
+                        Some(Ptr::SlotUnknown(s)) => {
+                            vals.retain(|c, _| c.slot != s);
+                        }
+                        Some(Ptr::NonPrivate) => {}
+                        // Unknown pointer: could hit any private cell.
+                        None => vals.clear(),
+                    }
+                }
+                _ => {}
+            }
+            if let Some(d) = def {
+                if let Some(t) = normalized_result(inst) {
+                    normed.insert(d.0, t);
+                }
+            }
+        }
+        changed += env.apply_term(&mut block.term);
+        if !dead.is_empty() {
+            changed += dead.len();
+            let old = std::mem::take(&mut block.insts);
+            block.insts =
+                old.into_iter().enumerate().filter(|(i, _)| !dead.contains(i)).map(|(_, x)| x).collect();
+        }
+    }
+    changed
+}
+
+/// True when substituting `val` for a load of the cell written by
+/// `Store { ty, val, .. }` is bit-exact — i.e. the store's
+/// `normalize_to(val, ty)` was the identity:
+///
+/// * pointer-typed stores never normalise (`elem_scalar` is `None`, and
+///   `norm_val` is the identity on pointers);
+/// * an integer/float immediate of exactly the store's scalar type reads
+///   back (idempotently re-normalised) as the cell value;
+/// * a register whose defining instruction provably normalised it to
+///   exactly the store type.
+///
+/// Raw loads, `Select` results, and scalar `Arg`s are not provably
+/// normalised and are never forwarded (the redundant-load rule still
+/// covers repeated loads).
+fn forwardable(val: &Operand, store_ty: &Type, normed: &HashMap<u32, Type>) -> bool {
+    if store_ty.elem_scalar().is_none() {
+        return true;
+    }
+    match val {
+        Operand::Imm(i) => store_ty.lanes() == 1 && i.ty() == *store_ty,
+        Operand::Reg(r) => normed.get(&r.0) == Some(store_ty),
+        // Slot operands are pointers; pointer values pass through
+        // `norm_val` untouched regardless of the store type.
+        Operand::Slot(_) => true,
+        Operand::Arg(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::{BarrierKind, BinOp};
+    use crate::ir::verify::verify;
+
+    fn store(s: crate::ir::inst::SlotId, v: Operand) -> Inst {
+        Inst::Store { ty: Type::I32, ptr: Operand::Slot(s), val: v }
+    }
+
+    fn load(s: crate::ir::inst::SlotId) -> Inst {
+        Inst::Load { ty: Type::I32, ptr: Operand::Slot(s) }
+    }
+
+    #[test]
+    fn immediate_store_forwards_to_load() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::I32, 1);
+        let e = f.entry;
+        f.push(e, store(s, Operand::ci32(7)));
+        let l = f.push_val(e, load(s));
+        f.push(e, Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::Reg(l), b: Operand::ci32(1) });
+        assert_eq!(run(&mut f), 1);
+        match f.block(e).insts[2].1 {
+            Inst::Bin { a: Operand::Imm(Imm::Int(7, _)), .. } => {}
+            ref other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn normalized_register_forwards_raw_load_does_not() {
+        let mut f = Function::new("k");
+        let a = f.add_slot("a", Type::I32, 1);
+        let b = f.add_slot("b", Type::I32, 1);
+        let e = f.entry;
+        // Raw load: not provably normalised — stored then reloaded stays.
+        let l0 = f.push_val(e, load(a));
+        f.push(e, store(b, Operand::Reg(l0)));
+        let l1 = f.push_val(e, load(b));
+        // Bin result: normalised to I32 — stored then reloaded forwards.
+        let x = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::Reg(l1), b: Operand::ci32(1) },
+        );
+        f.push(e, store(a, Operand::Reg(x)));
+        let l2 = f.push_val(e, load(a));
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Mul, ty: Type::I32, a: Operand::Reg(l2), b: Operand::ci32(2) },
+        );
+        assert_eq!(run(&mut f), 1, "only the normalised register forwards");
+        match f.block(e).insts[6].1 {
+            Inst::Bin { a: Operand::Reg(r), .. } => assert_eq!(r, x),
+            ref other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn repeated_load_is_reused_and_dead_store_removed() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("i", Type::I32, 1);
+        let e = f.entry;
+        let l1 = f.push_val(e, load(s));
+        let l2 = f.push_val(e, load(s));
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::Reg(l1), b: Operand::Reg(l2) },
+        );
+        // Two stores, no read in between: the first is dead.
+        f.push(e, store(s, Operand::ci32(1)));
+        f.push(e, store(s, Operand::ci32(2)));
+        let n = run(&mut f);
+        assert_eq!(n, 2, "one reused load + one dead store, got {n}");
+        assert_eq!(f.block(e).insts.len(), 4);
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn barrier_blocks_forwarding_and_dse() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::I32, 1);
+        let e = f.entry;
+        f.push(e, store(s, Operand::ci32(1)));
+        f.push(e, Inst::Barrier { kind: BarrierKind::Explicit });
+        let l = f.push_val(e, load(s));
+        f.push(e, Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::Reg(l), b: Operand::ci32(1) });
+        f.push(e, store(s, Operand::ci32(2)));
+        assert_eq!(run(&mut f), 0, "nothing crosses the barrier");
+        assert_eq!(f.block(e).insts.len(), 5);
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn gep_with_constant_index_tracks_distinct_cells() {
+        let mut f = Function::new("k");
+        let arr = f.add_slot("arr", Type::I32, 4);
+        let e = f.entry;
+        let p0 = f.push_val(
+            e,
+            Inst::Gep { elem: Type::I32, base: Operand::Slot(arr), idx: Operand::ci32(0) },
+        );
+        let p1 = f.push_val(
+            e,
+            Inst::Gep { elem: Type::I32, base: Operand::Slot(arr), idx: Operand::ci32(1) },
+        );
+        f.push(e, Inst::Store { ty: Type::I32, ptr: Operand::Reg(p0), val: Operand::ci32(10) });
+        f.push(e, Inst::Store { ty: Type::I32, ptr: Operand::Reg(p1), val: Operand::ci32(11) });
+        let l = f.push_val(e, Inst::Load { ty: Type::I32, ptr: Operand::Reg(p0) });
+        f.push(e, Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::Reg(l), b: Operand::ci32(1) });
+        // Cell (arr,0) still holds 10: the store to (arr,1) is no clobber
+        // and no DSE trigger.
+        assert_eq!(run(&mut f), 1);
+        match f.block(e).insts[5].1 {
+            Inst::Bin { a: Operand::Imm(Imm::Int(10, _)), .. } => {}
+            ref other => panic!("{other:?}"),
+        }
+        assert_eq!(f.block(e).insts.len(), 6, "no store was removed");
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn unknown_index_store_clobbers_whole_slot() {
+        let mut f = Function::new("k");
+        let arr = f.add_slot("arr", Type::I32, 4);
+        let i = f.add_slot("i", Type::I32, 1);
+        let e = f.entry;
+        // `i` has no known value: its load stays opaque, so the GEP index
+        // is genuinely unknown.
+        let li = f.push_val(e, load(i));
+        f.push(e, Inst::Store { ty: Type::I32, ptr: Operand::Slot(arr), val: Operand::ci32(5) });
+        let p = f.push_val(
+            e,
+            Inst::Gep { elem: Type::I32, base: Operand::Slot(arr), idx: Operand::Reg(li) },
+        );
+        f.push(e, Inst::Store { ty: Type::I32, ptr: Operand::Reg(p), val: Operand::ci32(9) });
+        let l = f.push_val(e, Inst::Load { ty: Type::I32, ptr: Operand::Slot(arr) });
+        f.push(e, Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::Reg(l), b: Operand::ci32(1) });
+        // The load of arr[0] must NOT be folded to 5: the variable-index
+        // store may have hit cell 0. And the store of 5 must survive: the
+        // possibly-aliasing load reads it.
+        assert_eq!(run(&mut f), 0, "nothing is forwardable here");
+        assert_eq!(f.block(e).insts.len(), 6, "both stores survive");
+        match f.block(e).insts[4].1 {
+            Inst::Load { .. } => {}
+            ref other => panic!("arr load must survive: {other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+}

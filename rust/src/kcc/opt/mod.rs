@@ -1,0 +1,332 @@
+//! Mid-level IR optimizer pipeline.
+//!
+//! The paper keeps data-parallel semantics in IR + metadata precisely so
+//! "later generic compiler passes" can exploit them (§4). This module is
+//! that generic layer for our kernel compiler: a classical scalar
+//! optimizer that runs **before** region formation in
+//! [`compile_workgroup`](super::passes::compile_workgroup), so every
+//! engine (serial, gang, vecgang, fiber, ttasim, pjrt) and both cached
+//! artifacts (`reg_fn` and `loop_fn`) profit from the same cleanup.
+//! Because each engine dispatches the interpreter once per IR
+//! instruction, every instruction deleted here is a direct,
+//! `--stats`-visible speedup on all of them.
+//!
+//! One file per pass:
+//!
+//! * [`cfg_simplify`] — branch folding, jump threading through empty
+//!   blocks, single-predecessor block merging, unreachable-block removal.
+//! * [`fold`] — constant folding, evaluated with the **interpreter's own
+//!   scalar kernels** (`exec::interp::bin_scalar` & friends) so folded
+//!   results are bit-identical to runtime evaluation, including integer
+//!   wrapping and f32 rounding. Division by a constant zero is never
+//!   folded (the runtime error is preserved).
+//! * [`algebraic`] — algebraic simplification and strength reduction on
+//!   integer operations (`x*0`, `x+0`, `x*2^k → x<<k`, unsigned
+//!   `/`/`%` by powers of two). Float identities are never rewritten.
+//! * [`propagate`] — copy propagation through pointer-identity casts and
+//!   constant-condition selects.
+//! * [`cse`] — block-local common-subexpression elimination over pure
+//!   instructions.
+//! * [`loadfwd`] — private-memory store-to-load forwarding, redundant
+//!   load elimination, and in-block dead-store elimination, aware of the
+//!   cell-addressed private-memory model.
+//! * [`dce`] — dead code elimination (the collector for all of the
+//!   above: the other passes rewrite uses and leave dead defs behind).
+//!
+//! # Invariants every pass preserves
+//!
+//! * The block-local register invariant (`ir::verify` stays clean):
+//!   substitution environments never introduce a register use in another
+//!   block, and register-valued substitutions are flushed at barriers so
+//!   no pass creates a register live range across a barrier
+//!   (`kcc::barriers::split_at_barrier` would reject it later).
+//! * Barriers and markers are never deleted, duplicated, or moved, and
+//!   memory state tracked across a barrier is discarded — the reachable
+//!   barrier count is exactly preserved.
+//! * Bit-identical results: every folded value is computed by the same
+//!   normalisation chain (`norm_int`/`norm_float`/`norm_val`) the
+//!   engines use, so O0/O1/O2 produce byte-for-byte equal outputs.
+
+pub mod algebraic;
+pub mod cfg_simplify;
+pub mod cse;
+pub mod dce;
+pub mod fold;
+pub mod loadfwd;
+pub mod propagate;
+
+use std::collections::HashMap;
+
+use crate::cl::error::Result;
+use crate::ir::cfg::reachable;
+use crate::ir::func::Function;
+use crate::ir::inst::{Imm, Inst, Operand, Reg, Term};
+use crate::ir::types::Scalar;
+use crate::ir::verify::verify;
+use crate::exec::value::{norm_float, norm_int, Val};
+
+/// Optimisation level. Part of [`CompileOptions`](super::CompileOptions),
+/// so it participates in every specialisation-cache key (in-memory and
+/// on-disk): artifacts compiled at different levels never mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// No optimisation: the frontend IR goes straight to region formation.
+    O0,
+    /// CFG cleanup + constant folding + copy propagation + DCE.
+    O1,
+    /// O1 plus CSE, load forwarding, and algebraic simplification.
+    O2,
+}
+
+impl Default for OptLevel {
+    fn default() -> Self {
+        OptLevel::O2
+    }
+}
+
+impl OptLevel {
+    /// Level from the `POCLRS_OPT` environment variable (`0`/`1`/`2`),
+    /// defaulting to O2. Consulted by `CompileOptions::default()`, so the
+    /// CLI `--opt` flag and the CI O0 matrix leg reach every device.
+    pub fn from_env() -> OptLevel {
+        match std::env::var("POCLRS_OPT").ok().as_deref() {
+            Some("0") => OptLevel::O0,
+            Some("1") => OptLevel::O1,
+            _ => OptLevel::O2,
+        }
+    }
+
+    /// Numeric level (for display).
+    pub fn as_u32(self) -> u32 {
+        match self {
+            OptLevel::O0 => 0,
+            OptLevel::O1 => 1,
+            OptLevel::O2 => 2,
+        }
+    }
+
+    /// Level from a number (CLI parsing). `None` for anything but 0/1/2.
+    pub fn from_u32(n: u32) -> Option<OptLevel> {
+        match n {
+            0 => Some(OptLevel::O0),
+            1 => Some(OptLevel::O1),
+            2 => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+}
+
+/// Per-pass optimizer statistics, embedded in
+/// [`CompileStats`](super::CompileStats) and surfaced by
+/// `poclrs run --stats`. Pass counters are cumulative over all fixpoint
+/// iterations: rewrite counts for the rewriting passes, removal counts
+/// for `dce`/`cfg_simplify`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OptStats {
+    /// Reachable instructions before the pipeline.
+    pub insts_before: usize,
+    /// Reachable instructions after the pipeline.
+    pub insts_after: usize,
+    /// Reachable blocks before the pipeline.
+    pub blocks_before: usize,
+    /// Reachable blocks after the pipeline.
+    pub blocks_after: usize,
+    /// Fixpoint iterations run.
+    pub iterations: usize,
+    /// CFG edits (branches folded + jumps threaded + blocks merged +
+    /// unreachable blocks removed).
+    pub cfg_simplified: usize,
+    /// Operand rewrites from constant folding.
+    pub folded: usize,
+    /// Operand rewrites from algebraic simplification + strength
+    /// reductions applied in place.
+    pub algebraic: usize,
+    /// Operand rewrites from copy propagation.
+    pub propagated: usize,
+    /// Operand rewrites from common-subexpression elimination.
+    pub cse_hits: usize,
+    /// Operand rewrites from load forwarding + dead stores removed.
+    pub loads_forwarded: usize,
+    /// Instructions removed by dead code elimination.
+    pub dce_removed: usize,
+}
+
+impl OptStats {
+    /// Total instructions removed by the pipeline.
+    pub fn insts_removed(&self) -> usize {
+        self.insts_before.saturating_sub(self.insts_after)
+    }
+}
+
+/// Fixpoint cap: each iteration only shrinks the function, but the cap
+/// bounds compile time on adversarial inputs.
+const MAX_ITERATIONS: usize = 8;
+
+/// Run the optimizer pipeline on a single-work-item kernel function at
+/// `level`. Returns the per-pass statistics. The function is verified
+/// after the pipeline (and after every iteration in debug builds).
+pub fn run(f: &mut Function, level: OptLevel) -> Result<OptStats> {
+    let insts_before = f.inst_count();
+    let blocks_before = reachable(f).len();
+    let mut s = OptStats {
+        insts_before,
+        insts_after: insts_before,
+        blocks_before,
+        blocks_after: blocks_before,
+        ..OptStats::default()
+    };
+    if level == OptLevel::O0 {
+        return Ok(s);
+    }
+    for _ in 0..MAX_ITERATIONS {
+        let mut changed = 0;
+        let n = cfg_simplify::run(f);
+        s.cfg_simplified += n;
+        changed += n;
+        let n = fold::run(f);
+        s.folded += n;
+        changed += n;
+        if level >= OptLevel::O2 {
+            let n = algebraic::run(f);
+            s.algebraic += n;
+            changed += n;
+        }
+        let n = propagate::run(f);
+        s.propagated += n;
+        changed += n;
+        if level >= OptLevel::O2 {
+            let n = cse::run(f);
+            s.cse_hits += n;
+            changed += n;
+            let n = loadfwd::run(f);
+            s.loads_forwarded += n;
+            changed += n;
+        }
+        let n = dce::run(f);
+        s.dce_removed += n;
+        changed += n;
+        s.iterations += 1;
+        #[cfg(debug_assertions)]
+        verify(f)?;
+        if changed == 0 {
+            break;
+        }
+    }
+    verify(f)?;
+    s.insts_after = f.inst_count();
+    s.blocks_after = reachable(f).len();
+    Ok(s)
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers for the passes.
+// ---------------------------------------------------------------------------
+
+/// An immediate's runtime value, exactly as `Machine::operand` computes it
+/// (normalised by the immediate's own scalar type at read time).
+pub(crate) fn imm_val(imm: &Imm) -> Val {
+    match imm {
+        Imm::Int(v, s) => Val::I(norm_int(*v, *s)),
+        Imm::Float(v, s) => Val::F(norm_float(*v, *s)),
+    }
+}
+
+/// Truthiness of an immediate under the interpreter's rules.
+pub(crate) fn imm_truthy(imm: &Imm) -> bool {
+    imm_val(imm).truthy()
+}
+
+/// Re-encode an interpreter value as an immediate of scalar type `s`.
+/// The value must already be normalised to `s` (all interpreter kernels
+/// normalise their outputs), so reading the immediate back through
+/// `Machine::operand` — which normalises again, idempotently — yields the
+/// identical runtime value. Pointers have no immediate form.
+pub(crate) fn val_to_imm(v: Val, s: Scalar) -> Option<Imm> {
+    match v {
+        Val::I(i) => Some(Imm::Int(i, s)),
+        Val::F(x) => Some(Imm::Float(x, s)),
+        Val::Ptr { .. } => None,
+    }
+}
+
+/// Result type of `inst` if the interpreter provably **normalises** its
+/// output to that type — `Bin`/`Un`/`Math` normalise to their result
+/// scalar, numeric `Cast`s to the target, `Wi` produces a `u64`, and
+/// `Splat`/`VecBuild` normalise every element. Loads return raw cells and
+/// `Select`/`VecExtract`/`VecInsert` pass values through unnormalised, so
+/// they return `None`. Used by `algebraic` (identity rewrites) and
+/// `loadfwd` (store-to-load forwarding), where substituting a register
+/// for a normalised memory cell is only exact under this proof.
+pub(crate) fn normalized_result(inst: &Inst) -> Option<crate::ir::types::Type> {
+    use crate::ir::types::Type;
+    match inst {
+        Inst::Bin { .. } | Inst::Un { .. } | Inst::Math { .. } => Some(inst.result_ty()),
+        Inst::Cast { to, .. } if to.elem_scalar().is_some() => Some(to.clone()),
+        Inst::Wi { .. } => Some(Type::U64),
+        Inst::Splat { ty, .. } | Inst::VecBuild { ty, .. } => Some(ty.clone()),
+        _ => None,
+    }
+}
+
+/// Block-local substitution environment: register → replacement operand.
+///
+/// Passes record discovered equivalences (`reg` is the constant `imm`,
+/// `reg` copies `operand`) and rewrite subsequent operand uses through
+/// the environment as they scan forward. The environment is per-block
+/// (registers are block-local by IR invariant) and register-valued
+/// entries are flushed at barriers so no rewrite creates a register live
+/// range across a barrier.
+#[derive(Default)]
+pub(crate) struct Subst {
+    map: HashMap<Reg, Operand>,
+}
+
+impl Subst {
+    pub(crate) fn new() -> Subst {
+        Subst::default()
+    }
+
+    /// Record that `r`'s value equals `op` (which must already be fully
+    /// rewritten through this environment).
+    pub(crate) fn set(&mut self, r: Reg, op: Operand) {
+        self.map.insert(r, op);
+    }
+
+    /// Rewrite `inst`'s operands through the environment. Returns the
+    /// number of operands rewritten.
+    pub(crate) fn apply(&self, inst: &mut Inst) -> usize {
+        let mut n = 0;
+        for op in inst.operands_mut() {
+            if let Operand::Reg(r) = op {
+                if let Some(repl) = self.map.get(r) {
+                    *op = *repl;
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Rewrite a branch condition through the environment. Slot-valued
+    /// replacements are skipped: the verifier forbids slot operands as
+    /// branch conditions (and a pointer is never a real condition).
+    pub(crate) fn apply_term(&self, term: &mut Term) -> usize {
+        if let Term::Br { cond, .. } = term {
+            if let Operand::Reg(r) = *cond {
+                if let Some(repl) = self.map.get(&r) {
+                    if !matches!(repl, Operand::Slot(_)) {
+                        *cond = *repl;
+                        return 1;
+                    }
+                }
+            }
+        }
+        0
+    }
+
+    /// Drop register-valued substitutions (called at barriers: an
+    /// immediate may be propagated across a barrier, a register must not).
+    pub(crate) fn flush_regs(&mut self) {
+        self.map.retain(|_, v| !matches!(v, Operand::Reg(_)));
+    }
+}

@@ -1,0 +1,106 @@
+//! Copy propagation.
+//!
+//! Two instruction shapes are exact copies under the interpreter's
+//! semantics and can be replaced by their source operand:
+//!
+//! * `Cast` to a pointer type — `eval_cast` returns the input unchanged
+//!   when the target type has no element scalar.
+//! * Scalar `Select` with a constant condition — the interpreter returns
+//!   the chosen operand's value **unnormalised**, so substituting the
+//!   operand itself is bit-exact.
+//!
+//! Register-valued copies are flushed at barriers (no live range may be
+//! created across a barrier); immediates keep propagating through.
+
+use crate::ir::func::Function;
+use crate::ir::inst::{Inst, Operand};
+
+use super::{imm_truthy, Subst};
+
+/// Run copy propagation over every block. Returns operand rewrites.
+pub fn run(f: &mut Function) -> usize {
+    let mut changed = 0;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let block = f.block_mut(bb);
+        let mut env = Subst::new();
+        for (def, inst) in block.insts.iter_mut() {
+            changed += env.apply(inst);
+            if inst.is_barrier() {
+                env.flush_regs();
+                continue;
+            }
+            let Some(d) = def else { continue };
+            match inst {
+                // Pointer casts are identity: no element scalar to
+                // normalise to.
+                Inst::Cast { to, a, .. } if to.elem_scalar().is_none() => {
+                    env.set(*d, *a);
+                }
+                // Constant-condition scalar select returns the chosen
+                // operand verbatim.
+                Inst::Select { ty, cond: Operand::Imm(c), a, b } if ty.lanes() == 1 => {
+                    env.set(*d, if imm_truthy(c) { *a } else { *b });
+                }
+                _ => {}
+            }
+        }
+        changed += env.apply_term(&mut block.term);
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::inst::{BinOp, SlotId};
+    use crate::ir::types::{AddrSpace, Type};
+    use crate::ir::verify::verify;
+
+    #[test]
+    fn pointer_cast_is_propagated() {
+        let mut f = Function::new("k");
+        let s = f.add_slot("x", Type::F32, 1);
+        let e = f.entry;
+        let p = f.push_val(
+            e,
+            Inst::Cast {
+                to: Type::F32.ptr(AddrSpace::Private),
+                from: Type::F32.ptr(AddrSpace::Private),
+                a: Operand::Slot(s),
+            },
+        );
+        f.push(e, Inst::Load { ty: Type::F32, ptr: Operand::Reg(p) });
+        assert_eq!(run(&mut f), 1);
+        assert!(matches!(f.block(e).insts[1].1, Inst::Load { ptr: Operand::Slot(SlotId(0)), .. }));
+        verify(&f).unwrap();
+    }
+
+    #[test]
+    fn const_select_chooses_raw_operand() {
+        let mut f = Function::new("k");
+        let e = f.entry;
+        let x = f.push_val(
+            e,
+            Inst::Bin { op: BinOp::Add, ty: Type::I32, a: Operand::ci32(1), b: Operand::ci32(2) },
+        );
+        let sel = f.push_val(
+            e,
+            Inst::Select {
+                ty: Type::I32,
+                cond: Operand::cbool(false),
+                a: Operand::Reg(x),
+                b: Operand::ci32(9),
+            },
+        );
+        f.push(
+            e,
+            Inst::Bin { op: BinOp::Mul, ty: Type::I32, a: Operand::Reg(sel), b: Operand::ci32(2) },
+        );
+        assert_eq!(run(&mut f), 1);
+        match f.block(e).insts[2].1 {
+            Inst::Bin { a: Operand::Imm(i), .. } => assert_eq!(super::super::imm_val(&i).as_i(), 9),
+            ref other => panic!("{other:?}"),
+        }
+        verify(&f).unwrap();
+    }
+}

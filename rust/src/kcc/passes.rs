@@ -24,6 +24,7 @@ use crate::ir::loops::canonicalize;
 use super::barriers::normalize;
 use super::bloops;
 use super::horizontal;
+use super::opt::{self, OptLevel, OptStats};
 use super::privatize;
 use super::regions::{check_regions, form_regions, Region};
 use super::taildup;
@@ -66,6 +67,10 @@ pub struct CompileOptions {
     /// (cache-key component: a width-8 artifact slot is distinct from a
     /// width-4 one even though today's engines consume the same forms).
     pub gang_width: usize,
+    /// Mid-level optimizer level (kcc/opt/), run before region formation.
+    /// Cache-key component: artifacts compiled at different levels are
+    /// distinct specialisations.
+    pub opt_level: OptLevel,
 }
 
 impl Default for CompileOptions {
@@ -76,6 +81,7 @@ impl Default for CompileOptions {
             spmd: false,
             target: TargetKind::Cpu,
             gang_width: 0,
+            opt_level: OptLevel::from_env(),
         }
     }
 }
@@ -109,6 +115,8 @@ pub struct CompileStats {
     /// branch (the regions where the vector engine may have to fall back
     /// to per-lane execution).
     pub divergent_regions: usize,
+    /// Mid-level optimizer statistics (per-pass rewrite/removal counts).
+    pub opt: OptStats,
 }
 
 /// A compiled work-group function, specialised for one local size (§4.1:
@@ -158,6 +166,11 @@ pub fn compile_workgroup(
 ) -> Result<WorkGroupFunction> {
     let mut stats = CompileStats::default();
     let mut f = kernel.clone();
+
+    // Mid-level optimizer: runs on the single-work-item kernel before any
+    // region machinery, so every engine and both cached artifacts
+    // (`reg_fn` and `loop_fn`) see the cleaned-up IR.
+    stats.opt = opt::run(&mut f, opts.opt_level)?;
 
     // Target-independent parallel region formation.
     unify_exits(&mut f);

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! poclrs devices                      # Table 1 capability table
-//! poclrs run <App> [device] [--stats] # run + verify one suite app
+//! poclrs run <App> [device] [--stats] [--opt N]  # run + verify one suite app
 //! poclrs compile <file.cl> [LX]       # show compile stats + IR for a kernel
 //! poclrs suite [device]               # run + verify the whole suite
 //! poclrs cache ls                     # list persistent kernel-cache entries
@@ -12,13 +12,19 @@
 //! ```
 //!
 //! `--stats` prints the uniformity/divergence compile counters, the
+//! mid-level optimizer per-pass counters (kcc/opt/), the
 //! specialisation-cache counters (memory/disk hits vs compiles), and the
 //! engine dispatch counters (gangs, diverged, vectorised/uniform/per-lane
 //! instruction dispatches) for the run.
 //!
-//! Environment: `POCLRS_CACHE_DIR` relocates the persistent kernel
-//! cache (default `~/.cache/poclrs`), `POCLRS_CACHE_MAX_BYTES` caps its
-//! size (default 256 MiB), and `POCLRS_CACHE=0` disables it.
+//! `--opt N` (N = 0/1/2, default 2) selects the optimizer level; it sets
+//! `POCLRS_OPT` before any device is created, so every device's
+//! `CompileOptions` — and therefore every cache key — reflects it.
+//!
+//! Environment: `POCLRS_OPT` sets the optimizer level, `POCLRS_CACHE_DIR`
+//! relocates the persistent kernel cache (default `~/.cache/poclrs`),
+//! `POCLRS_CACHE_MAX_BYTES` caps its size (default 256 MiB), and
+//! `POCLRS_CACHE=0` disables it.
 
 use std::sync::Arc;
 
@@ -28,7 +34,7 @@ use poclrs::kcc::{compile_workgroup, CompileOptions};
 use poclrs::suite::{all_apps, app_by_name, runner, SizeClass};
 
 const USAGE: &str =
-    "usage: poclrs devices | run <App> [device] [--stats] | suite [device] | compile <file.cl> [LX] | cache ls|stats|clear";
+    "usage: poclrs devices | run <App> [device] [--stats] [--opt N] | suite [device] | compile <file.cl> [LX] | cache ls|stats|clear";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,6 +51,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             } else {
                 false
             };
+            if let Some(i) = rest.iter().position(|a| *a == "--opt") {
+                let lvl = rest
+                    .get(i + 1)
+                    .and_then(|s| s.parse::<u32>().ok())
+                    .and_then(poclrs::kcc::OptLevel::from_u32)
+                    .ok_or_else(|| String::from("--opt takes 0, 1, or 2"))?;
+                rest.drain(i..=i + 1);
+                // Devices read POCLRS_OPT via CompileOptions::default();
+                // none has been created yet, so the level reaches all of
+                // them (and every cache key).
+                std::env::set_var("POCLRS_OPT", lvl.as_u32().to_string());
+            }
             let name = *rest
                 .first()
                 .ok_or_else(|| String::from("usage: run <App> [device] [--stats]"))?;
@@ -70,6 +88,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                         wgf.stats.uniform_slots,
                         wgf.stats.uniform_regs,
                         wgf.stats.divergent_regions,
+                    );
+                    let o = &wgf.stats.opt;
+                    println!(
+                        "opt O{} `{}`: insts {} -> {} ({} removed), blocks {} -> {}, {} iters | cfg={} fold={} alg={} prop={} cse={} loadfwd={} dce={}",
+                        spec.opts.opt_level.as_u32(),
+                        spec.kernel,
+                        o.insts_before,
+                        o.insts_after,
+                        o.insts_removed(),
+                        o.blocks_before,
+                        o.blocks_after,
+                        o.iterations,
+                        o.cfg_simplified,
+                        o.folded,
+                        o.algebraic,
+                        o.propagated,
+                        o.cse_hits,
+                        o.loads_forwarded,
+                        o.dce_removed,
                     );
                 }
                 let c = r.program.cache_stats();

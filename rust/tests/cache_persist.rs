@@ -14,7 +14,7 @@ use poclrs::cache::{poclbin, DiskCache};
 use poclrs::cl::{Program, QueueProperties};
 use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
 use poclrs::ir::print::print_function;
-use poclrs::kcc::{compile_workgroup, CompileOptions};
+use poclrs::kcc::{compile_workgroup, CompileOptions, OptLevel};
 use poclrs::suite::runner::RunResult;
 use poclrs::suite::{all_apps, app_by_name, runner, App, BufInit, SizeClass};
 
@@ -163,5 +163,43 @@ fn disk_entries_are_split_by_device_options() {
     let s2 = r2.program.cache_stats();
     assert_eq!(s2.disk_hits, 0, "gang-width-8 options must not hit serial entries");
     assert_eq!(s2.misses, compiled_serial, "same kernels compile afresh for the new options");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance criterion: `opt_level` participates in the cache key — the
+/// same device at O0 vs O2 addresses distinct disk entries, and repeat
+/// runs at either level hit their own.
+#[test]
+fn disk_entries_are_split_by_opt_level() {
+    let dir = tmpdir("optsplit");
+    let app = app_by_name("MatrixMultiplication", SizeClass::Small).unwrap();
+    let o2: Arc<dyn Device> =
+        Arc::new(BasicDevice::with_opt_level(EngineKind::Serial, OptLevel::O2));
+    let o0: Arc<dyn Device> =
+        Arc::new(BasicDevice::with_opt_level(EngineKind::Serial, OptLevel::O0));
+
+    let disk = Arc::new(DiskCache::at(&dir).unwrap());
+    let p1 = Program::build_cached(app.source, Some(disk.clone())).unwrap();
+    let r1 = run(&app, &o2, p1);
+    let compiled_o2 = r1.program.cache_stats().misses;
+    assert!(compiled_o2 > 0);
+
+    // Same source, same device class, different opt level → fresh compiles.
+    let p2 = Program::build_cached(app.source, Some(disk.clone())).unwrap();
+    let r2 = run(&app, &o0, p2);
+    let s2 = r2.program.cache_stats();
+    assert_eq!(s2.disk_hits, 0, "O0 must never be served an O2 artifact");
+    assert_eq!(s2.misses, compiled_o2, "same kernels compile afresh at the other level");
+
+    // Re-running at O2 hits the original entries.
+    let p3 = Program::build_cached(app.source, Some(disk.clone())).unwrap();
+    let r3 = run(&app, &o2, p3);
+    let s3 = r3.program.cache_stats();
+    assert_eq!(s3.misses, 0, "warm O2 entries are reused");
+    assert!(s3.disk_hits > 0);
+
+    // Both levels agree bit-for-bit on the results.
+    assert_bit_identical(&r1.buffers, &r2.buffers, "O2 vs O0");
+    runner::verify(&app, &r1.buffers).unwrap();
     let _ = std::fs::remove_dir_all(&dir);
 }

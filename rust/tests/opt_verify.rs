@@ -1,0 +1,181 @@
+//! Optimizer correctness and acceptance tests (kcc/opt/):
+//!
+//! * bit-identical suite results across O0/O1/O2 on the serial, per-lane
+//!   gang, and lane-batched vector-gang engines;
+//! * a property pass: every optimizer pass, run alone on every suite
+//!   kernel's frontend IR, leaves `ir::verify` clean and preserves the
+//!   reachable barrier count (and so does the full pipeline at every
+//!   level);
+//! * the dispatch acceptance criteria: O2 strictly reduces interpreter
+//!   dispatches on MatrixMultiplication and BlackScholes, and cuts them
+//!   by ≥20% on at least half of the suite apps.
+
+use std::sync::Arc;
+
+use poclrs::cl::{Program, QueueProperties};
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::ir::cfg::reachable;
+use poclrs::ir::func::Function;
+use poclrs::ir::inst::Inst;
+use poclrs::ir::verify::verify;
+use poclrs::kcc::opt::{self, OptLevel};
+use poclrs::suite::{all_apps, runner, App, BufInit, SizeClass};
+
+/// Barriers in reachable blocks (unreachable ones may legitimately be
+/// dropped by `cfg_simplify`).
+fn reachable_barriers(f: &Function) -> usize {
+    reachable(f)
+        .into_iter()
+        .map(|b| {
+            f.block(b).insts.iter().filter(|(_, i)| matches!(i, Inst::Barrier { .. })).count()
+        })
+        .sum()
+}
+
+fn assert_bit_identical(a: &[BufInit], b: &[BufInit], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: buffer count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (BufInit::F32(u), BufInit::F32(v)) => {
+                assert_eq!(u.len(), v.len(), "{what}: buffer {i} length");
+                for (j, (p, q)) in u.iter().zip(v).enumerate() {
+                    assert_eq!(
+                        p.to_bits(),
+                        q.to_bits(),
+                        "{what}: buffer {i}[{j}] {p} vs {q} not bit-identical"
+                    );
+                }
+            }
+            (BufInit::U32(u), BufInit::U32(v)) => assert_eq!(u, v, "{what}: buffer {i}"),
+            _ => panic!("{what}: buffer {i} type mismatch"),
+        }
+    }
+}
+
+/// Run `app` on a basic device pinned to `level`, verify against the
+/// native baseline, and return the run result.
+fn run_at(app: &App, engine: EngineKind, level: OptLevel) -> runner::RunResult {
+    let device: Arc<dyn Device> = Arc::new(BasicDevice::with_opt_level(engine, level));
+    let program = Program::build(app.source).unwrap();
+    let r = runner::run_with_program(app, device, QueueProperties::InOrder, program)
+        .unwrap_or_else(|e| panic!("{} at {level:?} on {engine:?}: {e}", app.name));
+    runner::verify(app, &r.buffers)
+        .unwrap_or_else(|e| panic!("{} at {level:?} on {engine:?}: {e}", app.name));
+    r
+}
+
+/// Acceptance criterion: every suite app produces **bit-identical**
+/// output buffers at O0, O1, and O2 on all three CPU engine classes.
+#[test]
+fn suite_results_bit_identical_across_opt_levels() {
+    let engines = [EngineKind::Serial, EngineKind::Gang(4), EngineKind::GangVector(4)];
+    for app in all_apps(SizeClass::Small) {
+        for engine in engines {
+            let base = run_at(&app, engine, OptLevel::O0);
+            for level in [OptLevel::O1, OptLevel::O2] {
+                let got = run_at(&app, engine, level);
+                assert_bit_identical(
+                    &base.buffers,
+                    &got.buffers,
+                    &format!("{} on {engine:?}, O0 vs {level:?}", app.name),
+                );
+            }
+        }
+    }
+}
+
+/// Property: each pass in isolation keeps the IR verifier happy and the
+/// reachable barrier count intact, on every kernel of every suite app.
+#[test]
+fn every_pass_verifies_and_preserves_barriers_on_every_suite_kernel() {
+    type Pass = (&'static str, fn(&mut Function) -> usize);
+    let passes: [Pass; 7] = [
+        ("cfg_simplify", opt::cfg_simplify::run),
+        ("fold", opt::fold::run),
+        ("algebraic", opt::algebraic::run),
+        ("propagate", opt::propagate::run),
+        ("cse", opt::cse::run),
+        ("loadfwd", opt::loadfwd::run),
+        ("dce", opt::dce::run),
+    ];
+    for app in all_apps(SizeClass::Small) {
+        let module = poclrs::frontend::compile(app.source).unwrap();
+        for k in &module.kernels {
+            verify(k).unwrap_or_else(|e| panic!("{}::{}: frontend IR: {e:?}", app.name, k.name));
+            let barriers = reachable_barriers(k);
+            for (pname, pass) in passes {
+                let mut f = k.clone();
+                pass(&mut f);
+                verify(&f)
+                    .unwrap_or_else(|e| panic!("{}::{} after {pname}: {e:?}", app.name, k.name));
+                assert_eq!(
+                    reachable_barriers(&f),
+                    barriers,
+                    "{}::{}: {pname} changed the barrier count",
+                    app.name,
+                    k.name
+                );
+            }
+            // The full pipeline at every level preserves barriers too
+            // (and re-verifies internally).
+            for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+                let mut f = k.clone();
+                let stats = opt::run(&mut f, level)
+                    .unwrap_or_else(|e| panic!("{}::{} at {level:?}: {e:?}", app.name, k.name));
+                assert_eq!(
+                    reachable_barriers(&f),
+                    barriers,
+                    "{}::{}: pipeline at {level:?} changed the barrier count",
+                    app.name,
+                    k.name
+                );
+                assert!(
+                    stats.insts_after <= stats.insts_before,
+                    "{}::{} at {level:?}: the optimizer never grows the function",
+                    app.name,
+                    k.name
+                );
+            }
+        }
+    }
+}
+
+/// Total interpreter dispatches for one full app run on the per-lane
+/// gang engine pinned to `level`.
+fn dispatches_at(app: &App, level: OptLevel) -> usize {
+    run_at(app, EngineKind::Gang(4), level).stats.dispatches()
+}
+
+/// Acceptance criteria: O2 strictly reduces dispatch counts on
+/// MatrixMultiplication and BlackScholes, and achieves ≥20% reduction on
+/// at least half of the suite apps.
+#[test]
+fn o2_cuts_interpreter_dispatches() {
+    let mut total = 0usize;
+    let mut reduced20 = 0usize;
+    let mut anchors_seen = 0usize;
+    let mut lines = Vec::new();
+    for app in all_apps(SizeClass::Small) {
+        let d0 = dispatches_at(&app, OptLevel::O0);
+        let d2 = dispatches_at(&app, OptLevel::O2);
+        total += 1;
+        if d2 * 5 <= d0 * 4 {
+            reduced20 += 1;
+        }
+        lines.push(format!("{:<22} O0={d0:>9} O2={d2:>9}", app.name));
+        if app.name == "MatrixMultiplication" || app.name == "BlackScholes" {
+            anchors_seen += 1;
+            assert!(
+                d2 < d0,
+                "{}: O2 must strictly reduce dispatches (O0={d0}, O2={d2})",
+                app.name
+            );
+        }
+    }
+    assert_eq!(anchors_seen, 2, "both anchor apps must be in the suite");
+    assert!(
+        reduced20 * 2 >= total,
+        "O2 must cut dispatches by >=20% on at least half the suite ({reduced20}/{total}):\n{}",
+        lines.join("\n")
+    );
+}
