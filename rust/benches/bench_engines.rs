@@ -1,7 +1,9 @@
 //! Engine comparison — serial vs per-lane gang vs lane-batched vector
-//! gang over a few uniform-control suite kernels, emitting a
-//! `BENCH_engines.json` snapshot (the ISSUE 2 wall-clock criterion:
-//! gang-vector beats gang-scalar at width 8).
+//! gang vs the threaded-bytecode tier over uniform-control suite
+//! kernels, emitting a `BENCH_engines.json` snapshot (the ISSUE 2
+//! wall-clock criterion: gang-vector beats gang-scalar at width 8; the
+//! ISSUE 7 criterion: bytecode beats gang-vector by ≥2× on
+//! MatrixMultiplication and BlackScholes).
 //!
 //! Run with `cargo bench --bench bench_engines`; `POCLRS_BENCH_MS` bounds
 //! the per-case sampling budget (default 300 ms).
@@ -24,12 +26,16 @@ fn main() {
         ("serial", EngineKind::Serial),
         ("gang-scalar8", EngineKind::Gang(WIDTH)),
         ("gang-vector8", EngineKind::GangVector(WIDTH)),
+        ("bytecode8", EngineKind::Bytecode(WIDTH)),
     ];
     // Uniform-control float kernels: the vector engine's best case, and
     // the shape of the Fig. 12 suite wins the paper reports for SIMD.
-    let apps = ["SimpleConvolution", "DCT", "MatrixMultiplication"];
+    // BlackScholes is the second ISSUE 7 anchor (select-heavy, math-dense).
+    let apps = ["SimpleConvolution", "DCT", "MatrixMultiplication", "BlackScholes"];
 
-    println!("== Engine matrix: serial vs gang-scalar vs gang-vector (width {WIDTH}) ==\n");
+    println!(
+        "== Engine matrix: serial vs gang-scalar vs gang-vector vs bytecode (width {WIDTH}) ==\n"
+    );
     let mut json = String::from("{\n");
     let _ = writeln!(json, "  \"bench\": \"engines\",\n  \"width\": {WIDTH},\n  \"apps\": [");
     let mut first_app = true;
@@ -87,6 +93,6 @@ fn main() {
         Err(e) => println!("\ncould not write BENCH_engines.json: {e}"),
     }
     println!(
-        "(expectation: gang-vector8 < gang-scalar8 wall-clock on every row —\n the ~{WIDTH}x dispatch reduction shows up as real throughput)"
+        "(expectation: gang-vector8 < gang-scalar8 wall-clock on every row —\n the ~{WIDTH}x dispatch reduction shows up as real throughput —\n and bytecode8 <= 0.5x gang-vector8 on MatrixMultiplication and BlackScholes)"
     );
 }

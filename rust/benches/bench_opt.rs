@@ -28,6 +28,7 @@ fn main() {
         ("serial", EngineKind::Serial),
         ("gang-scalar8", EngineKind::Gang(WIDTH)),
         ("gang-vector8", EngineKind::GangVector(WIDTH)),
+        ("bytecode8", EngineKind::Bytecode(WIDTH)),
     ];
 
     println!("== Optimizer impact: O0 vs O2, per app, per engine (width {WIDTH}) ==\n");

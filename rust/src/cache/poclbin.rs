@@ -35,6 +35,7 @@
 //! storage and the round-trip-vs-`ir::print` golden tests possible.
 
 use crate::cl::error::{Error, Result};
+use crate::exec::bytecode::{BcConst, BcInst, BcRegion, BytecodeProgram};
 use crate::ir::{
     AddrSpace, AllocaInfo, BarrierKind, BinOp, Block, BlockId, Function, Imm, Inst, MathFn,
     Module, Operand, Param, Reg, Scalar, SlotId, Term, Type, UnOp, WiFn, WiLoopMeta,
@@ -50,7 +51,9 @@ pub const POCLBIN_MAGIC: [u8; 8] = *b"POCLBIN\0";
 /// Format version. Bump on any encoding change: old files then decode as
 /// [`Error::BadBinary`] and cache lookups fall back to a clean recompile.
 /// v2: `CompileOptions::opt_level` + `CompileStats::opt` (optimizer).
-pub const POCLBIN_VERSION: u32 = 2;
+/// v3: `WorkGroupFunction::bytecode` (threaded-bytecode tier) +
+/// `CompileStats` bytecode counters.
+pub const POCLBIN_VERSION: u32 = 3;
 
 /// Envelope size in bytes (magic + version + kind + length + digest).
 pub const HEADER_LEN: usize = 8 + 4 + 1 + 8 + 16;
@@ -710,6 +713,298 @@ impl Codec for Region {
     }
 }
 
+impl Codec for BcConst {
+    fn put(&self, w: &mut W) {
+        match self {
+            BcConst::Int(v, s) => {
+                w.u8(0);
+                w.i64(*v);
+                s.put(w);
+            }
+            BcConst::Float(v, s) => {
+                w.u8(1);
+                w.u64(v.to_bits());
+                s.put(w);
+            }
+            BcConst::Arg(i) => {
+                w.u8(2);
+                w.u32(*i);
+            }
+            BcConst::Slot(s) => {
+                w.u8(3);
+                s.put(w);
+            }
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(match r.u8()? {
+            0 => BcConst::Int(r.i64()?, Scalar::get(r)?),
+            1 => BcConst::Float(f64::from_bits(r.u64()?), Scalar::get(r)?),
+            2 => BcConst::Arg(r.u32()?),
+            3 => BcConst::Slot(SlotId::get(r)?),
+            t => return Err(bad(format!("bad BcConst tag {t}"))),
+        })
+    }
+}
+
+impl Codec for BcInst {
+    fn put(&self, w: &mut W) {
+        match self {
+            BcInst::Bin { op, ty, dst, a, b } => {
+                w.u8(0);
+                op.put(w);
+                ty.put(w);
+                w.u32(*dst);
+                w.u32(*a);
+                w.u32(*b);
+            }
+            BcInst::Un { op, ty, dst, a } => {
+                w.u8(1);
+                op.put(w);
+                ty.put(w);
+                w.u32(*dst);
+                w.u32(*a);
+            }
+            BcInst::Cast { to, from, dst, a } => {
+                w.u8(2);
+                to.put(w);
+                from.put(w);
+                w.u32(*dst);
+                w.u32(*a);
+            }
+            BcInst::Load { ty, dst, ptr } => {
+                w.u8(3);
+                ty.put(w);
+                w.u32(*dst);
+                w.u32(*ptr);
+            }
+            BcInst::Store { ty, ptr, val } => {
+                w.u8(4);
+                ty.put(w);
+                w.u32(*ptr);
+                w.u32(*val);
+            }
+            BcInst::Gep { elem, dst, base, idx } => {
+                w.u8(5);
+                elem.put(w);
+                w.u32(*dst);
+                w.u32(*base);
+                w.u32(*idx);
+            }
+            BcInst::Wi { func, dim, dst } => {
+                w.u8(6);
+                func.put(w);
+                w.u32(*dim);
+                w.u32(*dst);
+            }
+            BcInst::Math { func, ty, dst, args } => {
+                w.u8(7);
+                func.put(w);
+                ty.put(w);
+                w.u32(*dst);
+                w.u32(args.len() as u32);
+                for a in args {
+                    w.u32(*a);
+                }
+            }
+            BcInst::Select { ty, dst, cond, a, b } => {
+                w.u8(8);
+                ty.put(w);
+                w.u32(*dst);
+                w.u32(*cond);
+                w.u32(*a);
+                w.u32(*b);
+            }
+            BcInst::GepLoad { elem, ty, dst, base, idx } => {
+                w.u8(9);
+                elem.put(w);
+                ty.put(w);
+                w.u32(*dst);
+                w.u32(*base);
+                w.u32(*idx);
+            }
+            BcInst::LoadBin { op, ty, load_ty, dst, ptr, other, load_first } => {
+                w.u8(10);
+                op.put(w);
+                ty.put(w);
+                load_ty.put(w);
+                w.u32(*dst);
+                w.u32(*ptr);
+                w.u32(*other);
+                w.bool(*load_first);
+            }
+            BcInst::BinStore { op, ty, store_ty, ptr, a, b } => {
+                w.u8(11);
+                op.put(w);
+                ty.put(w);
+                store_ty.put(w);
+                w.u32(*ptr);
+                w.u32(*a);
+                w.u32(*b);
+            }
+            BcInst::MulAdd { ty, dst, a, b, c, mul_first } => {
+                w.u8(12);
+                ty.put(w);
+                w.u32(*dst);
+                w.u32(*a);
+                w.u32(*b);
+                w.u32(*c);
+                w.bool(*mul_first);
+            }
+            BcInst::CmpBr { op, ty, a, b, t, f, ir_t, ir_f } => {
+                w.u8(13);
+                op.put(w);
+                ty.put(w);
+                w.u32(*a);
+                w.u32(*b);
+                w.u32(*t);
+                w.u32(*f);
+                ir_t.put(w);
+                ir_f.put(w);
+            }
+            BcInst::Jump { pc } => {
+                w.u8(14);
+                w.u32(*pc);
+            }
+            BcInst::Br { cond, t, f, ir_t, ir_f } => {
+                w.u8(15);
+                w.u32(*cond);
+                w.u32(*t);
+                w.u32(*f);
+                ir_t.put(w);
+                ir_f.put(w);
+            }
+            BcInst::End { barrier } => {
+                w.u8(16);
+                barrier.put(w);
+            }
+        }
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(match r.u8()? {
+            0 => BcInst::Bin {
+                op: BinOp::get(r)?,
+                ty: Type::get(r)?,
+                dst: r.u32()?,
+                a: r.u32()?,
+                b: r.u32()?,
+            },
+            1 => BcInst::Un {
+                op: UnOp::get(r)?,
+                ty: Type::get(r)?,
+                dst: r.u32()?,
+                a: r.u32()?,
+            },
+            2 => BcInst::Cast {
+                to: Type::get(r)?,
+                from: Type::get(r)?,
+                dst: r.u32()?,
+                a: r.u32()?,
+            },
+            3 => BcInst::Load { ty: Type::get(r)?, dst: r.u32()?, ptr: r.u32()? },
+            4 => BcInst::Store { ty: Type::get(r)?, ptr: r.u32()?, val: r.u32()? },
+            5 => BcInst::Gep {
+                elem: Type::get(r)?,
+                dst: r.u32()?,
+                base: r.u32()?,
+                idx: r.u32()?,
+            },
+            6 => BcInst::Wi { func: WiFn::get(r)?, dim: r.u32()?, dst: r.u32()? },
+            7 => {
+                let func = MathFn::get(r)?;
+                let ty = Type::get(r)?;
+                let dst = r.u32()?;
+                let n = r.len_prefix()?;
+                let mut args = Vec::with_capacity(n);
+                for _ in 0..n {
+                    args.push(r.u32()?);
+                }
+                BcInst::Math { func, ty, dst, args }
+            }
+            8 => BcInst::Select {
+                ty: Type::get(r)?,
+                dst: r.u32()?,
+                cond: r.u32()?,
+                a: r.u32()?,
+                b: r.u32()?,
+            },
+            9 => BcInst::GepLoad {
+                elem: Type::get(r)?,
+                ty: Type::get(r)?,
+                dst: r.u32()?,
+                base: r.u32()?,
+                idx: r.u32()?,
+            },
+            10 => BcInst::LoadBin {
+                op: BinOp::get(r)?,
+                ty: Type::get(r)?,
+                load_ty: Type::get(r)?,
+                dst: r.u32()?,
+                ptr: r.u32()?,
+                other: r.u32()?,
+                load_first: r.bool()?,
+            },
+            11 => BcInst::BinStore {
+                op: BinOp::get(r)?,
+                ty: Type::get(r)?,
+                store_ty: Type::get(r)?,
+                ptr: r.u32()?,
+                a: r.u32()?,
+                b: r.u32()?,
+            },
+            12 => BcInst::MulAdd {
+                ty: Type::get(r)?,
+                dst: r.u32()?,
+                a: r.u32()?,
+                b: r.u32()?,
+                c: r.u32()?,
+                mul_first: r.bool()?,
+            },
+            13 => BcInst::CmpBr {
+                op: BinOp::get(r)?,
+                ty: Type::get(r)?,
+                a: r.u32()?,
+                b: r.u32()?,
+                t: r.u32()?,
+                f: r.u32()?,
+                ir_t: BlockId::get(r)?,
+                ir_f: BlockId::get(r)?,
+            },
+            14 => BcInst::Jump { pc: r.u32()? },
+            15 => BcInst::Br {
+                cond: r.u32()?,
+                t: r.u32()?,
+                f: r.u32()?,
+                ir_t: BlockId::get(r)?,
+                ir_f: BlockId::get(r)?,
+            },
+            16 => BcInst::End { barrier: BlockId::get(r)? },
+            t => return Err(bad(format!("bad BcInst tag {t}"))),
+        })
+    }
+}
+
+impl Codec for BcRegion {
+    fn put(&self, w: &mut W) {
+        self.start.put(w);
+        self.consts.put(w);
+        self.code.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(BcRegion { start: BlockId::get(r)?, consts: Vec::get(r)?, code: Vec::get(r)? })
+    }
+}
+
+impl Codec for BytecodeProgram {
+    fn put(&self, w: &mut W) {
+        w.u32(self.reg_count);
+        self.regions.put(w);
+    }
+    fn get(r: &mut R) -> Result<Self> {
+        Ok(BytecodeProgram { reg_count: r.u32()?, regions: Vec::get(r)? })
+    }
+}
+
 impl Codec for CompileStats {
     fn put(&self, w: &mut W) {
         self.regions.put(w);
@@ -723,6 +1018,9 @@ impl Codec for CompileStats {
         self.peeled_barriers.put(w);
         self.uniform_regs.put(w);
         self.divergent_regions.put(w);
+        self.bytecode_regions.put(w);
+        self.bytecode_fused.put(w);
+        self.bytecode_insts.put(w);
         self.opt.put(w);
     }
     fn get(r: &mut R) -> Result<Self> {
@@ -738,6 +1036,9 @@ impl Codec for CompileStats {
             peeled_barriers: usize::get(r)?,
             uniform_regs: usize::get(r)?,
             divergent_regions: usize::get(r)?,
+            bytecode_regions: usize::get(r)?,
+            bytecode_fused: usize::get(r)?,
+            bytecode_insts: usize::get(r)?,
             opt: OptStats::get(r)?,
         })
     }
@@ -809,6 +1110,7 @@ impl Codec for WorkGroupFunction {
         self.reg_uniform.put(w);
         self.region_divergent.put(w);
         self.stats.put(w);
+        self.bytecode.put(w);
     }
     fn get(r: &mut R) -> Result<Self> {
         let name = r.str()?;
@@ -819,6 +1121,7 @@ impl Codec for WorkGroupFunction {
         let reg_uniform: Vec<bool> = Vec::get(r)?;
         let region_divergent: Vec<bool> = Vec::get(r)?;
         let stats = CompileStats::get(r)?;
+        let bytecode: Option<BytecodeProgram> = Option::get(r)?;
         // Metadata consistency: the engines index these without bounds
         // checks of their own.
         let nblocks = reg_fn.blocks.len() as u32;
@@ -836,6 +1139,9 @@ impl Codec for WorkGroupFunction {
         if region_divergent.len() != regions.len() {
             return Err(bad("region_divergent length does not match the region count"));
         }
+        if let Some(prog) = &bytecode {
+            verify_bytecode(prog, &reg_fn)?;
+        }
         Ok(WorkGroupFunction {
             name,
             reg_fn,
@@ -845,8 +1151,140 @@ impl Codec for WorkGroupFunction {
             reg_uniform,
             region_divergent,
             stats,
+            bytecode,
         })
     }
+}
+
+/// Structural checks on a decoded bytecode program: the engine indexes
+/// frames, constant pools and the code array with these values and (like
+/// the IR `verify` call above) must never have to bounds-check a cached
+/// artifact at dispatch time.
+fn verify_bytecode(prog: &BytecodeProgram, reg_fn: &Function) -> Result<()> {
+    if prog.reg_count != reg_fn.reg_count() {
+        return Err(bad(format!(
+            "bytecode register count {} does not match the function's {}",
+            prog.reg_count,
+            reg_fn.reg_count()
+        )));
+    }
+    let nblocks = reg_fn.blocks.len() as u32;
+    let nparams = reg_fn.params.len() as u32;
+    let nslots = reg_fn.slots.len() as u32;
+    for (i, region) in prog.regions.iter().enumerate() {
+        let err = |msg: String| bad(format!("bytecode region {i}: {msg}"));
+        if region.start.0 >= nblocks {
+            return Err(err(format!("start bb{} out of range", region.start.0)));
+        }
+        if region.code.is_empty() {
+            return Err(err("empty code array".into()));
+        }
+        let nslot = prog.reg_count + region.consts.len() as u32;
+        let npc = region.code.len() as u32;
+        for c in &region.consts {
+            match c {
+                BcConst::Arg(a) if *a >= nparams => {
+                    return Err(err(format!("const arg {a} out of range")));
+                }
+                BcConst::Slot(s) if s.0 >= nslots => {
+                    return Err(err(format!("const slot {} out of range", s.0)));
+                }
+                _ => {}
+            }
+        }
+        let slot = |s: u32| -> Result<()> {
+            if s >= nslot {
+                return Err(err(format!("slot {s} exceeds frame+pool size {nslot}")));
+            }
+            Ok(())
+        };
+        let pc_ok = |p: u32| -> Result<()> {
+            if p >= npc {
+                return Err(err(format!("pc target {p} exceeds code length {npc}")));
+            }
+            Ok(())
+        };
+        let blk = |b: BlockId| -> Result<()> {
+            if b.0 >= nblocks {
+                return Err(err(format!("IR target bb{} out of range", b.0)));
+            }
+            Ok(())
+        };
+        for inst in &region.code {
+            match inst {
+                BcInst::Bin { dst, a, b, .. } => {
+                    slot(*dst)?;
+                    slot(*a)?;
+                    slot(*b)?;
+                }
+                BcInst::Un { dst, a, .. } | BcInst::Cast { dst, a, .. } => {
+                    slot(*dst)?;
+                    slot(*a)?;
+                }
+                BcInst::Load { dst, ptr, .. } => {
+                    slot(*dst)?;
+                    slot(*ptr)?;
+                }
+                BcInst::Store { ptr, val, .. } => {
+                    slot(*ptr)?;
+                    slot(*val)?;
+                }
+                BcInst::Gep { dst, base, idx, .. }
+                | BcInst::GepLoad { dst, base, idx, .. } => {
+                    slot(*dst)?;
+                    slot(*base)?;
+                    slot(*idx)?;
+                }
+                BcInst::Wi { dst, .. } => slot(*dst)?,
+                BcInst::Math { dst, args, .. } => {
+                    slot(*dst)?;
+                    for a in args {
+                        slot(*a)?;
+                    }
+                }
+                BcInst::Select { dst, cond, a, b, .. } => {
+                    slot(*dst)?;
+                    slot(*cond)?;
+                    slot(*a)?;
+                    slot(*b)?;
+                }
+                BcInst::LoadBin { dst, ptr, other, .. } => {
+                    slot(*dst)?;
+                    slot(*ptr)?;
+                    slot(*other)?;
+                }
+                BcInst::BinStore { ptr, a, b, .. } => {
+                    slot(*ptr)?;
+                    slot(*a)?;
+                    slot(*b)?;
+                }
+                BcInst::MulAdd { dst, a, b, c, .. } => {
+                    slot(*dst)?;
+                    slot(*a)?;
+                    slot(*b)?;
+                    slot(*c)?;
+                }
+                BcInst::CmpBr { a, b, t, f, ir_t, ir_f, .. } => {
+                    slot(*a)?;
+                    slot(*b)?;
+                    pc_ok(*t)?;
+                    pc_ok(*f)?;
+                    blk(*ir_t)?;
+                    blk(*ir_f)?;
+                }
+                BcInst::Jump { pc } => pc_ok(*pc)?,
+                BcInst::Br { cond, t, f, ir_t, ir_f } => {
+                    slot(*cond)?;
+                    pc_ok(*t)?;
+                    pc_ok(*f)?;
+                    blk(*ir_t)?;
+                    blk(*ir_f)?;
+                }
+                BcInst::End { barrier } => blk(*barrier)?,
+            }
+        }
+    }
+    Ok(())
 }
 
 impl Codec for SpecKey {

@@ -20,10 +20,10 @@ pub struct Platform {
 impl Platform {
     /// The default platform with the device set used throughout §6:
     /// `basic` (serial), `pthread` (threaded gang, AVX2-width), narrow-SIMD
-    /// variants (NEON/AltiVec width), lane-batched vector-gang devices at
-    /// the host-detected width, a fiber baseline device, and the TTA
-    /// simulator. The `pjrt` device is added separately because it needs
-    /// artifacts (see `devices::pjrt`).
+    /// variants (NEON/AltiVec width), lane-batched vector-gang and
+    /// threaded-bytecode devices at the host-detected width, a fiber
+    /// baseline device, and the TTA simulator. The `pjrt` device is added
+    /// separately because it needs artifacts (see `devices::pjrt`).
     pub fn default_platform() -> Platform {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
         let vw = native_gang_width();
@@ -35,6 +35,8 @@ impl Platform {
                 Arc::new(ThreadedDevice::new(EngineKind::Gang(4), 2)),
                 Arc::new(ThreadedDevice::new(EngineKind::GangVector(vw), cores)),
                 Arc::new(BasicDevice::new(EngineKind::GangVector(vw))),
+                Arc::new(ThreadedDevice::new(EngineKind::Bytecode(vw), cores)),
+                Arc::new(BasicDevice::new(EngineKind::Bytecode(vw))),
                 Arc::new(BasicDevice::new(EngineKind::Fiber)),
                 Arc::new(TtaSimDevice::new(true)),
             ],
@@ -94,11 +96,13 @@ mod tests {
     #[test]
     fn default_platform_has_expected_devices() {
         let p = Platform::default_platform();
-        assert!(p.devices.len() >= 7);
+        assert!(p.devices.len() >= 9);
         assert!(p.device("basic-serial").is_some());
         assert!(p.device("pthread-gang(8)").is_some());
         assert!(p.device("basic-gangvector").is_some(), "lane-batched vector device present");
         assert!(p.device("pthread-gangvector").is_some());
+        assert!(p.device("basic-bytecode").is_some(), "threaded-bytecode device present");
+        assert!(p.device("pthread-bytecode").is_some());
         assert!(p.device("ttasim").is_some(), "unique substring resolves");
         assert!(p.device("nonexistent").is_none());
     }

@@ -33,6 +33,10 @@ pub enum EngineKind {
     /// dispatch per instruction per *gang*, uniform values computed once
     /// (`exec::vecgang`). Use [`native_gang_width`] for a host-tuned width.
     GangVector(usize),
+    /// Threaded-bytecode tier over lane-batched gangs of the given width:
+    /// covered regions run pre-resolved, fused bytecode (`exec::bytecode`),
+    /// the rest fall back to the `GangVector` region interpreter.
+    Bytecode(usize),
     /// Per-work-item fibers (FreeOCL / Twin Peaks baseline).
     Fiber,
 }
@@ -43,12 +47,8 @@ pub enum EngineKind {
 /// vector engine is specialised for widths 2/4/8/16; other values degrade
 /// to the per-lane gang engine).
 pub fn native_gang_width() -> usize {
-    if let Some(w) =
-        std::env::var("POCLRS_GANG_WIDTH").ok().and_then(|v| v.parse::<usize>().ok())
-    {
-        if w > 0 {
-            return w;
-        }
+    if let Some(w) = gang_width_override(std::env::var("POCLRS_GANG_WIDTH").ok().as_deref()) {
+        return w;
     }
     #[cfg(target_arch = "x86_64")]
     {
@@ -59,6 +59,26 @@ pub fn native_gang_width() -> usize {
     4
 }
 
+/// Parse a `POCLRS_GANG_WIDTH` override. Invalid values (unparsable, or
+/// `0`) are rejected with a one-time stderr warning instead of being
+/// silently ignored, so a typo'd override is diagnosable.
+fn gang_width_override(raw: Option<&str>) -> Option<usize> {
+    let raw = raw?;
+    match raw.parse::<usize>() {
+        Ok(w) if w > 0 => Some(w),
+        _ => {
+            static WARN: std::sync::Once = std::sync::Once::new();
+            WARN.call_once(|| {
+                eprintln!(
+                    "poclrs: ignoring invalid POCLRS_GANG_WIDTH={raw:?} \
+                     (expected a positive integer); autodetecting"
+                );
+            });
+            None
+        }
+    }
+}
+
 /// Compile options for a CPU device running `engine`: the CPU target
 /// class plus the engine's gang width. Both are cache-key components
 /// (see `cache::key`), so a width-8 gang device and a serial device
@@ -66,7 +86,7 @@ pub fn native_gang_width() -> usize {
 /// consume the same compiled forms.
 pub fn cpu_compile_options(engine: EngineKind) -> CompileOptions {
     let gang_width = match engine {
-        EngineKind::Gang(w) | EngineKind::GangVector(w) => w,
+        EngineKind::Gang(w) | EngineKind::GangVector(w) | EngineKind::Bytecode(w) => w,
         EngineKind::Serial | EngineKind::Fiber => 0,
     };
     CompileOptions { target: TargetKind::Cpu, gang_width, ..Default::default() }
@@ -153,6 +173,14 @@ pub struct LaunchStats {
     /// Per-lane instruction dispatches (scalar gang lockstep and both
     /// engines' divergence/tail fallback paths).
     pub lane_insts: usize,
+    /// Bytecode dispatches (threaded-bytecode engine; superinstructions
+    /// count once).
+    pub bytecode_insts: usize,
+    /// Gang-regions executed through the bytecode tier.
+    pub bytecode_gangs: usize,
+    /// Gang-regions with no lowered bytecode that fell back to the vector
+    /// region interpreter.
+    pub bytecode_fallbacks: usize,
     /// Simulated cycles (ttasim only).
     pub cycles: u64,
 }
@@ -165,6 +193,9 @@ impl LaunchStats {
         self.vector_insts += g.vector_insts;
         self.uniform_insts += g.uniform_insts;
         self.lane_insts += g.lane_insts;
+        self.bytecode_insts += g.bytecode_insts;
+        self.bytecode_gangs += g.bytecode_gangs;
+        self.bytecode_fallbacks += g.bytecode_fallbacks;
     }
 
     /// Fold another launch's statistics into this one (worker pools,
@@ -176,13 +207,17 @@ impl LaunchStats {
         self.vector_insts += other.vector_insts;
         self.uniform_insts += other.uniform_insts;
         self.lane_insts += other.lane_insts;
+        self.bytecode_insts += other.bytecode_insts;
+        self.bytecode_gangs += other.bytecode_gangs;
+        self.bytecode_fallbacks += other.bytecode_fallbacks;
         self.cycles += other.cycles;
     }
 
     /// Total interpreter dispatches across the launch — the metric the
-    /// lane-batched engine shrinks by ~width× on uniform kernels.
+    /// lane-batched engine shrinks by ~width× on uniform kernels and the
+    /// bytecode tier shrinks further via superinstruction fusion.
     pub fn dispatches(&self) -> usize {
-        self.vector_insts + self.uniform_insts + self.lane_insts
+        self.vector_insts + self.uniform_insts + self.lane_insts + self.bytecode_insts
     }
 }
 
@@ -222,9 +257,36 @@ pub fn run_one_group(
         EngineKind::GangVector(w) => {
             crate::exec::vecgang::run_workgroup(wgf, args, &mut mem, ctx, w)
         }
+        EngineKind::Bytecode(w) => {
+            crate::exec::bytecode::run_workgroup(wgf, args, &mut mem, ctx, w)
+        }
         EngineKind::Fiber => {
             crate::exec::fiber::run_workgroup(wgf, args, &mut mem, ctx)?;
             Ok(Default::default())
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gang_width_override;
+
+    #[test]
+    fn gang_width_override_accepts_positive_integers() {
+        assert_eq!(gang_width_override(Some("8")), Some(8));
+        assert_eq!(gang_width_override(Some("4")), Some(4));
+        assert_eq!(gang_width_override(Some("16")), Some(16));
+    }
+
+    #[test]
+    fn gang_width_override_rejects_invalid_values() {
+        // Unparsable and zero overrides fall through to autodetection
+        // (with a one-time warning) instead of panicking or silently
+        // producing width 0.
+        assert_eq!(gang_width_override(Some("banana")), None);
+        assert_eq!(gang_width_override(Some("0")), None);
+        assert_eq!(gang_width_override(Some("")), None);
+        assert_eq!(gang_width_override(Some("-4")), None);
+        assert_eq!(gang_width_override(None), None);
     }
 }

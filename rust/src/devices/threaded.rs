@@ -55,6 +55,9 @@ impl Device for ThreadedDevice {
                 EngineKind::GangVector(8) => "gang-vector x8 (AVX2 SoA)",
                 EngineKind::GangVector(4) => "gang-vector x4 (NEON/AltiVec SoA)",
                 EngineKind::GangVector(_) => "gang-vector (SoA)",
+                EngineKind::Bytecode(8) => "bytecode x8 (fused SoA dispatch)",
+                EngineKind::Bytecode(4) => "bytecode x4 (fused SoA dispatch)",
+                EngineKind::Bytecode(_) => "bytecode (fused SoA dispatch)",
                 EngineKind::Serial => "scalar WI loops",
                 EngineKind::Fiber => "fibers (no DLP)",
             },

@@ -1,0 +1,545 @@
+//! Region → bytecode lowering: the target-specific mapping stage that
+//! flattens uniform, barrier-free parallel regions of `reg_fn` into the
+//! linear [`BcRegion`] form, fusing the hottest adjacent-instruction
+//! idioms into superinstructions along the way.
+//!
+//! Legality is conservative: a region group is lowered only if every
+//! sibling region sharing the entry block is statically non-divergent
+//! (`region_divergent`), contains only the supported scalar instruction
+//! set, and flows only into closure blocks or barrier blocks. Anything
+//! else is simply left out of the program — the engine falls back to
+//! `vecgang` per region, so coverage can grow without a correctness
+//! cliff.
+//!
+//! Fusion safety: a producer is folded into its consumer only when the
+//! producer's register has exactly **one** use in the whole closure
+//! (registers are block-local and never renumbered, so a function-wide
+//! count is exact). The fused instruction evaluates the same kernels in
+//! the same order as the unfused pair — `MulAdd` in particular stays a
+//! separate mul-then-add (never an FMA), preserving bit-identical
+//! results.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::ir::func::Function;
+use crate::ir::inst::{BinOp, BlockId, Imm, Inst, Operand, Reg, Term};
+use crate::ir::types::Scalar;
+use crate::kcc::Region;
+
+use super::prog::{BcConst, BcInst, BcRegion, BcSlot, BytecodeProgram};
+
+/// Lowering statistics, folded into `CompileStats`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LowerStats {
+    /// Regions covered by the bytecode program.
+    pub covered_regions: usize,
+    /// Superinstructions formed (each replaces two dispatches with one).
+    pub fused: usize,
+    /// Total bytecode instructions emitted.
+    pub insts: usize,
+}
+
+/// Lower every coverable region of `f`. Returns `None` when nothing is
+/// coverable (the engine then falls back to `vecgang` wholesale).
+pub fn lower(
+    f: &Function,
+    regions: &[Region],
+    region_divergent: &[bool],
+) -> (Option<BytecodeProgram>, LowerStats) {
+    let mut stats = LowerStats::default();
+    // Sibling regions share an entry block (the `Jump` target of their
+    // opening barrier); the engine enters by block, so lower per group.
+    let mut groups: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+    for (i, r) in regions.iter().enumerate() {
+        if let Term::Jump(s) = f.block(r.pre).term {
+            groups.entry(s.0).or_default().push(i);
+        }
+    }
+    let mut out = Vec::new();
+    for (start, idxs) in groups {
+        if idxs.iter().any(|&i| region_divergent.get(i).copied().unwrap_or(true)) {
+            continue;
+        }
+        if let Some(r) = lower_group(f, regions, &idxs, BlockId(start), &mut stats) {
+            stats.covered_regions += idxs.len();
+            stats.insts += r.code.len();
+            out.push(r);
+        }
+    }
+    if out.is_empty() {
+        return (None, stats);
+    }
+    (Some(BytecodeProgram { reg_count: f.reg_count(), regions: out }), stats)
+}
+
+/// Dedup key for the constant pool (floats keyed by bit pattern).
+#[derive(PartialEq, Eq, Hash)]
+enum ConstKey {
+    Int(i64, Scalar),
+    Float(u64, Scalar),
+    Arg(u32),
+    Slot(u32),
+}
+
+/// Operand → slot resolver with a deduplicated constant pool.
+struct Pool {
+    reg_count: u32,
+    map: HashMap<ConstKey, u32>,
+    consts: Vec<BcConst>,
+}
+
+impl Pool {
+    fn slot(&mut self, op: &Operand) -> BcSlot {
+        match op {
+            Operand::Reg(r) => r.0,
+            Operand::Imm(Imm::Int(v, s)) => self.konst(ConstKey::Int(*v, *s), BcConst::Int(*v, *s)),
+            Operand::Imm(Imm::Float(v, s)) => {
+                self.konst(ConstKey::Float(v.to_bits(), *s), BcConst::Float(*v, *s))
+            }
+            Operand::Arg(a) => self.konst(ConstKey::Arg(*a), BcConst::Arg(*a)),
+            Operand::Slot(s) => self.konst(ConstKey::Slot(s.0), BcConst::Slot(*s)),
+        }
+    }
+
+    fn konst(&mut self, key: ConstKey, val: BcConst) -> BcSlot {
+        if let Some(&i) = self.map.get(&key) {
+            return self.reg_count + i;
+        }
+        let i = self.consts.len() as u32;
+        self.map.insert(key, i);
+        self.consts.push(val);
+        self.reg_count + i
+    }
+}
+
+fn lower_group(
+    f: &Function,
+    regions: &[Region],
+    idxs: &[usize],
+    start: BlockId,
+    stats: &mut LowerStats,
+) -> Option<BcRegion> {
+    // Empty region (two adjacent barriers): the opening barrier jumps
+    // straight to the closing one.
+    if f.block(start).has_barrier() {
+        return Some(BcRegion {
+            start,
+            consts: Vec::new(),
+            code: vec![BcInst::End { barrier: start }],
+        });
+    }
+    // Closure: union of the sibling regions' body blocks.
+    let mut closure: Vec<BlockId> =
+        idxs.iter().flat_map(|&i| regions[i].blocks.iter().copied()).collect();
+    closure.sort();
+    closure.dedup();
+    let in_closure: HashSet<BlockId> = closure.iter().copied().collect();
+    if !in_closure.contains(&start) {
+        return None;
+    }
+
+    // Legality: supported scalar instruction set only, every
+    // value-producing instruction keeps its def, no returns, and control
+    // flow stays within the closure or exits to barrier blocks.
+    for &b in &closure {
+        let blk = f.block(b);
+        for (def, inst) in &blk.insts {
+            match inst {
+                Inst::Bin { .. }
+                | Inst::Un { .. }
+                | Inst::Cast { .. }
+                | Inst::Load { .. }
+                | Inst::Gep { .. }
+                | Inst::Wi { .. }
+                | Inst::Math { .. }
+                | Inst::Select { .. } => {
+                    if def.is_none() {
+                        return None;
+                    }
+                }
+                Inst::Store { .. } | Inst::Marker { .. } => {}
+                // Short-vector ops and (impossible here) barriers fall
+                // back to the vecgang region interpreter.
+                _ => return None,
+            }
+        }
+        if matches!(blk.term, Term::Ret) {
+            return None;
+        }
+        for s in blk.term.succs() {
+            if !in_closure.contains(&s) && !f.block(s).has_barrier() {
+                return None;
+            }
+        }
+    }
+
+    // Register use counts over the closure (defs are function-unique, so
+    // this is exact) — the single-use guard of the peephole fuser.
+    let mut uses = vec![0u32; f.reg_count() as usize];
+    for &b in &closure {
+        let blk = f.block(b);
+        for (_, inst) in &blk.insts {
+            for op in inst.operands() {
+                if let Operand::Reg(r) = op {
+                    uses[r.0 as usize] += 1;
+                }
+            }
+        }
+        if let Term::Br { cond: Operand::Reg(r), .. } = &blk.term {
+            uses[r.0 as usize] += 1;
+        }
+    }
+
+    // Linear layout: entry block first, the rest in id order.
+    let mut order: Vec<BlockId> = vec![start];
+    order.extend(closure.iter().copied().filter(|&b| b != start));
+
+    let mut pool = Pool { reg_count: f.reg_count(), map: HashMap::new(), consts: Vec::new() };
+    let mut code: Vec<BcInst> = Vec::new();
+    let mut block_pc: HashMap<u32, u32> = HashMap::new();
+    // Branch-target fields hold IR block ids until patched below.
+    let mut fixups: Vec<usize> = Vec::new();
+    let mut end_targets: Vec<BlockId> = Vec::new();
+
+    for (oi, &b) in order.iter().enumerate() {
+        block_pc.insert(b.0, code.len() as u32);
+        let block_base = code.len();
+        let blk = f.block(b);
+        for (def, inst) in &blk.insts {
+            if matches!(inst, Inst::Marker { .. }) {
+                continue; // no-ops cost a dispatch in vecgang, none here
+            }
+            emit_inst(def, inst, &mut pool, &mut code, block_base, &uses, stats);
+        }
+        match &blk.term {
+            Term::Jump(t) => {
+                if f.block(*t).has_barrier() {
+                    code.push(BcInst::End { barrier: *t });
+                } else if order.get(oi + 1) == Some(t) {
+                    // Fall through to the next block.
+                } else {
+                    fixups.push(code.len());
+                    code.push(BcInst::Jump { pc: t.0 });
+                }
+            }
+            Term::Br { cond, t, f: fb } => {
+                let (ir_t, ir_f) = (*t, *fb);
+                for tgt in [ir_t, ir_f] {
+                    if !in_closure.contains(&tgt) && !end_targets.contains(&tgt) {
+                        end_targets.push(tgt);
+                    }
+                }
+                let fused = match if code.len() > block_base { code.last() } else { None } {
+                    Some(BcInst::Bin { op, ty, dst, a: ca, b: cb })
+                        if op.is_cmp()
+                            && matches!(cond, Operand::Reg(r)
+                                if r.0 == *dst && uses[r.0 as usize] == 1) =>
+                    {
+                        Some(BcInst::CmpBr {
+                            op: *op,
+                            ty: ty.clone(),
+                            a: *ca,
+                            b: *cb,
+                            t: ir_t.0,
+                            f: ir_f.0,
+                            ir_t,
+                            ir_f,
+                        })
+                    }
+                    _ => None,
+                };
+                if let Some(cb) = fused {
+                    code.pop();
+                    stats.fused += 1;
+                    fixups.push(code.len());
+                    code.push(cb);
+                } else {
+                    let c = pool.slot(cond);
+                    fixups.push(code.len());
+                    code.push(BcInst::Br { cond: c, t: ir_t.0, f: ir_f.0, ir_t, ir_f });
+                }
+            }
+            Term::Ret => unreachable!("rejected by the legality scan"),
+        }
+    }
+
+    // End stubs for conditional branches that exit to a barrier.
+    let mut end_pc: HashMap<u32, u32> = HashMap::new();
+    for tgt in end_targets {
+        end_pc.insert(tgt.0, code.len() as u32);
+        code.push(BcInst::End { barrier: tgt });
+    }
+    // Patch branch targets from IR block ids to program counters.
+    for i in fixups {
+        let resolve = |b: u32| -> u32 {
+            *block_pc.get(&b).or_else(|| end_pc.get(&b)).expect("branch target was emitted")
+        };
+        match &mut code[i] {
+            BcInst::Jump { pc } => *pc = resolve(*pc),
+            BcInst::Br { t, f, .. } | BcInst::CmpBr { t, f, .. } => {
+                *t = resolve(*t);
+                *f = resolve(*f);
+            }
+            _ => unreachable!("only branches are fixed up"),
+        }
+    }
+    Some(BcRegion { start, consts: pool.consts, code })
+}
+
+/// Translate one IR instruction, fusing it with the immediately
+/// preceding emission when the superinstruction patterns apply.
+#[allow(clippy::too_many_arguments)]
+fn emit_inst(
+    def: &Option<Reg>,
+    inst: &Inst,
+    pool: &mut Pool,
+    code: &mut Vec<BcInst>,
+    block_base: usize,
+    uses: &[u32],
+    stats: &mut LowerStats,
+) {
+    let dst = def.map(|r| r.0);
+    let last = if code.len() > block_base { code.last() } else { None };
+    let fused: Option<BcInst> = match inst {
+        // Address calculation feeding its load.
+        Inst::Load { ty, ptr: Operand::Reg(p) } => match last {
+            Some(BcInst::Gep { elem, dst: gd, base, idx })
+                if *gd == p.0 && uses[p.0 as usize] == 1 =>
+            {
+                Some(BcInst::GepLoad {
+                    elem: elem.clone(),
+                    ty: ty.clone(),
+                    dst: dst.expect("load defines a register"),
+                    base: *base,
+                    idx: *idx,
+                })
+            }
+            _ => None,
+        },
+        Inst::Bin { op, ty, a, b } => {
+            let d = dst.expect("bin defines a register");
+            match last {
+                // mul feeding add → separate mul-then-add superinstruction.
+                Some(BcInst::Bin { op: BinOp::Mul, ty: mty, dst: md, a: ma, b: mb })
+                    if *op == BinOp::Add && mty == ty =>
+                {
+                    let am = matches!(a, Operand::Reg(r) if r.0 == *md);
+                    let bm = matches!(b, Operand::Reg(r) if r.0 == *md);
+                    if am != bm && uses[*md as usize] == 1 {
+                        let (ma, mb) = (*ma, *mb);
+                        let c = pool.slot(if am { b } else { a });
+                        Some(BcInst::MulAdd { ty: ty.clone(), dst: d, a: ma, b: mb, c, mul_first: am })
+                    } else {
+                        None
+                    }
+                }
+                // Load feeding a binop.
+                Some(BcInst::Load { ty: lty, dst: ld, ptr }) => {
+                    let am = matches!(a, Operand::Reg(r) if r.0 == *ld);
+                    let bm = matches!(b, Operand::Reg(r) if r.0 == *ld);
+                    if am != bm && uses[*ld as usize] == 1 {
+                        let (lty, ptr) = (lty.clone(), *ptr);
+                        let other = pool.slot(if am { b } else { a });
+                        Some(BcInst::LoadBin {
+                            op: *op,
+                            ty: ty.clone(),
+                            load_ty: lty,
+                            dst: d,
+                            ptr,
+                            other,
+                            load_first: am,
+                        })
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            }
+        }
+        // Binop feeding its store.
+        Inst::Store { ty, ptr, val: Operand::Reg(v) } => match last {
+            Some(BcInst::Bin { op, ty: bty, dst: bd, a, b })
+                if *bd == v.0 && uses[v.0 as usize] == 1 =>
+            {
+                let (op, bty, a, b) = (*op, bty.clone(), *a, *b);
+                Some(BcInst::BinStore {
+                    op,
+                    ty: bty,
+                    store_ty: ty.clone(),
+                    ptr: pool.slot(ptr),
+                    a,
+                    b,
+                })
+            }
+            _ => None,
+        },
+        _ => None,
+    };
+    if let Some(fi) = fused {
+        code.pop();
+        stats.fused += 1;
+        code.push(fi);
+        return;
+    }
+    let bi = match inst {
+        Inst::Bin { op, ty, a, b } => BcInst::Bin {
+            op: *op,
+            ty: ty.clone(),
+            dst: dst.expect("bin defines a register"),
+            a: pool.slot(a),
+            b: pool.slot(b),
+        },
+        Inst::Un { op, ty, a } => BcInst::Un {
+            op: *op,
+            ty: ty.clone(),
+            dst: dst.expect("un defines a register"),
+            a: pool.slot(a),
+        },
+        Inst::Cast { to, from, a } => BcInst::Cast {
+            to: to.clone(),
+            from: from.clone(),
+            dst: dst.expect("cast defines a register"),
+            a: pool.slot(a),
+        },
+        Inst::Load { ty, ptr } => BcInst::Load {
+            ty: ty.clone(),
+            dst: dst.expect("load defines a register"),
+            ptr: pool.slot(ptr),
+        },
+        Inst::Store { ty, ptr, val } => {
+            BcInst::Store { ty: ty.clone(), ptr: pool.slot(ptr), val: pool.slot(val) }
+        }
+        Inst::Gep { elem, base, idx } => BcInst::Gep {
+            elem: elem.clone(),
+            dst: dst.expect("gep defines a register"),
+            base: pool.slot(base),
+            idx: pool.slot(idx),
+        },
+        Inst::Wi { func, dim } => {
+            BcInst::Wi { func: *func, dim: *dim, dst: dst.expect("wi defines a register") }
+        }
+        Inst::Math { func, ty, args } => BcInst::Math {
+            func: *func,
+            ty: ty.clone(),
+            dst: dst.expect("math defines a register"),
+            args: args.iter().map(|o| pool.slot(o)).collect(),
+        },
+        Inst::Select { ty, cond, a, b } => BcInst::Select {
+            ty: ty.clone(),
+            dst: dst.expect("select defines a register"),
+            cond: pool.slot(cond),
+            a: pool.slot(a),
+            b: pool.slot(b),
+        },
+        _ => unreachable!("rejected by the legality scan"),
+    };
+    code.push(bi);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::prog::BcInst;
+    use crate::frontend::compile;
+    use crate::kcc::{compile_workgroup, CompileOptions, WorkGroupFunction};
+
+    fn wg(src: &str, local: [usize; 3]) -> WorkGroupFunction {
+        let m = compile(src).unwrap();
+        let k = m.kernels.into_iter().next().unwrap();
+        compile_workgroup(&k, local, &CompileOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn vecadd_lowers_with_gep_load_fusion() {
+        let w = wg(
+            "__kernel void vecadd(__global const float *a, __global const float *b, __global float *c) {
+                 size_t i = get_global_id(0);
+                 c[i] = a[i] + b[i];
+             }",
+            [8, 1, 1],
+        );
+        let bc = w.bytecode.as_ref().expect("uniform kernel is coverable");
+        assert_eq!(bc.reg_count, w.reg_fn.reg_count());
+        assert_eq!(w.stats.bytecode_regions, w.stats.regions, "full coverage");
+        assert!(w.stats.bytecode_fused > 0, "gep+load idioms fuse: {:?}", w.stats);
+        let has_gepload = bc
+            .regions
+            .iter()
+            .any(|r| r.code.iter().any(|i| matches!(i, BcInst::GepLoad { .. })));
+        assert!(has_gepload, "{bc:?}");
+        // Every region ends in End and branch targets stay in range.
+        for r in &bc.regions {
+            assert!(matches!(r.code.last(), Some(BcInst::End { .. })));
+            for i in &r.code {
+                match i {
+                    BcInst::Jump { pc } => assert!((*pc as usize) < r.code.len()),
+                    BcInst::Br { t, f, .. } | BcInst::CmpBr { t, f, .. } => {
+                        assert!((*t as usize) < r.code.len());
+                        assert!((*f as usize) < r.code.len());
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn divergent_region_is_not_lowered() {
+        let w = wg(
+            "__kernel void k(__global float *x, uint w) {
+                 float v = x[get_global_id(0)];
+                 if (get_global_id(0) > (size_t)w) { v = v * 2.0f; }
+                 x[get_global_id(0)] = v;
+             }",
+            [8, 1, 1],
+        );
+        assert!(w.stats.divergent_regions >= 1);
+        assert!(
+            w.stats.bytecode_regions < w.stats.regions,
+            "divergent regions stay uncovered: {:?}",
+            w.stats
+        );
+    }
+
+    #[test]
+    fn uniform_loop_lowers_with_cmp_branch_fusion() {
+        // `horizontal: false` keeps the reduction loop a plain uniform
+        // inner loop (no implicit-barrier instrumentation), and the
+        // `j * 2u` condition keeps the compare's producer non-adjacent so
+        // the compare is still the last emission when the branch fuses.
+        let m = compile(
+            "__kernel void k(__global float *x, uint n) {
+                 float acc = 0.0f;
+                 for (uint j = 0u; j * 2u < n; j++) { acc = acc + x[j]; }
+                 x[get_global_id(0)] = acc;
+             }",
+        )
+        .unwrap();
+        let k = m.kernels.into_iter().next().unwrap();
+        let opts = CompileOptions { horizontal: false, ..Default::default() };
+        let w = compile_workgroup(&k, [4, 1, 1], &opts).unwrap();
+        let bc = w.bytecode.as_ref().expect("uniform loop is coverable");
+        let has_cmpbr = bc
+            .regions
+            .iter()
+            .any(|r| r.code.iter().any(|i| matches!(i, BcInst::CmpBr { .. })));
+        assert!(has_cmpbr, "loop exit test fuses into cmp+branch: {bc:?}");
+    }
+
+    #[test]
+    fn vector_build_ops_fall_back() {
+        // Vector construction/swizzle instructions are outside the
+        // supported set — the whole region stays with `vecgang`.
+        let w = wg(
+            "__kernel void vk(__global float4 *v) {
+                 size_t i = get_global_id(0);
+                 float4 a = v[i];
+                 float4 b = (float4)(1.0f, 2.0f, 3.0f, 4.0f);
+                 a = a * b + a.wzyx;
+                 v[i] = a;
+             }",
+            [4, 1, 1],
+        );
+        assert_eq!(w.stats.bytecode_regions, 0, "{:?}", w.stats);
+        assert!(w.bytecode.is_none());
+    }
+}

@@ -1,0 +1,29 @@
+//! Threaded-bytecode execution tier — stage (a) of the native-code tier.
+//!
+//! The interpreters pay one dispatch per IR instruction per gang *plus*
+//! operand marshalling (register `Vec` indexing through an `Operand`
+//! `match`, HashMap-free but still two indirections). This tier removes
+//! that constant factor without leaving safe Rust: [`lower`] flattens
+//! each uniform, barrier-free parallel region of `reg_fn` into linear
+//! bytecode with pre-resolved register/constant slots and
+//! program-counter branch targets, fusing the hottest adjacent idioms
+//! (address-calc+load, load+binop, binop+store, mul+add, cmp+branch)
+//! into superinstructions; [`run_workgroup`] executes it with a tight
+//! `loop { match }` over the same SoA [`crate::exec::VLane`] gang values
+//! the vector engine uses — same evaluation kernels, so bit-identical
+//! results.
+//!
+//! Coverage is incremental by construction: regions the lowerer rejects
+//! (divergent control, vector-build/shuffle ops, …) simply have no
+//! bytecode and run through [`crate::exec::vecgang`] per region on the
+//! same gang state; a dynamically divergent branch falls back to the
+//! shared per-lane path mid-region. The lowered program rides in the
+//! poclbin cache (format v3), so warm starts skip lowering too.
+
+mod lower;
+mod prog;
+mod run;
+
+pub use lower::{lower, LowerStats};
+pub use prog::{BcConst, BcInst, BcRegion, BcSlot, BytecodeProgram};
+pub use run::run_workgroup;

@@ -1,0 +1,128 @@
+//! The flattened bytecode program: the artifact the threaded-dispatch
+//! engine executes (and `poclbin` v3 caches).
+//!
+//! One [`BcRegion`] per coverable parallel region of `reg_fn`: a linear
+//! instruction array with branch targets pre-resolved to program-counter
+//! indices and every operand pre-resolved to a *slot* — `slot <
+//! reg_count` addresses the gang's register frame, anything above
+//! addresses the region's constant pool (immediates, arguments, alloca
+//! base pointers), which the engine materialises once per work-group.
+//! The hottest adjacent-instruction idioms are fused into
+//! superinstructions at lowering time, so one dispatch covers what cost
+//! the region interpreters two.
+
+use crate::ir::inst::{BinOp, BlockId, MathFn, SlotId, UnOp, WiFn};
+use crate::ir::types::{Scalar, Type};
+
+/// Operand slot: index into the register frame (`< reg_count`) or the
+/// region's constant pool (`>= reg_count`, biased by `reg_count`).
+pub type BcSlot = u32;
+
+/// A constant-pool entry, resolved to a uniform [`crate::exec::VLane`]
+/// once per work-group (arguments and slot bases are launch-invariant).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BcConst {
+    /// Integer immediate (normalised to `Scalar` at resolve time).
+    Int(i64, Scalar),
+    /// Float immediate (normalised to `Scalar` at resolve time).
+    Float(f64, Scalar),
+    /// Work-group function argument by index.
+    Arg(u32),
+    /// Base pointer of a private alloca slot.
+    Slot(SlotId),
+}
+
+/// One flattened bytecode instruction. `dst`/operand fields are
+/// [`BcSlot`]s; `t`/`f`/`pc` branch fields are indices into the owning
+/// region's `code` array. `ir_t`/`ir_f` keep the original IR block
+/// targets so a dynamically divergent branch can hand the gang's lanes
+/// to the per-lane fallback (and so barrier targets stay identifiable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BcInst {
+    /// `dst = a <op> b`.
+    Bin { op: BinOp, ty: Type, dst: BcSlot, a: BcSlot, b: BcSlot },
+    /// `dst = <op> a`.
+    Un { op: UnOp, ty: Type, dst: BcSlot, a: BcSlot },
+    /// `dst = (to) a`.
+    Cast { to: Type, from: Type, dst: BcSlot, a: BcSlot },
+    /// `dst = load ty, ptr`.
+    Load { ty: Type, dst: BcSlot, ptr: BcSlot },
+    /// `store val, ptr`.
+    Store { ty: Type, ptr: BcSlot, val: BcSlot },
+    /// `dst = base + idx * sizeof(elem)`.
+    Gep { elem: Type, dst: BcSlot, base: BcSlot, idx: BcSlot },
+    /// `dst = wi_fn(dim)`.
+    Wi { func: WiFn, dim: u32, dst: BcSlot },
+    /// `dst = math_fn(args...)`.
+    Math { func: MathFn, ty: Type, dst: BcSlot, args: Vec<BcSlot> },
+    /// `dst = cond ? a : b`.
+    Select { ty: Type, dst: BcSlot, cond: BcSlot, a: BcSlot, b: BcSlot },
+    /// Superinstruction: `dst = load ty, (base + idx * sizeof(elem))` —
+    /// address calculation fused with the dependent load.
+    GepLoad { elem: Type, ty: Type, dst: BcSlot, base: BcSlot, idx: BcSlot },
+    /// Superinstruction: `t = load load_ty, ptr; dst = t <op> other`
+    /// (`load_first` = the loaded value is the *left* operand).
+    LoadBin {
+        op: BinOp,
+        ty: Type,
+        load_ty: Type,
+        dst: BcSlot,
+        ptr: BcSlot,
+        other: BcSlot,
+        load_first: bool,
+    },
+    /// Superinstruction: `store (a <op> b), ptr` — binop feeding a store.
+    BinStore { op: BinOp, ty: Type, store_ty: Type, ptr: BcSlot, a: BcSlot, b: BcSlot },
+    /// Superinstruction: `dst = (a * b) + c` evaluated as the separate
+    /// mul-then-add the IR wrote (never contracted to an FMA, so results
+    /// stay bit-identical to the interpreters). `mul_first` = the product
+    /// was the *left* operand of the add.
+    MulAdd { ty: Type, dst: BcSlot, a: BcSlot, b: BcSlot, c: BcSlot, mul_first: bool },
+    /// Superinstruction: compare-and-branch (`a <op> b ? t : f`).
+    CmpBr {
+        op: BinOp,
+        ty: Type,
+        a: BcSlot,
+        b: BcSlot,
+        t: u32,
+        f: u32,
+        ir_t: BlockId,
+        ir_f: BlockId,
+    },
+    /// Unconditional jump to `pc` (only emitted when the target is not
+    /// the fall-through instruction).
+    Jump { pc: u32 },
+    /// Conditional branch on an already-computed value.
+    Br { cond: BcSlot, t: u32, f: u32, ir_t: BlockId, ir_f: BlockId },
+    /// Region exit: the gang reached the barrier block `barrier`.
+    End { barrier: BlockId },
+}
+
+/// One lowered parallel region.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BcRegion {
+    /// The IR block the region is entered from (the `Jump` target of its
+    /// opening barrier block) — the engine keys fallback dispatch on it.
+    pub start: BlockId,
+    /// Constant pool; entry `i` is addressed as slot `reg_count + i`.
+    pub consts: Vec<BcConst>,
+    /// Flattened instruction stream; execution starts at `code[0]`.
+    pub code: Vec<BcInst>,
+}
+
+/// A compiled bytecode program: every coverable region of one `reg_fn`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BytecodeProgram {
+    /// Register-frame size the slots were resolved against (must equal
+    /// the consuming `reg_fn`'s `reg_count`).
+    pub reg_count: u32,
+    /// Lowered regions (uncovered regions simply have no entry here).
+    pub regions: Vec<BcRegion>,
+}
+
+impl BytecodeProgram {
+    /// Total instructions across all regions (reported via `--stats`).
+    pub fn inst_count(&self) -> usize {
+        self.regions.iter().map(|r| r.code.len()).sum()
+    }
+}

@@ -1,0 +1,452 @@
+//! The threaded-dispatch engine: a tight `loop { match }` over flattened
+//! bytecode, one dispatch per (super)instruction per gang.
+//!
+//! Execution state is exactly the vector engine's: SoA [`VLane`] gang
+//! values, a [`VecStore`] of private cells, the same uniform → SIMD-fast
+//! → per-lane evaluation kernels — so results are bit-identical to every
+//! other engine by construction. What changes is the dispatch cost:
+//! operands are pre-resolved slot indices into a flat register frame (no
+//! operand `match`, no per-region frame allocation — frames persist per
+//! gang because registers are block-local), branch targets are program
+//! counters, and the fused superinstructions retire two or three IR
+//! instructions per dispatch.
+//!
+//! Fallback is per *region*: a region without lowered bytecode (divergent
+//! control, unsupported ops) runs through
+//! [`vecgang::run_gang_region_vec`] on the very same gang state. A
+//! dynamically divergent branch inside bytecode hands the gang's lanes to
+//! the shared per-lane path, exactly like the vector engine.
+
+use crate::cl::error::{Error, Result};
+use crate::ir::func::Function;
+use crate::ir::inst::{BinOp, BlockId, Term};
+use crate::kcc::WorkGroupFunction;
+
+use super::super::gang::{note_barrier, run_lane_to_barrier, GangStats};
+use super::super::interp::{LaunchCtx, SlotStore};
+use super::super::mem::MemoryRefs;
+use super::super::value::{norm_float, norm_int, Val, VLane, VVal, SP_PRIVATE};
+use super::super::vecgang::{
+    self, bin_vlane, cast_vlane, gep_vlane, load_vlane, math_vlane, select_vlane, store_vlane,
+    un_vlane, wi_vlane, GangState, VecStore,
+};
+use super::prog::{BcConst, BcInst, BcSlot};
+
+/// Execute one work-group through the bytecode tier in gangs of `width`
+/// lanes. Widths outside [`vecgang::SUPPORTED_WIDTHS`] — and programs
+/// with no lowered bytecode at all — degrade to the vector engine.
+pub fn run_workgroup(
+    wgf: &WorkGroupFunction,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+    width: usize,
+) -> Result<GangStats> {
+    match width {
+        2 => run_wg::<2>(wgf, args, mem, ctx),
+        4 => run_wg::<4>(wgf, args, mem, ctx),
+        8 => run_wg::<8>(wgf, args, mem, ctx),
+        16 => run_wg::<16>(wgf, args, mem, ctx),
+        _ => vecgang::run_workgroup(wgf, args, mem, ctx, width),
+    }
+}
+
+/// Per-gang persistent state: the vector engine's gang state (private
+/// cells + lane ids — so falling back per region is free) plus the flat
+/// register frame bytecode slots index into. The frame persists across
+/// regions: registers are block-local (IR invariant), so no stale value
+/// is ever read, and the per-region allocation the interpreters pay
+/// disappears.
+struct BcGang<const W: usize> {
+    gs: GangState<W>,
+    frame: Vec<VLane<W>>,
+}
+
+fn run_wg<const W: usize>(
+    wgf: &WorkGroupFunction,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+) -> Result<GangStats> {
+    let f = &wgf.reg_fn;
+    // A missing program (non-CPU target, decode mismatch) or one lowered
+    // against a different register frame degrades wholesale.
+    let prog = match wgf.bytecode.as_ref().filter(|p| p.reg_count == f.reg_count()) {
+        Some(p) => p,
+        None => return vecgang::run_workgroup(wgf, args, mem, ctx, W),
+    };
+
+    // Region entry block → lowered-region index (fallback dispatch key).
+    let mut region_of: Vec<Option<usize>> = vec![None; f.blocks.len()];
+    for (i, r) in prog.regions.iter().enumerate() {
+        if let Some(slot) = region_of.get_mut(r.start.0 as usize) {
+            *slot = Some(i);
+        }
+    }
+
+    // Resolve every region's constant pool once per work-group: launch
+    // arguments, normalised immediates and private-slot base pointers are
+    // all launch-invariant and gang-uniform.
+    let mut bases: Vec<u64> = Vec::with_capacity(f.slots.len());
+    let mut total = 0u64;
+    for s in &f.slots {
+        bases.push(total);
+        total += s.count as u64;
+    }
+    let consts: Vec<Vec<VLane<W>>> = prog
+        .regions
+        .iter()
+        .map(|r| {
+            r.consts
+                .iter()
+                .map(|c| match c {
+                    BcConst::Int(v, s) => VLane::Uni(VVal::S(Val::I(norm_int(*v, *s)))),
+                    BcConst::Float(v, s) => VLane::Uni(VVal::S(Val::F(norm_float(*v, *s)))),
+                    BcConst::Arg(a) => VLane::Uni(args[*a as usize].clone()),
+                    BcConst::Slot(s) => VLane::Uni(VVal::ptr(SP_PRIVATE, bases[s.0 as usize])),
+                })
+                .collect()
+        })
+        .collect();
+
+    let n = wgf.wg_size();
+    let [lx, ly, _lz] = wgf.local_size;
+    let mut stats = GangStats::default();
+
+    let local_id = |wi: usize| -> [u64; 3] {
+        [(wi % lx) as u64, ((wi / lx) % ly) as u64, (wi / (lx * ly)) as u64]
+    };
+
+    // Same gang partition as the vector engine: full-width gangs through
+    // bytecode, the ragged tail per-lane.
+    let full_gangs = n / W;
+    let mut gangs: Vec<BcGang<W>> = (0..full_gangs)
+        .map(|g| BcGang {
+            gs: GangState {
+                store: VecStore::for_function(f),
+                local_ids: std::array::from_fn(|l| local_id(g * W + l)),
+            },
+            frame: vec![VLane::Uni(VVal::i(0)); f.reg_count() as usize],
+        })
+        .collect();
+    let mut tail: Vec<(SlotStore, [u64; 3])> = (full_gangs * W..n)
+        .map(|wi| (SlotStore::for_function(f), local_id(wi)))
+        .collect();
+
+    // Barrier walk, identical to the interpreters.
+    let mut cur: BlockId = f.entry;
+    loop {
+        let block = f.block(cur);
+        debug_assert!(block.has_barrier());
+        let start = match &block.term {
+            Term::Ret => return Ok(stats),
+            Term::Jump(s) => *s,
+            Term::Br { .. } => return Err(Error::exec("barrier block with branch terminator")),
+        };
+        let region = region_of.get(start.0 as usize).copied().flatten();
+        let mut next_barrier: Option<BlockId> = None;
+        for gang in gangs.iter_mut() {
+            stats.gangs += 1;
+            let reached = match region {
+                Some(ri) => {
+                    stats.bytecode_gangs += 1;
+                    let r = &prog.regions[ri];
+                    run_region(f, &r.code, &consts[ri], args, mem, ctx, gang, &mut stats)?
+                }
+                None => {
+                    stats.bytecode_fallbacks += 1;
+                    vecgang::run_gang_region_vec(
+                        f,
+                        args,
+                        mem,
+                        ctx,
+                        &mut gang.gs,
+                        start,
+                        &mut stats,
+                    )?
+                }
+            };
+            note_barrier(&mut next_barrier, reached, "across gangs")?;
+        }
+        if !tail.is_empty() {
+            stats.gangs += 1;
+        }
+        for (store, lid) in tail.iter_mut() {
+            let reached = run_lane_to_barrier(f, args, mem, ctx, store, start, *lid, &mut stats)?;
+            note_barrier(&mut next_barrier, reached, "across gangs")?;
+        }
+        cur = next_barrier.expect("work-group is non-empty");
+    }
+}
+
+/// Slot read: the frame for `slot < nregs`, the constant pool above.
+#[inline]
+fn rd<'a, const W: usize>(
+    frame: &'a [VLane<W>],
+    consts: &'a [VLane<W>],
+    nregs: usize,
+    s: BcSlot,
+) -> &'a VLane<W> {
+    let s = s as usize;
+    if s < nregs {
+        &frame[s]
+    } else {
+        &consts[s - nregs]
+    }
+}
+
+/// Branch decision for the whole gang: `Ok(next_pc)` when the lanes
+/// agree (uniform condition or dynamically converged packed lanes),
+/// `Err(lane_targets)` on true divergence.
+fn decide<const W: usize>(
+    c: &VLane<W>,
+    tpc: u32,
+    fpc: u32,
+    ir_t: BlockId,
+    ir_f: BlockId,
+) -> std::result::Result<usize, [BlockId; W]> {
+    if let VLane::Uni(v) = c {
+        return Ok(if v.scalar().truthy() { tpc } else { fpc } as usize);
+    }
+    let mut lane_targets = [ir_t; W];
+    for (l, tgt) in lane_targets.iter_mut().enumerate() {
+        *tgt = if c.get(l).scalar().truthy() { ir_t } else { ir_f };
+    }
+    if lane_targets.iter().all(|&x| x == lane_targets[0]) {
+        Ok(if lane_targets[0] == ir_t { tpc } else { fpc } as usize)
+    } else {
+        Err(lane_targets)
+    }
+}
+
+/// Divergence fallback: flush the gang to per-lane stores, run each lane
+/// from its branch target to the region's closing barrier on the shared
+/// per-lane path, re-import (re-uniforming identical lanes) — the exact
+/// sequence the vector engine runs on a divergent branch.
+fn diverge<const W: usize>(
+    f: &Function,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+    gang: &mut BcGang<W>,
+    lane_targets: &[BlockId; W],
+    stats: &mut GangStats,
+) -> Result<BlockId> {
+    stats.diverged += 1;
+    let mut stores = gang.gs.store.split();
+    let mut reached: Option<BlockId> = None;
+    for (l, store) in stores.iter_mut().enumerate() {
+        let bar = run_lane_to_barrier(
+            f,
+            args,
+            mem,
+            ctx,
+            store,
+            lane_targets[l],
+            gang.gs.local_ids[l],
+            stats,
+        )?;
+        note_barrier(&mut reached, bar, "within gang")?;
+    }
+    gang.gs.store.merge(&stores);
+    Ok(reached.expect("gang is non-empty"))
+}
+
+/// The dispatch loop: run one gang through one lowered region, from
+/// `code[0]` to an `End` (or a divergent branch's per-lane finish).
+/// Returns the barrier block the gang reached.
+#[allow(clippy::too_many_arguments)]
+fn run_region<const W: usize>(
+    f: &Function,
+    code: &[BcInst],
+    consts: &[VLane<W>],
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+    gang: &mut BcGang<W>,
+    stats: &mut GangStats,
+) -> Result<BlockId> {
+    let nregs = gang.frame.len();
+    let mut pc = 0usize;
+    loop {
+        match &code[pc] {
+            BcInst::Bin { op, ty, dst, a, b } => {
+                let v = bin_vlane(
+                    *op,
+                    ty,
+                    rd(&gang.frame, consts, nregs, *a),
+                    rd(&gang.frame, consts, nregs, *b),
+                )?
+                .0;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::Un { op, ty, dst, a } => {
+                let v = un_vlane(*op, ty, rd(&gang.frame, consts, nregs, *a))?.0;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::Cast { to, from, dst, a } => {
+                let v = cast_vlane(to, from, rd(&gang.frame, consts, nregs, *a)).0;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::Load { ty, dst, ptr } => {
+                let v = load_vlane(
+                    rd(&gang.frame, consts, nregs, *ptr),
+                    ty,
+                    &gang.gs.store,
+                    mem,
+                )?;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::Store { ty, ptr, val } => {
+                store_vlane(
+                    rd(&gang.frame, consts, nregs, *ptr),
+                    rd(&gang.frame, consts, nregs, *val),
+                    ty,
+                    &mut gang.gs.store,
+                    mem,
+                )?;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::Gep { elem, dst, base, idx } => {
+                let v = gep_vlane(
+                    elem,
+                    rd(&gang.frame, consts, nregs, *base),
+                    rd(&gang.frame, consts, nregs, *idx),
+                )?
+                .0;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::Wi { func, dim, dst } => {
+                let v = wi_vlane(*func, *dim, ctx, &gang.gs.local_ids).0;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::Math { func, ty, dst, args: margs } => {
+                let ops: Vec<&VLane<W>> =
+                    margs.iter().map(|s| rd(&gang.frame, consts, nregs, *s)).collect();
+                let v = math_vlane(*func, ty, &ops)?.0;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::Select { ty, dst, cond, a, b } => {
+                let v = select_vlane(
+                    ty,
+                    rd(&gang.frame, consts, nregs, *cond),
+                    rd(&gang.frame, consts, nregs, *a),
+                    rd(&gang.frame, consts, nregs, *b),
+                )?
+                .0;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::GepLoad { elem, ty, dst, base, idx } => {
+                let p = gep_vlane(
+                    elem,
+                    rd(&gang.frame, consts, nregs, *base),
+                    rd(&gang.frame, consts, nregs, *idx),
+                )?
+                .0;
+                let v = load_vlane(&p, ty, &gang.gs.store, mem)?;
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::LoadBin { op, ty, load_ty, dst, ptr, other, load_first } => {
+                let lv = load_vlane(
+                    rd(&gang.frame, consts, nregs, *ptr),
+                    load_ty,
+                    &gang.gs.store,
+                    mem,
+                )?;
+                let v = if *load_first {
+                    bin_vlane(*op, ty, &lv, rd(&gang.frame, consts, nregs, *other))?.0
+                } else {
+                    bin_vlane(*op, ty, rd(&gang.frame, consts, nregs, *other), &lv)?.0
+                };
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::BinStore { op, ty, store_ty, ptr, a, b } => {
+                let v = bin_vlane(
+                    *op,
+                    ty,
+                    rd(&gang.frame, consts, nregs, *a),
+                    rd(&gang.frame, consts, nregs, *b),
+                )?
+                .0;
+                store_vlane(
+                    rd(&gang.frame, consts, nregs, *ptr),
+                    &v,
+                    store_ty,
+                    &mut gang.gs.store,
+                    mem,
+                )?;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::MulAdd { ty, dst, a, b, c, mul_first } => {
+                // Separate mul-then-add, never contracted to an FMA, so
+                // results stay bit-identical to the interpreters.
+                let m = bin_vlane(
+                    BinOp::Mul,
+                    ty,
+                    rd(&gang.frame, consts, nregs, *a),
+                    rd(&gang.frame, consts, nregs, *b),
+                )?
+                .0;
+                let v = if *mul_first {
+                    bin_vlane(BinOp::Add, ty, &m, rd(&gang.frame, consts, nregs, *c))?.0
+                } else {
+                    bin_vlane(BinOp::Add, ty, rd(&gang.frame, consts, nregs, *c), &m)?.0
+                };
+                gang.frame[*dst as usize] = v;
+                stats.bytecode_insts += 1;
+                pc += 1;
+            }
+            BcInst::CmpBr { op, ty, a, b, t, f: fpc, ir_t, ir_f } => {
+                let cv = bin_vlane(
+                    *op,
+                    ty,
+                    rd(&gang.frame, consts, nregs, *a),
+                    rd(&gang.frame, consts, nregs, *b),
+                )?
+                .0;
+                stats.bytecode_insts += 1;
+                match decide(&cv, *t, *fpc, *ir_t, *ir_f) {
+                    Ok(npc) => pc = npc,
+                    Err(lt) => return diverge(f, args, mem, ctx, gang, &lt, stats),
+                }
+            }
+            BcInst::Jump { pc: target } => pc = *target as usize,
+            BcInst::Br { cond, t, f: fpc, ir_t, ir_f } => {
+                let d = decide(
+                    rd(&gang.frame, consts, nregs, *cond),
+                    *t,
+                    *fpc,
+                    *ir_t,
+                    *ir_f,
+                );
+                match d {
+                    Ok(npc) => pc = npc,
+                    Err(lt) => return diverge(f, args, mem, ctx, gang, &lt, stats),
+                }
+            }
+            BcInst::End { barrier } => return Ok(*barrier),
+        }
+    }
+}

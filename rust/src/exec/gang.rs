@@ -37,6 +37,14 @@ pub struct GangStats {
     /// Per-lane instruction dispatches (the scalar gang engine's lockstep
     /// loop, and both engines' divergence/tail fallback paths).
     pub lane_insts: usize,
+    /// Bytecode dispatches: one `loop { match }` step of the threaded
+    /// tier, covering a whole gang (superinstructions count once).
+    pub bytecode_insts: usize,
+    /// Gang-regions executed through the bytecode tier.
+    pub bytecode_gangs: usize,
+    /// Gang-regions that had no lowered bytecode and fell back to the
+    /// lane-batched region interpreter.
+    pub bytecode_fallbacks: usize,
 }
 
 impl GangStats {
@@ -44,7 +52,7 @@ impl GangStats {
     /// engine is built to shrink (each dispatch is one `match` over the
     /// instruction plus operand marshalling).
     pub fn dispatches(&self) -> usize {
-        self.vector_insts + self.uniform_insts + self.lane_insts
+        self.vector_insts + self.uniform_insts + self.lane_insts + self.bytecode_insts
     }
 }
 

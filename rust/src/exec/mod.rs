@@ -17,12 +17,18 @@
 //!   per-lane path until the region's closing barrier.
 //! * [`fiber`] — per-work-item fibers over `reg_fn` (FreeOCL / Twin Peaks
 //!   baseline; the architecture the paper argues against).
+//! * [`bytecode`] — threaded-dispatch tier over flattened, fused bytecode
+//!   lowered from `reg_fn` regions at compile time (cached in poclbin):
+//!   pre-resolved slots, PC branch targets, superinstructions; runs on
+//!   the same [`value::VLane`] gang values as [`vecgang`] and falls back
+//!   to it per region for uncovered regions.
 //!
 //! The scalar engines share the [`interp::Machine`] instruction evaluator
 //! and the vector engine reuses its per-operation kernels, so a result
 //! difference between engines is a scheduling bug, not a semantics
 //! difference — the property the cross-engine tests rely on.
 
+pub mod bytecode;
 pub mod fiber;
 pub mod gang;
 pub mod interp;
@@ -47,6 +53,7 @@ mod tests {
         Serial,
         Gang(usize),
         GangVec(usize),
+        Bytecode(usize),
         Fiber,
     }
 
@@ -135,6 +142,11 @@ mod tests {
                                 .map(|_| ())
                                 .unwrap()
                         }
+                        Engine::Bytecode(w) => {
+                            bytecode::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx, w)
+                                .map(|_| ())
+                                .unwrap()
+                        }
                         Engine::Fiber => {
                             fiber::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx).unwrap()
                         }
@@ -156,6 +168,8 @@ mod tests {
             Engine::Gang(8),
             Engine::GangVec(4),
             Engine::GangVec(8),
+            Engine::Bytecode(4),
+            Engine::Bytecode(8),
             Engine::Fiber,
         ]
     }

@@ -30,7 +30,7 @@
 
 use crate::cl::error::{Error, Result};
 use crate::ir::func::Function;
-use crate::ir::inst::{BinOp, BlockId, Imm, Inst, MathFn, Operand, Reg, SlotId, Term, WiFn};
+use crate::ir::inst::{BinOp, BlockId, Imm, Inst, MathFn, Operand, Reg, SlotId, Term, UnOp, WiFn};
 use crate::ir::types::{Scalar, Type};
 use crate::kcc::WorkGroupFunction;
 use crate::vecmath::{RealVec, RealVec64};
@@ -69,16 +69,18 @@ pub fn run_workgroup(
 }
 
 /// Lane-batched private-variable storage: one [`VLane`] cell per scalar
-/// cell of the scalar engines' `SlotStore`, same layout.
-struct VecStore<const W: usize> {
+/// cell of the scalar engines' `SlotStore`, same layout. Shared with the
+/// bytecode engine, which keeps gang state in exactly this form so its
+/// per-region fallback into this engine is free.
+pub(crate) struct VecStore<const W: usize> {
     /// Cell values (uniform or per-lane).
-    cells: Vec<VLane<W>>,
+    pub(crate) cells: Vec<VLane<W>>,
     /// Slot → first cell index.
-    base: Vec<u32>,
+    pub(crate) base: Vec<u32>,
 }
 
 impl<const W: usize> VecStore<W> {
-    fn for_function(f: &Function) -> VecStore<W> {
+    pub(crate) fn for_function(f: &Function) -> VecStore<W> {
         let mut base = Vec::with_capacity(f.slots.len());
         let mut total = 0u32;
         for s in &f.slots {
@@ -88,12 +90,12 @@ impl<const W: usize> VecStore<W> {
         VecStore { cells: vec![VLane::Uni(VVal::i(0)); total as usize], base }
     }
 
-    fn slot_base(&self, s: SlotId) -> u64 {
+    pub(crate) fn slot_base(&self, s: SlotId) -> u64 {
         self.base[s.0 as usize] as u64
     }
 
     /// Flatten to one scalar store per lane (divergence fallback entry).
-    fn split(&self) -> Vec<SlotStore> {
+    pub(crate) fn split(&self) -> Vec<SlotStore> {
         (0..W)
             .map(|l| SlotStore {
                 cells: self.cells.iter().map(|c| c.get(l)).collect(),
@@ -104,7 +106,7 @@ impl<const W: usize> VecStore<W> {
 
     /// Re-import per-lane stores after reconvergence; identical lanes
     /// (bitwise) collapse back to the uniform form.
-    fn merge(&mut self, stores: &[SlotStore]) {
+    pub(crate) fn merge(&mut self, stores: &[SlotStore]) {
         for (i, cell) in self.cells.iter_mut().enumerate() {
             let lanes: Vec<VVal> = stores.iter().map(|s| s.cells[i].clone()).collect();
             *cell = VLane::from_lanes(lanes);
@@ -113,9 +115,9 @@ impl<const W: usize> VecStore<W> {
 }
 
 /// Per-gang persistent state: private cells plus the lanes' local ids.
-struct GangState<const W: usize> {
-    store: VecStore<W>,
-    local_ids: [[u64; 3]; W],
+pub(crate) struct GangState<const W: usize> {
+    pub(crate) store: VecStore<W>,
+    pub(crate) local_ids: [[u64; 3]; W],
 }
 
 /// The lane-batched instruction evaluator: a register frame of [`VLane`]
@@ -188,7 +190,8 @@ fn run_wg<const W: usize>(
 /// block), lane-batched until divergence; on a divergent branch the gang
 /// flushes its state to per-lane stores and finishes the region with the
 /// masked per-lane path, then re-imports (re-uniforming identical lanes).
-fn run_gang_region_vec<const W: usize>(
+/// Also the bytecode engine's per-region fallback for uncovered regions.
+pub(crate) fn run_gang_region_vec<const W: usize>(
     f: &Function,
     args: &[VVal],
     mem: &mut MemoryRefs<'_>,
@@ -284,22 +287,15 @@ impl<const W: usize> VecMachine<'_, W> {
                 stats.uniform_insts += 1;
                 VLane::Uni(VVal::i(0))
             }
-            Inst::Wi { func, dim } => match func {
-                WiFn::LocalId | WiFn::GlobalId => {
-                    stats.vector_insts += 1;
-                    let mut a = [0i64; W];
-                    for (slot, lid) in a.iter_mut().zip(&self.local_ids) {
-                        *slot = wi_value(*func, *dim, self.ctx, lid) as i64;
-                    }
-                    VLane::I(a)
-                }
-                _ => {
+            Inst::Wi { func, dim } => {
+                let (v, uniform) = wi_vlane(*func, *dim, self.ctx, &self.local_ids);
+                if uniform {
                     stats.uniform_insts += 1;
-                    VLane::Uni(VVal::i(
-                        wi_value(*func, *dim, self.ctx, &self.local_ids[0]) as i64
-                    ))
+                } else {
+                    stats.vector_insts += 1;
                 }
-            },
+                v
+            }
             Inst::Load { ty, ptr } => self.load(ty, ptr, store, mem, stats)?,
             Inst::Store { ty, ptr, val } => {
                 self.store_inst(ty, ptr, val, store, mem, stats)?;
@@ -345,62 +341,13 @@ impl<const W: usize> VecMachine<'_, W> {
         mem: &mut MemoryRefs<'_>,
         stats: &mut GangStats,
     ) -> Result<VLane<W>> {
-        match self.op_val(ptr, store) {
-            VLane::Uni(p) => match p.scalar() {
-                Val::Ptr { space: SP_PRIVATE, offset } => {
-                    stats.uniform_insts += 1;
-                    store
-                        .cells
-                        .get(offset as usize)
-                        .cloned()
-                        .ok_or_else(|| Error::exec("private load out of bounds"))
-                }
-                Val::Ptr { space, offset } => {
-                    stats.uniform_insts += 1;
-                    Ok(VLane::Uni(mem.load(space, offset, ty)?))
-                }
-                _ => Err(Error::exec("load through non-pointer")),
-            },
-            VLane::P(SP_PRIVATE, offs) => {
-                stats.vector_insts += 1;
-                let mut out = Vec::with_capacity(W);
-                for (l, off) in offs.iter().enumerate() {
-                    let cell = store
-                        .cells
-                        .get(*off as usize)
-                        .ok_or_else(|| Error::exec("private load out of bounds"))?;
-                    out.push(cell.get(l));
-                }
-                Ok(VLane::from_lanes(out))
-            }
-            VLane::P(space, offs) => {
-                stats.vector_insts += 1;
-                let mut out = Vec::with_capacity(W);
-                for off in offs.iter() {
-                    out.push(mem.load(space, *off, ty)?);
-                }
-                Ok(VLane::from_lanes(out))
-            }
-            VLane::Lanes(ps) => {
-                stats.vector_insts += 1;
-                let mut out = Vec::with_capacity(W);
-                for (l, p) in ps.iter().enumerate() {
-                    match p.scalar() {
-                        Val::Ptr { space: SP_PRIVATE, offset } => {
-                            let cell = store
-                                .cells
-                                .get(offset as usize)
-                                .ok_or_else(|| Error::exec("private load out of bounds"))?;
-                            out.push(cell.get(l));
-                        }
-                        Val::Ptr { space, offset } => out.push(mem.load(space, offset, ty)?),
-                        _ => return Err(Error::exec("load through non-pointer")),
-                    }
-                }
-                Ok(VLane::from_lanes(out))
-            }
-            VLane::F(_) | VLane::I(_) => Err(Error::exec("load through non-pointer")),
+        let pv = self.op_val(ptr, store);
+        if pv.is_uniform() {
+            stats.uniform_insts += 1;
+        } else {
+            stats.vector_insts += 1;
         }
+        load_vlane(&pv, ty, store, mem)
     }
 
     /// Typed store: uniform address+value store once; varying forms
@@ -416,75 +363,136 @@ impl<const W: usize> VecMachine<'_, W> {
     ) -> Result<()> {
         let pv = self.op_val(ptr, store);
         let vv = self.op_val(val, store);
-        match pv {
-            VLane::Uni(p) => match p.scalar() {
-                Val::Ptr { space: SP_PRIVATE, offset } => {
-                    if vv.is_uniform() {
-                        stats.uniform_insts += 1;
-                    } else {
-                        stats.vector_insts += 1;
-                    }
-                    let nv = normalize_vlane(&vv, ty);
-                    let cell = store
-                        .cells
-                        .get_mut(offset as usize)
-                        .ok_or_else(|| Error::exec("private store out of bounds"))?;
-                    *cell = nv;
-                    Ok(())
-                }
-                Val::Ptr { space, offset } => {
-                    // Every lane writes the same address: the last lane's
-                    // value lands, matching per-lane lockstep order.
-                    if vv.is_uniform() {
-                        stats.uniform_insts += 1;
-                    } else {
-                        stats.vector_insts += 1;
-                    }
-                    let v = normalize_to(&vv.get(W - 1), ty);
-                    mem.store(space, offset, ty, &v)
-                }
-                _ => Err(Error::exec("store through non-pointer")),
-            },
-            VLane::P(SP_PRIVATE, offs) => {
-                stats.vector_insts += 1;
-                for (l, off) in offs.iter().enumerate() {
-                    let v = normalize_to(&vv.get(l), ty);
-                    let cell = store
-                        .cells
-                        .get_mut(*off as usize)
-                        .ok_or_else(|| Error::exec("private store out of bounds"))?;
-                    cell.set_lane(l, v);
-                }
-                Ok(())
-            }
-            VLane::P(space, offs) => {
-                stats.vector_insts += 1;
-                for (l, off) in offs.iter().enumerate() {
-                    let v = normalize_to(&vv.get(l), ty);
-                    mem.store(space, *off, ty, &v)?;
-                }
-                Ok(())
-            }
-            VLane::Lanes(ps) => {
-                stats.vector_insts += 1;
-                for (l, p) in ps.iter().enumerate() {
-                    let v = normalize_to(&vv.get(l), ty);
-                    match p.scalar() {
-                        Val::Ptr { space: SP_PRIVATE, offset } => {
-                            let cell = store
-                                .cells
-                                .get_mut(offset as usize)
-                                .ok_or_else(|| Error::exec("private store out of bounds"))?;
-                            cell.set_lane(l, v);
-                        }
-                        Val::Ptr { space, offset } => mem.store(space, offset, ty, &v)?,
-                        _ => return Err(Error::exec("store through non-pointer")),
-                    }
-                }
-                Ok(())
-            }
-            VLane::F(_) | VLane::I(_) => Err(Error::exec("store through non-pointer")),
+        if pv.is_uniform() && vv.is_uniform() {
+            stats.uniform_insts += 1;
+        } else {
+            stats.vector_insts += 1;
         }
+        store_vlane(&pv, &vv, ty, store, mem)
+    }
+}
+
+/// Typed load kernel (stats-free; callers attribute the dispatch).
+pub(crate) fn load_vlane<const W: usize>(
+    pv: &VLane<W>,
+    ty: &Type,
+    store: &VecStore<W>,
+    mem: &mut MemoryRefs<'_>,
+) -> Result<VLane<W>> {
+    match pv {
+        VLane::Uni(p) => match p.scalar() {
+            Val::Ptr { space: SP_PRIVATE, offset } => store
+                .cells
+                .get(offset as usize)
+                .cloned()
+                .ok_or_else(|| Error::exec("private load out of bounds")),
+            Val::Ptr { space, offset } => Ok(VLane::Uni(mem.load(space, offset, ty)?)),
+            _ => Err(Error::exec("load through non-pointer")),
+        },
+        VLane::P(SP_PRIVATE, offs) => {
+            let mut out = Vec::with_capacity(W);
+            for (l, off) in offs.iter().enumerate() {
+                let cell = store
+                    .cells
+                    .get(*off as usize)
+                    .ok_or_else(|| Error::exec("private load out of bounds"))?;
+                out.push(cell.get(l));
+            }
+            Ok(VLane::from_lanes(out))
+        }
+        VLane::P(space, offs) => {
+            let mut out = Vec::with_capacity(W);
+            for off in offs.iter() {
+                out.push(mem.load(*space, *off, ty)?);
+            }
+            Ok(VLane::from_lanes(out))
+        }
+        VLane::Lanes(ps) => {
+            let mut out = Vec::with_capacity(W);
+            for (l, p) in ps.iter().enumerate() {
+                match p.scalar() {
+                    Val::Ptr { space: SP_PRIVATE, offset } => {
+                        let cell = store
+                            .cells
+                            .get(offset as usize)
+                            .ok_or_else(|| Error::exec("private load out of bounds"))?;
+                        out.push(cell.get(l));
+                    }
+                    Val::Ptr { space, offset } => out.push(mem.load(space, offset, ty)?),
+                    _ => return Err(Error::exec("load through non-pointer")),
+                }
+            }
+            Ok(VLane::from_lanes(out))
+        }
+        VLane::F(_) | VLane::I(_) => Err(Error::exec("load through non-pointer")),
+    }
+}
+
+/// Typed store kernel (stats-free): uniform address+value store once;
+/// varying forms scatter in lane order (lane `W-1` last, matching
+/// per-lane lockstep order).
+pub(crate) fn store_vlane<const W: usize>(
+    pv: &VLane<W>,
+    vv: &VLane<W>,
+    ty: &Type,
+    store: &mut VecStore<W>,
+    mem: &mut MemoryRefs<'_>,
+) -> Result<()> {
+    match pv {
+        VLane::Uni(p) => match p.scalar() {
+            Val::Ptr { space: SP_PRIVATE, offset } => {
+                let nv = normalize_vlane(vv, ty);
+                let cell = store
+                    .cells
+                    .get_mut(offset as usize)
+                    .ok_or_else(|| Error::exec("private store out of bounds"))?;
+                *cell = nv;
+                Ok(())
+            }
+            Val::Ptr { space, offset } => {
+                // Every lane writes the same address: the last lane's
+                // value lands, matching per-lane lockstep order.
+                let v = normalize_to(&vv.get(W - 1), ty);
+                mem.store(space, offset, ty, &v)
+            }
+            _ => Err(Error::exec("store through non-pointer")),
+        },
+        VLane::P(SP_PRIVATE, offs) => {
+            for (l, off) in offs.iter().enumerate() {
+                let v = normalize_to(&vv.get(l), ty);
+                let cell = store
+                    .cells
+                    .get_mut(*off as usize)
+                    .ok_or_else(|| Error::exec("private store out of bounds"))?;
+                cell.set_lane(l, v);
+            }
+            Ok(())
+        }
+        VLane::P(space, offs) => {
+            for (l, off) in offs.iter().enumerate() {
+                let v = normalize_to(&vv.get(l), ty);
+                mem.store(*space, *off, ty, &v)?;
+            }
+            Ok(())
+        }
+        VLane::Lanes(ps) => {
+            for (l, p) in ps.iter().enumerate() {
+                let v = normalize_to(&vv.get(l), ty);
+                match p.scalar() {
+                    Val::Ptr { space: SP_PRIVATE, offset } => {
+                        let cell = store
+                            .cells
+                            .get_mut(offset as usize)
+                            .ok_or_else(|| Error::exec("private store out of bounds"))?;
+                        cell.set_lane(l, v);
+                    }
+                    Val::Ptr { space, offset } => mem.store(space, offset, ty, &v)?,
+                    _ => return Err(Error::exec("store through non-pointer")),
+                }
+            }
+            Ok(())
+        }
+        VLane::F(_) | VLane::I(_) => Err(Error::exec("store through non-pointer")),
     }
 }
 
@@ -517,93 +525,113 @@ fn eval_pure<const W: usize>(
 /// lanes; returns `None` when the generic per-lane path must run.
 fn eval_fast<const W: usize>(inst: &Inst, ops: &[VLane<W>]) -> Result<Option<VLane<W>>> {
     match inst {
-        Inst::Bin { op, ty, .. } if ty.lanes() == 1 => {
-            let s = ty.elem_scalar().unwrap_or(Scalar::I32);
-            use BinOp::*;
-            let bitwise = matches!(op, And | Or | Xor | Shl | Shr);
-            if s.is_float() && !bitwise {
-                let (Some(a), Some(b)) = (as_f_lanes(&ops[0]), as_f_lanes(&ops[1])) else {
-                    return Ok(None);
-                };
-                if matches!(op, Add | Sub | Mul | Div | Rem) {
-                    let mut r = match op {
-                        Add => a + b,
-                        Sub => a - b,
-                        Mul => a * b,
-                        Div => a / b,
-                        _ => {
-                            let mut o = a;
-                            for (x, y) in o.0.iter_mut().zip(&b.0) {
-                                *x %= *y;
-                            }
-                            o
-                        }
-                    };
-                    if s == Scalar::F32 {
-                        for x in r.0.iter_mut() {
-                            *x = *x as f32 as f64;
-                        }
-                    }
-                    return Ok(Some(VLane::F(r)));
-                }
-                // Comparisons / logical ops on floats → bool lanes.
-                let mut o = [0i64; W];
-                for (l, slot) in o.iter_mut().enumerate() {
-                    let (x, y) = (a.0[l], b.0[l]);
-                    *slot = match op {
-                        Eq => (x == y) as i64,
-                        Ne => (x != y) as i64,
-                        Lt => (x < y) as i64,
-                        Le => (x <= y) as i64,
-                        Gt => (x > y) as i64,
-                        Ge => (x >= y) as i64,
-                        LAnd => (x != 0.0 && y != 0.0) as i64,
-                        LOr => (x != 0.0 || y != 0.0) as i64,
-                        _ => unreachable!("arith and bitwise handled above"),
-                    };
-                }
-                return Ok(Some(VLane::I(o)));
-            }
-            if !s.is_float() {
-                let (Some(a), Some(b)) = (as_scalar_vals(&ops[0]), as_scalar_vals(&ops[1]))
-                else {
-                    return Ok(None);
-                };
-                let mut o = [0i64; W];
-                for (l, slot) in o.iter_mut().enumerate() {
-                    *slot = bin_scalar(*op, s, a[l], b[l])?.as_i();
-                }
-                return Ok(Some(VLane::I(o)));
-            }
-            Ok(None)
-        }
-        Inst::Math { func, ty, .. }
-            if ty.lanes() == 1
-                && ty.is_float()
-                && ops.len() == 1
-                && matches!(
-                    func,
-                    MathFn::Sqrt
-                        | MathFn::NativeSqrt
-                        | MathFn::RSqrt
-                        | MathFn::NativeRSqrt
-                        | MathFn::Exp
-                        | MathFn::NativeExp
-                        | MathFn::Sin
-                        | MathFn::NativeSin
-                        | MathFn::Cos
-                        | MathFn::NativeCos
-                        | MathFn::Log
-                        | MathFn::NativeLog
-                        | MathFn::Fabs
-                ) =>
-        {
-            let Some(a) = as_f_lanes(&ops[0]) else { return Ok(None) };
-            let s = ty.elem_scalar().unwrap_or(Scalar::F32);
-            Ok(Some(VLane::F(vec_math(*func, s, a))))
-        }
+        Inst::Bin { op, ty, .. } => bin_fast(*op, ty, &ops[0], &ops[1]),
+        Inst::Math { func, ty, .. } if ops.len() == 1 => Ok(math_fast(*func, ty, &ops[0])),
         _ => Ok(None),
     }
+}
+
+/// SIMD fast path for a scalar-typed binary op over packed lanes (shared
+/// with the bytecode engine); `None` when the per-lane path must run.
+pub(crate) fn bin_fast<const W: usize>(
+    op: BinOp,
+    ty: &Type,
+    lhs: &VLane<W>,
+    rhs: &VLane<W>,
+) -> Result<Option<VLane<W>>> {
+    if ty.lanes() != 1 {
+        return Ok(None);
+    }
+    let s = ty.elem_scalar().unwrap_or(Scalar::I32);
+    use BinOp::*;
+    let bitwise = matches!(op, And | Or | Xor | Shl | Shr);
+    if s.is_float() && !bitwise {
+        let (Some(a), Some(b)) = (as_f_lanes(lhs), as_f_lanes(rhs)) else {
+            return Ok(None);
+        };
+        if matches!(op, Add | Sub | Mul | Div | Rem) {
+            let mut r = match op {
+                Add => a + b,
+                Sub => a - b,
+                Mul => a * b,
+                Div => a / b,
+                _ => {
+                    let mut o = a;
+                    for (x, y) in o.0.iter_mut().zip(&b.0) {
+                        *x %= *y;
+                    }
+                    o
+                }
+            };
+            if s == Scalar::F32 {
+                for x in r.0.iter_mut() {
+                    *x = *x as f32 as f64;
+                }
+            }
+            return Ok(Some(VLane::F(r)));
+        }
+        // Comparisons / logical ops on floats → bool lanes.
+        let mut o = [0i64; W];
+        for (l, slot) in o.iter_mut().enumerate() {
+            let (x, y) = (a.0[l], b.0[l]);
+            *slot = match op {
+                Eq => (x == y) as i64,
+                Ne => (x != y) as i64,
+                Lt => (x < y) as i64,
+                Le => (x <= y) as i64,
+                Gt => (x > y) as i64,
+                Ge => (x >= y) as i64,
+                LAnd => (x != 0.0 && y != 0.0) as i64,
+                LOr => (x != 0.0 || y != 0.0) as i64,
+                _ => unreachable!("arith and bitwise handled above"),
+            };
+        }
+        return Ok(Some(VLane::I(o)));
+    }
+    if !s.is_float() {
+        let (Some(a), Some(b)) = (as_scalar_vals(lhs), as_scalar_vals(rhs)) else {
+            return Ok(None);
+        };
+        let mut o = [0i64; W];
+        for (l, slot) in o.iter_mut().enumerate() {
+            *slot = bin_scalar(op, s, a[l], b[l])?.as_i();
+        }
+        return Ok(Some(VLane::I(o)));
+    }
+    Ok(None)
+}
+
+/// SIMD fast path for the single-argument float elementals (shared with
+/// the bytecode engine); `None` when the per-lane path must run.
+pub(crate) fn math_fast<const W: usize>(
+    func: MathFn,
+    ty: &Type,
+    arg: &VLane<W>,
+) -> Option<VLane<W>> {
+    if ty.lanes() != 1
+        || !ty.is_float()
+        || !matches!(
+            func,
+            MathFn::Sqrt
+                | MathFn::NativeSqrt
+                | MathFn::RSqrt
+                | MathFn::NativeRSqrt
+                | MathFn::Exp
+                | MathFn::NativeExp
+                | MathFn::Sin
+                | MathFn::NativeSin
+                | MathFn::Cos
+                | MathFn::NativeCos
+                | MathFn::Log
+                | MathFn::NativeLog
+                | MathFn::Fabs
+        )
+    {
+        return None;
+    }
+    let a = as_f_lanes(arg)?;
+    let s = ty.elem_scalar().unwrap_or(Scalar::F32);
+    Some(VLane::F(vec_math(func, s, a)))
 }
 
 /// Lane-batched math elementals through the vecmath layer, bit-identical
@@ -687,25 +715,7 @@ fn eval_pure_scalar(inst: &Inst, ops: &[VVal]) -> Result<VVal> {
         Inst::Un { op, ty, .. } => eval_un(*op, ty, &ops[0]),
         Inst::Cast { to, from, .. } => Ok(eval_cast(&ops[0], from, to)),
         Inst::Math { func, ty, .. } => eval_math(*func, ty, ops),
-        Inst::Select { ty, .. } => {
-            let (c, av, bv) = (&ops[0], &ops[1], &ops[2]);
-            let lanes = ty.lanes();
-            if lanes == 1 {
-                Ok(if c.scalar().truthy() { av.clone() } else { bv.clone() })
-            } else {
-                let out: Vec<Val> = (0..lanes)
-                    .map(|l| {
-                        let cl = if c.lanes() == 1 { c.lane(0) } else { c.lane(l) };
-                        if cl.truthy() {
-                            av.lane(l)
-                        } else {
-                            bv.lane(l)
-                        }
-                    })
-                    .collect();
-                Ok(VVal::V(out))
-            }
-        }
+        Inst::Select { ty, .. } => select_scalar(ty, &ops[0], &ops[1], &ops[2]),
         Inst::VecBuild { ty, .. } => {
             let s = ty
                 .elem_scalar()
@@ -726,19 +736,175 @@ fn eval_pure_scalar(inst: &Inst, ops: &[VVal]) -> Result<VVal> {
                 ty.elem_scalar().ok_or_else(|| Error::exec("splat to non-vector type"))?;
             Ok(VVal::V(vec![norm_val(ops[0].scalar(), s); ty.lanes()]))
         }
-        Inst::Gep { elem, .. } => {
-            let b = ops[0].scalar();
-            let i = ops[1].scalar().as_i();
-            match b {
-                Val::Ptr { space: SP_PRIVATE, offset } => {
-                    Ok(VVal::ptr(SP_PRIVATE, (offset as i64 + i) as u64))
-                }
-                Val::Ptr { space, offset } => {
-                    Ok(VVal::ptr(space, (offset as i64 + i * elem.size() as i64) as u64))
-                }
-                _ => Err(Error::exec("gep on non-pointer")),
-            }
-        }
+        Inst::Gep { elem, .. } => gep_scalar(elem, &ops[0], &ops[1]),
         _ => Err(Error::exec("not a pure instruction")),
+    }
+}
+
+/// Scalar select kernel (one lane / the uniform case).
+pub(crate) fn select_scalar(ty: &Type, c: &VVal, av: &VVal, bv: &VVal) -> Result<VVal> {
+    let lanes = ty.lanes();
+    if lanes == 1 {
+        Ok(if c.scalar().truthy() { av.clone() } else { bv.clone() })
+    } else {
+        let out: Vec<Val> = (0..lanes)
+            .map(|l| {
+                let cl = if c.lanes() == 1 { c.lane(0) } else { c.lane(l) };
+                if cl.truthy() {
+                    av.lane(l)
+                } else {
+                    bv.lane(l)
+                }
+            })
+            .collect();
+        Ok(VVal::V(out))
+    }
+}
+
+/// Scalar address-calculation kernel: private memory is cell-addressed
+/// (index added raw), other spaces scale by the element size.
+pub(crate) fn gep_scalar(elem: &Type, base: &VVal, idx: &VVal) -> Result<VVal> {
+    let b = base.scalar();
+    let i = idx.scalar().as_i();
+    match b {
+        Val::Ptr { space: SP_PRIVATE, offset } => {
+            Ok(VVal::ptr(SP_PRIVATE, (offset as i64 + i) as u64))
+        }
+        Val::Ptr { space, offset } => {
+            Ok(VVal::ptr(space, (offset as i64 + i * elem.size() as i64) as u64))
+        }
+        _ => Err(Error::exec("gep on non-pointer")),
+    }
+}
+
+/// Lane-batched binary-op kernel (stats-free, shared with the bytecode
+/// engine): computed once when both operands are uniform, else through
+/// the SIMD fast path, else one lane at a time — the exact evaluation
+/// sequence [`eval_pure`] applies, so results are bit-identical across
+/// engines. Returns the value plus whether the uniform path was taken.
+pub(crate) fn bin_vlane<const W: usize>(
+    op: BinOp,
+    ty: &Type,
+    a: &VLane<W>,
+    b: &VLane<W>,
+) -> Result<(VLane<W>, bool)> {
+    if a.is_uniform() && b.is_uniform() {
+        return Ok((VLane::Uni(eval_bin(op, ty, &a.get(0), &b.get(0))?), true));
+    }
+    if let Some(v) = bin_fast(op, ty, a, b)? {
+        return Ok((v, false));
+    }
+    let mut out = Vec::with_capacity(W);
+    for l in 0..W {
+        out.push(eval_bin(op, ty, &a.get(l), &b.get(l))?);
+    }
+    Ok((VLane::from_lanes(out), false))
+}
+
+/// Lane-batched unary-op kernel (stats-free).
+pub(crate) fn un_vlane<const W: usize>(
+    op: UnOp,
+    ty: &Type,
+    a: &VLane<W>,
+) -> Result<(VLane<W>, bool)> {
+    if a.is_uniform() {
+        return Ok((VLane::Uni(eval_un(op, ty, &a.get(0))?), true));
+    }
+    let mut out = Vec::with_capacity(W);
+    for l in 0..W {
+        out.push(eval_un(op, ty, &a.get(l))?);
+    }
+    Ok((VLane::from_lanes(out), false))
+}
+
+/// Lane-batched cast kernel (stats-free; casts cannot fail).
+pub(crate) fn cast_vlane<const W: usize>(
+    to: &Type,
+    from: &Type,
+    a: &VLane<W>,
+) -> (VLane<W>, bool) {
+    if a.is_uniform() {
+        return (VLane::Uni(eval_cast(&a.get(0), from, to)), true);
+    }
+    let mut out = Vec::with_capacity(W);
+    for l in 0..W {
+        out.push(eval_cast(&a.get(l), from, to));
+    }
+    (VLane::from_lanes(out), false)
+}
+
+/// Lane-batched math-builtin kernel (stats-free).
+pub(crate) fn math_vlane<const W: usize>(
+    func: MathFn,
+    ty: &Type,
+    ops: &[&VLane<W>],
+) -> Result<(VLane<W>, bool)> {
+    if ops.iter().all(|o| o.is_uniform()) {
+        let sv: Vec<VVal> = ops.iter().map(|o| o.get(0)).collect();
+        return Ok((VLane::Uni(eval_math(func, ty, &sv)?), true));
+    }
+    if ops.len() == 1 {
+        if let Some(v) = math_fast(func, ty, ops[0]) {
+            return Ok((v, false));
+        }
+    }
+    let mut out = Vec::with_capacity(W);
+    for l in 0..W {
+        let lane_ops: Vec<VVal> = ops.iter().map(|o| o.get(l)).collect();
+        out.push(eval_math(func, ty, &lane_ops)?);
+    }
+    Ok((VLane::from_lanes(out), false))
+}
+
+/// Lane-batched select kernel (stats-free).
+pub(crate) fn select_vlane<const W: usize>(
+    ty: &Type,
+    c: &VLane<W>,
+    a: &VLane<W>,
+    b: &VLane<W>,
+) -> Result<(VLane<W>, bool)> {
+    if c.is_uniform() && a.is_uniform() && b.is_uniform() {
+        return Ok((VLane::Uni(select_scalar(ty, &c.get(0), &a.get(0), &b.get(0))?), true));
+    }
+    let mut out = Vec::with_capacity(W);
+    for l in 0..W {
+        out.push(select_scalar(ty, &c.get(l), &a.get(l), &b.get(l))?);
+    }
+    Ok((VLane::from_lanes(out), false))
+}
+
+/// Lane-batched address-calculation kernel (stats-free).
+pub(crate) fn gep_vlane<const W: usize>(
+    elem: &Type,
+    base: &VLane<W>,
+    idx: &VLane<W>,
+) -> Result<(VLane<W>, bool)> {
+    if base.is_uniform() && idx.is_uniform() {
+        return Ok((VLane::Uni(gep_scalar(elem, &base.get(0), &idx.get(0))?), true));
+    }
+    let mut out = Vec::with_capacity(W);
+    for l in 0..W {
+        out.push(gep_scalar(elem, &base.get(l), &idx.get(l))?);
+    }
+    Ok((VLane::from_lanes(out), false))
+}
+
+/// Work-item geometry kernel: local/global ids vary per lane, everything
+/// else (sizes, group ids, dims) is gang-uniform.
+pub(crate) fn wi_vlane<const W: usize>(
+    func: WiFn,
+    dim: u32,
+    ctx: &LaunchCtx,
+    local_ids: &[[u64; 3]; W],
+) -> (VLane<W>, bool) {
+    match func {
+        WiFn::LocalId | WiFn::GlobalId => {
+            let mut a = [0i64; W];
+            for (slot, lid) in a.iter_mut().zip(local_ids) {
+                *slot = wi_value(func, dim, ctx, lid) as i64;
+            }
+            (VLane::I(a), false)
+        }
+        _ => (VLane::Uni(VVal::i(wi_value(func, dim, ctx, &local_ids[0]) as i64)), true),
     }
 }

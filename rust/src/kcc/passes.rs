@@ -115,6 +115,14 @@ pub struct CompileStats {
     /// branch (the regions where the vector engine may have to fall back
     /// to per-lane execution).
     pub divergent_regions: usize,
+    /// Regions lowered to flattened bytecode (the rest run through the
+    /// vector engine's region interpreter as fallback).
+    pub bytecode_regions: usize,
+    /// Superinstructions formed by the bytecode peephole fuser (each one
+    /// retires ≥2 IR instructions per dispatch).
+    pub bytecode_fused: usize,
+    /// Total bytecode instructions across all lowered regions.
+    pub bytecode_insts: usize,
     /// Mid-level optimizer statistics (per-pass rewrite/removal counts).
     pub opt: OptStats,
 }
@@ -141,6 +149,10 @@ pub struct WorkGroupFunction {
     /// the region contains a branch whose condition could not be proven
     /// uniform (the vector engine's per-lane fallback may trigger there).
     pub region_divergent: Vec<bool>,
+    /// Flattened bytecode for the uniform, legal regions of `reg_fn`
+    /// (CPU targets only; `None` when nothing lowered). The threaded
+    /// bytecode engine consumes this; other engines ignore it.
+    pub bytecode: Option<crate::exec::bytecode::BytecodeProgram>,
     /// Pass statistics.
     pub stats: CompileStats,
 }
@@ -212,6 +224,20 @@ pub fn compile_workgroup(
     stats.uniform_regs = reg_uniform.iter().filter(|&&u| u).count();
     stats.divergent_regions = region_divergent.iter().filter(|&&d| d).count();
 
+    // Target-specific lowering to the threaded-bytecode tier: flatten the
+    // uniform, legal regions into pre-resolved, fused bytecode. CPU-only
+    // (SPMD/TTA targets never execute through the bytecode engine).
+    let bytecode = if opts.target == TargetKind::Cpu && !opts.spmd {
+        let (prog, bstats) =
+            crate::exec::bytecode::lower(&reg_fn, &regions, &region_divergent);
+        stats.bytecode_regions = bstats.covered_regions;
+        stats.bytecode_fused = bstats.fused;
+        stats.bytecode_insts = bstats.insts;
+        prog
+    } else {
+        None
+    };
+
     // Target-specific parallel mapping: materialise WI loops.
     let (loop_fn, wstats) = if opts.spmd {
         // SPMD devices run the single-WI function themselves; strip
@@ -235,6 +261,7 @@ pub fn compile_workgroup(
         local_size,
         reg_uniform,
         region_divergent,
+        bytecode,
         stats,
     })
 }

@@ -15,7 +15,7 @@
 //! mid-level optimizer per-pass counters (kcc/opt/), the
 //! specialisation-cache counters (memory/disk hits vs compiles), and the
 //! engine dispatch counters (gangs, diverged, vectorised/uniform/per-lane
-//! instruction dispatches) for the run.
+//! and bytecode instruction dispatches) for the run.
 //!
 //! `--opt N` (N = 0/1/2, default 2) selects the optimizer level; it sets
 //! `POCLRS_OPT` before any device is created, so every device's
@@ -81,13 +81,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 // launches used, with zero re-compilation.
                 for (spec, wgf) in r.program.cached_specializations() {
                     println!(
-                        "compile `{}` @ {:?}: regions={} uniform slots={} uniform regs={} divergent regions={}",
+                        "compile `{}` @ {:?}: regions={} uniform slots={} uniform regs={} divergent regions={} bytecode regions={} fused={} insts={}",
                         spec.kernel,
                         spec.local,
                         wgf.stats.regions,
                         wgf.stats.uniform_slots,
                         wgf.stats.uniform_regs,
                         wgf.stats.divergent_regions,
+                        wgf.stats.bytecode_regions,
+                        wgf.stats.bytecode_fused,
+                        wgf.stats.bytecode_insts,
                     );
                     let o = &wgf.stats.opt;
                     println!(
@@ -129,7 +132,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 // Engine-side counters for the whole run.
                 let s = &r.stats;
                 println!(
-                    "exec: workgroups={} gangs={} diverged={} dispatches={} (vectorised={} uniform={} per-lane={})",
+                    "exec: workgroups={} gangs={} diverged={} dispatches={} (vectorised={} uniform={} per-lane={} bytecode={}) bytecode-gangs={} fallbacks={}",
                     s.workgroups,
                     s.gangs,
                     s.diverged_gangs,
@@ -137,6 +140,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     s.vector_insts,
                     s.uniform_insts,
                     s.lane_insts,
+                    s.bytecode_insts,
+                    s.bytecode_gangs,
+                    s.bytecode_fallbacks,
                 );
             }
         }

@@ -1,10 +1,12 @@
-//! Counter assertions for the lane-batched vector engine: the compile-side
-//! uniformity export, the ≥width× interpreter-dispatch reduction on a
-//! uniform-control kernel (the ISSUE acceptance criterion), and the
-//! divergence fallback accounting.
+//! Counter assertions for the lane-batched vector engine and the
+//! threaded-bytecode tier: the compile-side uniformity export, the
+//! ≥width× interpreter-dispatch reduction on a uniform-control kernel
+//! (the ISSUE acceptance criterion), the bytecode tier's strict dispatch
+//! reduction over the vector engine, and the divergence fallback
+//! accounting.
 
 use poclrs::exec::value::SP_GLOBAL;
-use poclrs::exec::{gang, mem, vecgang, LaunchCtx, MemoryRefs, VVal};
+use poclrs::exec::{bytecode, gang, mem, vecgang, LaunchCtx, MemoryRefs, VVal};
 use poclrs::frontend::compile;
 use poclrs::kcc::{compile_workgroup, CompileOptions, WorkGroupFunction};
 
@@ -20,16 +22,35 @@ const DIVERGE: &str = "__kernel void dv(__global float *x) {
     x[i] = v;
 }";
 
+/// Uniform first region (covered by bytecode), divergent second region
+/// (left to the vector interpreter) — exercises the per-region fallback.
+const DIVERGE_BARRIER: &str = "__kernel void dvb(__global float *x) {
+    size_t i = get_global_id(0);
+    float v = x[i] * 2.0f;
+    barrier(CLK_LOCAL_MEM_FENCE);
+    if (v > 8.0f) { v = v + 3.0f; } else { v = v - 1.0f; }
+    x[i] = v;
+}";
+
 const N: usize = 32;
 const LOCAL: usize = 8;
 
-/// Compile `src` for an N-element 1D launch and run it with either gang
-/// engine over `bufs` f32 buffers laid out back to back in global memory.
-/// Returns the accumulated stats and the final contents of every buffer.
+/// Which engine `run_gangs` drives.
+#[derive(Clone, Copy, PartialEq)]
+enum Eng {
+    Scalar,
+    Vector,
+    Bytecode,
+}
+
+/// Compile `src` for an N-element 1D launch and run it with the chosen
+/// gang engine over `bufs` f32 buffers laid out back to back in global
+/// memory. Returns the accumulated stats and the final contents of every
+/// buffer.
 fn run_gangs(
     src: &str,
     bufs: &[Vec<f32>],
-    vector: bool,
+    engine: Eng,
     width: usize,
 ) -> (gang::GangStats, Vec<Vec<f32>>) {
     let m = compile(src).unwrap();
@@ -56,16 +77,23 @@ fn run_gangs(
             work_dim: 1,
         };
         let mut mem_refs = MemoryRefs { global: &mut global, local: &mut local_mem };
-        let s = if vector {
-            vecgang::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap()
-        } else {
-            gang::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap()
+        let s = match engine {
+            Eng::Scalar => gang::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap(),
+            Eng::Vector => {
+                vecgang::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap()
+            }
+            Eng::Bytecode => {
+                bytecode::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap()
+            }
         };
         total.gangs += s.gangs;
         total.diverged += s.diverged;
         total.vector_insts += s.vector_insts;
         total.uniform_insts += s.uniform_insts;
         total.lane_insts += s.lane_insts;
+        total.bytecode_insts += s.bytecode_insts;
+        total.bytecode_gangs += s.bytecode_gangs;
+        total.bytecode_fallbacks += s.bytecode_fallbacks;
     }
     let out = offsets.iter().map(|&(o, n)| mem::read_f32s(&global, o, n)).collect();
     (total, out)
@@ -82,8 +110,8 @@ fn vecadd_bufs() -> Vec<Vec<f32>> {
 #[test]
 fn vector_engine_cuts_dispatches_by_width_on_uniform_kernel() {
     let width = 8;
-    let (scalar, out_s) = run_gangs(VECADD, &vecadd_bufs(), false, width);
-    let (vector, out_v) = run_gangs(VECADD, &vecadd_bufs(), true, width);
+    let (scalar, out_s) = run_gangs(VECADD, &vecadd_bufs(), Eng::Scalar, width);
+    let (vector, out_v) = run_gangs(VECADD, &vecadd_bufs(), Eng::Vector, width);
     let expect: Vec<f32> = (0..N).map(|i| (i + i * 3) as f32).collect();
     assert_eq!(out_s[2], expect);
     assert_eq!(out_v[2], expect);
@@ -102,11 +130,66 @@ fn vector_engine_cuts_dispatches_by_width_on_uniform_kernel() {
 }
 
 #[test]
+fn bytecode_tier_strictly_reduces_dispatches_and_agrees() {
+    for width in [4usize, 8] {
+        let (vector, out_v) = run_gangs(VECADD, &vecadd_bufs(), Eng::Vector, width);
+        let (bc, out_b) = run_gangs(VECADD, &vecadd_bufs(), Eng::Bytecode, width);
+        // Bit-identical results (f32 equality is exact here — both paths
+        // run the same evaluation kernels).
+        for (v, b) in out_v.iter().zip(&out_b) {
+            let vb: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(vb, bb, "bytecode output diverges at width {width}");
+        }
+        assert!(bc.bytecode_gangs > 0, "covered regions ran through bytecode");
+        assert_eq!(bc.bytecode_fallbacks, 0, "vecadd is fully coverable");
+        assert_eq!(bc.diverged, 0);
+        assert!(bc.bytecode_insts > 0, "bytecode dispatches recorded");
+        // Superinstruction fusion makes the reduction strict, not just ≤.
+        assert!(
+            bc.dispatches() < vector.dispatches(),
+            "bytecode {} !< vector {} (width {width})",
+            bc.dispatches(),
+            vector.dispatches()
+        );
+        assert_eq!(bc.gangs, vector.gangs, "same gang partition in both engines");
+    }
+}
+
+#[test]
+fn bytecode_tier_falls_back_on_divergent_regions() {
+    let width = 8;
+    let input: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let (vector, out_v) = run_gangs(DIVERGE_BARRIER, &[input.clone()], Eng::Vector, width);
+    let (bc, out_b) = run_gangs(DIVERGE_BARRIER, &[input], Eng::Bytecode, width);
+    assert_eq!(out_v[0], out_b[0], "fallback preserves semantics");
+    // The uniform pre-barrier region runs through bytecode; the statically
+    // divergent post-barrier region has no lowered bytecode and the engine
+    // must account each such gang-region as a fallback, not silently
+    // misreport coverage.
+    assert!(bc.bytecode_gangs > 0, "uniform region covered: {bc:?}");
+    assert!(
+        bc.bytecode_fallbacks > 0,
+        "divergent region must fall back to the vector interpreter: {bc:?}"
+    );
+    assert_eq!(bc.gangs, vector.gangs);
+
+    // A kernel whose only region is divergent lowers to no bytecode at
+    // all and degrades wholesale to the vector engine.
+    let input: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let (bc2, out2) = run_gangs(DIVERGE, &[input.clone()], Eng::Bytecode, width);
+    let (v2, outv2) = run_gangs(DIVERGE, &[input], Eng::Vector, width);
+    assert_eq!(out2[0], outv2[0]);
+    assert_eq!(bc2.bytecode_insts, 0, "no bytecode to run: {bc2:?}");
+    assert_eq!(bc2.gangs, v2.gangs);
+}
+
+#[test]
 fn divergent_kernel_falls_back_per_lane_and_still_agrees() {
     let width = 8;
     let input: Vec<f32> = (0..N).map(|i| i as f32).collect();
-    let (scalar, out_s) = run_gangs(DIVERGE, &[input.clone()], false, width);
-    let (vector, out_v) = run_gangs(DIVERGE, &[input], true, width);
+    let (scalar, out_s) = run_gangs(DIVERGE, &[input.clone()], Eng::Scalar, width);
+    let (vector, out_v) = run_gangs(DIVERGE, &[input], Eng::Vector, width);
     assert_eq!(out_s[0], out_v[0], "divergent fallback preserves semantics");
     assert!(vector.diverged > 0, "the v>4 branch splits at least one gang");
     assert!(vector.lane_insts > 0, "fallback dispatches are per-lane");
@@ -122,10 +205,20 @@ fn workgroup_function_exports_uniformity_metadata() {
     assert_eq!(wgf.region_divergent.len(), wgf.regions.len());
     assert!(wgf.stats.uniform_regs > 0, "{:?}", wgf.stats);
     assert_eq!(wgf.stats.divergent_regions, 0, "{:?}", wgf.stats);
+    // The uniform kernel lowers completely into the bytecode tier, with
+    // at least one fused superinstruction (the a[i]/b[i] gep+load pairs).
+    assert!(wgf.bytecode.is_some(), "{:?}", wgf.stats);
+    assert_eq!(wgf.stats.bytecode_regions, wgf.stats.regions, "{:?}", wgf.stats);
+    assert!(wgf.stats.bytecode_fused > 0, "{:?}", wgf.stats);
 
     let m = compile(DIVERGE).unwrap();
     let wgf =
         compile_workgroup(&m.kernels[0], [LOCAL, 1, 1], &CompileOptions::default()).unwrap();
     assert!(wgf.stats.divergent_regions >= 1, "{:?}", wgf.stats);
     assert!(wgf.region_divergent.iter().any(|&d| d));
+    assert!(
+        wgf.stats.bytecode_regions < wgf.stats.regions,
+        "divergent regions are not lowered: {:?}",
+        wgf.stats
+    );
 }

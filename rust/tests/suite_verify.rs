@@ -1,24 +1,43 @@
 //! Integration: every suite application must produce baseline-identical
 //! results on every CPU-style device (the correctness half of Fig. 12-14),
-//! under both queue execution modes (in-order and out-of-order).
+//! under both queue execution modes (in-order and out-of-order), plus the
+//! threaded-bytecode tier's acceptance criteria: suite-wide bit-identical
+//! results, ≥half of the suite's parallel regions lowered to bytecode,
+//! and strictly fewer interpreter dispatches than the vector engine on
+//! the anchor apps.
+//!
+//! Setting `POCLRS_ENGINE=bytecode` restricts the device matrix to the
+//! bytecode-tier devices (the dedicated CI leg).
 
 use std::sync::Arc;
 
-use poclrs::cl::QueueProperties;
-use poclrs::devices::{basic::BasicDevice, threaded::ThreadedDevice, ttasim::TtaSimDevice, Device, EngineKind};
-use poclrs::suite::{all_apps, runner, SizeClass};
+use poclrs::cl::{Program, QueueProperties};
+use poclrs::devices::{
+    basic::BasicDevice, threaded::ThreadedDevice, ttasim::TtaSimDevice, Device, EngineKind,
+};
+use poclrs::kcc::opt::OptLevel;
+use poclrs::suite::{all_apps, runner, App, BufInit, SizeClass};
 
 fn devices() -> Vec<(&'static str, Arc<dyn Device>)> {
-    vec![
+    let all: Vec<(&'static str, Arc<dyn Device>)> = vec![
         ("basic-serial", Arc::new(BasicDevice::new(EngineKind::Serial)) as Arc<dyn Device>),
         ("basic-gang8", Arc::new(BasicDevice::new(EngineKind::Gang(8)))),
         ("basic-gang4", Arc::new(BasicDevice::new(EngineKind::Gang(4)))),
         ("basic-gangvector8", Arc::new(BasicDevice::new(EngineKind::GangVector(8)))),
         ("basic-gangvector4", Arc::new(BasicDevice::new(EngineKind::GangVector(4)))),
+        ("basic-bytecode8", Arc::new(BasicDevice::new(EngineKind::Bytecode(8)))),
+        ("basic-bytecode4", Arc::new(BasicDevice::new(EngineKind::Bytecode(4)))),
         ("basic-fiber", Arc::new(BasicDevice::new(EngineKind::Fiber))),
         ("pthread-gang8", Arc::new(ThreadedDevice::new(EngineKind::Gang(8), 4))),
         ("pthread-gangvector8", Arc::new(ThreadedDevice::new(EngineKind::GangVector(8), 4))),
-    ]
+        ("pthread-bytecode8", Arc::new(ThreadedDevice::new(EngineKind::Bytecode(8), 4))),
+    ];
+    // The CI bytecode leg runs the same matrix restricted to the tier
+    // under test.
+    match std::env::var("POCLRS_ENGINE").as_deref() {
+        Ok("bytecode") => all.into_iter().filter(|(name, _)| name.contains("bytecode")).collect(),
+        _ => all,
+    }
 }
 
 #[test]
@@ -38,6 +57,9 @@ fn all_apps_verify_on_all_devices_both_queue_modes() {
 
 #[test]
 fn all_apps_verify_on_ttasim_both_modes() {
+    if std::env::var("POCLRS_ENGINE").as_deref() == Ok("bytecode") {
+        return; // the bytecode CI leg skips the TTA matrix
+    }
     let mut failures = Vec::new();
     for horizontal in [false, true] {
         let device: Arc<dyn Device> = Arc::new(TtaSimDevice::new(horizontal));
@@ -51,4 +73,110 @@ fn all_apps_verify_on_ttasim_both_modes() {
         }
     }
     assert!(failures.is_empty(), "ttasim failures:\n{}", failures.join("\n"));
+}
+
+// ---------------------------------------------------------------------
+// Threaded-bytecode tier acceptance
+// ---------------------------------------------------------------------
+
+fn assert_bit_identical(a: &[BufInit], b: &[BufInit], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: buffer count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        match (x, y) {
+            (BufInit::F32(u), BufInit::F32(v)) => {
+                assert_eq!(u.len(), v.len(), "{what}: buffer {i} length");
+                for (j, (p, q)) in u.iter().zip(v).enumerate() {
+                    assert_eq!(
+                        p.to_bits(),
+                        q.to_bits(),
+                        "{what}: buffer {i}[{j}] {p} vs {q} not bit-identical"
+                    );
+                }
+            }
+            (BufInit::U32(u), BufInit::U32(v)) => assert_eq!(u, v, "{what}: buffer {i}"),
+            _ => panic!("{what}: buffer {i} type mismatch"),
+        }
+    }
+}
+
+/// Run `app` on a basic device pinned to `level`, verify against the
+/// native baseline, and return the run result.
+fn run_at(app: &App, engine: EngineKind, level: OptLevel) -> runner::RunResult {
+    let device: Arc<dyn Device> = Arc::new(BasicDevice::with_opt_level(engine, level));
+    let program = Program::build(app.source).unwrap();
+    let r = runner::run_with_program(app, device, QueueProperties::InOrder, program)
+        .unwrap_or_else(|e| panic!("{} at {level:?} on {engine:?}: {e}", app.name));
+    runner::verify(app, &r.buffers)
+        .unwrap_or_else(|e| panic!("{} at {level:?} on {engine:?}: {e}", app.name));
+    r
+}
+
+/// Acceptance: the bytecode tier lowers at least half of the suite's
+/// parallel regions, never dispatches more than the vector engine, and
+/// dispatches strictly less on the anchor apps (MatrixMultiplication and
+/// BlackScholes, whose covered inner loops are superinstruction-dense).
+#[test]
+fn bytecode_tier_covers_suite_and_reduces_dispatches() {
+    let mut covered = 0usize;
+    let mut total_regions = 0usize;
+    let mut anchors_seen = 0usize;
+    let mut lines = Vec::new();
+    for app in all_apps(SizeClass::Small) {
+        let vec_run = run_at(&app, EngineKind::GangVector(4), OptLevel::O2);
+        let bc_run = run_at(&app, EngineKind::Bytecode(4), OptLevel::O2);
+        assert_bit_identical(
+            &vec_run.buffers,
+            &bc_run.buffers,
+            &format!("{} gang-vector vs bytecode", app.name),
+        );
+        for (_, wgf) in bc_run.program.cached_specializations() {
+            covered += wgf.stats.bytecode_regions;
+            total_regions += wgf.stats.regions;
+        }
+        let dv = vec_run.stats.dispatches();
+        let db = bc_run.stats.dispatches();
+        lines.push(format!("{:<22} vector={dv:>9} bytecode={db:>9}", app.name));
+        assert!(
+            db <= dv,
+            "{}: bytecode must never dispatch more than the vector engine (vector={dv}, bytecode={db})",
+            app.name
+        );
+        if app.name == "MatrixMultiplication" || app.name == "BlackScholes" {
+            anchors_seen += 1;
+            assert!(
+                db < dv,
+                "{}: bytecode must strictly reduce dispatches (vector={dv}, bytecode={db})",
+                app.name
+            );
+            assert!(
+                bc_run.stats.bytecode_insts > 0,
+                "{}: the anchor app must actually run bytecode",
+                app.name
+            );
+        }
+    }
+    assert_eq!(anchors_seen, 2, "both anchor apps must be in the suite");
+    assert!(
+        covered * 2 >= total_regions,
+        "bytecode must cover >=half of the suite's regions ({covered}/{total_regions}):\n{}",
+        lines.join("\n")
+    );
+}
+
+/// Acceptance: the bytecode tier is bit-identical to the serial engine
+/// on every suite app at both O0 and O2 (i.e. the tier composes with the
+/// optimizer without perturbing results).
+#[test]
+fn bytecode_tier_bit_identical_to_serial_at_o0_and_o2() {
+    for app in all_apps(SizeClass::Small) {
+        for level in [OptLevel::O0, OptLevel::O2] {
+            let base = run_at(&app, EngineKind::Serial, level);
+            let got = run_at(&app, EngineKind::Bytecode(4), level);
+            assert_bit_identical(
+                &base.buffers,
+                &got.buffers,
+                &format!("{} serial vs bytecode at {level:?}", app.name),
+            );
+        }
+    }
 }
