@@ -5,8 +5,8 @@
 //!
 //! * an [`ir::Module`](crate::ir::Module) (frontend output),
 //! * a [`WorkGroupFunction`] (one §4.1 enqueue-time specialisation —
-//!   this is what the on-disk kernel cache stores per [`CacheKey`]
-//!   (see `cache::key`)),
+//!   this is what the on-disk kernel cache stores per
+//!   [`CacheKey`](crate::cache::CacheKey) (see `cache::key`)),
 //! * a [`ProgramBinary`] (module + all cached specialisations — what
 //!   `Program::binaries()` / `Program::from_binary` exchange, the
 //!   `clGetProgramInfo(CL_PROGRAM_BINARIES)` / `clCreateProgramWithBinary`
@@ -53,7 +53,9 @@ pub const POCLBIN_MAGIC: [u8; 8] = *b"POCLBIN\0";
 /// v2: `CompileOptions::opt_level` + `CompileStats::opt` (optimizer).
 /// v3: `WorkGroupFunction::bytecode` (threaded-bytecode tier) +
 /// `CompileStats` bytecode counters.
-pub const POCLBIN_VERSION: u32 = 3;
+/// v4: `CompileStats` jit counters (the jitted code itself is never
+/// serialised — machine code is re-lowered from the cached bytecode).
+pub const POCLBIN_VERSION: u32 = 4;
 
 /// Envelope size in bytes (magic + version + kind + length + digest).
 pub const HEADER_LEN: usize = 8 + 4 + 1 + 8 + 16;
@@ -1021,6 +1023,9 @@ impl Codec for CompileStats {
         self.bytecode_regions.put(w);
         self.bytecode_fused.put(w);
         self.bytecode_insts.put(w);
+        self.jit_regions.put(w);
+        self.jit_insts.put(w);
+        self.jit_fallbacks.put(w);
         self.opt.put(w);
     }
     fn get(r: &mut R) -> Result<Self> {
@@ -1039,6 +1044,9 @@ impl Codec for CompileStats {
             bytecode_regions: usize::get(r)?,
             bytecode_fused: usize::get(r)?,
             bytecode_insts: usize::get(r)?,
+            jit_regions: usize::get(r)?,
+            jit_insts: usize::get(r)?,
+            jit_fallbacks: usize::get(r)?,
             opt: OptStats::get(r)?,
         })
     }
@@ -1152,6 +1160,9 @@ impl Codec for WorkGroupFunction {
             region_divergent,
             stats,
             bytecode,
+            // Machine code is never serialised: callers re-attach the
+            // jit tier from the decoded bytecode (`exec::jit::attach`).
+            jit: None,
         })
     }
 }

@@ -37,6 +37,8 @@ impl Platform {
                 Arc::new(BasicDevice::new(EngineKind::GangVector(vw))),
                 Arc::new(ThreadedDevice::new(EngineKind::Bytecode(vw), cores)),
                 Arc::new(BasicDevice::new(EngineKind::Bytecode(vw))),
+                Arc::new(ThreadedDevice::new(EngineKind::Jit(vw), cores)),
+                Arc::new(BasicDevice::new(EngineKind::Jit(vw))),
                 Arc::new(BasicDevice::new(EngineKind::Fiber)),
                 Arc::new(TtaSimDevice::new(true)),
             ],
@@ -96,13 +98,15 @@ mod tests {
     #[test]
     fn default_platform_has_expected_devices() {
         let p = Platform::default_platform();
-        assert!(p.devices.len() >= 9);
+        assert!(p.devices.len() >= 11);
         assert!(p.device("basic-serial").is_some());
         assert!(p.device("pthread-gang(8)").is_some());
         assert!(p.device("basic-gangvector").is_some(), "lane-batched vector device present");
         assert!(p.device("pthread-gangvector").is_some());
         assert!(p.device("basic-bytecode").is_some(), "threaded-bytecode device present");
         assert!(p.device("pthread-bytecode").is_some());
+        assert!(p.device("basic-jit").is_some(), "template-jit device present");
+        assert!(p.device("pthread-jit").is_some());
         assert!(p.device("ttasim").is_some(), "unique substring resolves");
         assert!(p.device("nonexistent").is_none());
     }

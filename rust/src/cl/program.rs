@@ -99,8 +99,16 @@ impl Program {
     /// the source-built program's.
     pub fn from_binary_cached(bytes: &[u8], disk: Option<Arc<DiskCache>>) -> Result<Program> {
         let bin = poclbin::decode_program(bytes)?;
-        let specs: HashMap<SpecKey, Arc<WorkGroupFunction>> =
-            bin.entries.into_iter().map(|(k, w)| (k, Arc::new(w))).collect();
+        let specs: HashMap<SpecKey, Arc<WorkGroupFunction>> = bin
+            .entries
+            .into_iter()
+            .map(|(k, mut w)| {
+                // Machine code is never serialised: re-lower the jit
+                // tier from the decoded bytecode.
+                crate::exec::jit::attach(&mut w, k.opts.gang_width);
+                (k, Arc::new(w))
+            })
+            .collect();
         Ok(Program {
             module: bin.module,
             source_hash: bin.source_hash,
@@ -173,11 +181,14 @@ impl Program {
         }
         if let Some(disk) = &self.disk {
             let key = CacheKey::for_spec(self.source_hash, &spec);
-            if let Some(wgf) = disk.load(key) {
+            if let Some(mut wgf) = disk.load(key) {
                 // Belt and braces against key collisions or shuffled
                 // files: a served entry must actually be this kernel at
                 // this local size, else fall through and recompile.
                 if wgf.name == spec.kernel && wgf.local_size == spec.local {
+                    // Jitted code is not part of the on-disk format;
+                    // re-lower it from the cached bytecode.
+                    crate::exec::jit::attach(&mut wgf, spec.opts.gang_width);
                     let wgf = Arc::new(wgf);
                     state.stats.disk_hits += 1;
                     state.specs.insert(spec, wgf.clone());

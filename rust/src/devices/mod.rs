@@ -37,6 +37,11 @@ pub enum EngineKind {
     /// covered regions run pre-resolved, fused bytecode (`exec::bytecode`),
     /// the rest fall back to the `GangVector` region interpreter.
     Bytecode(usize),
+    /// Template-JIT tier over lane-batched gangs of the given width:
+    /// covered regions run hand-encoded x86-64 machine code
+    /// (`exec::jit`), the rest fall back per region to the bytecode
+    /// tier; non-x86-64 hosts degrade wholesale to `Bytecode`.
+    Jit(usize),
     /// Per-work-item fibers (FreeOCL / Twin Peaks baseline).
     Fiber,
 }
@@ -86,7 +91,10 @@ fn gang_width_override(raw: Option<&str>) -> Option<usize> {
 /// consume the same compiled forms.
 pub fn cpu_compile_options(engine: EngineKind) -> CompileOptions {
     let gang_width = match engine {
-        EngineKind::Gang(w) | EngineKind::GangVector(w) | EngineKind::Bytecode(w) => w,
+        EngineKind::Gang(w)
+        | EngineKind::GangVector(w)
+        | EngineKind::Bytecode(w)
+        | EngineKind::Jit(w) => w,
         EngineKind::Serial | EngineKind::Fiber => 0,
     };
     CompileOptions { target: TargetKind::Cpu, gang_width, ..Default::default() }
@@ -181,6 +189,13 @@ pub struct LaunchStats {
     /// Gang-regions with no lowered bytecode that fell back to the vector
     /// region interpreter.
     pub bytecode_fallbacks: usize,
+    /// Bytecode (super)instructions retired by jitted machine code (jit
+    /// engine; excluded from [`LaunchStats::dispatches`]).
+    pub jit_insts: usize,
+    /// Gang-regions executed through jitted machine code.
+    pub jit_gangs: usize,
+    /// Gang-regions the jit engine ran on a lower tier instead.
+    pub jit_fallbacks: usize,
     /// Simulated cycles (ttasim only).
     pub cycles: u64,
 }
@@ -196,6 +211,9 @@ impl LaunchStats {
         self.bytecode_insts += g.bytecode_insts;
         self.bytecode_gangs += g.bytecode_gangs;
         self.bytecode_fallbacks += g.bytecode_fallbacks;
+        self.jit_insts += g.jit_insts;
+        self.jit_gangs += g.jit_gangs;
+        self.jit_fallbacks += g.jit_fallbacks;
     }
 
     /// Fold another launch's statistics into this one (worker pools,
@@ -210,6 +228,9 @@ impl LaunchStats {
         self.bytecode_insts += other.bytecode_insts;
         self.bytecode_gangs += other.bytecode_gangs;
         self.bytecode_fallbacks += other.bytecode_fallbacks;
+        self.jit_insts += other.jit_insts;
+        self.jit_gangs += other.jit_gangs;
+        self.jit_fallbacks += other.jit_fallbacks;
         self.cycles += other.cycles;
     }
 
@@ -260,6 +281,7 @@ pub fn run_one_group(
         EngineKind::Bytecode(w) => {
             crate::exec::bytecode::run_workgroup(wgf, args, &mut mem, ctx, w)
         }
+        EngineKind::Jit(w) => crate::exec::jit::run_workgroup(wgf, args, &mut mem, ctx, w),
         EngineKind::Fiber => {
             crate::exec::fiber::run_workgroup(wgf, args, &mut mem, ctx)?;
             Ok(Default::default())

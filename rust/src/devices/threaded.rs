@@ -58,6 +58,9 @@ impl Device for ThreadedDevice {
                 EngineKind::Bytecode(8) => "bytecode x8 (fused SoA dispatch)",
                 EngineKind::Bytecode(4) => "bytecode x4 (fused SoA dispatch)",
                 EngineKind::Bytecode(_) => "bytecode (fused SoA dispatch)",
+                EngineKind::Jit(8) => "jit x8 (x86-64 templates)",
+                EngineKind::Jit(4) => "jit x4 (x86-64 templates)",
+                EngineKind::Jit(_) => "jit (x86-64 templates)",
                 EngineKind::Serial => "scalar WI loops",
                 EngineKind::Fiber => "fibers (no DLP)",
             },

@@ -27,3 +27,4 @@ mod run;
 pub use lower::{lower, LowerStats};
 pub use prog::{BcConst, BcInst, BcRegion, BcSlot, BytecodeProgram};
 pub use run::run_workgroup;
+pub(crate) use run::{diverge, resolve_consts, run_region, BcGang};

@@ -57,9 +57,40 @@ pub fn run_workgroup(
 /// regions: registers are block-local (IR invariant), so no stale value
 /// is ever read, and the per-region allocation the interpreters pay
 /// disappears.
-struct BcGang<const W: usize> {
-    gs: GangState<W>,
-    frame: Vec<VLane<W>>,
+pub(crate) struct BcGang<const W: usize> {
+    pub(crate) gs: GangState<W>,
+    pub(crate) frame: Vec<VLane<W>>,
+}
+
+/// Resolve every region's constant pool once per work-group: launch
+/// arguments, normalised immediates and private-slot base pointers are
+/// all launch-invariant and gang-uniform. Shared with the JIT engine,
+/// whose regions carry the same pools.
+pub(crate) fn resolve_consts<const W: usize>(
+    f: &Function,
+    regions: &[super::prog::BcRegion],
+    args: &[VVal],
+) -> Vec<Vec<VLane<W>>> {
+    let mut bases: Vec<u64> = Vec::with_capacity(f.slots.len());
+    let mut total = 0u64;
+    for s in &f.slots {
+        bases.push(total);
+        total += s.count as u64;
+    }
+    regions
+        .iter()
+        .map(|r| {
+            r.consts
+                .iter()
+                .map(|c| match c {
+                    BcConst::Int(v, s) => VLane::Uni(VVal::S(Val::I(norm_int(*v, *s)))),
+                    BcConst::Float(v, s) => VLane::Uni(VVal::S(Val::F(norm_float(*v, *s)))),
+                    BcConst::Arg(a) => VLane::Uni(args[*a as usize].clone()),
+                    BcConst::Slot(s) => VLane::Uni(VVal::ptr(SP_PRIVATE, bases[s.0 as usize])),
+                })
+                .collect()
+        })
+        .collect()
 }
 
 fn run_wg<const W: usize>(
@@ -84,30 +115,7 @@ fn run_wg<const W: usize>(
         }
     }
 
-    // Resolve every region's constant pool once per work-group: launch
-    // arguments, normalised immediates and private-slot base pointers are
-    // all launch-invariant and gang-uniform.
-    let mut bases: Vec<u64> = Vec::with_capacity(f.slots.len());
-    let mut total = 0u64;
-    for s in &f.slots {
-        bases.push(total);
-        total += s.count as u64;
-    }
-    let consts: Vec<Vec<VLane<W>>> = prog
-        .regions
-        .iter()
-        .map(|r| {
-            r.consts
-                .iter()
-                .map(|c| match c {
-                    BcConst::Int(v, s) => VLane::Uni(VVal::S(Val::I(norm_int(*v, *s)))),
-                    BcConst::Float(v, s) => VLane::Uni(VVal::S(Val::F(norm_float(*v, *s)))),
-                    BcConst::Arg(a) => VLane::Uni(args[*a as usize].clone()),
-                    BcConst::Slot(s) => VLane::Uni(VVal::ptr(SP_PRIVATE, bases[s.0 as usize])),
-                })
-                .collect()
-        })
-        .collect();
+    let consts: Vec<Vec<VLane<W>>> = resolve_consts(f, &prog.regions, args);
 
     let n = wgf.wg_size();
     let [lx, ly, _lz] = wgf.local_size;
@@ -223,17 +231,19 @@ fn decide<const W: usize>(
 /// from its branch target to the region's closing barrier on the shared
 /// per-lane path, re-import (re-uniforming identical lanes) — the exact
 /// sequence the vector engine runs on a divergent branch.
-fn diverge<const W: usize>(
+/// Shared with the JIT engine (same gang state, same protocol).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn diverge<const W: usize>(
     f: &Function,
     args: &[VVal],
     mem: &mut MemoryRefs<'_>,
     ctx: &LaunchCtx,
-    gang: &mut BcGang<W>,
+    gs: &mut GangState<W>,
     lane_targets: &[BlockId; W],
     stats: &mut GangStats,
 ) -> Result<BlockId> {
     stats.diverged += 1;
-    let mut stores = gang.gs.store.split();
+    let mut stores = gs.store.split();
     let mut reached: Option<BlockId> = None;
     for (l, store) in stores.iter_mut().enumerate() {
         let bar = run_lane_to_barrier(
@@ -243,12 +253,12 @@ fn diverge<const W: usize>(
             ctx,
             store,
             lane_targets[l],
-            gang.gs.local_ids[l],
+            gs.local_ids[l],
             stats,
         )?;
         note_barrier(&mut reached, bar, "within gang")?;
     }
-    gang.gs.store.merge(&stores);
+    gs.store.merge(&stores);
     Ok(reached.expect("gang is non-empty"))
 }
 
@@ -256,7 +266,7 @@ fn diverge<const W: usize>(
 /// `code[0]` to an `End` (or a divergent branch's per-lane finish).
 /// Returns the barrier block the gang reached.
 #[allow(clippy::too_many_arguments)]
-fn run_region<const W: usize>(
+pub(crate) fn run_region<const W: usize>(
     f: &Function,
     code: &[BcInst],
     consts: &[VLane<W>],
@@ -429,7 +439,7 @@ fn run_region<const W: usize>(
                 stats.bytecode_insts += 1;
                 match decide(&cv, *t, *fpc, *ir_t, *ir_f) {
                     Ok(npc) => pc = npc,
-                    Err(lt) => return diverge(f, args, mem, ctx, gang, &lt, stats),
+                    Err(lt) => return diverge(f, args, mem, ctx, &mut gang.gs, &lt, stats),
                 }
             }
             BcInst::Jump { pc: target } => pc = *target as usize,
@@ -443,7 +453,7 @@ fn run_region<const W: usize>(
                 );
                 match d {
                     Ok(npc) => pc = npc,
-                    Err(lt) => return diverge(f, args, mem, ctx, gang, &lt, stats),
+                    Err(lt) => return diverge(f, args, mem, ctx, &mut gang.gs, &lt, stats),
                 }
             }
             BcInst::End { barrier } => return Ok(*barrier),

@@ -45,6 +45,15 @@ pub struct GangStats {
     /// Gang-regions that had no lowered bytecode and fell back to the
     /// lane-batched region interpreter.
     pub bytecode_fallbacks: usize,
+    /// Bytecode (super)instructions retired by jitted machine code —
+    /// these pay *no* interpreter dispatch, so they are excluded from
+    /// [`GangStats::dispatches`].
+    pub jit_insts: usize,
+    /// Gang-regions executed through jitted machine code.
+    pub jit_gangs: usize,
+    /// Gang-regions the JIT engine ran a tier below the jitted code
+    /// (region not jitted, constants failed to marshal, or no bytecode).
+    pub jit_fallbacks: usize,
 }
 
 impl GangStats {

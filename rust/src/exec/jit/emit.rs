@@ -1,0 +1,893 @@
+//! Hand-rolled x86-64 instruction encoding and W^X executable memory.
+//!
+//! [`Asm`] is a minimal one-pass assembler: methods append the exact
+//! byte sequence of one instruction (verified against GNU as/objdump in
+//! the unit tests below), labels are bound to offsets and rel32 branch
+//! fixups are patched in [`Asm::finish`]. Only the small instruction
+//! vocabulary the template JIT needs is implemented, and always in the
+//! most general encoding (disp32 addressing, imm32 ALU forms) so every
+//! emission site is byte-for-byte predictable.
+//!
+//! [`ExecMem`] owns the finished machine code: an anonymous `mmap`'d
+//! region that is written while `RW` and flipped to `RX` before any
+//! execution (W^X — the mapping is never writable and executable at
+//! once). Allocation failure is reported as `None`, which the caller
+//! treats as "no JIT" rather than an error.
+
+/// Condition codes (the `cc` nibble of `SETcc` / `Jcc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub(crate) enum Cc {
+    /// Equal (ZF=1).
+    E = 0x4,
+    /// Not equal (ZF=0).
+    Ne = 0x5,
+    /// Below (unsigned <, CF=1). Also "carry".
+    B = 0x2,
+    /// Above or equal (unsigned >=, CF=0).
+    Ae = 0x3,
+    /// Below or equal (unsigned <=).
+    Be = 0x6,
+    /// Above (unsigned >).
+    A = 0x7,
+    /// Less (signed <).
+    L = 0xc,
+    /// Greater or equal (signed >=).
+    Ge = 0xd,
+    /// Less or equal (signed <=).
+    Le = 0xe,
+    /// Greater (signed >).
+    G = 0xf,
+    /// Parity (PF=1, i.e. unordered after `ucomisd`).
+    P = 0xa,
+    /// No parity (PF=0, i.e. ordered after `ucomisd`).
+    Np = 0xb,
+}
+
+/// General-purpose register numbers (hardware encoding).
+pub(crate) const RAX: u8 = 0;
+pub(crate) const RCX: u8 = 1;
+pub(crate) const RDX: u8 = 2;
+pub(crate) const RSI: u8 = 6;
+pub(crate) const RDI: u8 = 7;
+pub(crate) const R14: u8 = 14;
+pub(crate) const R15: u8 = 15;
+/// XMM register numbers.
+pub(crate) const XMM0: u8 = 0;
+pub(crate) const XMM1: u8 = 1;
+
+/// A branch-target label (index into the assembler's label table).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Label(u32);
+
+/// One-pass assembler for a single region's code.
+pub(crate) struct Asm {
+    code: Vec<u8>,
+    labels: Vec<Option<usize>>,
+    fixups: Vec<(usize, Label)>,
+}
+
+fn modrm(md: u8, reg: u8, rm: u8) -> u8 {
+    (md << 6) | ((reg & 7) << 3) | (rm & 7)
+}
+
+impl Asm {
+    pub(crate) fn new() -> Asm {
+        Asm { code: Vec::new(), labels: Vec::new(), fixups: Vec::new() }
+    }
+
+    /// Current offset (for statistics; labels are the branch mechanism).
+    pub(crate) fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    /// Allocate an unbound label.
+    pub(crate) fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() as u32 - 1)
+    }
+
+    /// Bind `l` to the current offset.
+    pub(crate) fn bind(&mut self, l: Label) {
+        self.labels[l.0 as usize] = Some(self.code.len());
+    }
+
+    /// Patch all rel32 fixups and return the finished bytes. `None` if a
+    /// label was never bound (an internal lowering bug — the caller falls
+    /// back to the interpreter tiers rather than executing bad code).
+    pub(crate) fn finish(mut self) -> Option<Vec<u8>> {
+        for (pos, l) in &self.fixups {
+            let target = self.labels[l.0 as usize]?;
+            let rel = (target as i64) - (*pos as i64 + 4);
+            let rel32 = i32::try_from(rel).ok()?;
+            self.code[*pos..*pos + 4].copy_from_slice(&rel32.to_le_bytes());
+        }
+        Some(self.code)
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        self.code.extend_from_slice(b);
+    }
+
+    fn imm32(&mut self, v: i32) {
+        self.code.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn imm64(&mut self, v: u64) {
+        self.code.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// REX prefix. `w` = 64-bit operand, `r` extends modrm.reg, `b`
+    /// extends modrm.rm/base.
+    fn rex(&mut self, w: bool, r: u8, b: u8) {
+        let mut v = 0x40u8;
+        if w {
+            v |= 8;
+        }
+        if r >= 8 {
+            v |= 4;
+        }
+        if b >= 8 {
+            v |= 1;
+        }
+        if v != 0x40 || false {
+            self.code.push(v);
+        } else {
+            self.code.push(v);
+        }
+    }
+
+    /// REX emitted only when needed (32/8-bit forms with low registers).
+    fn rex_opt(&mut self, w: bool, r: u8, b: u8) {
+        let mut v = 0x40u8;
+        if w {
+            v |= 8;
+        }
+        if r >= 8 {
+            v |= 4;
+        }
+        if b >= 8 {
+            v |= 1;
+        }
+        if v != 0x40 {
+            self.code.push(v);
+        }
+    }
+
+    /// `[base + disp32]` modrm tail. `base` must not need a SIB byte.
+    fn mem_disp32(&mut self, reg: u8, base: u8, disp: i32) {
+        debug_assert!(base & 7 != 4, "rsp/r12 base needs a SIB byte");
+        self.code.push(modrm(0b10, reg, base));
+        self.imm32(disp);
+    }
+
+    // --- prologue / epilogue -------------------------------------------
+
+    pub(crate) fn push_r14(&mut self) {
+        self.bytes(&[0x41, 0x56]);
+    }
+    pub(crate) fn push_r15(&mut self) {
+        self.bytes(&[0x41, 0x57]);
+    }
+    pub(crate) fn pop_r15(&mut self) {
+        self.bytes(&[0x41, 0x5f]);
+    }
+    pub(crate) fn pop_r14(&mut self) {
+        self.bytes(&[0x41, 0x5e]);
+    }
+    pub(crate) fn sub_rsp_8(&mut self) {
+        self.bytes(&[0x48, 0x83, 0xec, 0x08]);
+    }
+    pub(crate) fn add_rsp_8(&mut self) {
+        self.bytes(&[0x48, 0x83, 0xc4, 0x08]);
+    }
+    pub(crate) fn ret(&mut self) {
+        self.code.push(0xc3);
+    }
+
+    // --- 64-bit moves ---------------------------------------------------
+
+    /// `mov dst, src` (64-bit reg-reg).
+    pub(crate) fn mov_rr(&mut self, dst: u8, src: u8) {
+        self.rex(true, src, dst);
+        self.code.push(0x89);
+        self.code.push(modrm(0b11, src, dst));
+    }
+
+    /// `mov dst, qword [base + disp32]`.
+    pub(crate) fn mov_r_mem(&mut self, dst: u8, base: u8, disp: i32) {
+        self.rex(true, dst, base);
+        self.code.push(0x8b);
+        self.mem_disp32(dst, base, disp);
+    }
+
+    /// `mov qword [base + disp32], src`.
+    pub(crate) fn mov_mem_r(&mut self, base: u8, disp: i32, src: u8) {
+        self.rex(true, src, base);
+        self.code.push(0x89);
+        self.mem_disp32(src, base, disp);
+    }
+
+    /// `mov dword [base + disp32], src32`.
+    pub(crate) fn mov_mem32_r32(&mut self, base: u8, disp: i32, src: u8) {
+        self.rex_opt(false, src, base);
+        self.code.push(0x89);
+        self.mem_disp32(src, base, disp);
+    }
+
+    /// `mov dword [base + disp32], imm32`.
+    pub(crate) fn mov_mem32_imm(&mut self, base: u8, disp: i32, imm: i32) {
+        self.rex_opt(false, 0, base);
+        self.code.push(0xc7);
+        self.mem_disp32(0, base, disp);
+        self.imm32(imm);
+    }
+
+    /// `add qword [base + disp32], imm32` (sign-extended).
+    pub(crate) fn add_mem64_imm(&mut self, base: u8, disp: i32, imm: i32) {
+        self.rex(true, 0, base);
+        self.code.push(0x81);
+        self.mem_disp32(0, base, disp);
+        self.imm32(imm);
+    }
+
+    /// `mov r32, imm32` (zero-extends into the full register).
+    pub(crate) fn mov_r32_imm(&mut self, dst: u8, imm: i32) {
+        self.rex_opt(false, 0, dst);
+        self.code.push(0xb8 + (dst & 7));
+        self.imm32(imm);
+    }
+
+    /// `movabs dst, imm64`.
+    pub(crate) fn mov_r_imm64(&mut self, dst: u8, imm: u64) {
+        self.rex(true, 0, dst);
+        self.code.push(0xb8 + (dst & 7));
+        self.imm64(imm);
+    }
+
+    /// `movsxd dst, src32` (sign-extend low 32 bits).
+    pub(crate) fn movsxd_rr(&mut self, dst: u8, src: u8) {
+        self.rex(true, dst, src);
+        self.code.push(0x63);
+        self.code.push(modrm(0b11, dst, src));
+    }
+
+    /// `mov dst32, src32` (zero-extend low 32 bits).
+    pub(crate) fn mov_r32_r32(&mut self, dst: u8, src: u8) {
+        self.rex_opt(false, src, dst);
+        self.code.push(0x89);
+        self.code.push(modrm(0b11, src, dst));
+    }
+
+    // --- 64-bit ALU -----------------------------------------------------
+
+    /// `add dst, src`.
+    pub(crate) fn add_rr(&mut self, dst: u8, src: u8) {
+        self.alu_rr(0x01, dst, src);
+    }
+    /// `sub dst, src`.
+    pub(crate) fn sub_rr(&mut self, dst: u8, src: u8) {
+        self.alu_rr(0x29, dst, src);
+    }
+    /// `and dst, src`.
+    pub(crate) fn and_rr(&mut self, dst: u8, src: u8) {
+        self.alu_rr(0x21, dst, src);
+    }
+    /// `or dst, src`.
+    pub(crate) fn or_rr(&mut self, dst: u8, src: u8) {
+        self.alu_rr(0x09, dst, src);
+    }
+    /// `xor dst, src`.
+    pub(crate) fn xor_rr(&mut self, dst: u8, src: u8) {
+        self.alu_rr(0x31, dst, src);
+    }
+    /// `cmp a, b`.
+    pub(crate) fn cmp_rr(&mut self, a: u8, b: u8) {
+        self.alu_rr(0x39, a, b);
+    }
+
+    fn alu_rr(&mut self, opcode: u8, dst: u8, src: u8) {
+        self.rex(true, src, dst);
+        self.code.push(opcode);
+        self.code.push(modrm(0b11, src, dst));
+    }
+
+    /// `imul dst, src` (64-bit two-operand).
+    pub(crate) fn imul_rr(&mut self, dst: u8, src: u8) {
+        self.rex(true, dst, src);
+        self.bytes(&[0x0f, 0xaf]);
+        self.code.push(modrm(0b11, dst, src));
+    }
+
+    /// `imul dst, dst, imm32`.
+    pub(crate) fn imul_r_imm(&mut self, dst: u8, imm: i32) {
+        self.rex(true, dst, dst);
+        self.code.push(0x69);
+        self.code.push(modrm(0b11, dst, dst));
+        self.imm32(imm);
+    }
+
+    /// `add dst, imm32` (sign-extended).
+    pub(crate) fn add_r_imm(&mut self, dst: u8, imm: i32) {
+        self.alu_r_imm(0, dst, imm);
+    }
+
+    /// `cmp a, imm32` (sign-extended).
+    pub(crate) fn cmp_r_imm(&mut self, a: u8, imm: i32) {
+        self.alu_r_imm(7, a, imm);
+    }
+
+    fn alu_r_imm(&mut self, ext: u8, dst: u8, imm: i32) {
+        self.rex(true, ext, dst);
+        self.code.push(0x81);
+        self.code.push(modrm(0b11, ext, dst));
+        self.imm32(imm);
+    }
+
+    /// `cmp r, qword [base + disp32]`.
+    pub(crate) fn cmp_r_mem(&mut self, r: u8, base: u8, disp: i32) {
+        self.rex(true, r, base);
+        self.code.push(0x3b);
+        self.mem_disp32(r, base, disp);
+    }
+
+    /// `test a, b` (64-bit).
+    pub(crate) fn test_rr(&mut self, a: u8, b: u8) {
+        self.rex(true, b, a);
+        self.code.push(0x85);
+        self.code.push(modrm(0b11, b, a));
+    }
+
+    /// `test a32, b32`.
+    pub(crate) fn test_r32_r32(&mut self, a: u8, b: u8) {
+        self.rex_opt(false, b, a);
+        self.code.push(0x85);
+        self.code.push(modrm(0b11, b, a));
+    }
+
+    /// `cmp a32, imm32`.
+    pub(crate) fn cmp_r32_imm(&mut self, a: u8, imm: i32) {
+        self.rex_opt(false, 7, a);
+        self.code.push(0x81);
+        self.code.push(modrm(0b11, 7, a));
+        self.imm32(imm);
+    }
+
+    /// `xor dst32, dst32` (zero a register).
+    pub(crate) fn xor_r32_r32(&mut self, dst: u8, src: u8) {
+        self.rex_opt(false, src, dst);
+        self.code.push(0x31);
+        self.code.push(modrm(0b11, src, dst));
+    }
+
+    /// `or dst32, src32`.
+    pub(crate) fn or_r32_r32(&mut self, dst: u8, src: u8) {
+        self.rex_opt(false, src, dst);
+        self.code.push(0x09);
+        self.code.push(modrm(0b11, src, dst));
+    }
+
+    /// `shl r32, imm8`.
+    pub(crate) fn shl_r32_imm8(&mut self, r: u8, imm: u8) {
+        self.rex_opt(false, 4, r);
+        self.code.push(0xc1);
+        self.code.push(modrm(0b11, 4, r));
+        self.code.push(imm);
+    }
+
+    /// `shl r, cl` (64-bit).
+    pub(crate) fn shl_r_cl(&mut self, r: u8) {
+        self.shift_cl(4, r);
+    }
+    /// `shr r, cl` (64-bit logical).
+    pub(crate) fn shr_r_cl(&mut self, r: u8) {
+        self.shift_cl(5, r);
+    }
+    /// `sar r, cl` (64-bit arithmetic).
+    pub(crate) fn sar_r_cl(&mut self, r: u8) {
+        self.shift_cl(7, r);
+    }
+
+    fn shift_cl(&mut self, ext: u8, r: u8) {
+        self.rex(true, ext, r);
+        self.code.push(0xd3);
+        self.code.push(modrm(0b11, ext, r));
+    }
+
+    // --- flags → values -------------------------------------------------
+
+    /// `setcc r8` (r8 must be al/cl/dl — no REX path).
+    pub(crate) fn setcc(&mut self, cc: Cc, r8: u8) {
+        debug_assert!(r8 < 4);
+        self.bytes(&[0x0f, 0x90 + cc as u8]);
+        self.code.push(modrm(0b11, 0, r8));
+    }
+
+    /// `movzx dst32, src8` (src8 must be al/cl/dl).
+    pub(crate) fn movzx_r32_r8(&mut self, dst: u8, src: u8) {
+        debug_assert!(dst < 8 && src < 4);
+        self.bytes(&[0x0f, 0xb6]);
+        self.code.push(modrm(0b11, dst, src));
+    }
+
+    /// `and dst8, src8` (low byte registers).
+    pub(crate) fn and_r8_r8(&mut self, dst: u8, src: u8) {
+        debug_assert!(dst < 4 && src < 4);
+        self.code.push(0x20);
+        self.code.push(modrm(0b11, src, dst));
+    }
+
+    /// `or dst8, src8` (low byte registers).
+    pub(crate) fn or_r8_r8(&mut self, dst: u8, src: u8) {
+        debug_assert!(dst < 4 && src < 4);
+        self.code.push(0x08);
+        self.code.push(modrm(0b11, src, dst));
+    }
+
+    // --- [rcx + rdx] memory accesses (the bounds-checked buffer slot) ---
+
+    /// `movsxd rax, dword [rcx + rdx]`.
+    pub(crate) fn load_i32_sib(&mut self) {
+        self.bytes(&[0x48, 0x63, 0x04, 0x11]);
+    }
+    /// `mov eax, dword [rcx + rdx]` (zero-extends).
+    pub(crate) fn load_u32_sib(&mut self) {
+        self.bytes(&[0x8b, 0x04, 0x11]);
+    }
+    /// `mov rax, qword [rcx + rdx]`.
+    pub(crate) fn load_i64_sib(&mut self) {
+        self.bytes(&[0x48, 0x8b, 0x04, 0x11]);
+    }
+    /// `cmp byte [rcx + rdx], 0`.
+    pub(crate) fn cmp_bool_sib(&mut self) {
+        self.bytes(&[0x80, 0x3c, 0x11, 0x00]);
+    }
+    /// `mov dword [rcx + rdx], eax`.
+    pub(crate) fn store_u32_sib(&mut self) {
+        self.bytes(&[0x89, 0x04, 0x11]);
+    }
+    /// `mov qword [rcx + rdx], rax`.
+    pub(crate) fn store_u64_sib(&mut self) {
+        self.bytes(&[0x48, 0x89, 0x04, 0x11]);
+    }
+    /// `mov byte [rcx + rdx], al`.
+    pub(crate) fn store_u8_sib(&mut self) {
+        self.bytes(&[0x88, 0x04, 0x11]);
+    }
+    /// `movss xmm0, dword [rcx + rdx]`.
+    pub(crate) fn load_f32_sib(&mut self) {
+        self.bytes(&[0xf3, 0x0f, 0x10, 0x04, 0x11]);
+    }
+    /// `movss dword [rcx + rdx], xmm0`.
+    pub(crate) fn store_f32_sib(&mut self) {
+        self.bytes(&[0xf3, 0x0f, 0x11, 0x04, 0x11]);
+    }
+    /// `movsd xmm0, qword [rcx + rdx]`.
+    pub(crate) fn load_f64_sib(&mut self) {
+        self.bytes(&[0xf2, 0x0f, 0x10, 0x04, 0x11]);
+    }
+    /// `movsd qword [rcx + rdx], xmm0`.
+    pub(crate) fn store_f64_sib(&mut self) {
+        self.bytes(&[0xf2, 0x0f, 0x11, 0x04, 0x11]);
+    }
+
+    // --- SSE scalar double ---------------------------------------------
+
+    /// `movsd xmm, qword [base + disp32]`.
+    pub(crate) fn movsd_x_mem(&mut self, xmm: u8, base: u8, disp: i32) {
+        self.code.push(0xf2);
+        self.rex_opt(false, xmm, base);
+        self.bytes(&[0x0f, 0x10]);
+        self.mem_disp32(xmm, base, disp);
+    }
+
+    /// `movsd qword [base + disp32], xmm`.
+    pub(crate) fn movsd_mem_x(&mut self, base: u8, disp: i32, xmm: u8) {
+        self.code.push(0xf2);
+        self.rex_opt(false, xmm, base);
+        self.bytes(&[0x0f, 0x11]);
+        self.mem_disp32(xmm, base, disp);
+    }
+
+    /// `cvtsi2sd xmm, qword [base + disp32]` (i64 → f64).
+    pub(crate) fn cvtsi2sd_x_mem(&mut self, xmm: u8, base: u8, disp: i32) {
+        self.code.push(0xf2);
+        self.rex(true, xmm, base);
+        self.bytes(&[0x0f, 0x2a]);
+        self.mem_disp32(xmm, base, disp);
+    }
+
+    /// `cvtsi2sd xmm, r64`.
+    pub(crate) fn cvtsi2sd_x_r(&mut self, xmm: u8, r: u8) {
+        self.code.push(0xf2);
+        self.rex(true, xmm, r);
+        self.bytes(&[0x0f, 0x2a]);
+        self.code.push(modrm(0b11, xmm, r));
+    }
+
+    /// `addsd dst, src`.
+    pub(crate) fn addsd(&mut self, dst: u8, src: u8) {
+        self.sse_f2(0x58, dst, src);
+    }
+    /// `subsd dst, src`.
+    pub(crate) fn subsd(&mut self, dst: u8, src: u8) {
+        self.sse_f2(0x5c, dst, src);
+    }
+    /// `mulsd dst, src`.
+    pub(crate) fn mulsd(&mut self, dst: u8, src: u8) {
+        self.sse_f2(0x59, dst, src);
+    }
+    /// `divsd dst, src`.
+    pub(crate) fn divsd(&mut self, dst: u8, src: u8) {
+        self.sse_f2(0x5e, dst, src);
+    }
+    /// `cvtsd2ss dst, src` (f64 → f32).
+    pub(crate) fn cvtsd2ss(&mut self, dst: u8, src: u8) {
+        self.sse_f2(0x5a, dst, src);
+    }
+
+    fn sse_f2(&mut self, opcode: u8, dst: u8, src: u8) {
+        self.code.push(0xf2);
+        self.bytes(&[0x0f, opcode]);
+        self.code.push(modrm(0b11, dst, src));
+    }
+
+    /// `cvtss2sd dst, src` (f32 → f64).
+    pub(crate) fn cvtss2sd(&mut self, dst: u8, src: u8) {
+        self.code.push(0xf3);
+        self.bytes(&[0x0f, 0x5a]);
+        self.code.push(modrm(0b11, dst, src));
+    }
+
+    /// `ucomisd a, b` (sets ZF/PF/CF from the compare `a ? b`).
+    pub(crate) fn ucomisd(&mut self, a: u8, b: u8) {
+        self.bytes(&[0x66, 0x0f, 0x2e]);
+        self.code.push(modrm(0b11, a, b));
+    }
+
+    /// `xorps dst, src` (zero an XMM register).
+    pub(crate) fn xorps(&mut self, dst: u8, src: u8) {
+        self.bytes(&[0x0f, 0x57]);
+        self.code.push(modrm(0b11, dst, src));
+    }
+
+    // --- control flow ---------------------------------------------------
+
+    /// `jmp label` (rel32).
+    pub(crate) fn jmp(&mut self, l: Label) {
+        self.code.push(0xe9);
+        self.fixups.push((self.code.len(), l));
+        self.imm32(0);
+    }
+
+    /// `jcc label` (rel32).
+    pub(crate) fn jcc(&mut self, cc: Cc, l: Label) {
+        self.bytes(&[0x0f, 0x80 + cc as u8]);
+        self.fixups.push((self.code.len(), l));
+        self.imm32(0);
+    }
+
+    /// `call r`.
+    pub(crate) fn call_r(&mut self, r: u8) {
+        self.rex_opt(false, 2, r);
+        self.code.push(0xff);
+        self.code.push(modrm(0b11, 2, r));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Executable memory (W^X)
+// ---------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+mod sys {
+    // Raw libc FFI (the crate is dependency-free; libc itself is always
+    // linked on this target).
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn mprotect(addr: *mut u8, len: usize, prot: i32) -> i32;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const PROT_EXEC: i32 = 4;
+    pub const MAP_PRIVATE_ANON: i32 = 0x22;
+}
+
+/// An owned, executable mapping of finished machine code.
+///
+/// The code is copied into an anonymous read+write mapping which is then
+/// `mprotect`ed to read+execute — the pages are never writable and
+/// executable at the same time, and the mapping is unmapped on drop.
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub(crate) struct ExecMem {
+    ptr: *mut u8,
+    map_len: usize,
+}
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+// SAFETY: the mapping is immutable (RX) for its whole lifetime after
+// construction, so sharing raw pointers to it across threads is safe.
+unsafe impl Send for ExecMem {}
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+unsafe impl Sync for ExecMem {}
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+impl ExecMem {
+    /// Map `code` into executable memory. `None` on any `mmap`/`mprotect`
+    /// failure — the caller then runs without a JIT program.
+    pub(crate) fn new(code: &[u8]) -> Option<ExecMem> {
+        if code.is_empty() {
+            return None;
+        }
+        let page = 4096usize;
+        let map_len = code.len().div_ceil(page) * page;
+        // SAFETY: anonymous private mapping; all arguments are valid.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                map_len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_PRIVATE_ANON,
+                -1,
+                0,
+            )
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            return None;
+        }
+        // SAFETY: `ptr` is a fresh RW mapping of at least `code.len()`.
+        unsafe {
+            std::ptr::copy_nonoverlapping(code.as_ptr(), ptr, code.len());
+            if sys::mprotect(ptr, map_len, sys::PROT_READ | sys::PROT_EXEC) != 0 {
+                sys::munmap(ptr, map_len);
+                return None;
+            }
+        }
+        Some(ExecMem { ptr, map_len })
+    }
+
+    /// Pointer to the code at byte offset `off` (a region entry point).
+    pub(crate) fn at(&self, off: usize) -> *const u8 {
+        debug_assert!(off < self.map_len);
+        // SAFETY: `off` is within the mapping (asserted above).
+        unsafe { self.ptr.add(off) }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+impl Drop for ExecMem {
+    fn drop(&mut self) {
+        // SAFETY: `ptr`/`map_len` are the exact mapping from `new`.
+        unsafe {
+            sys::munmap(self.ptr, self.map_len);
+        }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+impl std::fmt::Debug for ExecMem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ExecMem({} bytes)", self.map_len)
+    }
+}
+
+#[cfg(test)]
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+mod tests {
+    use super::*;
+
+    fn emit(f: impl FnOnce(&mut Asm)) -> Vec<u8> {
+        let mut a = Asm::new();
+        f(&mut a);
+        a.finish().unwrap()
+    }
+
+    #[test]
+    fn prologue_epilogue_bytes() {
+        assert_eq!(emit(|a| a.push_r14()), [0x41, 0x56]);
+        assert_eq!(emit(|a| a.push_r15()), [0x41, 0x57]);
+        assert_eq!(emit(|a| a.sub_rsp_8()), [0x48, 0x83, 0xec, 0x08]);
+        assert_eq!(emit(|a| a.add_rsp_8()), [0x48, 0x83, 0xc4, 0x08]);
+        assert_eq!(emit(|a| a.pop_r15()), [0x41, 0x5f]);
+        assert_eq!(emit(|a| a.pop_r14()), [0x41, 0x5e]);
+        assert_eq!(emit(|a| a.ret()), [0xc3]);
+    }
+
+    #[test]
+    fn mov_encodings() {
+        // mov r15, rdi ; mov rdi, r15
+        assert_eq!(emit(|a| a.mov_rr(R15, RDI)), [0x49, 0x89, 0xff]);
+        assert_eq!(emit(|a| a.mov_rr(RDI, R15)), [0x4c, 0x89, 0xff]);
+        // mov r14, [r15 + 0x10]
+        assert_eq!(
+            emit(|a| a.mov_r_mem(R14, R15, 0x10)),
+            [0x4d, 0x8b, 0xb7, 0x10, 0x00, 0x00, 0x00]
+        );
+        // mov rax, [r14 + 0x20] ; mov [r14 + 0x20], rax
+        assert_eq!(
+            emit(|a| a.mov_r_mem(RAX, R14, 0x20)),
+            [0x49, 0x8b, 0x86, 0x20, 0x00, 0x00, 0x00]
+        );
+        assert_eq!(
+            emit(|a| a.mov_mem_r(R14, 0x20, RAX)),
+            [0x49, 0x89, 0x86, 0x20, 0x00, 0x00, 0x00]
+        );
+        // mov [r15 + 0x38], edx
+        assert_eq!(
+            emit(|a| a.mov_mem32_r32(R15, 0x38, RDX)),
+            [0x41, 0x89, 0x97, 0x38, 0x00, 0x00, 0x00]
+        );
+        // mov dword [r15 + 0x30], 7
+        assert_eq!(
+            emit(|a| a.mov_mem32_imm(R15, 0x30, 7)),
+            [0x41, 0xc7, 0x87, 0x30, 0x00, 0x00, 0x00, 0x07, 0x00, 0x00, 0x00]
+        );
+        // add qword [r15 + 0x28], 5
+        assert_eq!(
+            emit(|a| a.add_mem64_imm(R15, 0x28, 5)),
+            [0x49, 0x81, 0x87, 0x28, 0x00, 0x00, 0x00, 0x05, 0x00, 0x00, 0x00]
+        );
+        // mov eax, 42 ; mov esi, 3 ; movabs rax, imm64
+        assert_eq!(emit(|a| a.mov_r32_imm(RAX, 42)), [0xb8, 0x2a, 0x00, 0x00, 0x00]);
+        assert_eq!(emit(|a| a.mov_r32_imm(RSI, 3)), [0xbe, 0x03, 0x00, 0x00, 0x00]);
+        assert_eq!(
+            emit(|a| a.mov_r_imm64(RAX, 0x1122334455667788)),
+            [0x48, 0xb8, 0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11]
+        );
+        // movsxd rax, eax ; mov eax, eax
+        assert_eq!(emit(|a| a.movsxd_rr(RAX, RAX)), [0x48, 0x63, 0xc0]);
+        assert_eq!(emit(|a| a.mov_r32_r32(RAX, RAX)), [0x89, 0xc0]);
+        // mov rax, rcx (reg-reg between low registers)
+        assert_eq!(emit(|a| a.mov_rr(RAX, RCX)), [0x48, 0x89, 0xc8]);
+    }
+
+    #[test]
+    fn alu_encodings() {
+        assert_eq!(emit(|a| a.add_rr(RAX, RCX)), [0x48, 0x01, 0xc8]);
+        assert_eq!(emit(|a| a.sub_rr(RAX, RCX)), [0x48, 0x29, 0xc8]);
+        assert_eq!(emit(|a| a.and_rr(RAX, RCX)), [0x48, 0x21, 0xc8]);
+        assert_eq!(emit(|a| a.or_rr(RAX, RCX)), [0x48, 0x09, 0xc8]);
+        assert_eq!(emit(|a| a.xor_rr(RAX, RCX)), [0x48, 0x31, 0xc8]);
+        assert_eq!(emit(|a| a.cmp_rr(RAX, RCX)), [0x48, 0x39, 0xc8]);
+        assert_eq!(emit(|a| a.imul_rr(RAX, RCX)), [0x48, 0x0f, 0xaf, 0xc1]);
+        assert_eq!(
+            emit(|a| a.imul_r_imm(RAX, 8)),
+            [0x48, 0x69, 0xc0, 0x08, 0x00, 0x00, 0x00]
+        );
+        assert_eq!(
+            emit(|a| a.add_r_imm(RAX, 4)),
+            [0x48, 0x81, 0xc0, 0x04, 0x00, 0x00, 0x00]
+        );
+        assert_eq!(
+            emit(|a| a.cmp_r_imm(RAX, 4)),
+            [0x48, 0x81, 0xf8, 0x04, 0x00, 0x00, 0x00]
+        );
+        assert_eq!(
+            emit(|a| a.cmp_r_mem(RAX, R15, 0x10)),
+            [0x49, 0x3b, 0x87, 0x10, 0x00, 0x00, 0x00]
+        );
+        assert_eq!(emit(|a| a.test_rr(RAX, RAX)), [0x48, 0x85, 0xc0]);
+        assert_eq!(emit(|a| a.test_r32_r32(RAX, RAX)), [0x85, 0xc0]);
+        assert_eq!(emit(|a| a.xor_r32_r32(RDX, RDX)), [0x31, 0xd2]);
+        assert_eq!(emit(|a| a.or_r32_r32(RDX, RAX)), [0x09, 0xc2]);
+        assert_eq!(emit(|a| a.shl_r32_imm8(RAX, 3)), [0xc1, 0xe0, 0x03]);
+        assert_eq!(emit(|a| a.shl_r_cl(RAX)), [0x48, 0xd3, 0xe0]);
+        assert_eq!(emit(|a| a.shr_r_cl(RAX)), [0x48, 0xd3, 0xe8]);
+        assert_eq!(emit(|a| a.sar_r_cl(RAX)), [0x48, 0xd3, 0xf8]);
+        assert_eq!(
+            emit(|a| a.cmp_r32_imm(RDX, 0xff)),
+            [0x81, 0xfa, 0xff, 0x00, 0x00, 0x00]
+        );
+    }
+
+    #[test]
+    fn setcc_and_byte_ops() {
+        assert_eq!(emit(|a| a.setcc(Cc::E, RAX)), [0x0f, 0x94, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::Ne, RAX)), [0x0f, 0x95, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::L, RAX)), [0x0f, 0x9c, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::Le, RAX)), [0x0f, 0x9e, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::G, RAX)), [0x0f, 0x9f, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::Ge, RAX)), [0x0f, 0x9d, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::B, RAX)), [0x0f, 0x92, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::Be, RAX)), [0x0f, 0x96, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::A, RAX)), [0x0f, 0x97, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::Ae, RAX)), [0x0f, 0x93, 0xc0]);
+        assert_eq!(emit(|a| a.setcc(Cc::P, RCX)), [0x0f, 0x9a, 0xc1]);
+        assert_eq!(emit(|a| a.setcc(Cc::Np, RCX)), [0x0f, 0x9b, 0xc1]);
+        assert_eq!(emit(|a| a.movzx_r32_r8(RAX, RAX)), [0x0f, 0xb6, 0xc0]);
+        assert_eq!(emit(|a| a.and_r8_r8(RAX, RCX)), [0x20, 0xc8]);
+        assert_eq!(emit(|a| a.or_r8_r8(RAX, RCX)), [0x08, 0xc8]);
+    }
+
+    #[test]
+    fn sib_memory_encodings() {
+        assert_eq!(emit(|a| a.load_i32_sib()), [0x48, 0x63, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.load_u32_sib()), [0x8b, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.load_i64_sib()), [0x48, 0x8b, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.cmp_bool_sib()), [0x80, 0x3c, 0x11, 0x00]);
+        assert_eq!(emit(|a| a.store_u32_sib()), [0x89, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.store_u64_sib()), [0x48, 0x89, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.store_u8_sib()), [0x88, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.load_f32_sib()), [0xf3, 0x0f, 0x10, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.store_f32_sib()), [0xf3, 0x0f, 0x11, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.load_f64_sib()), [0xf2, 0x0f, 0x10, 0x04, 0x11]);
+        assert_eq!(emit(|a| a.store_f64_sib()), [0xf2, 0x0f, 0x11, 0x04, 0x11]);
+    }
+
+    #[test]
+    fn sse_encodings() {
+        // movsd xmm0, [r14 + 8] ; movsd [r14 + 8], xmm0
+        assert_eq!(
+            emit(|a| a.movsd_x_mem(XMM0, R14, 8)),
+            [0xf2, 0x41, 0x0f, 0x10, 0x86, 0x08, 0x00, 0x00, 0x00]
+        );
+        assert_eq!(
+            emit(|a| a.movsd_mem_x(R14, 8, XMM0)),
+            [0xf2, 0x41, 0x0f, 0x11, 0x86, 0x08, 0x00, 0x00, 0x00]
+        );
+        // cvtsi2sd xmm0, qword [r14 + 8] ; cvtsi2sd xmm0, rax
+        assert_eq!(
+            emit(|a| a.cvtsi2sd_x_mem(XMM0, R14, 8)),
+            [0xf2, 0x49, 0x0f, 0x2a, 0x86, 0x08, 0x00, 0x00, 0x00]
+        );
+        assert_eq!(emit(|a| a.cvtsi2sd_x_r(XMM0, RAX)), [0xf2, 0x48, 0x0f, 0x2a, 0xc0]);
+        assert_eq!(emit(|a| a.addsd(XMM0, XMM1)), [0xf2, 0x0f, 0x58, 0xc1]);
+        assert_eq!(emit(|a| a.subsd(XMM0, XMM1)), [0xf2, 0x0f, 0x5c, 0xc1]);
+        assert_eq!(emit(|a| a.mulsd(XMM0, XMM1)), [0xf2, 0x0f, 0x59, 0xc1]);
+        assert_eq!(emit(|a| a.divsd(XMM0, XMM1)), [0xf2, 0x0f, 0x5e, 0xc1]);
+        assert_eq!(emit(|a| a.cvtsd2ss(XMM0, XMM0)), [0xf2, 0x0f, 0x5a, 0xc0]);
+        assert_eq!(emit(|a| a.cvtss2sd(XMM0, XMM0)), [0xf3, 0x0f, 0x5a, 0xc0]);
+        assert_eq!(emit(|a| a.ucomisd(XMM0, XMM1)), [0x66, 0x0f, 0x2e, 0xc1]);
+        assert_eq!(emit(|a| a.xorps(XMM1, XMM1)), [0x0f, 0x57, 0xc9]);
+    }
+
+    #[test]
+    fn control_flow_and_fixups() {
+        // call rax
+        assert_eq!(emit(|a| a.call_r(RAX)), [0xff, 0xd0]);
+        // Forward jump: jmp over one `ret`; rel32 = 1.
+        let code = emit(|a| {
+            let l = a.label();
+            a.jmp(l);
+            a.ret();
+            a.bind(l);
+            a.ret();
+        });
+        assert_eq!(code, [0xe9, 0x01, 0x00, 0x00, 0x00, 0xc3, 0xc3]);
+        // Backward conditional jump to offset 0 from a jcc at offset 1:
+        // rel32 = 0 - (3 + 4) = -7.
+        let code = emit(|a| {
+            let l = a.label();
+            a.bind(l);
+            a.ret();
+            a.jcc(Cc::Ne, l);
+        });
+        assert_eq!(code, [0xc3, 0x0f, 0x85, 0xf9, 0xff, 0xff, 0xff]);
+        // Unbound label → finish fails instead of emitting garbage.
+        let mut a = Asm::new();
+        let l = a.label();
+        a.jmp(l);
+        assert!(a.finish().is_none());
+    }
+
+    #[test]
+    fn exec_mem_runs_machine_code() {
+        // mov eax, 42 ; ret
+        let mut a = Asm::new();
+        a.mov_r32_imm(RAX, 42);
+        a.ret();
+        let code = a.finish().unwrap();
+        let mem = ExecMem::new(&code).expect("mmap");
+        // SAFETY: the bytes are a complete, ABI-correct function.
+        let f: unsafe extern "C" fn() -> u32 = unsafe { std::mem::transmute(mem.at(0)) };
+        assert_eq!(unsafe { f() }, 42);
+    }
+}

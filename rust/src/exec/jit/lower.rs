@@ -1,0 +1,1283 @@
+//! Template lowering: bytecode regions → x86-64 machine code.
+//!
+//! Each [`BcRegion`] is lowered independently: every instruction either
+//! gets an *inline template* (a fixed per-lane instruction sequence over
+//! the slot-major `u64` payload frame), a *helper dispatch* (a call into
+//! the shared `vecgang` evaluation kernels through a pre-built [`Desc`],
+//! used for everything whose semantics are too subtle to re-encode —
+//! math elementals, divisions, private-memory traffic, selects), or —
+//! if neither is sound — rejects the whole region, which then keeps
+//! running on the bytecode tier (`jit_fallbacks` counts these).
+//!
+//! # Payload frame and kinds
+//!
+//! The JIT frame is a flat `u64` array, slot-major: payload of slot `s`
+//! lane `l` lives at `frame[s * W + l]`. Slot indices are exactly the
+//! bytecode's [`BcSlot`]s (registers, then the region's constant pool,
+//! then one scratch slot used to de-fuse superinstructions). Each
+//! payload is the bit pattern of the value the interpreters would hold:
+//! normalised integers as two's complement, floats as `f64` bits,
+//! pointers as their offset. A static, per-region *kind* inference
+//! (sound because bytecode registers are block-local, so every def
+//! precedes its uses in PC order) assigns each slot `I`/`F`/pointer
+//! kinds; any read of a kindless slot rejects the region.
+//!
+//! Private (alloca) memory stays inside the gang's `VecStore` cells and
+//! is only touched through helper dispatches. For private *loads* the
+//! result kind comes from a whole-function provenance scan
+//! ([`alloca_classes`]) that proves which cells only ever hold one
+//! payload class; cells that might be punned demote the loads (and with
+//! them the region) to the bytecode tier.
+//!
+//! # Counters and errors
+//!
+//! Executed-instruction counts are accumulated into the context's
+//! `insts` field in batches (flushed at every branch, helper call and
+//! region exit), mirroring the bytecode engine's `bytecode_insts`.
+//! Error paths are approximate by one batch: a bounds fault or helper
+//! error aborts the region, and aborted launches only report stats on a
+//! best-effort basis.
+
+use crate::exec::value::{space_tag, SP_PRIVATE};
+use crate::ir::func::Function;
+use crate::ir::inst::{BinOp, BlockId, Inst, MathFn, Operand, UnOp, WiFn};
+use crate::ir::types::{AddrSpace, Scalar, Type};
+
+use super::super::bytecode::{BcConst, BcInst, BcRegion, BcSlot, BytecodeProgram};
+use super::emit::{Asm, Cc, ExecMem, Label, R14, R15, RAX, RCX, RDI, RDX, RSI, XMM0, XMM1};
+use super::run::{helper_addr, off_base, off_len, OFF_DIV_IDX, OFF_DIV_MASK, OFF_EXIT, OFF_FRAME, OFF_INSTS};
+
+/// Static payload kind of one frame slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Kind {
+    /// Normalised integer payload (`i64` two's complement).
+    I,
+    /// Float payload (`f64` bits; `F32` values are kept normalised).
+    F,
+    /// Pointer payload (offset bits) into address space `tag`; tag
+    /// [`SP_PRIVATE`] means "private, but into an unknown alloca slot".
+    P(u8),
+    /// Pointer payload into private alloca slot `SlotId(n)` (so loads
+    /// through it can be typed from the slot's cell class).
+    Ps(u32),
+}
+
+/// A frame slot together with its inferred payload kind — the unit the
+/// runtime helper uses to marshal payloads to/from `VLane` values.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SlotK {
+    pub(crate) slot: BcSlot,
+    pub(crate) kind: Kind,
+}
+
+/// One helper-dispatched operation: the jitted code calls back into the
+/// runtime with an index into the region's `descs` table, and the
+/// helper runs the corresponding shared `vecgang` kernel.
+#[derive(Debug, Clone)]
+pub(crate) enum Desc {
+    /// `dst = a <op> b` via `bin_vlane` (divisions, bool/vector-ish
+    /// combos, float logical ops).
+    Bin { op: BinOp, ty: Type, dst: SlotK, a: SlotK, b: SlotK },
+    /// `dst = <op> a` via `un_vlane`.
+    Un { op: UnOp, ty: Type, dst: SlotK, a: SlotK },
+    /// `dst = (to) a` via `cast_vlane` (float→int casts saturate like
+    /// Rust `as`, so they are never inlined).
+    Cast { to: Type, from: Type, dst: SlotK, a: SlotK },
+    /// `dst = cond ? a : b` via `select_vlane`.
+    Select { ty: Type, dst: SlotK, cond: SlotK, a: SlotK, b: SlotK },
+    /// `dst = wi_fn(dim)` via `wi_vlane`.
+    Wi { func: WiFn, dim: u32, dst: SlotK },
+    /// `dst = math_fn(args…)` via `math_vlane`.
+    Math { func: MathFn, ty: Type, dst: SlotK, args: Vec<SlotK> },
+    /// `dst = load ty, ptr` via `load_vlane` (private cells).
+    Load { ty: Type, dst: SlotK, ptr: SlotK },
+    /// `store val, ptr` via `store_vlane` (private cells and
+    /// combinations the inline templates do not cover).
+    Store { ty: Type, ptr: SlotK, val: SlotK },
+}
+
+/// One jitted region: entry offset into the shared [`ExecMem`] plus the
+/// metadata the runtime needs to drive it.
+#[derive(Debug)]
+pub(crate) struct JitRegion {
+    /// Byte offset of the region's entry point in the program's code.
+    pub(crate) entry: usize,
+    /// Helper-dispatch table (indexed by the jitted `call`s).
+    pub(crate) descs: Vec<Desc>,
+    /// `End` targets: `exit` field → IR barrier block reached.
+    pub(crate) ends: Vec<BlockId>,
+    /// Divergence table: `div_idx` field → `(ir_t, ir_f)` IR targets.
+    pub(crate) branches: Vec<(BlockId, BlockId)>,
+    /// Static bytecode-instruction count (for compile stats).
+    pub(crate) insts: usize,
+}
+
+/// A jitted program: one entry per bytecode region (`None` = the region
+/// was rejected and keeps running on the bytecode tier).
+#[derive(Debug)]
+pub struct JitProgram {
+    /// Gang width the templates were emitted for.
+    pub(crate) width: usize,
+    /// Register-frame size the slots were resolved against.
+    pub(crate) reg_count: u32,
+    /// Frame size in slots (max over regions of regs + consts + 1).
+    pub(crate) frame_slots: usize,
+    /// Per-region lowering results, parallel to the bytecode regions.
+    pub(crate) regions: Vec<Option<JitRegion>>,
+    /// The executable code (all regions concatenated).
+    pub(crate) code: ExecMem,
+}
+
+impl JitProgram {
+    /// Number of regions that were actually jitted.
+    pub fn covered_regions(&self) -> usize {
+        self.regions.iter().filter(|r| r.is_some()).count()
+    }
+}
+
+/// Lowering statistics, reported through `CompileStats`.
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct JitLowerStats {
+    /// Regions successfully lowered to machine code.
+    pub(crate) regions: usize,
+    /// Static bytecode instructions covered by those regions.
+    pub(crate) insts: usize,
+    /// Regions rejected (they keep running on the bytecode tier).
+    pub(crate) fallbacks: usize,
+}
+
+// ---------------------------------------------------------------------
+// Private-cell classes (provenance scan)
+// ---------------------------------------------------------------------
+
+/// The payload class a private alloca cell is proven to hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CellClass {
+    I,
+    F,
+    /// Pointer into space `tag` ([`SP_PRIVATE`] = private, slot unknown).
+    P(u8),
+    /// Possibly punned / vector-valued — loads from it are untypable.
+    Other,
+}
+
+/// Where a value may have come from, for the store-site soundness scan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Prov {
+    /// Base pointer of alloca slot `n` (possibly offset by geps).
+    Slot(u32),
+    /// Non-private pointer with known space tag.
+    Ptr(u8),
+    /// Possibly-private pointer into an unknown slot.
+    PtrPriv,
+    /// A plain (non-pointer) value.
+    Val,
+}
+
+fn class_of_type(ty: &Type) -> CellClass {
+    match ty {
+        Type::Scalar(s) if s.is_float() => CellClass::F,
+        Type::Scalar(_) => CellClass::I,
+        Type::Ptr(_, sp) => CellClass::P(space_tag(*sp)),
+        _ => CellClass::Other,
+    }
+}
+
+fn prov_of(f: &Function, map: &[Option<Prov>], op: &Operand) -> Prov {
+    match op {
+        Operand::Reg(r) => map.get(r.0 as usize).copied().flatten().unwrap_or(Prov::PtrPriv),
+        Operand::Imm(_) => Prov::Val,
+        Operand::Arg(a) => match f.params.get(*a as usize).map(|p| &p.ty) {
+            Some(Type::Ptr(_, AddrSpace::Private)) => Prov::PtrPriv,
+            Some(Type::Ptr(_, sp)) => Prov::Ptr(space_tag(*sp)),
+            _ => Prov::Val,
+        },
+        Operand::Slot(s) => Prov::Slot(s.0),
+    }
+}
+
+/// True if storing a value of provenance `vp` with store type `ty` into
+/// alloca slot `s` preserves the slot's declared cell class.
+fn store_ok(classes: &[CellClass], s: u32, ty: &Type, vp: Prov) -> bool {
+    let sc = class_of_type(ty);
+    match classes.get(s as usize).copied() {
+        Some(CellClass::I) => sc == CellClass::I && vp == Prov::Val,
+        Some(CellClass::F) => sc == CellClass::F && vp == Prov::Val,
+        Some(CellClass::P(SP_PRIVATE)) => {
+            sc == CellClass::P(SP_PRIVATE) && matches!(vp, Prov::Slot(_) | Prov::PtrPriv)
+        }
+        Some(CellClass::P(t)) => sc == CellClass::P(t) && vp == Prov::Ptr(t),
+        _ => false,
+    }
+}
+
+/// Whole-function provenance scan: start every alloca slot at the class
+/// of its declared element type, then demote any slot whose stores
+/// might pun the payload class (wrong store type, pointer value into a
+/// scalar cell, …). A store through a pointer that could alias *any*
+/// private slot demotes everything. The result types private loads in
+/// jitted regions; demoted slots push their regions to the bytecode
+/// tier instead of risking a misread payload.
+fn alloca_classes(f: &Function) -> Vec<CellClass> {
+    let mut classes: Vec<CellClass> = f.slots.iter().map(|a| class_of_type(&a.ty)).collect();
+    let nregs = f.reg_count() as usize;
+    let mut kill_all = false;
+    for blk in &f.blocks {
+        let mut map: Vec<Option<Prov>> = vec![None; nregs];
+        for (dst, inst) in &blk.insts {
+            let p = match inst {
+                Inst::Gep { base, .. } => match prov_of(f, &map, base) {
+                    Prov::Val => Prov::PtrPriv,
+                    other => other,
+                },
+                Inst::Cast { a, .. } => prov_of(f, &map, a),
+                Inst::Select { a, b, .. } => {
+                    let (pa, pb) = (prov_of(f, &map, a), prov_of(f, &map, b));
+                    if pa == pb {
+                        pa
+                    } else {
+                        Prov::PtrPriv
+                    }
+                }
+                Inst::Load { ty, .. } => match ty {
+                    Type::Ptr(_, AddrSpace::Private) => Prov::PtrPriv,
+                    Type::Ptr(_, sp) => Prov::Ptr(space_tag(*sp)),
+                    _ => Prov::Val,
+                },
+                Inst::Store { ty, ptr, val } => {
+                    match prov_of(f, &map, ptr) {
+                        Prov::Slot(s) => {
+                            if !store_ok(&classes, s, ty, prov_of(f, &map, val)) {
+                                if let Some(c) = classes.get_mut(s as usize) {
+                                    *c = CellClass::Other;
+                                }
+                            }
+                        }
+                        Prov::PtrPriv => kill_all = true,
+                        Prov::Ptr(_) | Prov::Val => {}
+                    }
+                    Prov::Val
+                }
+                _ => Prov::Val,
+            };
+            if let Some(r) = dst {
+                if let Some(e) = map.get_mut(r.0 as usize) {
+                    *e = Some(p);
+                }
+            }
+        }
+    }
+    if kill_all {
+        for c in classes.iter_mut() {
+            *c = CellClass::Other;
+        }
+    }
+    classes
+}
+
+/// Static payload kind of a constant-pool entry (shared with the
+/// runtime, which must marshal launch arguments under the same kinds).
+pub(crate) fn const_kind(f: &Function, c: &BcConst) -> Option<Kind> {
+    match c {
+        BcConst::Int(..) => Some(Kind::I),
+        BcConst::Float(..) => Some(Kind::F),
+        BcConst::Arg(a) => match f.params.get(*a as usize).map(|p| &p.ty) {
+            Some(Type::Ptr(_, sp)) => Some(Kind::P(space_tag(*sp))),
+            Some(Type::Scalar(s)) if s.is_float() => Some(Kind::F),
+            Some(Type::Scalar(_)) => Some(Kind::I),
+            _ => None,
+        },
+        BcConst::Slot(s) => Some(Kind::Ps(s.0)),
+    }
+}
+
+fn kind_intlike(k: Kind) -> bool {
+    matches!(k, Kind::I | Kind::P(_) | Kind::Ps(_))
+}
+
+fn cc_int(op: BinOp, unsigned: bool) -> Cc {
+    match (op, unsigned) {
+        (BinOp::Eq, _) => Cc::E,
+        (BinOp::Ne, _) => Cc::Ne,
+        (BinOp::Lt, true) => Cc::B,
+        (BinOp::Lt, false) => Cc::L,
+        (BinOp::Le, true) => Cc::Be,
+        (BinOp::Le, false) => Cc::Le,
+        (BinOp::Gt, true) => Cc::A,
+        (BinOp::Gt, false) => Cc::G,
+        (BinOp::Ge, true) => Cc::Ae,
+        _ => Cc::Ge,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Program lowering
+// ---------------------------------------------------------------------
+
+/// Lower `prog` for gang width `width`. Returns `None` when the tier
+/// cannot apply at all (unsupported width, mismatched register frame,
+/// no coverable region, or the executable mapping failed — e.g. a
+/// hardened kernel denying W^X flips); individual uncoverable regions
+/// just stay `None` inside the returned program.
+pub(crate) fn lower(
+    f: &Function,
+    prog: &BytecodeProgram,
+    width: usize,
+) -> Option<(JitProgram, JitLowerStats)> {
+    let helper = helper_addr(width)?;
+    if prog.reg_count != f.reg_count() {
+        return None;
+    }
+    let classes = alloca_classes(f);
+    let mut all = Vec::new();
+    let mut regions = Vec::with_capacity(prog.regions.len());
+    let mut frame_slots = 1usize;
+    let mut stats = JitLowerStats::default();
+    for r in &prog.regions {
+        match lower_region(f, &classes, r, prog.reg_count, width, helper) {
+            Some(lr) => {
+                frame_slots = frame_slots.max(prog.reg_count as usize + r.consts.len() + 1);
+                let entry = all.len();
+                all.extend_from_slice(&lr.bytes);
+                stats.regions += 1;
+                stats.insts += lr.insts;
+                regions.push(Some(JitRegion {
+                    entry,
+                    descs: lr.descs,
+                    ends: lr.ends,
+                    branches: lr.branches,
+                    insts: lr.insts,
+                }));
+            }
+            None => {
+                stats.fallbacks += 1;
+                regions.push(None);
+            }
+        }
+    }
+    if stats.regions == 0 {
+        return None;
+    }
+    let code = ExecMem::new(&all)?;
+    Some((JitProgram { width, reg_count: prog.reg_count, frame_slots, regions, code }, stats))
+}
+
+struct Lowered {
+    bytes: Vec<u8>,
+    descs: Vec<Desc>,
+    ends: Vec<BlockId>,
+    branches: Vec<(BlockId, BlockId)>,
+    insts: usize,
+}
+
+struct RegionAsm<'a> {
+    classes: &'a [CellClass],
+    asm: Asm,
+    descs: Vec<Desc>,
+    ends: Vec<BlockId>,
+    branches: Vec<(BlockId, BlockId)>,
+    kinds: Vec<Option<Kind>>,
+    ckinds: Vec<Option<Kind>>,
+    nregs: u32,
+    scratch: u32,
+    scratch_kind: Option<Kind>,
+    w: usize,
+    pending: i32,
+    insts: usize,
+    exit: Label,
+    err: Label,
+    helper: u64,
+}
+
+fn lower_region(
+    f: &Function,
+    classes: &[CellClass],
+    region: &BcRegion,
+    nregs: u32,
+    width: usize,
+    helper: u64,
+) -> Option<Lowered> {
+    if region.code.is_empty() {
+        return None;
+    }
+    let mut asm = Asm::new();
+    let exit = asm.label();
+    let err = asm.label();
+    let mut ra = RegionAsm {
+        classes,
+        asm,
+        descs: Vec::new(),
+        ends: Vec::new(),
+        branches: Vec::new(),
+        kinds: vec![None; nregs as usize],
+        ckinds: region.consts.iter().map(|c| const_kind(f, c)).collect(),
+        nregs,
+        scratch: nregs + region.consts.len() as u32,
+        scratch_kind: None,
+        w: width,
+        pending: 0,
+        insts: 0,
+        exit,
+        err,
+        helper,
+    };
+
+    // Pre-pass: allocate labels for every branch-target PC.
+    let mut labels: Vec<Option<Label>> = vec![None; region.code.len()];
+    for inst in &region.code {
+        let mut mark = |pc: u32| -> Option<()> {
+            let e = labels.get_mut(pc as usize)?;
+            if e.is_none() {
+                *e = Some(ra.asm.label());
+            }
+            Some(())
+        };
+        match inst {
+            BcInst::Jump { pc } => mark(*pc)?,
+            BcInst::Br { t, f, .. } | BcInst::CmpBr { t, f, .. } => {
+                mark(*t)?;
+                mark(*f)?;
+            }
+            _ => {}
+        }
+    }
+
+    // Prologue: rdi = ctx. Keep ctx in r15 and the frame base in r14;
+    // one stack adjust keeps rsp 16-byte aligned at helper call sites.
+    ra.asm.push_r14();
+    ra.asm.push_r15();
+    ra.asm.sub_rsp_8();
+    ra.asm.mov_rr(R15, RDI);
+    ra.asm.mov_r_mem(R14, R15, OFF_FRAME);
+
+    for (pc, inst) in region.code.iter().enumerate() {
+        if let Some(Some(l)) = labels.get(pc) {
+            ra.flush();
+            ra.asm.bind(*l);
+        }
+        match inst {
+            BcInst::Bin { op, ty, dst, a, b } => {
+                ra.count();
+                ra.emit_bin(*op, ty, *dst, *a, *b)?;
+            }
+            BcInst::Un { op, ty, dst, a } => {
+                ra.count();
+                ra.emit_un(*op, ty, *dst, *a)?;
+            }
+            BcInst::Cast { to, from, dst, a } => {
+                ra.count();
+                ra.emit_cast(to, from, *dst, *a)?;
+            }
+            BcInst::Load { ty, dst, ptr } => {
+                ra.count();
+                ra.emit_load(ty, *dst, *ptr)?;
+            }
+            BcInst::Store { ty, ptr, val } => {
+                ra.count();
+                ra.emit_store(ty, *ptr, *val)?;
+            }
+            BcInst::Gep { elem, dst, base, idx } => {
+                ra.count();
+                ra.emit_gep(elem, *dst, *base, *idx)?;
+            }
+            BcInst::Wi { func, dim, dst } => {
+                ra.count();
+                ra.emit_wi(*func, *dim, *dst)?;
+            }
+            BcInst::Math { func, ty, dst, args } => {
+                ra.count();
+                ra.emit_math(*func, ty, *dst, args)?;
+            }
+            BcInst::Select { ty, dst, cond, a, b } => {
+                ra.count();
+                ra.emit_select(ty, *dst, *cond, *a, *b)?;
+            }
+            BcInst::GepLoad { elem, ty, dst, base, idx } => {
+                ra.count();
+                let sc = ra.scratch;
+                ra.emit_gep(elem, sc, *base, *idx)?;
+                ra.emit_load(ty, *dst, sc)?;
+            }
+            BcInst::LoadBin { op, ty, load_ty, dst, ptr, other, load_first } => {
+                ra.count();
+                let sc = ra.scratch;
+                ra.emit_load(load_ty, sc, *ptr)?;
+                let (x, y) = if *load_first { (sc, *other) } else { (*other, sc) };
+                ra.emit_bin(*op, ty, *dst, x, y)?;
+            }
+            BcInst::BinStore { op, ty, store_ty, ptr, a, b } => {
+                ra.count();
+                let sc = ra.scratch;
+                ra.emit_bin(*op, ty, sc, *a, *b)?;
+                ra.emit_store(store_ty, *ptr, sc)?;
+            }
+            BcInst::MulAdd { ty, dst, a, b, c, mul_first } => {
+                ra.count();
+                let sc = ra.scratch;
+                ra.emit_bin(BinOp::Mul, ty, sc, *a, *b)?;
+                let (x, y) = if *mul_first { (sc, *c) } else { (*c, sc) };
+                ra.emit_bin(BinOp::Add, ty, *dst, x, y)?;
+            }
+            BcInst::CmpBr { op, ty, a, b, t, f, ir_t, ir_f } => {
+                ra.count();
+                let sc = ra.scratch;
+                ra.emit_bin(*op, ty, sc, *a, *b)?;
+                ra.emit_br(sc, *t, *f, *ir_t, *ir_f, &labels)?;
+            }
+            BcInst::Jump { pc } => {
+                ra.flush();
+                let l = labels.get(*pc as usize).copied().flatten()?;
+                ra.asm.jmp(l);
+            }
+            BcInst::Br { cond, t, f, ir_t, ir_f } => {
+                ra.emit_br(*cond, *t, *f, *ir_t, *ir_f, &labels)?;
+            }
+            BcInst::End { barrier } => {
+                ra.flush();
+                let eidx = ra.ends.len() as i32;
+                ra.ends.push(*barrier);
+                ra.asm.mov_mem32_imm(R15, OFF_EXIT, eidx);
+                ra.asm.xor_r32_r32(RAX, RAX);
+                ra.asm.jmp(ra.exit);
+            }
+        }
+    }
+
+    // Shared bounds-fault path (also the fall-through for a region that
+    // somehow lacks a terminator): return code 2 = error.
+    ra.asm.bind(ra.err);
+    ra.asm.mov_r32_imm(RAX, 2);
+    ra.asm.bind(ra.exit);
+    ra.asm.add_rsp_8();
+    ra.asm.pop_r15();
+    ra.asm.pop_r14();
+    ra.asm.ret();
+
+    let bytes = ra.asm.finish()?;
+    Some(Lowered { bytes, descs: ra.descs, ends: ra.ends, branches: ra.branches, insts: ra.insts })
+}
+
+impl RegionAsm<'_> {
+    fn count(&mut self) {
+        self.pending += 1;
+        self.insts += 1;
+    }
+
+    fn flush(&mut self) {
+        if self.pending > 0 {
+            self.asm.add_mem64_imm(R15, OFF_INSTS, self.pending);
+            self.pending = 0;
+        }
+    }
+
+    fn disp(&self, slot: u32, lane: usize) -> i32 {
+        ((slot as usize * self.w + lane) * 8) as i32
+    }
+
+    fn kind_of(&self, slot: u32) -> Option<Kind> {
+        if slot == self.scratch {
+            self.scratch_kind
+        } else if slot < self.nregs {
+            self.kinds.get(slot as usize).copied().flatten()
+        } else {
+            self.ckinds.get((slot - self.nregs) as usize).copied().flatten()
+        }
+    }
+
+    fn set_kind(&mut self, slot: u32, k: Kind) {
+        if slot == self.scratch {
+            self.scratch_kind = Some(k);
+        } else if let Some(e) = self.kinds.get_mut(slot as usize) {
+            *e = Some(k);
+        }
+    }
+
+    fn sk(&self, slot: u32) -> Option<SlotK> {
+        Some(SlotK { slot, kind: self.kind_of(slot)? })
+    }
+
+    /// Emit a call into the runtime helper for `desc`. The current
+    /// instruction batch is flushed first (the helper may fail), and a
+    /// non-zero return aborts the region with the helper's code in eax.
+    fn call_helper(&mut self, desc: Desc) {
+        self.flush();
+        let idx = self.descs.len() as i32;
+        self.descs.push(desc);
+        self.asm.mov_rr(RDI, R15);
+        self.asm.mov_r32_imm(RSI, idx);
+        self.asm.mov_r_imm64(RAX, self.helper);
+        self.asm.call_r(RAX);
+        self.asm.test_r32_r32(RAX, RAX);
+        self.asm.jcc(Cc::Ne, self.exit);
+    }
+
+    /// Load slot payload and normalise it as the interpreter's
+    /// `norm_int` would for scalar `s` (pointer payloads included).
+    fn load_int_norm(&mut self, r: u8, slot: u32, lane: usize, s: Scalar) {
+        self.asm.mov_r_mem(r, R14, self.disp(slot, lane));
+        match s {
+            Scalar::I32 => self.asm.movsxd_rr(r, r),
+            Scalar::U32 => self.asm.mov_r32_r32(r, r),
+            _ => {}
+        }
+    }
+
+    fn renorm(&mut self, r: u8, s: Scalar) {
+        match s {
+            Scalar::I32 => self.asm.movsxd_rr(r, r),
+            Scalar::U32 => self.asm.mov_r32_r32(r, r),
+            _ => {}
+        }
+    }
+
+    /// Load a slot as an f64 into `xmm`: float payloads directly,
+    /// integer payloads through the same signed conversion `as_f` does.
+    fn load_float(&mut self, xmm: u8, slot: u32, k: Kind, lane: usize) {
+        let d = self.disp(slot, lane);
+        match k {
+            Kind::F => self.asm.movsd_x_mem(xmm, R14, d),
+            _ => self.asm.cvtsi2sd_x_mem(xmm, R14, d),
+        }
+    }
+
+    fn emit_bin(&mut self, op: BinOp, ty: &Type, dst: u32, a: u32, b: u32) -> Option<()> {
+        if ty.lanes() != 1 {
+            return None;
+        }
+        let s = ty.elem_scalar().unwrap_or(Scalar::I32);
+        let ka = self.kind_of(a)?;
+        let kb = self.kind_of(b)?;
+        let logical = matches!(op, BinOp::LAnd | BinOp::LOr);
+        let float_path =
+            s.is_float() && !matches!(op, BinOp::And | BinOp::Or | BinOp::Xor | BinOp::Shl | BinOp::Shr);
+        let dk = if op.is_cmp() || logical {
+            Kind::I
+        } else if float_path {
+            Kind::F
+        } else {
+            Kind::I
+        };
+
+        if float_path {
+            let inline_ok = matches!(ka, Kind::I | Kind::F) && matches!(kb, Kind::I | Kind::F);
+            if inline_ok && matches!(op, BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div) {
+                for l in 0..self.w {
+                    self.load_float(XMM0, a, ka, l);
+                    self.load_float(XMM1, b, kb, l);
+                    match op {
+                        BinOp::Add => self.asm.addsd(XMM0, XMM1),
+                        BinOp::Sub => self.asm.subsd(XMM0, XMM1),
+                        BinOp::Mul => self.asm.mulsd(XMM0, XMM1),
+                        _ => self.asm.divsd(XMM0, XMM1),
+                    }
+                    if s == Scalar::F32 {
+                        self.asm.cvtsd2ss(XMM0, XMM0);
+                        self.asm.cvtss2sd(XMM0, XMM0);
+                    }
+                    let d = self.disp(dst, l);
+                    self.asm.movsd_mem_x(R14, d, XMM0);
+                }
+                self.set_kind(dst, Kind::F);
+                return Some(());
+            }
+            if inline_ok && op.is_cmp() {
+                for l in 0..self.w {
+                    self.load_float(XMM0, a, ka, l);
+                    self.load_float(XMM1, b, kb, l);
+                    match op {
+                        BinOp::Lt => {
+                            self.asm.ucomisd(XMM1, XMM0);
+                            self.asm.setcc(Cc::A, RAX);
+                        }
+                        BinOp::Le => {
+                            self.asm.ucomisd(XMM1, XMM0);
+                            self.asm.setcc(Cc::Ae, RAX);
+                        }
+                        BinOp::Gt => {
+                            self.asm.ucomisd(XMM0, XMM1);
+                            self.asm.setcc(Cc::A, RAX);
+                        }
+                        BinOp::Ge => {
+                            self.asm.ucomisd(XMM0, XMM1);
+                            self.asm.setcc(Cc::Ae, RAX);
+                        }
+                        BinOp::Eq => {
+                            self.asm.ucomisd(XMM0, XMM1);
+                            self.asm.setcc(Cc::E, RAX);
+                            self.asm.setcc(Cc::Np, RCX);
+                            self.asm.and_r8_r8(RAX, RCX);
+                        }
+                        _ => {
+                            // Ne: unordered compares as not-equal.
+                            self.asm.ucomisd(XMM0, XMM1);
+                            self.asm.setcc(Cc::Ne, RAX);
+                            self.asm.setcc(Cc::P, RCX);
+                            self.asm.or_r8_r8(RAX, RCX);
+                        }
+                    }
+                    self.asm.movzx_r32_r8(RAX, RAX);
+                    let d = self.disp(dst, l);
+                    self.asm.mov_mem_r(R14, d, RAX);
+                }
+                self.set_kind(dst, Kind::I);
+                return Some(());
+            }
+        } else {
+            let inline_ok = matches!(s, Scalar::I32 | Scalar::U32 | Scalar::I64 | Scalar::U64)
+                && kind_intlike(ka)
+                && kind_intlike(kb);
+            if inline_ok && !matches!(op, BinOp::Div | BinOp::Rem) {
+                let unsigned = matches!(s, Scalar::U32 | Scalar::U64);
+                for l in 0..self.w {
+                    self.load_int_norm(RAX, a, l, s);
+                    self.load_int_norm(RCX, b, l, s);
+                    if op.is_cmp() {
+                        self.asm.cmp_rr(RAX, RCX);
+                        self.asm.setcc(cc_int(op, unsigned), RAX);
+                        self.asm.movzx_r32_r8(RAX, RAX);
+                    } else {
+                        match op {
+                            BinOp::Add => self.asm.add_rr(RAX, RCX),
+                            BinOp::Sub => self.asm.sub_rr(RAX, RCX),
+                            BinOp::Mul => self.asm.imul_rr(RAX, RCX),
+                            BinOp::And => self.asm.and_rr(RAX, RCX),
+                            BinOp::Or => self.asm.or_rr(RAX, RCX),
+                            BinOp::Xor => self.asm.xor_rr(RAX, RCX),
+                            BinOp::Shl => self.asm.shl_r_cl(RAX),
+                            BinOp::Shr => {
+                                if s.is_signed() {
+                                    self.asm.sar_r_cl(RAX);
+                                } else {
+                                    self.asm.shr_r_cl(RAX);
+                                }
+                            }
+                            BinOp::LAnd => {
+                                self.asm.test_rr(RAX, RAX);
+                                self.asm.setcc(Cc::Ne, RAX);
+                                self.asm.test_rr(RCX, RCX);
+                                self.asm.setcc(Cc::Ne, RCX);
+                                self.asm.and_r8_r8(RAX, RCX);
+                                self.asm.movzx_r32_r8(RAX, RAX);
+                            }
+                            _ => {
+                                // LOr: (a|b) != 0 on normalised payloads.
+                                self.asm.or_rr(RAX, RCX);
+                                self.asm.setcc(Cc::Ne, RAX);
+                                self.asm.movzx_r32_r8(RAX, RAX);
+                            }
+                        }
+                        if !logical {
+                            self.renorm(RAX, s);
+                        }
+                    }
+                    let d = self.disp(dst, l);
+                    self.asm.mov_mem_r(R14, d, RAX);
+                }
+                self.set_kind(dst, Kind::I);
+                return Some(());
+            }
+        }
+
+        // Everything else (divisions, bool scalars, float logicals,
+        // pointer-payload float ops) → shared kernel.
+        let (da, db) = (self.sk(a)?, self.sk(b)?);
+        self.set_kind(dst, dk);
+        self.call_helper(Desc::Bin {
+            op,
+            ty: ty.clone(),
+            dst: SlotK { slot: dst, kind: dk },
+            a: da,
+            b: db,
+        });
+        Some(())
+    }
+
+    fn emit_un(&mut self, op: UnOp, ty: &Type, dst: u32, a: u32) -> Option<()> {
+        if ty.lanes() != 1 {
+            return None;
+        }
+        let s = ty.elem_scalar().unwrap_or(Scalar::I32);
+        let ka = self.kind_of(a)?;
+        match op {
+            UnOp::Neg if s.is_float() => {
+                if ka == Kind::F {
+                    for l in 0..self.w {
+                        let da = self.disp(a, l);
+                        self.asm.mov_r_mem(RAX, R14, da);
+                        self.asm.mov_r_imm64(RCX, 0x8000_0000_0000_0000);
+                        self.asm.xor_rr(RAX, RCX);
+                        let d = self.disp(dst, l);
+                        self.asm.mov_mem_r(R14, d, RAX);
+                    }
+                    self.set_kind(dst, Kind::F);
+                    return Some(());
+                }
+                self.helper_un(op, ty, dst, Kind::F, a)
+            }
+            UnOp::Neg => {
+                if matches!(s, Scalar::I32 | Scalar::U32 | Scalar::I64 | Scalar::U64)
+                    && kind_intlike(ka)
+                {
+                    for l in 0..self.w {
+                        let da = self.disp(a, l);
+                        self.asm.mov_r_mem(RCX, R14, da);
+                        self.asm.xor_r32_r32(RAX, RAX);
+                        self.asm.sub_rr(RAX, RCX);
+                        self.renorm(RAX, s);
+                        let d = self.disp(dst, l);
+                        self.asm.mov_mem_r(R14, d, RAX);
+                    }
+                    self.set_kind(dst, Kind::I);
+                    return Some(());
+                }
+                self.helper_un(op, ty, dst, Kind::I, a)
+            }
+            UnOp::Not => {
+                if matches!(s, Scalar::I32 | Scalar::U32 | Scalar::I64 | Scalar::U64)
+                    && kind_intlike(ka)
+                {
+                    for l in 0..self.w {
+                        let da = self.disp(a, l);
+                        self.asm.mov_r_mem(RAX, R14, da);
+                        self.asm.mov_r_imm64(RCX, u64::MAX);
+                        self.asm.xor_rr(RAX, RCX);
+                        self.renorm(RAX, s);
+                        let d = self.disp(dst, l);
+                        self.asm.mov_mem_r(R14, d, RAX);
+                    }
+                    self.set_kind(dst, Kind::I);
+                    return Some(());
+                }
+                self.helper_un(op, ty, dst, Kind::I, a)
+            }
+            UnOp::LNot => {
+                for l in 0..self.w {
+                    match ka {
+                        Kind::I => {
+                            let da = self.disp(a, l);
+                            self.asm.mov_r_mem(RAX, R14, da);
+                            self.asm.test_rr(RAX, RAX);
+                            self.asm.setcc(Cc::E, RAX);
+                            self.asm.movzx_r32_r8(RAX, RAX);
+                        }
+                        Kind::F => {
+                            // !truthy(f) = (f == 0.0), ordered: NaN → 0.
+                            self.load_float(XMM0, a, Kind::F, l);
+                            self.asm.xorps(XMM1, XMM1);
+                            self.asm.ucomisd(XMM0, XMM1);
+                            self.asm.setcc(Cc::E, RAX);
+                            self.asm.setcc(Cc::Np, RCX);
+                            self.asm.and_r8_r8(RAX, RCX);
+                            self.asm.movzx_r32_r8(RAX, RAX);
+                        }
+                        _ => {
+                            // Pointers are always truthy: !p = 0.
+                            self.asm.xor_r32_r32(RAX, RAX);
+                        }
+                    }
+                    let d = self.disp(dst, l);
+                    self.asm.mov_mem_r(R14, d, RAX);
+                }
+                self.set_kind(dst, Kind::I);
+                Some(())
+            }
+        }
+    }
+
+    fn helper_un(&mut self, op: UnOp, ty: &Type, dst: u32, dk: Kind, a: u32) -> Option<()> {
+        let da = self.sk(a)?;
+        self.set_kind(dst, dk);
+        self.call_helper(Desc::Un { op, ty: ty.clone(), dst: SlotK { slot: dst, kind: dk }, a: da });
+        Some(())
+    }
+
+    fn emit_cast(&mut self, to: &Type, from: &Type, dst: u32, a: u32) -> Option<()> {
+        if to.lanes() != 1 || from.lanes() != 1 {
+            return None;
+        }
+        let ka = self.kind_of(a)?;
+        // Pointer payloads pass through casts unchanged (norm_val), and
+        // non-value target types clone — both are payload copies.
+        if matches!(ka, Kind::P(_) | Kind::Ps(_)) || to.elem_scalar().is_none() {
+            for l in 0..self.w {
+                let da = self.disp(a, l);
+                self.asm.mov_r_mem(RAX, R14, da);
+                let d = self.disp(dst, l);
+                self.asm.mov_mem_r(R14, d, RAX);
+            }
+            self.set_kind(dst, ka);
+            return Some(());
+        }
+        let ss = to.elem_scalar()?;
+        if ss.is_float() {
+            for l in 0..self.w {
+                self.load_float(XMM0, a, ka, l);
+                if ss == Scalar::F32 {
+                    self.asm.cvtsd2ss(XMM0, XMM0);
+                    self.asm.cvtss2sd(XMM0, XMM0);
+                }
+                let d = self.disp(dst, l);
+                self.asm.movsd_mem_x(R14, d, XMM0);
+            }
+            self.set_kind(dst, Kind::F);
+            return Some(());
+        }
+        if ka == Kind::F {
+            // float → int saturates like Rust `as`; keep the kernel's
+            // exact semantics by dispatching.
+            let da = self.sk(a)?;
+            self.set_kind(dst, Kind::I);
+            self.call_helper(Desc::Cast {
+                to: to.clone(),
+                from: from.clone(),
+                dst: SlotK { slot: dst, kind: Kind::I },
+                a: da,
+            });
+            return Some(());
+        }
+        for l in 0..self.w {
+            let da = self.disp(a, l);
+            self.asm.mov_r_mem(RAX, R14, da);
+            if ss == Scalar::Bool {
+                self.asm.test_rr(RAX, RAX);
+                self.asm.setcc(Cc::Ne, RAX);
+                self.asm.movzx_r32_r8(RAX, RAX);
+            } else {
+                self.renorm(RAX, ss);
+            }
+            let d = self.disp(dst, l);
+            self.asm.mov_mem_r(R14, d, RAX);
+        }
+        self.set_kind(dst, Kind::I);
+        Some(())
+    }
+
+    fn emit_gep(&mut self, elem: &Type, dst: u32, base: u32, idx: u32) -> Option<()> {
+        let kb = self.kind_of(base)?;
+        let ki = self.kind_of(idx)?;
+        if ki == Kind::F {
+            return None;
+        }
+        match kb {
+            Kind::Ps(_) | Kind::P(SP_PRIVATE) => {
+                // Private memory is cell-addressed: index added raw.
+                for l in 0..self.w {
+                    let db = self.disp(base, l);
+                    self.asm.mov_r_mem(RAX, R14, db);
+                    let di = self.disp(idx, l);
+                    self.asm.mov_r_mem(RCX, R14, di);
+                    self.asm.add_rr(RAX, RCX);
+                    let d = self.disp(dst, l);
+                    self.asm.mov_mem_r(R14, d, RAX);
+                }
+            }
+            Kind::P(_) => {
+                let esz = i32::try_from(elem.size()).ok()?;
+                for l in 0..self.w {
+                    let db = self.disp(base, l);
+                    self.asm.mov_r_mem(RAX, R14, db);
+                    let di = self.disp(idx, l);
+                    self.asm.mov_r_mem(RCX, R14, di);
+                    self.asm.imul_r_imm(RCX, esz);
+                    self.asm.add_rr(RAX, RCX);
+                    let d = self.disp(dst, l);
+                    self.asm.mov_mem_r(R14, d, RAX);
+                }
+            }
+            _ => return None,
+        }
+        self.set_kind(dst, kb);
+        Some(())
+    }
+
+    /// Emit the shared per-lane pointer/bounds preamble for a global or
+    /// local access: leaves the offset in rdx, the buffer base in rcx,
+    /// and faults to `.err` exactly when the interpreter's
+    /// `offset + elem_size > len` check would.
+    fn emit_bounds(&mut self, ptr: u32, lane: usize, tag: u8, esz: i32) {
+        let dp = self.disp(ptr, lane);
+        self.asm.mov_r_mem(RDX, R14, dp);
+        self.asm.mov_rr(RAX, RDX);
+        self.asm.add_r_imm(RAX, esz);
+        self.asm.jcc(Cc::B, self.err);
+        self.asm.cmp_r_mem(RAX, R15, off_len(tag));
+        self.asm.jcc(Cc::A, self.err);
+        self.asm.mov_r_mem(RCX, R15, off_base(tag));
+    }
+
+    fn emit_load(&mut self, ty: &Type, dst: u32, ptr: u32) -> Option<()> {
+        let kp = self.kind_of(ptr)?;
+        match kp {
+            Kind::Ps(sid) => {
+                // Private load: always through the kernel (cells hold
+                // whole VLane values); result kind = proven cell class.
+                let dk = match self.classes.get(sid as usize)? {
+                    CellClass::I => Kind::I,
+                    CellClass::F => Kind::F,
+                    CellClass::P(t) => Kind::P(*t),
+                    CellClass::Other => return None,
+                };
+                let dp = self.sk(ptr)?;
+                self.set_kind(dst, dk);
+                self.call_helper(Desc::Load {
+                    ty: ty.clone(),
+                    dst: SlotK { slot: dst, kind: dk },
+                    ptr: dp,
+                });
+                Some(())
+            }
+            Kind::P(SP_PRIVATE) => None,
+            Kind::P(t) => {
+                if ty.lanes() != 1 {
+                    return None;
+                }
+                let s = ty.elem_scalar()?;
+                let esz = i32::try_from(s.size()).ok()?;
+                for l in 0..self.w {
+                    self.emit_bounds(ptr, l, t, esz);
+                    let d = self.disp(dst, l);
+                    match s {
+                        Scalar::F32 => {
+                            self.asm.load_f32_sib();
+                            self.asm.cvtss2sd(XMM0, XMM0);
+                            self.asm.movsd_mem_x(R14, d, XMM0);
+                        }
+                        Scalar::F64 => {
+                            self.asm.load_f64_sib();
+                            self.asm.movsd_mem_x(R14, d, XMM0);
+                        }
+                        Scalar::I32 => {
+                            self.asm.load_i32_sib();
+                            self.asm.mov_mem_r(R14, d, RAX);
+                        }
+                        Scalar::U32 => {
+                            self.asm.load_u32_sib();
+                            self.asm.mov_mem_r(R14, d, RAX);
+                        }
+                        Scalar::I64 | Scalar::U64 => {
+                            self.asm.load_i64_sib();
+                            self.asm.mov_mem_r(R14, d, RAX);
+                        }
+                        Scalar::Bool => {
+                            self.asm.cmp_bool_sib();
+                            self.asm.setcc(Cc::Ne, RAX);
+                            self.asm.movzx_r32_r8(RAX, RAX);
+                            self.asm.mov_mem_r(R14, d, RAX);
+                        }
+                    }
+                }
+                self.set_kind(dst, if s.is_float() { Kind::F } else { Kind::I });
+                Some(())
+            }
+            _ => None,
+        }
+    }
+
+    fn emit_store(&mut self, ty: &Type, ptr: u32, val: u32) -> Option<()> {
+        let kp = self.kind_of(ptr)?;
+        let kv = self.kind_of(val)?;
+        let t = match kp {
+            Kind::Ps(_) | Kind::P(SP_PRIVATE) => {
+                // Private store: the kernel path keeps VecStore cells
+                // (and their normalisation) exactly coherent.
+                let (dp, dv) = (self.sk(ptr)?, self.sk(val)?);
+                self.call_helper(Desc::Store { ty: ty.clone(), ptr: dp, val: dv });
+                return Some(());
+            }
+            Kind::P(t) => t,
+            _ => return None,
+        };
+        let inline = if ty.lanes() != 1 {
+            None
+        } else {
+            ty.elem_scalar().and_then(|s| {
+                let ok = match s {
+                    Scalar::F32 | Scalar::F64 => matches!(kv, Kind::I | Kind::F),
+                    Scalar::Bool => kv == Kind::I,
+                    _ => kind_intlike(kv),
+                };
+                if ok {
+                    Some(s)
+                } else {
+                    None
+                }
+            })
+        };
+        let s = match inline {
+            Some(s) => s,
+            None => {
+                let (dp, dv) = (self.sk(ptr)?, self.sk(val)?);
+                self.call_helper(Desc::Store { ty: ty.clone(), ptr: dp, val: dv });
+                return Some(());
+            }
+        };
+        let esz = i32::try_from(s.size()).ok()?;
+        for l in 0..self.w {
+            self.emit_bounds(ptr, l, t, esz);
+            let dv = self.disp(val, l);
+            match s {
+                Scalar::F64 => {
+                    self.load_float(XMM0, val, kv, l);
+                    self.asm.store_f64_sib();
+                }
+                Scalar::F32 => {
+                    self.load_float(XMM0, val, kv, l);
+                    self.asm.cvtsd2ss(XMM0, XMM0);
+                    self.asm.store_f32_sib();
+                }
+                Scalar::I32 | Scalar::U32 => {
+                    self.asm.mov_r_mem(RAX, R14, dv);
+                    self.asm.store_u32_sib();
+                }
+                Scalar::I64 | Scalar::U64 => {
+                    self.asm.mov_r_mem(RAX, R14, dv);
+                    self.asm.store_u64_sib();
+                }
+                Scalar::Bool => {
+                    self.asm.mov_r_mem(RAX, R14, dv);
+                    self.asm.test_rr(RAX, RAX);
+                    self.asm.setcc(Cc::Ne, RAX);
+                    self.asm.store_u8_sib();
+                }
+            }
+        }
+        Some(())
+    }
+
+    fn emit_wi(&mut self, func: WiFn, dim: u32, dst: u32) -> Option<()> {
+        self.set_kind(dst, Kind::I);
+        self.call_helper(Desc::Wi { func, dim, dst: SlotK { slot: dst, kind: Kind::I } });
+        Some(())
+    }
+
+    fn emit_math(&mut self, func: MathFn, ty: &Type, dst: u32, args: &[BcSlot]) -> Option<()> {
+        if ty.lanes() != 1 || !matches!(ty.elem_scalar(), Some(s) if s.is_float()) {
+            return None;
+        }
+        let mut sks = Vec::with_capacity(args.len());
+        for &a in args {
+            sks.push(self.sk(a)?);
+        }
+        self.set_kind(dst, Kind::F);
+        self.call_helper(Desc::Math {
+            func,
+            ty: ty.clone(),
+            dst: SlotK { slot: dst, kind: Kind::F },
+            args: sks,
+        });
+        Some(())
+    }
+
+    fn emit_select(&mut self, ty: &Type, dst: u32, cond: u32, a: u32, b: u32) -> Option<()> {
+        if ty.lanes() != 1 {
+            return None;
+        }
+        let ka = self.kind_of(a)?;
+        let kb = self.kind_of(b)?;
+        let kc = self.kind_of(cond)?;
+        // select picks an operand unnormalised, so the result kind must
+        // be a single consistent payload class.
+        let dk = if ka == kb {
+            ka
+        } else {
+            match (ka, kb) {
+                (Kind::Ps(_) | Kind::P(SP_PRIVATE), Kind::Ps(_) | Kind::P(SP_PRIVATE)) => {
+                    Kind::P(SP_PRIVATE)
+                }
+                _ => return None,
+            }
+        };
+        self.set_kind(dst, dk);
+        self.call_helper(Desc::Select {
+            ty: ty.clone(),
+            dst: SlotK { slot: dst, kind: dk },
+            cond: SlotK { slot: cond, kind: kc },
+            a: SlotK { slot: a, kind: ka },
+            b: SlotK { slot: b, kind: kb },
+        });
+        Some(())
+    }
+
+    /// Emit a conditional branch: evaluate per-lane truthiness into an
+    /// edx mask, take the uniform edges inline, and report divergence
+    /// (return code 1 + mask + branch index) otherwise.
+    fn emit_br(
+        &mut self,
+        cond: u32,
+        t: u32,
+        f: u32,
+        ir_t: BlockId,
+        ir_f: BlockId,
+        labels: &[Option<Label>],
+    ) -> Option<()> {
+        let kc = self.kind_of(cond)?;
+        self.flush();
+        let lt = labels.get(t as usize).copied().flatten()?;
+        let lf = labels.get(f as usize).copied().flatten()?;
+        if matches!(kc, Kind::P(_) | Kind::Ps(_)) {
+            // Pointers are always truthy → unconditionally true edge.
+            self.asm.jmp(lt);
+            return Some(());
+        }
+        self.asm.xor_r32_r32(RDX, RDX);
+        for l in 0..self.w {
+            match kc {
+                Kind::I => {
+                    let dc = self.disp(cond, l);
+                    self.asm.mov_r_mem(RAX, R14, dc);
+                    self.asm.test_rr(RAX, RAX);
+                    self.asm.setcc(Cc::Ne, RAX);
+                }
+                _ => {
+                    // Kind::F: truthy = (f != 0.0), NaN included.
+                    self.load_float(XMM0, cond, Kind::F, l);
+                    self.asm.xorps(XMM1, XMM1);
+                    self.asm.ucomisd(XMM0, XMM1);
+                    self.asm.setcc(Cc::Ne, RAX);
+                    self.asm.setcc(Cc::P, RCX);
+                    self.asm.or_r8_r8(RAX, RCX);
+                }
+            }
+            self.asm.movzx_r32_r8(RAX, RAX);
+            if l > 0 {
+                self.asm.shl_r32_imm8(RAX, l as u8);
+            }
+            self.asm.or_r32_r32(RDX, RAX);
+        }
+        self.asm.test_r32_r32(RDX, RDX);
+        self.asm.jcc(Cc::E, lf);
+        self.asm.cmp_r32_imm(RDX, ((1u32 << self.w) - 1) as i32);
+        self.asm.jcc(Cc::E, lt);
+        let bidx = self.branches.len() as i32;
+        self.branches.push((ir_t, ir_f));
+        self.asm.mov_mem32_r32(R15, OFF_DIV_MASK, RDX);
+        self.asm.mov_mem32_imm(R15, OFF_DIV_IDX, bidx);
+        self.asm.mov_r32_imm(RAX, 1);
+        self.asm.jmp(self.exit);
+        Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_classes_from_types() {
+        assert_eq!(class_of_type(&Type::Scalar(Scalar::F32)), CellClass::F);
+        assert_eq!(class_of_type(&Type::Scalar(Scalar::Bool)), CellClass::I);
+        assert_eq!(
+            class_of_type(&Type::Scalar(Scalar::F32).ptr(AddrSpace::Global)),
+            CellClass::P(0)
+        );
+        assert_eq!(class_of_type(&Type::Vec(Scalar::F32, 4)), CellClass::Other);
+    }
+
+    #[test]
+    fn int_compare_condition_codes() {
+        assert_eq!(cc_int(BinOp::Lt, true) as u8, Cc::B as u8);
+        assert_eq!(cc_int(BinOp::Lt, false) as u8, Cc::L as u8);
+        assert_eq!(cc_int(BinOp::Ge, true) as u8, Cc::Ae as u8);
+        assert_eq!(cc_int(BinOp::Eq, false) as u8, Cc::E as u8);
+    }
+}

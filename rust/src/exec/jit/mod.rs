@@ -1,0 +1,111 @@
+//! Template JIT tier — stage (b) of the native-code tier: x86-64
+//! machine code for the hot parallel regions, no LLVM.
+//!
+//! The bytecode tier removed per-instruction operand marshalling but
+//! still pays one interpreter dispatch per (super)instruction per
+//! gang. This tier removes the dispatch too: the lowerer walks the
+//! *bytecode* form of each region (operand slots and PC branch targets
+//! already resolved, superinstructions already fused) and emits a
+//! template of hand-encoded x86-64 per instruction — gang-strided
+//! loads/stores over a flat `u64` payload frame, inline int/float
+//! arithmetic, compares, casts and bounds-checked global/local memory
+//! access — into an `mmap`ed W^X code buffer (`emit::ExecMem`:
+//! written read-write, flipped to read-execute, never both).
+//!
+//! Anything the templates do not cover (math elementals, divisions,
+//! vector values, private-memory cells, …) is dispatched through a
+//! per-region helper table back into the shared `vecgang` kernels, so
+//! results stay bit-identical to every interpreter tier. Whole regions
+//! the lowerer rejects keep running on the bytecode tier; dynamically
+//! divergent branches hand their lanes to the same per-lane fallback
+//! every other engine uses.
+//!
+//! The tier is compiled out on non-x86-64 (or non-Linux) hosts: this
+//! module then exports a stub [`JitProgram`] plus an [`attach`] no-op,
+//! and [`run_workgroup`] degrades wholesale to the bytecode engine.
+//! `POCLRS_JIT=0` is the runtime kill switch (checked at attach time).
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+mod emit;
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+mod lower;
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+mod run;
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub use lower::JitProgram;
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub use run::run_workgroup;
+
+use crate::kcc::WorkGroupFunction;
+
+/// Lower `wgf`'s bytecode program to machine code for `gang_width`
+/// lanes and attach the result, updating the compile-time jit counters
+/// in `wgf.stats`. No-op when a jit program is already attached, when
+/// there is no bytecode to lower from, when `POCLRS_JIT=0`, or (on
+/// unsupported hosts) always — uncovered regions are reported through
+/// `stats.jit_fallbacks` so `--stats` shows why nothing was jitted.
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub fn attach(wgf: &mut WorkGroupFunction, gang_width: usize) {
+    if wgf.jit.is_some() {
+        return;
+    }
+    let prog = match wgf.bytecode.as_ref() {
+        Some(p) => p,
+        None => return,
+    };
+    if std::env::var("POCLRS_JIT").ok().as_deref() == Some("0") {
+        wgf.stats.jit_fallbacks = prog.regions.len();
+        return;
+    }
+    match lower::lower(&wgf.reg_fn, prog, gang_width) {
+        Some((jp, st)) => {
+            wgf.stats.jit_regions = st.regions;
+            wgf.stats.jit_insts = st.insts;
+            wgf.stats.jit_fallbacks = st.fallbacks;
+            wgf.jit = Some(std::sync::Arc::new(jp));
+        }
+        None => {
+            wgf.stats.jit_fallbacks = prog.regions.len();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stubs for hosts without jit support: same public surface, wholesale
+// degradation to the bytecode tier.
+
+/// Stub jit program for hosts the tier is compiled out on.
+#[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+#[derive(Debug)]
+pub struct JitProgram;
+
+#[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+impl JitProgram {
+    /// Number of regions that were actually jitted (always zero here).
+    pub fn covered_regions(&self) -> usize {
+        0
+    }
+}
+
+/// Stub attach: never jits, reports every bytecode region as a jit
+/// fallback so `--stats` stays honest on unsupported hosts.
+#[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+pub fn attach(wgf: &mut WorkGroupFunction, _gang_width: usize) {
+    if let Some(p) = wgf.bytecode.as_ref() {
+        wgf.stats.jit_fallbacks = p.regions.len();
+    }
+}
+
+/// Stub runner: the jit engine degrades wholesale to the bytecode tier
+/// on hosts the templates are compiled out on.
+#[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+pub fn run_workgroup(
+    wgf: &WorkGroupFunction,
+    args: &[super::value::VVal],
+    mem: &mut super::mem::MemoryRefs<'_>,
+    ctx: &super::interp::LaunchCtx,
+    width: usize,
+) -> crate::cl::error::Result<super::gang::GangStats> {
+    super::bytecode::run_workgroup(wgf, args, mem, ctx, width)
+}

@@ -1,0 +1,634 @@
+//! Runtime for the jitted tier: the execution context the templates
+//! address, the helper the jitted code calls back into, and a
+//! work-group driver with three dispatch tiers — jitted machine code
+//! per region, bytecode for regions the JIT rejected, and the vector
+//! engine for regions the bytecode lowerer rejected.
+//!
+//! The contract with [`super::lower`] is the `#[repr(C)]` [`JitCtx`]
+//! header: the templates address it through `r15` using the `OFF_*`
+//! constants exported here (checked by a unit test against real field
+//! offsets), and every helper call is `dispatch::<W>(ctx, desc_index)`
+//! with the SysV C ABI. The jitted code returns a protocol code in
+//! `eax`: `0` = region ended at a barrier (`ctx.exit` indexes
+//! `JitRegion::ends`), `1` = dynamically divergent branch (`ctx.div_idx`
+//! indexes `JitRegion::branches`, `ctx.div_mask` has one bit per lane),
+//! `2` = runtime error (bounds failure from a template, or a helper
+//! error parked in `ctx.error`).
+//!
+//! Frames are flat `u64` payload arrays in slot-major order
+//! (`frame[slot * W + lane]`), sized `frame_slots * W` per gang and
+//! persistent across regions — registers are block-local (the same IR
+//! invariant the bytecode tier leans on), so no stale payload is ever
+//! read. Region constants are marshalled into the frame before entry;
+//! a launch argument whose runtime value does not match the statically
+//! inferred payload kind demotes that region to the bytecode tier for
+//! the whole launch (counted in `jit_fallbacks`).
+//!
+//! Divergence and private memory use the *same* state as the other
+//! engines: the gang owns a [`BcGang`] whose `VecStore` the helper
+//! mutates in place, so a divergent jit region hands its lanes to
+//! [`bytecode::diverge`] unchanged and results stay bit-identical.
+
+use std::slice;
+
+use crate::cl::error::{Error, Result};
+use crate::ir::func::Function;
+use crate::ir::inst::{BlockId, Term};
+use crate::kcc::WorkGroupFunction;
+
+use super::super::bytecode::{self, BcConst, BcGang};
+use super::super::gang::{note_barrier, run_lane_to_barrier, GangStats};
+use super::super::interp::{LaunchCtx, SlotStore};
+use super::super::mem::MemoryRefs;
+use super::super::value::{norm_float, norm_int, Val, VLane, VVal, SP_LOCAL, SP_PRIVATE};
+use super::super::vecgang::{
+    self, bin_vlane, cast_vlane, load_vlane, math_vlane, select_vlane, store_vlane, un_vlane,
+    wi_vlane, GangState, VecStore,
+};
+use super::lower::{const_kind, Desc, JitProgram, JitRegion, Kind, SlotK};
+
+// ---------------------------------------------------------------------
+// The template ↔ runtime ABI.
+
+/// Execution context the jitted code addresses through `r15`. The
+/// leading fields up to `_pad` are the machine-visible header — their
+/// offsets are frozen by the `OFF_*` constants below and asserted by a
+/// unit test; the trailing fields are Rust-only state the helper uses.
+#[repr(C)]
+struct JitCtx<const W: usize> {
+    /// Payload frame, slot-major: `frame[slot * W + lane]`.   (+0x00)
+    frame: *mut u64,
+    /// Global-memory base pointer.                            (+0x08)
+    global_base: *mut u8,
+    /// Global-memory length in bytes.                         (+0x10)
+    global_len: u64,
+    /// Local-memory base pointer.                             (+0x18)
+    local_base: *mut u8,
+    /// Local-memory length in bytes.                          (+0x20)
+    local_len: u64,
+    /// Retired-instruction counter (templates add batches).   (+0x28)
+    insts: u64,
+    /// `ends` index set by an `End` exit.                     (+0x30)
+    exit: u32,
+    /// `branches` index set by a divergent branch.            (+0x34)
+    div_idx: u32,
+    /// Per-lane truth mask set by a divergent branch.         (+0x38)
+    div_mask: u32,
+    _pad: u32,
+    // --- Rust-only state (never addressed from templates) ---
+    /// Helper-dispatch table of the active region.
+    descs: *const Desc,
+    ndescs: usize,
+    /// The gang's private cells (shared with every other engine).
+    store: *mut VecStore<W>,
+    /// The gang's per-lane local ids.
+    local_ids: *const [[u64; 3]; W],
+    launch: *const LaunchCtx,
+    /// Helper error park: filled before returning protocol code 2.
+    error: *mut Option<Error>,
+}
+
+/// Template displacement of `JitCtx::frame`.
+pub(crate) const OFF_FRAME: i32 = 0x00;
+/// Template displacement of `JitCtx::insts`.
+pub(crate) const OFF_INSTS: i32 = 0x28;
+/// Template displacement of `JitCtx::exit`.
+pub(crate) const OFF_EXIT: i32 = 0x30;
+/// Template displacement of `JitCtx::div_idx`.
+pub(crate) const OFF_DIV_IDX: i32 = 0x34;
+/// Template displacement of `JitCtx::div_mask`.
+pub(crate) const OFF_DIV_MASK: i32 = 0x38;
+
+/// Displacement of the memory *base* pointer for an address-space tag.
+pub(crate) fn off_base(tag: u8) -> i32 {
+    if tag == SP_LOCAL {
+        0x18
+    } else {
+        0x08
+    }
+}
+
+/// Displacement of the memory *length* for an address-space tag.
+pub(crate) fn off_len(tag: u8) -> i32 {
+    if tag == SP_LOCAL {
+        0x20
+    } else {
+        0x10
+    }
+}
+
+/// Address of the monomorphised helper for a gang width, baked into
+/// the emitted `call` sequences. `None` = width has no jit support.
+pub(crate) fn helper_addr(width: usize) -> Option<u64> {
+    match width {
+        2 => {
+            let p: unsafe extern "C" fn(*mut JitCtx<2>, u32) -> u32 = dispatch::<2>;
+            Some(p as usize as u64)
+        }
+        4 => {
+            let p: unsafe extern "C" fn(*mut JitCtx<4>, u32) -> u32 = dispatch::<4>;
+            Some(p as usize as u64)
+        }
+        8 => {
+            let p: unsafe extern "C" fn(*mut JitCtx<8>, u32) -> u32 = dispatch::<8>;
+            Some(p as usize as u64)
+        }
+        16 => {
+            let p: unsafe extern "C" fn(*mut JitCtx<16>, u32) -> u32 = dispatch::<16>;
+            Some(p as usize as u64)
+        }
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The helper: marshal frame payloads to `VLane` values, run the shared
+// `vecgang` kernel, marshal the result back.
+
+/// Read one frame slot as a gang value under its inferred payload kind.
+///
+/// # Safety
+/// `frame` must point at a live frame with at least `(slot + 1) * W`
+/// payload words.
+unsafe fn read_slot<const W: usize>(frame: *const u64, s: SlotK) -> VLane<W> {
+    let mut lanes = Vec::with_capacity(W);
+    for l in 0..W {
+        let raw = *frame.add(s.slot as usize * W + l);
+        lanes.push(match s.kind {
+            Kind::I => VVal::S(Val::I(raw as i64)),
+            Kind::F => VVal::S(Val::F(f64::from_bits(raw))),
+            Kind::P(t) => VVal::ptr(t, raw),
+            Kind::Ps(_) => VVal::ptr(SP_PRIVATE, raw),
+        });
+    }
+    VLane::from_lanes(lanes)
+}
+
+/// Write a gang value back into one frame slot under its payload kind.
+///
+/// # Safety
+/// Same frame requirements as [`read_slot`].
+unsafe fn write_slot<const W: usize>(frame: *mut u64, s: SlotK, v: &VLane<W>) {
+    for l in 0..W {
+        let vv = v.get(l);
+        // Never panic inside the `extern "C"` call chain: a vector
+        // value in a scalar slot (cannot happen for lowered regions)
+        // degrades to its first component.
+        let sv = match &vv {
+            VVal::S(x) => *x,
+            VVal::V(xs) => xs.first().copied().unwrap_or(Val::I(0)),
+        };
+        let raw = match s.kind {
+            Kind::I => sv.as_i() as u64,
+            Kind::F => sv.as_f().to_bits(),
+            Kind::P(_) | Kind::Ps(_) => match sv {
+                Val::Ptr { offset, .. } => offset,
+                other => other.as_i() as u64,
+            },
+        };
+        *frame.add(s.slot as usize * W + l) = raw;
+    }
+}
+
+/// Run one helper-dispatched operation through the shared kernels.
+///
+/// # Safety
+/// `frame` must satisfy [`read_slot`]'s requirements for every slot
+/// named by `desc`.
+unsafe fn run_desc<const W: usize>(
+    frame: *mut u64,
+    desc: &Desc,
+    store: &mut VecStore<W>,
+    mem: &mut MemoryRefs<'_>,
+    launch: &LaunchCtx,
+    local_ids: &[[u64; 3]; W],
+) -> Result<()> {
+    match desc {
+        Desc::Bin { op, ty, dst, a, b } => {
+            let va = read_slot::<W>(frame, *a);
+            let vb = read_slot::<W>(frame, *b);
+            let v = bin_vlane(*op, ty, &va, &vb)?.0;
+            write_slot(frame, *dst, &v);
+        }
+        Desc::Un { op, ty, dst, a } => {
+            let va = read_slot::<W>(frame, *a);
+            let v = un_vlane(*op, ty, &va)?.0;
+            write_slot(frame, *dst, &v);
+        }
+        Desc::Cast { to, from, dst, a } => {
+            let va = read_slot::<W>(frame, *a);
+            let v = cast_vlane(to, from, &va).0;
+            write_slot(frame, *dst, &v);
+        }
+        Desc::Select { ty, dst, cond, a, b } => {
+            let vc = read_slot::<W>(frame, *cond);
+            let va = read_slot::<W>(frame, *a);
+            let vb = read_slot::<W>(frame, *b);
+            let v = select_vlane(ty, &vc, &va, &vb)?.0;
+            write_slot(frame, *dst, &v);
+        }
+        Desc::Wi { func, dim, dst } => {
+            let v = wi_vlane(*func, *dim, launch, local_ids).0;
+            write_slot(frame, *dst, &v);
+        }
+        Desc::Math { func, ty, dst, args } => {
+            let vals: Vec<VLane<W>> = args.iter().map(|s| read_slot::<W>(frame, *s)).collect();
+            let refs: Vec<&VLane<W>> = vals.iter().collect();
+            let v = math_vlane(*func, ty, &refs)?.0;
+            write_slot(frame, *dst, &v);
+        }
+        Desc::Load { ty, dst, ptr } => {
+            let vp = read_slot::<W>(frame, *ptr);
+            let v = load_vlane(&vp, ty, store, mem)?;
+            write_slot(frame, *dst, &v);
+        }
+        Desc::Store { ty, ptr, val } => {
+            let vp = read_slot::<W>(frame, *ptr);
+            let vv = read_slot::<W>(frame, *val);
+            store_vlane(&vp, &vv, ty, store, mem)?;
+        }
+    }
+    Ok(())
+}
+
+/// The callback the jitted `call` sequences target. SysV C ABI:
+/// `rdi` = context, `esi` = desc index; returns the protocol code in
+/// `eax` (`0` = ok, `2` = error parked in `ctx.error`).
+///
+/// # Safety
+/// Called (only) from jitted code with a context built by
+/// [`run_jit_region`]; every pointer in it is live for the call.
+unsafe extern "C" fn dispatch<const W: usize>(ctx: *mut JitCtx<W>, idx: u32) -> u32 {
+    let c = &mut *ctx;
+    let descs = slice::from_raw_parts(c.descs, c.ndescs);
+    let desc = match descs.get(idx as usize) {
+        Some(d) => d,
+        None => {
+            *c.error = Some(Error::exec("jit: bad dispatch index"));
+            return 2;
+        }
+    };
+    let store = &mut *c.store;
+    let mut mem = MemoryRefs {
+        global: slice::from_raw_parts_mut(c.global_base, c.global_len as usize),
+        local: slice::from_raw_parts_mut(c.local_base, c.local_len as usize),
+    };
+    let launch = &*c.launch;
+    let local_ids = &*c.local_ids;
+    match run_desc(c.frame, desc, store, &mut mem, launch, local_ids) {
+        Ok(()) => 0,
+        Err(e) => {
+            *c.error = Some(e);
+            2
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The work-group driver.
+
+/// Execute one work-group through the jit tier in gangs of `width`
+/// lanes. Widths without jit support — and programs with no jit or
+/// bytecode attached — degrade to the bytecode tier (which itself
+/// degrades to the vector engine).
+pub fn run_workgroup(
+    wgf: &WorkGroupFunction,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+    width: usize,
+) -> Result<GangStats> {
+    match width {
+        2 => run_wg::<2>(wgf, args, mem, ctx),
+        4 => run_wg::<4>(wgf, args, mem, ctx),
+        8 => run_wg::<8>(wgf, args, mem, ctx),
+        16 => run_wg::<16>(wgf, args, mem, ctx),
+        _ => bytecode::run_workgroup(wgf, args, mem, ctx, width),
+    }
+}
+
+/// Per-gang state: the bytecode gang (vector-engine gang state plus the
+/// `VLane` register frame, so both fallback tiers are free) plus the
+/// flat payload frame the jitted code addresses.
+struct JitGang<const W: usize> {
+    bc: BcGang<W>,
+    pay: Vec<u64>,
+}
+
+fn run_wg<const W: usize>(
+    wgf: &WorkGroupFunction,
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+) -> Result<GangStats> {
+    let f = &wgf.reg_fn;
+    let prog = match wgf.bytecode.as_ref().filter(|p| p.reg_count == f.reg_count()) {
+        Some(p) => p,
+        None => return bytecode::run_workgroup(wgf, args, mem, ctx, W),
+    };
+    // Wholesale fallback: no jit program (kill switch, lowering failed,
+    // poclbin decode) or one built for another width / register frame.
+    let jit = match wgf
+        .jit
+        .as_ref()
+        .filter(|j| j.width == W && j.reg_count == f.reg_count())
+    {
+        Some(j) => j,
+        None => return bytecode::run_workgroup(wgf, args, mem, ctx, W),
+    };
+
+    let mut region_of: Vec<Option<usize>> = vec![None; f.blocks.len()];
+    for (i, r) in prog.regions.iter().enumerate() {
+        if let Some(slot) = region_of.get_mut(r.start.0 as usize) {
+            *slot = Some(i);
+        }
+    }
+
+    // `VLane` constant pools for regions that run on the bytecode tier.
+    let consts: Vec<Vec<VLane<W>>> = bytecode::resolve_consts(f, &prog.regions, args);
+
+    // Private-slot base offsets (same cumulative layout `VecStore` and
+    // `resolve_consts` use).
+    let mut bases: Vec<u64> = Vec::with_capacity(f.slots.len());
+    let mut total = 0u64;
+    for s in &f.slots {
+        bases.push(total);
+        total += s.count as u64;
+    }
+
+    // Raw payload pools for jitted regions. `None` demotes the region
+    // to the bytecode tier: a launch argument's runtime value does not
+    // fit the payload kind the templates were specialised against.
+    let cpay: Vec<Option<Vec<u64>>> = prog
+        .regions
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            jit.regions.get(i)?.as_ref()?;
+            let mut pool = Vec::with_capacity(r.consts.len());
+            for c in &r.consts {
+                let p = match c {
+                    BcConst::Int(v, s) => norm_int(*v, *s) as u64,
+                    BcConst::Float(v, s) => norm_float(*v, *s).to_bits(),
+                    BcConst::Slot(s) => *bases.get(s.0 as usize)?,
+                    BcConst::Arg(a) => {
+                        let k = const_kind(f, c)?;
+                        let sv = match args.get(*a as usize)? {
+                            VVal::S(v) => *v,
+                            VVal::V(_) => return None,
+                        };
+                        match (k, sv) {
+                            (Kind::I, Val::I(v)) => v as u64,
+                            (Kind::F, Val::F(v)) => v.to_bits(),
+                            (Kind::P(t), Val::Ptr { space, offset }) if space == t => offset,
+                            _ => return None,
+                        }
+                    }
+                };
+                pool.push(p);
+            }
+            Some(pool)
+        })
+        .collect();
+
+    let n = wgf.wg_size();
+    let [lx, ly, _lz] = wgf.local_size;
+    let mut stats = GangStats::default();
+
+    let local_id = |wi: usize| -> [u64; 3] {
+        [(wi % lx) as u64, ((wi / lx) % ly) as u64, (wi / (lx * ly)) as u64]
+    };
+
+    let full_gangs = n / W;
+    let mut gangs: Vec<JitGang<W>> = (0..full_gangs)
+        .map(|g| JitGang {
+            bc: BcGang {
+                gs: GangState {
+                    store: VecStore::for_function(f),
+                    local_ids: std::array::from_fn(|l| local_id(g * W + l)),
+                },
+                frame: vec![VLane::Uni(VVal::i(0)); f.reg_count() as usize],
+            },
+            pay: vec![0u64; jit.frame_slots * W],
+        })
+        .collect();
+    let mut tail: Vec<(SlotStore, [u64; 3])> = (full_gangs * W..n)
+        .map(|wi| (SlotStore::for_function(f), local_id(wi)))
+        .collect();
+
+    // Barrier walk, identical to the bytecode tier.
+    let mut cur: BlockId = f.entry;
+    loop {
+        let block = f.block(cur);
+        debug_assert!(block.has_barrier());
+        let start = match &block.term {
+            Term::Ret => return Ok(stats),
+            Term::Jump(s) => *s,
+            Term::Br { .. } => return Err(Error::exec("barrier block with branch terminator")),
+        };
+        let region = region_of.get(start.0 as usize).copied().flatten();
+        let mut next_barrier: Option<BlockId> = None;
+        for gang in gangs.iter_mut() {
+            stats.gangs += 1;
+            let reached = match region {
+                Some(ri) => {
+                    let jr = jit.regions.get(ri).and_then(|o| o.as_ref());
+                    match (jr, cpay[ri].as_ref()) {
+                        (Some(jr), Some(pool)) => {
+                            stats.jit_gangs += 1;
+                            run_jit_region(f, jit, jr, pool, args, mem, ctx, gang, &mut stats)?
+                        }
+                        _ => {
+                            stats.jit_fallbacks += 1;
+                            stats.bytecode_gangs += 1;
+                            let r = &prog.regions[ri];
+                            bytecode::run_region(
+                                f,
+                                &r.code,
+                                &consts[ri],
+                                args,
+                                mem,
+                                ctx,
+                                &mut gang.bc,
+                                &mut stats,
+                            )?
+                        }
+                    }
+                }
+                None => {
+                    stats.jit_fallbacks += 1;
+                    stats.bytecode_fallbacks += 1;
+                    vecgang::run_gang_region_vec(
+                        f,
+                        args,
+                        mem,
+                        ctx,
+                        &mut gang.bc.gs,
+                        start,
+                        &mut stats,
+                    )?
+                }
+            };
+            note_barrier(&mut next_barrier, reached, "across gangs")?;
+        }
+        if !tail.is_empty() {
+            stats.gangs += 1;
+        }
+        for (store, lid) in tail.iter_mut() {
+            let reached = run_lane_to_barrier(f, args, mem, ctx, store, start, *lid, &mut stats)?;
+            note_barrier(&mut next_barrier, reached, "across gangs")?;
+        }
+        cur = next_barrier.expect("work-group is non-empty");
+    }
+}
+
+/// Run one gang through one jitted region: marshal the constant pool
+/// into the payload frame, call the region's entry point, and decode
+/// the protocol result. Returns the barrier block the gang reached.
+#[allow(clippy::too_many_arguments)]
+fn run_jit_region<const W: usize>(
+    f: &Function,
+    jp: &JitProgram,
+    jr: &JitRegion,
+    pool: &[u64],
+    args: &[VVal],
+    mem: &mut MemoryRefs<'_>,
+    ctx: &LaunchCtx,
+    gang: &mut JitGang<W>,
+    stats: &mut GangStats,
+) -> Result<BlockId> {
+    let nregs = jp.reg_count as usize;
+    for (i, p) in pool.iter().enumerate() {
+        let base = (nregs + i) * W;
+        gang.pay[base..base + W].fill(*p);
+    }
+
+    let mut error: Option<Error> = None;
+    let mut jctx = JitCtx::<W> {
+        frame: gang.pay.as_mut_ptr(),
+        global_base: mem.global.as_mut_ptr(),
+        global_len: mem.global.len() as u64,
+        local_base: mem.local.as_mut_ptr(),
+        local_len: mem.local.len() as u64,
+        insts: 0,
+        exit: 0,
+        div_idx: 0,
+        div_mask: 0,
+        _pad: 0,
+        descs: jr.descs.as_ptr(),
+        ndescs: jr.descs.len(),
+        store: &mut gang.bc.gs.store,
+        local_ids: &gang.bc.gs.local_ids,
+        launch: ctx,
+        error: &mut error,
+    };
+    // SAFETY: `entry` points at the still-mapped executable region the
+    // lowerer emitted for exactly this context layout and width; every
+    // pointer in `jctx` outlives the call.
+    let ret = unsafe {
+        let entry: unsafe extern "C" fn(*mut JitCtx<W>) -> u32 =
+            std::mem::transmute(jp.code.at(jr.entry));
+        entry(&mut jctx)
+    };
+    stats.jit_insts += jctx.insts as usize;
+    match ret {
+        0 => jr
+            .ends
+            .get(jctx.exit as usize)
+            .copied()
+            .ok_or_else(|| Error::exec("jit: bad exit index")),
+        1 => {
+            let (ir_t, ir_f) = *jr
+                .branches
+                .get(jctx.div_idx as usize)
+                .ok_or_else(|| Error::exec("jit: bad branch index"))?;
+            let mask = jctx.div_mask;
+            let mut lt = [ir_t; W];
+            for (l, tgt) in lt.iter_mut().enumerate() {
+                *tgt = if mask & (1u32 << l) != 0 { ir_t } else { ir_f };
+            }
+            bytecode::diverge(f, args, mem, ctx, &mut gang.bc.gs, &lt, stats)
+        }
+        _ => Err(error
+            .take()
+            .unwrap_or_else(|| Error::exec("jit: out-of-bounds memory access"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_header_offsets_match_templates() {
+        let mut frame = [0u64; 4];
+        let mut err: Option<Error> = None;
+        let ctx = JitCtx::<4> {
+            frame: frame.as_mut_ptr(),
+            global_base: std::ptr::null_mut(),
+            global_len: 0,
+            local_base: std::ptr::null_mut(),
+            local_len: 0,
+            insts: 0,
+            exit: 0,
+            div_idx: 0,
+            div_mask: 0,
+            _pad: 0,
+            descs: std::ptr::null(),
+            ndescs: 0,
+            store: std::ptr::null_mut(),
+            local_ids: std::ptr::null(),
+            launch: std::ptr::null(),
+            error: &mut err,
+        };
+        let base = &ctx as *const JitCtx<4> as usize;
+        assert_eq!(&ctx.frame as *const _ as usize - base, OFF_FRAME as usize);
+        assert_eq!(&ctx.global_base as *const _ as usize - base, off_base(0) as usize);
+        assert_eq!(&ctx.global_len as *const _ as usize - base, off_len(0) as usize);
+        assert_eq!(&ctx.local_base as *const _ as usize - base, off_base(SP_LOCAL) as usize);
+        assert_eq!(&ctx.local_len as *const _ as usize - base, off_len(SP_LOCAL) as usize);
+        assert_eq!(&ctx.insts as *const _ as usize - base, OFF_INSTS as usize);
+        assert_eq!(&ctx.exit as *const _ as usize - base, OFF_EXIT as usize);
+        assert_eq!(&ctx.div_idx as *const _ as usize - base, OFF_DIV_IDX as usize);
+        assert_eq!(&ctx.div_mask as *const _ as usize - base, OFF_DIV_MASK as usize);
+    }
+
+    #[test]
+    fn slot_payload_roundtrip() {
+        let mut buf = vec![0u64; 3 * 4];
+        let fs = SlotK { slot: 0, kind: Kind::F };
+        let is = SlotK { slot: 1, kind: Kind::I };
+        let ps = SlotK { slot: 2, kind: Kind::P(0) };
+        let fv: VLane<4> = VLane::from_lanes(vec![
+            VVal::S(Val::F(1.5)),
+            VVal::S(Val::F(-2.0)),
+            VVal::S(Val::F(0.0)),
+            VVal::S(Val::F(3.25)),
+        ]);
+        let iv: VLane<4> = VLane::from_lanes(vec![
+            VVal::S(Val::I(-1)),
+            VVal::S(Val::I(0)),
+            VVal::S(Val::I(7)),
+            VVal::S(Val::I(i64::MAX)),
+        ]);
+        let pv: VLane<4> = VLane::from_lanes(vec![
+            VVal::ptr(0, 0),
+            VVal::ptr(0, 8),
+            VVal::ptr(0, 16),
+            VVal::ptr(0, 24),
+        ]);
+        unsafe {
+            write_slot(buf.as_mut_ptr(), fs, &fv);
+            write_slot(buf.as_mut_ptr(), is, &iv);
+            write_slot(buf.as_mut_ptr(), ps, &pv);
+            let rf: VLane<4> = read_slot(buf.as_ptr(), fs);
+            let ri: VLane<4> = read_slot(buf.as_ptr(), is);
+            let rp: VLane<4> = read_slot(buf.as_ptr(), ps);
+            for l in 0..4 {
+                assert_eq!(rf.get(l).scalar().as_f().to_bits(), fv.get(l).scalar().as_f().to_bits());
+                assert_eq!(ri.get(l).scalar().as_i(), iv.get(l).scalar().as_i());
+                assert_eq!(rp.get(l).scalar().as_i(), pv.get(l).scalar().as_i());
+            }
+        }
+    }
+}

@@ -22,6 +22,11 @@
 //!   pre-resolved slots, PC branch targets, superinstructions; runs on
 //!   the same [`value::VLane`] gang values as [`vecgang`] and falls back
 //!   to it per region for uncovered regions.
+//! * [`jit`] — template-jitted x86-64 machine code lowered from the
+//!   bytecode form at compile time (no LLVM, W^X `mmap` buffer): inline
+//!   templates for the common subset, helper dispatch into the shared
+//!   `vecgang` kernels for the rest, per-region fallback to [`bytecode`]
+//!   and wholesale fallback on non-x86-64 hosts.
 //!
 //! The scalar engines share the [`interp::Machine`] instruction evaluator
 //! and the vector engine reuses its per-operation kernels, so a result
@@ -32,6 +37,7 @@ pub mod bytecode;
 pub mod fiber;
 pub mod gang;
 pub mod interp;
+pub mod jit;
 pub mod mem;
 pub mod serial;
 pub mod value;
@@ -54,6 +60,7 @@ mod tests {
         Gang(usize),
         GangVec(usize),
         Bytecode(usize),
+        Jit(usize),
         Fiber,
     }
 
@@ -76,7 +83,13 @@ mod tests {
     ) -> Vec<Vec<f32>> {
         let m = compile(src).unwrap();
         let k = &m.kernels[0];
-        let opts = CompileOptions { horizontal, ..Default::default() };
+        // The jit tier specialises its templates for the compile-time
+        // gang width, so thread the engine's width through.
+        let gang_width = match engine {
+            Engine::Gang(w) | Engine::GangVec(w) | Engine::Bytecode(w) | Engine::Jit(w) => w,
+            Engine::Serial | Engine::Fiber => 0,
+        };
+        let opts = CompileOptions { horizontal, gang_width, ..Default::default() };
         let wgf = compile_workgroup(k, local, &opts).unwrap();
 
         // Bind arguments by walking the kernel's parameter list: __local
@@ -147,6 +160,11 @@ mod tests {
                                 .map(|_| ())
                                 .unwrap()
                         }
+                        Engine::Jit(w) => {
+                            jit::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx, w)
+                                .map(|_| ())
+                                .unwrap()
+                        }
                         Engine::Fiber => {
                             fiber::run_workgroup(&wgf, &arg_vals, &mut mem_refs, &ctx).unwrap()
                         }
@@ -170,6 +188,8 @@ mod tests {
             Engine::GangVec(8),
             Engine::Bytecode(4),
             Engine::Bytecode(8),
+            Engine::Jit(4),
+            Engine::Jit(8),
             Engine::Fiber,
         ]
     }

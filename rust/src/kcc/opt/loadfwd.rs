@@ -19,7 +19,7 @@
 //!   is known becomes a use of that value. `Store` normalises the value
 //!   to the store type before writing while `Load` returns the raw cell,
 //!   so a value is only forwarded when normalisation is provably the
-//!   identity on it (see [`forwardable`]).
+//!   identity on it (see `forwardable`).
 //! * **Redundant-load elimination** — a second load from an unchanged
 //!   cell reuses the first load's register (always exact: both observe
 //!   the same raw cell).

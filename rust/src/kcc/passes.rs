@@ -123,6 +123,14 @@ pub struct CompileStats {
     pub bytecode_fused: usize,
     /// Total bytecode instructions across all lowered regions.
     pub bytecode_insts: usize,
+    /// Bytecode regions lowered further to x86-64 machine code.
+    pub jit_regions: usize,
+    /// Static bytecode (super)instructions covered by jitted regions.
+    pub jit_insts: usize,
+    /// Bytecode regions the template JIT rejected (they keep running on
+    /// the bytecode tier), or all of them when the tier is disabled or
+    /// compiled out.
+    pub jit_fallbacks: usize,
     /// Mid-level optimizer statistics (per-pass rewrite/removal counts).
     pub opt: OptStats,
 }
@@ -153,6 +161,11 @@ pub struct WorkGroupFunction {
     /// (CPU targets only; `None` when nothing lowered). The threaded
     /// bytecode engine consumes this; other engines ignore it.
     pub bytecode: Option<crate::exec::bytecode::BytecodeProgram>,
+    /// Jitted machine code for the bytecode regions (x86-64 hosts only;
+    /// `None` when the tier is disabled, unsupported, or nothing
+    /// lowered). Never serialised — rebuilt from `bytecode` on cache
+    /// load. `Arc` because code buffers are not cloneable.
+    pub jit: Option<std::sync::Arc<crate::exec::jit::JitProgram>>,
     /// Pass statistics.
     pub stats: CompileStats,
 }
@@ -253,7 +266,7 @@ pub fn compile_workgroup(
     stats.wi_loops = wstats.loops_created;
     stats.peeled_barriers = wstats.peeled;
 
-    Ok(WorkGroupFunction {
+    let mut wgf = WorkGroupFunction {
         name: kernel.name.clone(),
         reg_fn,
         regions,
@@ -262,8 +275,13 @@ pub fn compile_workgroup(
         reg_uniform,
         region_divergent,
         bytecode,
+        jit: None,
         stats,
-    })
+    };
+    // Target-specific lowering, stage (b): template-jit the bytecode
+    // regions to machine code (x86-64 hosts; no-op elsewhere).
+    crate::exec::jit::attach(&mut wgf, opts.gang_width);
+    Ok(wgf)
 }
 
 #[cfg(test)]

@@ -81,7 +81,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 // launches used, with zero re-compilation.
                 for (spec, wgf) in r.program.cached_specializations() {
                     println!(
-                        "compile `{}` @ {:?}: regions={} uniform slots={} uniform regs={} divergent regions={} bytecode regions={} fused={} insts={}",
+                        "compile `{}` @ {:?}: regions={} uniform slots={} uniform regs={} divergent regions={} bytecode regions={} fused={} insts={} jit regions={} jit insts={} jit fallbacks={}",
                         spec.kernel,
                         spec.local,
                         wgf.stats.regions,
@@ -91,6 +91,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                         wgf.stats.bytecode_regions,
                         wgf.stats.bytecode_fused,
                         wgf.stats.bytecode_insts,
+                        wgf.stats.jit_regions,
+                        wgf.stats.jit_insts,
+                        wgf.stats.jit_fallbacks,
                     );
                     let o = &wgf.stats.opt;
                     println!(
@@ -132,7 +135,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 // Engine-side counters for the whole run.
                 let s = &r.stats;
                 println!(
-                    "exec: workgroups={} gangs={} diverged={} dispatches={} (vectorised={} uniform={} per-lane={} bytecode={}) bytecode-gangs={} fallbacks={}",
+                    "exec: workgroups={} gangs={} diverged={} dispatches={} (vectorised={} uniform={} per-lane={} bytecode={}) bytecode-gangs={} fallbacks={} jit-insts={} jit-gangs={} jit-fallbacks={}",
                     s.workgroups,
                     s.gangs,
                     s.diverged_gangs,
@@ -143,6 +146,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     s.bytecode_insts,
                     s.bytecode_gangs,
                     s.bytecode_fallbacks,
+                    s.jit_insts,
+                    s.jit_gangs,
+                    s.jit_fallbacks,
                 );
             }
         }

@@ -7,7 +7,7 @@
 //! loops the same way Vecmathlib's intrinsics specialisations would be
 //! selected per target. Sizes not natively supported by the hardware are
 //! split/extended automatically by the compiler, mirroring the paper's
-//! "realvec<float,8> operations may be split into two realvec<float,4>".
+//! "`realvec<float,8>` operations may be split into two `realvec<float,4>`".
 
 use std::ops::{Add, Div, Mul, Neg, Sub};
 

@@ -1,12 +1,14 @@
-//! Counter assertions for the lane-batched vector engine and the
-//! threaded-bytecode tier: the compile-side uniformity export, the
-//! ≥width× interpreter-dispatch reduction on a uniform-control kernel
-//! (the ISSUE acceptance criterion), the bytecode tier's strict dispatch
-//! reduction over the vector engine, and the divergence fallback
-//! accounting.
+//! Counter assertions for the lane-batched vector engine, the
+//! threaded-bytecode tier and the template-jit tier: the compile-side
+//! uniformity export, the ≥width× interpreter-dispatch reduction on a
+//! uniform-control kernel (the ISSUE acceptance criterion), the bytecode
+//! tier's strict dispatch reduction over the vector engine, the
+//! divergence fallback accounting, and the jit tier's bit-identical
+//! results, per-region fallback accounting and `POCLRS_JIT=0` kill
+//! switch.
 
 use poclrs::exec::value::SP_GLOBAL;
-use poclrs::exec::{bytecode, gang, mem, vecgang, LaunchCtx, MemoryRefs, VVal};
+use poclrs::exec::{bytecode, gang, jit, mem, vecgang, LaunchCtx, MemoryRefs, VVal};
 use poclrs::frontend::compile;
 use poclrs::kcc::{compile_workgroup, CompileOptions, WorkGroupFunction};
 
@@ -32,8 +34,29 @@ const DIVERGE_BARRIER: &str = "__kernel void dvb(__global float *x) {
     x[i] = v;
 }";
 
+/// Jittable first region (float arithmetic only), then a region whose
+/// integer `min`/`max` elementals the jit templates reject while the
+/// bytecode tier still covers them — exercises the jit's per-region
+/// fallback onto the bytecode interpreter.
+const JIT_MIXED: &str = "__kernel void jm(__global float *x) {
+    size_t i = get_global_id(0);
+    x[i] = x[i] * 2.0f + 1.0f;
+    barrier(CLK_LOCAL_MEM_FENCE);
+    int v = (int)x[i];
+    x[i] = (float)(min(v, 40) + max(v, 3));
+}";
+
 const N: usize = 32;
 const LOCAL: usize = 8;
+
+/// Serialises the tests that read (or, for the kill-switch test, write)
+/// the `POCLRS_JIT` environment variable — `cargo test` runs tests in
+/// parallel threads sharing one process environment.
+static JIT_ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn jit_lock() -> std::sync::MutexGuard<'static, ()> {
+    JIT_ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Which engine `run_gangs` drives.
 #[derive(Clone, Copy, PartialEq)]
@@ -41,6 +64,7 @@ enum Eng {
     Scalar,
     Vector,
     Bytecode,
+    Jit,
 }
 
 /// Compile `src` for an N-element 1D launch and run it with the chosen
@@ -54,8 +78,14 @@ fn run_gangs(
     width: usize,
 ) -> (gang::GangStats, Vec<Vec<f32>>) {
     let m = compile(src).unwrap();
-    let wgf =
+    let mut wgf =
         compile_workgroup(&m.kernels[0], [LOCAL, 1, 1], &CompileOptions::default()).unwrap();
+    if engine == Eng::Jit {
+        // The default compile options carry gang_width 0, so the
+        // compiler does not attach a jit program; lower explicitly for
+        // the width this run actually uses.
+        jit::attach(&mut wgf, width);
+    }
     let mut global = vec![0u8; bufs.iter().map(|b| b.len() * 4).sum::<usize>()];
     let mut args = Vec::new();
     let mut offsets = Vec::new();
@@ -85,6 +115,7 @@ fn run_gangs(
             Eng::Bytecode => {
                 bytecode::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap()
             }
+            Eng::Jit => jit::run_workgroup(&wgf, &args, &mut mem_refs, &ctx, width).unwrap(),
         };
         total.gangs += s.gangs;
         total.diverged += s.diverged;
@@ -94,6 +125,9 @@ fn run_gangs(
         total.bytecode_insts += s.bytecode_insts;
         total.bytecode_gangs += s.bytecode_gangs;
         total.bytecode_fallbacks += s.bytecode_fallbacks;
+        total.jit_insts += s.jit_insts;
+        total.jit_gangs += s.jit_gangs;
+        total.jit_fallbacks += s.jit_fallbacks;
     }
     let out = offsets.iter().map(|&(o, n)| mem::read_f32s(&global, o, n)).collect();
     (total, out)
@@ -221,4 +255,125 @@ fn workgroup_function_exports_uniformity_metadata() {
         "divergent regions are not lowered: {:?}",
         wgf.stats
     );
+}
+
+// ---------------------------------------------------------------------
+// Template-jit tier
+// ---------------------------------------------------------------------
+
+/// True when the host actually compiles the x86-64 templates in; on any
+/// other host the jit engine must degrade wholesale to the bytecode
+/// tier (and these tests assert exactly that).
+fn jit_host() -> bool {
+    cfg!(all(target_arch = "x86_64", target_os = "linux"))
+}
+
+#[test]
+fn jit_tier_bit_identical_and_counts() {
+    let _g = jit_lock();
+    for width in [4usize, 8] {
+        let (bc, out_b) = run_gangs(VECADD, &vecadd_bufs(), Eng::Bytecode, width);
+        let (jt, out_j) = run_gangs(VECADD, &vecadd_bufs(), Eng::Jit, width);
+        for (b, j) in out_b.iter().zip(&out_j) {
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            let jb: Vec<u32> = j.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bb, jb, "jit output diverges at width {width}");
+        }
+        assert_eq!(jt.gangs, bc.gangs, "same gang partition in both tiers");
+        if jit_host() {
+            assert!(jt.jit_gangs > 0, "covered regions ran jitted: {jt:?}");
+            assert!(jt.jit_insts > 0, "jitted instructions counted: {jt:?}");
+            assert_eq!(jt.jit_fallbacks, 0, "vecadd is fully jittable: {jt:?}");
+            assert_eq!(jt.bytecode_gangs, 0, "nothing left for the interpreter: {jt:?}");
+        } else {
+            assert_eq!(jt.jit_gangs, 0, "jit tier is compiled out: {jt:?}");
+            assert!(jt.bytecode_gangs > 0, "wholesale bytecode fallback: {jt:?}");
+        }
+    }
+}
+
+#[test]
+fn jit_tier_falls_back_per_region_on_unsupported_math() {
+    let _g = jit_lock();
+    let width = 8;
+    let input: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let (bc, out_b) = run_gangs(JIT_MIXED, &[input.clone()], Eng::Bytecode, width);
+    let (jt, out_j) = run_gangs(JIT_MIXED, &[input], Eng::Jit, width);
+    let bb: Vec<u32> = out_b[0].iter().map(|x| x.to_bits()).collect();
+    let jb: Vec<u32> = out_j[0].iter().map(|x| x.to_bits()).collect();
+    assert_eq!(bb, jb, "per-region fallback preserves semantics");
+    assert_eq!(jt.gangs, bc.gangs);
+    if jit_host() {
+        // The float region runs jitted; the integer-math region is
+        // rejected by the templates and must be accounted as a fallback
+        // onto the bytecode interpreter — never silently dropped.
+        assert!(jt.jit_gangs > 0, "float region jitted: {jt:?}");
+        assert!(jt.jit_fallbacks > 0, "integer-math region fell back: {jt:?}");
+        assert!(jt.bytecode_gangs > 0, "fallback ran through bytecode: {jt:?}");
+    } else {
+        assert_eq!(jt.jit_gangs, 0, "{jt:?}");
+    }
+
+    // Compile-side accounting for the same kernel: jitted + rejected
+    // regions must partition exactly what the bytecode tier lowered.
+    let m = compile(JIT_MIXED).unwrap();
+    let mut wgf =
+        compile_workgroup(&m.kernels[0], [LOCAL, 1, 1], &CompileOptions::default()).unwrap();
+    jit::attach(&mut wgf, width);
+    assert_eq!(
+        wgf.stats.jit_regions + wgf.stats.jit_fallbacks,
+        wgf.stats.bytecode_regions,
+        "{:?}",
+        wgf.stats
+    );
+    if jit_host() {
+        assert!(wgf.stats.jit_regions >= 1, "{:?}", wgf.stats);
+        assert!(wgf.stats.jit_fallbacks >= 1, "{:?}", wgf.stats);
+        let jp = wgf.jit.as_ref().expect("jit program attached");
+        assert_eq!(jp.covered_regions(), wgf.stats.jit_regions);
+    } else {
+        assert!(wgf.jit.is_none());
+        assert_eq!(wgf.stats.jit_regions, 0, "{:?}", wgf.stats);
+    }
+}
+
+/// Removes `POCLRS_JIT` on drop so a failing assertion cannot leak the
+/// kill switch into the other (lock-serialised) jit tests.
+struct JitEnvGuard;
+
+impl Drop for JitEnvGuard {
+    fn drop(&mut self) {
+        std::env::remove_var("POCLRS_JIT");
+    }
+}
+
+#[test]
+fn jit_kill_switch_disables_the_tier_wholesale() {
+    let _g = jit_lock();
+    std::env::set_var("POCLRS_JIT", "0");
+    let _guard = JitEnvGuard;
+
+    // attach becomes a no-op that still reports every region as a
+    // fallback, so `--stats` stays honest about why nothing was jitted.
+    let m = compile(VECADD).unwrap();
+    let mut wgf =
+        compile_workgroup(&m.kernels[0], [LOCAL, 1, 1], &CompileOptions::default()).unwrap();
+    jit::attach(&mut wgf, 8);
+    assert!(wgf.jit.is_none(), "kill switch must prevent attachment");
+    assert_eq!(wgf.stats.jit_regions, 0, "{:?}", wgf.stats);
+    assert_eq!(wgf.stats.jit_fallbacks, wgf.stats.bytecode_regions, "{:?}", wgf.stats);
+
+    // The jit engine then degrades wholesale to the bytecode tier with
+    // identical results and zero jit activity.
+    let (bc, out_b) = run_gangs(VECADD, &vecadd_bufs(), Eng::Bytecode, 8);
+    let (jt, out_j) = run_gangs(VECADD, &vecadd_bufs(), Eng::Jit, 8);
+    for (b, j) in out_b.iter().zip(&out_j) {
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        let jb: Vec<u32> = j.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bb, jb, "kill-switch fallback preserves results");
+    }
+    assert_eq!(jt.jit_gangs, 0, "{jt:?}");
+    assert_eq!(jt.jit_insts, 0, "{jt:?}");
+    assert!(jt.bytecode_gangs > 0, "wholesale bytecode fallback: {jt:?}");
+    assert_eq!(jt.gangs, bc.gangs);
 }

@@ -7,7 +7,8 @@
 //! the anchor apps.
 //!
 //! Setting `POCLRS_ENGINE=bytecode` restricts the device matrix to the
-//! bytecode-tier devices (the dedicated CI leg).
+//! bytecode-tier devices; `POCLRS_ENGINE=jit` restricts it to the
+//! template-jit devices (the dedicated CI legs).
 
 use std::sync::Arc;
 
@@ -27,15 +28,19 @@ fn devices() -> Vec<(&'static str, Arc<dyn Device>)> {
         ("basic-gangvector4", Arc::new(BasicDevice::new(EngineKind::GangVector(4)))),
         ("basic-bytecode8", Arc::new(BasicDevice::new(EngineKind::Bytecode(8)))),
         ("basic-bytecode4", Arc::new(BasicDevice::new(EngineKind::Bytecode(4)))),
+        ("basic-jit8", Arc::new(BasicDevice::new(EngineKind::Jit(8)))),
+        ("basic-jit4", Arc::new(BasicDevice::new(EngineKind::Jit(4)))),
         ("basic-fiber", Arc::new(BasicDevice::new(EngineKind::Fiber))),
         ("pthread-gang8", Arc::new(ThreadedDevice::new(EngineKind::Gang(8), 4))),
         ("pthread-gangvector8", Arc::new(ThreadedDevice::new(EngineKind::GangVector(8), 4))),
         ("pthread-bytecode8", Arc::new(ThreadedDevice::new(EngineKind::Bytecode(8), 4))),
+        ("pthread-jit8", Arc::new(ThreadedDevice::new(EngineKind::Jit(8), 4))),
     ];
-    // The CI bytecode leg runs the same matrix restricted to the tier
-    // under test.
+    // The CI bytecode/jit legs run the same matrix restricted to the
+    // tier under test.
     match std::env::var("POCLRS_ENGINE").as_deref() {
         Ok("bytecode") => all.into_iter().filter(|(name, _)| name.contains("bytecode")).collect(),
+        Ok("jit") => all.into_iter().filter(|(name, _)| name.contains("jit")).collect(),
         _ => all,
     }
 }
@@ -57,8 +62,8 @@ fn all_apps_verify_on_all_devices_both_queue_modes() {
 
 #[test]
 fn all_apps_verify_on_ttasim_both_modes() {
-    if std::env::var("POCLRS_ENGINE").as_deref() == Ok("bytecode") {
-        return; // the bytecode CI leg skips the TTA matrix
+    if matches!(std::env::var("POCLRS_ENGINE").as_deref(), Ok("bytecode") | Ok("jit")) {
+        return; // the bytecode/jit CI legs skip the TTA matrix
     }
     let mut failures = Vec::new();
     for horizontal in [false, true] {
@@ -178,5 +183,60 @@ fn bytecode_tier_bit_identical_to_serial_at_o0_and_o2() {
                 &format!("{} serial vs bytecode at {level:?}", app.name),
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Template-JIT tier acceptance
+// ---------------------------------------------------------------------
+
+/// Acceptance: the jit tier is bit-identical to the bytecode tier on
+/// every suite app at both widths, every region it does not cover falls
+/// back cleanly (the runs above would fail otherwise), and on x86-64
+/// Linux at least half of the suite's parallel regions are jitted.
+#[test]
+fn jit_tier_bit_identical_and_covers_suite() {
+    let jit_host = cfg!(all(target_arch = "x86_64", target_os = "linux"));
+    let mut covered = 0usize;
+    let mut total_regions = 0usize;
+    let mut lines = Vec::new();
+    for app in all_apps(SizeClass::Small) {
+        for width in [4usize, 8] {
+            let bc_run = run_at(&app, EngineKind::Bytecode(width), OptLevel::O2);
+            let jit_run = run_at(&app, EngineKind::Jit(width), OptLevel::O2);
+            assert_bit_identical(
+                &bc_run.buffers,
+                &jit_run.buffers,
+                &format!("{} bytecode vs jit (width {width})", app.name),
+            );
+            if width == 4 {
+                for (_, wgf) in jit_run.program.cached_specializations() {
+                    covered += wgf.stats.jit_regions;
+                    total_regions += wgf.stats.regions;
+                    // Uncovered regions must be accounted for, not lost:
+                    // jitted + rejected = everything the bytecode tier
+                    // lowered.
+                    assert_eq!(
+                        wgf.stats.jit_regions + wgf.stats.jit_fallbacks,
+                        wgf.stats.bytecode_regions,
+                        "{}: jit coverage must partition the bytecode regions",
+                        app.name
+                    );
+                }
+                lines.push(format!(
+                    "{:<22} jit={covered:>4}/{total_regions:<4}",
+                    app.name
+                ));
+            }
+        }
+    }
+    if jit_host {
+        assert!(
+            covered * 2 >= total_regions,
+            "jit must cover >=half of the suite's regions ({covered}/{total_regions}):\n{}",
+            lines.join("\n")
+        );
+    } else {
+        assert_eq!(covered, 0, "non-x86-64 hosts compile the jit tier out");
     }
 }
