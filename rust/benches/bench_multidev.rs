@@ -1,0 +1,172 @@
+//! Heterogeneous multi-device scheduler — co-execution of one NDRange
+//! across a device group, emitting a `BENCH_multidev.json` snapshot
+//! (the ISSUE 9 criteria: wall-clock improves from 1 to N members on a
+//! homogeneous group, and on an asymmetric serial+vector+bytecode mix
+//! the dynamic self-scheduler beats the worst static split).
+//!
+//! Run with `cargo bench --bench bench_multidev`; `POCLRS_BENCH_MS`
+//! bounds the per-case sampling budget (default 300 ms).
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Duration;
+
+use poclrs::bench::bench_fn;
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::sched::{DeviceGroup, Dynamic, SchedPolicy, SchedStats, StaticSplit};
+use poclrs::suite::{app_by_name, runner, SizeClass};
+
+const WIDTH: usize = 8;
+
+fn group(name: &str, engines: &[EngineKind], policy: Arc<dyn SchedPolicy>) -> Arc<dyn Device> {
+    let members: Vec<Arc<dyn Device>> = engines
+        .iter()
+        .map(|&e| Arc::new(BasicDevice::new(e)) as Arc<dyn Device>)
+        .collect();
+    Arc::new(DeviceGroup::new(name, members, policy).expect("valid group"))
+}
+
+/// One measured configuration: median wall-clock plus the scheduler
+/// breakdown of a verification run.
+struct Row {
+    label: String,
+    ms: f64,
+    sched: Option<SchedStats>,
+}
+
+fn measure(
+    app_name: &str,
+    label: &str,
+    device: Arc<dyn Device>,
+    budget: Duration,
+) -> Option<Row> {
+    let app = app_by_name(app_name, SizeClass::Bench)?;
+    match runner::run_and_verify(&app, device.clone()) {
+        Ok(r) => {
+            let bench = bench_fn(format!("{app_name}/{label}"), 1, 15, budget, || {
+                let _ = runner::run_on_device(&app, device.clone()).unwrap();
+            });
+            Some(Row { label: label.to_string(), ms: bench.ms(), sched: r.sched })
+        }
+        Err(e) => {
+            println!("{app_name:<22} {label}: FAILED {e}");
+            None
+        }
+    }
+}
+
+fn json_row(json: &mut String, row: &Row, first: bool) {
+    if !first {
+        let _ = write!(json, ", ");
+    }
+    let _ = write!(json, "{{\"config\": \"{}\", \"ms\": {:.4}", row.label, row.ms);
+    if let Some(sc) = &row.sched {
+        let groups: Vec<String> =
+            sc.devices.iter().map(|d| d.groups.to_string()).collect();
+        let _ = write!(
+            json,
+            ", \"steals\": {}, \"imbalance\": {:.3}, \"groups\": [{}]",
+            sc.steals(),
+            sc.imbalance(),
+            groups.join(", ")
+        );
+    }
+    let _ = write!(json, "}}");
+}
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("POCLRS_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(300),
+    );
+    // The asymmetric mix: a deliberately slow serial member next to the
+    // two fast tiers — the shape the dynamic self-scheduler exists for.
+    let mix = [EngineKind::Serial, EngineKind::GangVector(WIDTH), EngineKind::Bytecode(WIDTH)];
+    let apps = ["MatrixMultiplication", "BlackScholes"];
+
+    println!("== Heterogeneous device-group scheduler (width {WIDTH}) ==\n");
+    let mut json = String::from("{\n");
+    let _ = writeln!(json, "  \"bench\": \"multidev\",\n  \"width\": {WIDTH},\n  \"apps\": [");
+    let mut first_app = true;
+    for name in apps {
+        // 1 -> N scaling on a homogeneous vector-gang group.
+        let mut scaling: Vec<Row> = Vec::new();
+        for members in 1..=3usize {
+            let engines = vec![EngineKind::GangVector(WIDTH); members];
+            let dev = group("scale", &engines, Arc::new(Dynamic::new()));
+            if let Some(row) = measure(name, &format!("gang-vector8 x{members}"), dev, budget) {
+                scaling.push(row);
+            }
+        }
+        if let Some(base) = scaling.first().map(|r| r.ms) {
+            let cells: Vec<String> = scaling
+                .iter()
+                .map(|r| format!("{}={:.2}ms ({:.2}x)", r.label, r.ms, base / r.ms))
+                .collect();
+            println!("{name:<22} scaling: {}", cells.join("  "));
+        }
+
+        // Policy shoot-out on the asymmetric mix. static-skew pins most
+        // of the range to the serial member — the deliberately bad split
+        // the dynamic scheduler must beat.
+        let policies: Vec<(&str, Arc<dyn SchedPolicy>)> = vec![
+            ("static-even", Arc::new(StaticSplit::even())),
+            ("static-skew", Arc::new(StaticSplit::new(vec![4.0, 1.0, 1.0]))),
+            ("static-profiled", Arc::new(StaticSplit::new(vec![1.0, 8.0, 8.0]))),
+            ("dynamic", Arc::new(Dynamic::new())),
+        ];
+        let mut mix_rows: Vec<Row> = Vec::new();
+        for (label, policy) in policies {
+            let dev = group("mix", &mix, policy);
+            if let Some(row) = measure(name, label, dev, budget) {
+                mix_rows.push(row);
+            }
+        }
+        for r in &mix_rows {
+            let (steals, imb) = r
+                .sched
+                .as_ref()
+                .map(|s| (s.steals(), s.imbalance()))
+                .unwrap_or((0, 1.0));
+            println!(
+                "{name:<22} {:<16} {:>8.2}ms  steals={steals:<4} imbalance={imb:.2}",
+                r.label, r.ms
+            );
+        }
+        let dynamic_ms = mix_rows.iter().find(|r| r.label == "dynamic").map(|r| r.ms);
+        let worst_static = mix_rows
+            .iter()
+            .filter(|r| r.label.starts_with("static"))
+            .map(|r| r.ms)
+            .fold(f64::MIN, f64::max);
+        if let Some(d) = dynamic_ms {
+            println!(
+                "{name:<22} dynamic vs worst static: {:.2}x {}",
+                worst_static / d,
+                if d < worst_static { "(dynamic wins)" } else { "(UNEXPECTED)" }
+            );
+        }
+        println!();
+
+        if !first_app {
+            let _ = writeln!(json, ",");
+        }
+        first_app = false;
+        let _ = write!(json, "    {{\"name\": \"{name}\", \"scaling\": [");
+        for (i, r) in scaling.iter().enumerate() {
+            json_row(&mut json, r, i == 0);
+        }
+        let _ = write!(json, "], \"mix\": [");
+        for (i, r) in mix_rows.iter().enumerate() {
+            json_row(&mut json, r, i == 0);
+        }
+        let _ = write!(json, "]}}");
+    }
+    let _ = writeln!(json, "\n  ]\n}}");
+    match std::fs::write("BENCH_multidev.json", &json) {
+        Ok(()) => println!("snapshot written to BENCH_multidev.json"),
+        Err(e) => println!("could not write BENCH_multidev.json: {e}"),
+    }
+    println!(
+        "(expectation: the x2/x3 homogeneous rows beat x1 — co-execution\n scales with members — and on the asymmetric serial+vector+bytecode\n mix the dynamic self-scheduler's wall-clock beats the worst static\n split, with imbalance near 1.0 and a non-zero steal count)"
+    );
+}

@@ -11,10 +11,11 @@
 use std::sync::Arc;
 
 use crate::cl::context::{Buffer, Context};
-use crate::cl::error::Result;
+use crate::cl::error::{Error, Result};
 use crate::devices::{LaunchRequest, LaunchStats};
 use crate::exec::VVal;
 use crate::kcc::WorkGroupFunction;
+use crate::sched::SchedStats;
 
 /// One unit of queued device work (the `clEnqueue*` families).
 pub enum Command {
@@ -31,6 +32,31 @@ pub enum Command {
         buffers: Vec<Buffer>,
         /// Work-groups per dimension.
         groups: [usize; 3],
+        /// Global work-item offset (`get_global_offset`).
+        offset: [u64; 3],
+        /// Work dimensions.
+        work_dim: u32,
+        /// Local memory bytes per work-group.
+        local_mem: usize,
+    },
+    /// ND-range kernel launch co-executed across a heterogeneous device
+    /// group (`sched::DeviceGroup`): one artifact per member, one
+    /// completion event for the whole split.
+    NdRangeSplit {
+        /// Kernel name (for event labels).
+        kernel: String,
+        /// Per-member enqueue-time-specialised work-group functions, in
+        /// group member order (each compiled under that member's own
+        /// cache key).
+        wgfs: Vec<Arc<WorkGroupFunction>>,
+        /// Resolved argument values.
+        args: Vec<VVal>,
+        /// Buffers referenced by the args (re-validated at execution).
+        buffers: Vec<Buffer>,
+        /// Work-groups per dimension.
+        groups: [usize; 3],
+        /// Global work-item offset (`get_global_offset`).
+        offset: [u64; 3],
         /// Work dimensions.
         work_dim: u32,
         /// Local memory bytes per work-group.
@@ -92,13 +118,15 @@ pub enum Command {
 pub(crate) struct CommandOutput {
     /// Device statistics (kernel launches).
     pub stats: LaunchStats,
+    /// Per-device scheduler breakdown (split launches on device groups).
+    pub sched: Option<SchedStats>,
     /// Result bytes (buffer reads).
     pub payload: Option<Vec<u8>>,
 }
 
 impl CommandOutput {
     fn empty() -> CommandOutput {
-        CommandOutput { stats: LaunchStats::default(), payload: None }
+        CommandOutput { stats: LaunchStats::default(), sched: None, payload: None }
     }
 }
 
@@ -106,7 +134,9 @@ impl Command {
     /// Short label for events and logs.
     pub fn label(&self) -> String {
         match self {
-            Command::NdRange { kernel, .. } => kernel.clone(),
+            Command::NdRange { kernel, .. } | Command::NdRangeSplit { kernel, .. } => {
+                kernel.clone()
+            }
             Command::WriteBuffer { .. } => "write_buffer".to_string(),
             Command::ReadBuffer { .. } => "read_buffer".to_string(),
             Command::CopyBuffer { .. } => "copy_buffer".to_string(),
@@ -120,18 +150,18 @@ impl Command {
     /// context's blocking helpers.
     pub(crate) fn execute(&self, ctx: &Context) -> Result<CommandOutput> {
         match self {
-            Command::NdRange { wgf, args, buffers, groups, work_dim, local_mem, .. } => {
+            Command::NdRange { wgf, args, buffers, groups, offset, work_dim, local_mem, .. } => {
                 for b in buffers {
                     ctx.check_live(b)?;
                 }
-                let req = LaunchRequest {
-                    wgf: Arc::clone(wgf),
-                    args: args.clone(),
-                    groups: *groups,
-                    offset: [0; 3],
-                    work_dim: *work_dim,
-                    local_mem: *local_mem,
-                };
+                let req = LaunchRequest::new(
+                    Arc::clone(wgf),
+                    args.clone(),
+                    *groups,
+                    *offset,
+                    *work_dim,
+                    *local_mem,
+                );
                 // SAFETY: commands that run concurrently were declared
                 // independent by the client (no wait-list edge between
                 // them); per the OpenCL execution model, racy access to
@@ -140,7 +170,32 @@ impl Command {
                 // device applies to work-groups.
                 let global = unsafe { ctx.global.view() };
                 let stats = ctx.device.launch(global, &req)?;
-                Ok(CommandOutput { stats, payload: None })
+                Ok(CommandOutput { stats, sched: None, payload: None })
+            }
+            Command::NdRangeSplit {
+                wgfs, args, buffers, groups, offset, work_dim, local_mem, ..
+            } => {
+                for b in buffers {
+                    ctx.check_live(b)?;
+                }
+                let group = ctx.device.as_group().ok_or_else(|| {
+                    Error::invalid("split launch enqueued on a non-group device")
+                })?;
+                let first = wgfs
+                    .first()
+                    .ok_or_else(|| Error::invalid("split launch carries no artifacts"))?;
+                let req = LaunchRequest::new(
+                    Arc::clone(first),
+                    args.clone(),
+                    *groups,
+                    *offset,
+                    *work_dim,
+                    *local_mem,
+                );
+                // SAFETY: same independence contract as NdRange above.
+                let global = unsafe { ctx.global.view() };
+                let (stats, sched) = group.launch_split(global, &req, wgfs)?;
+                Ok(CommandOutput { stats, sched: Some(sched), payload: None })
             }
             Command::WriteBuffer { buf, offset, data } => {
                 ctx.write_buffer(*buf, *offset, data)?;
@@ -149,7 +204,11 @@ impl Command {
             Command::ReadBuffer { buf, offset, len } => {
                 let mut out = vec![0u8; *len];
                 ctx.read_buffer(*buf, *offset, &mut out)?;
-                Ok(CommandOutput { stats: LaunchStats::default(), payload: Some(out) })
+                Ok(CommandOutput {
+                    stats: LaunchStats::default(),
+                    sched: None,
+                    payload: Some(out),
+                })
             }
             Command::CopyBuffer { src, dst, src_offset, dst_offset, len } => {
                 ctx.copy_buffer(*src, *dst, *src_offset, *dst_offset, *len)?;

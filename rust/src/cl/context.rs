@@ -314,7 +314,12 @@ impl Context {
         ev.mark_running(self.epoch.elapsed().as_nanos() as u64);
         match cmd.execute(self) {
             Ok(out) => {
-                ev.complete_ok(self.epoch.elapsed().as_nanos() as u64, out.stats, out.payload);
+                ev.complete_ok(
+                    self.epoch.elapsed().as_nanos() as u64,
+                    out.stats,
+                    out.sched,
+                    out.payload,
+                );
                 Ok(ev)
             }
             Err(e) => {

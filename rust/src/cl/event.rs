@@ -28,6 +28,7 @@ use crate::cl::context::{vec_from_bytes, Scalar};
 use crate::cl::error::{Error, Result};
 use crate::cl::queue::SchedulerShared;
 use crate::devices::LaunchStats;
+use crate::sched::SchedStats;
 
 /// Execution status of a command (ordered by lifecycle progress).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -62,6 +63,7 @@ struct EventState {
     status: CommandStatus,
     profile: EventProfile,
     stats: LaunchStats,
+    sched: Option<SchedStats>,
     payload: Option<Vec<u8>>,
     error: Option<Error>,
 }
@@ -90,6 +92,7 @@ impl Event {
                 status: CommandStatus::Queued,
                 profile: EventProfile { queued_ns, ..Default::default() },
                 stats: LaunchStats::default(),
+                sched: None,
                 payload: None,
                 error: None,
             }),
@@ -157,12 +160,19 @@ impl Event {
         st.profile.start_ns = ns;
     }
 
-    pub(crate) fn complete_ok(&self, ns: u64, stats: LaunchStats, payload: Option<Vec<u8>>) {
+    pub(crate) fn complete_ok(
+        &self,
+        ns: u64,
+        stats: LaunchStats,
+        sched: Option<SchedStats>,
+        payload: Option<Vec<u8>>,
+    ) {
         {
             let mut st = self.0.state.lock().unwrap();
             st.status = CommandStatus::Complete;
             st.profile.end_ns = ns;
             st.stats = stats;
+            st.sched = sched;
             st.payload = payload;
         }
         self.0.cv.notify_all();
@@ -234,6 +244,17 @@ impl Event {
         let st = self.0.state.lock().unwrap();
         if st.status == CommandStatus::Complete {
             Some(st.stats)
+        } else {
+            None
+        }
+    }
+
+    /// Per-device scheduler breakdown, once complete. `None` for
+    /// commands that did not run through a device group's split path.
+    pub fn sched_stats(&self) -> Option<SchedStats> {
+        let st = self.0.state.lock().unwrap();
+        if st.status == CommandStatus::Complete {
+            st.sched.clone()
         } else {
             None
         }

@@ -8,6 +8,7 @@ use crate::devices::{
     basic::BasicDevice, native_gang_width, threaded::ThreadedDevice, ttasim::TtaSimDevice,
     Device, EngineKind,
 };
+use crate::sched::{DeviceGroup, Dynamic, SchedPolicy};
 
 /// The pocl-rs platform: a named set of devices.
 pub struct Platform {
@@ -22,11 +23,21 @@ impl Platform {
     /// `basic` (serial), `pthread` (threaded gang, AVX2-width), narrow-SIMD
     /// variants (NEON/AltiVec width), lane-batched vector-gang and
     /// threaded-bytecode devices at the host-detected width, a fiber
-    /// baseline device, and the TTA simulator. The `pjrt` device is added
+    /// baseline device, the TTA simulator, and a heterogeneous
+    /// `multidev` group (serial + vector-gang + bytecode members under
+    /// the dynamic scheduler — see `sched`). The `pjrt` device is added
     /// separately because it needs artifacts (see `devices::pjrt`).
     pub fn default_platform() -> Platform {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
         let vw = native_gang_width();
+        let multidev_members: Vec<Arc<dyn Device>> = vec![
+            Arc::new(BasicDevice::new(EngineKind::Serial)),
+            Arc::new(BasicDevice::new(EngineKind::GangVector(vw))),
+            Arc::new(BasicDevice::new(EngineKind::Bytecode(vw))),
+        ];
+        let multidev =
+            DeviceGroup::new("multidev", multidev_members, Arc::new(Dynamic::new()))
+                .expect("static member list is non-empty and flat");
         Platform {
             name: "pocl-rs",
             devices: vec![
@@ -41,8 +52,20 @@ impl Platform {
                 Arc::new(BasicDevice::new(EngineKind::Jit(vw))),
                 Arc::new(BasicDevice::new(EngineKind::Fiber)),
                 Arc::new(TtaSimDevice::new(true)),
+                Arc::new(multidev),
             ],
         }
+    }
+
+    /// Build a heterogeneous device group from platform device names
+    /// ([`Platform::find_device`] resolution rules) under `policy`. The
+    /// group's name joins the member names with `+`.
+    pub fn group(&self, names: &[&str], policy: Arc<dyn SchedPolicy>) -> Result<DeviceGroup> {
+        let members = names
+            .iter()
+            .map(|n| self.find_device(n))
+            .collect::<Result<Vec<Arc<dyn Device>>>>()?;
+        DeviceGroup::new(names.join("+"), members, policy)
     }
 
     /// Resolve a device by name: an exact match wins, otherwise the name
@@ -108,7 +131,31 @@ mod tests {
         assert!(p.device("basic-jit").is_some(), "template-jit device present");
         assert!(p.device("pthread-jit").is_some());
         assert!(p.device("ttasim").is_some(), "unique substring resolves");
+        assert!(p.device("multidev").is_some(), "heterogeneous group device present");
         assert!(p.device("nonexistent").is_none());
+    }
+
+    #[test]
+    fn multidev_device_is_a_group() {
+        let p = Platform::default_platform();
+        let d = p.device("multidev").unwrap();
+        let g = d.as_group().expect("multidev downcasts to a DeviceGroup");
+        assert_eq!(g.members().len(), 3);
+        assert_eq!(g.policy().name(), "dynamic");
+        assert_eq!(d.info().dlp, "heterogeneous group");
+    }
+
+    #[test]
+    fn group_helper_builds_from_device_names() {
+        let p = Platform::default_platform();
+        let names = ["basic-serial", "basic-gangvector", "basic-bytecode"];
+        let g = p.group(&names, Arc::new(Dynamic::new())).unwrap();
+        assert_eq!(g.members().len(), 3);
+        assert_eq!(g.info().name, "basic-serial+basic-gangvector+basic-bytecode");
+        assert!(p.group(&["basic-serial", "nonexistent"], Arc::new(Dynamic::new())).is_err());
+        // Groups cannot nest: naming the platform's multidev group as a
+        // member is rejected.
+        assert!(p.group(&["multidev", "basic-serial"], Arc::new(Dynamic::new())).is_err());
     }
 
     #[test]

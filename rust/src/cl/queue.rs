@@ -96,6 +96,25 @@ impl SchedulerShared {
     }
 }
 
+/// Validate an ND-range geometry (OpenCL 1.2 divisibility rule) and
+/// return its work dimension.
+fn check_nd_range(global: [usize; 3], local: [usize; 3]) -> Result<u32> {
+    for d in 0..3 {
+        if local[d] == 0 || global[d] % local[d] != 0 {
+            return Err(Error::invalid(format!(
+                "global size {global:?} not divisible by local {local:?}"
+            )));
+        }
+    }
+    Ok(if global[2] > 1 {
+        3
+    } else if global[1] > 1 {
+        2
+    } else {
+        1
+    })
+}
+
 /// First submitted command whose wait-list is fully finished.
 fn find_ready(pending: &VecDeque<PendingCmd>) -> Option<usize> {
     pending.iter().position(|p| p.submitted && p.deps.iter().all(Event::is_finished))
@@ -166,7 +185,9 @@ fn worker_loop(shared: &SchedulerShared) {
                 job.cmd.execute(&shared.ctx)
             }));
             match result {
-                Ok(Ok(out)) => job.event.complete_ok(shared.now_ns(), out.stats, out.payload),
+                Ok(Ok(out)) => {
+                    job.event.complete_ok(shared.now_ns(), out.stats, out.sched, out.payload)
+                }
                 Ok(Err(e)) => job.event.complete_err(shared.now_ns(), e),
                 Err(_) => job.event.complete_err(
                     shared.now_ns(),
@@ -269,11 +290,15 @@ impl CommandQueue {
         ev
     }
 
-    /// Enqueue an ND-range kernel (`clEnqueueNDRangeKernel`).
+    /// Enqueue an ND-range kernel (`clEnqueueNDRangeKernel`) with a zero
+    /// global offset.
     ///
     /// `global` must be divisible by `local` in every dimension (OpenCL
     /// 1.2 rule). The command is deferred; it executes after `wait` (and,
     /// in-order, after every earlier command) once the queue is flushed.
+    /// On a heterogeneous device group (`sched::DeviceGroup`) the launch
+    /// is routed through the split path automatically — see
+    /// [`CommandQueue::enqueue_nd_range_split`].
     pub fn enqueue_nd_range(
         &self,
         program: &Program,
@@ -282,26 +307,93 @@ impl CommandQueue {
         local: [usize; 3],
         wait: &[Event],
     ) -> Result<Event> {
-        for d in 0..3 {
-            if local[d] == 0 || global[d] % local[d] != 0 {
-                return Err(Error::invalid(format!(
-                    "global size {global:?} not divisible by local {local:?}"
-                )));
-            }
+        self.enqueue_nd_range_at(program, kernel, global, local, [0; 3], wait)
+    }
+
+    /// Enqueue an ND-range kernel with an explicit global work-item
+    /// offset (`clEnqueueNDRangeKernel`'s `global_work_offset`): every
+    /// work-item's `get_global_id(d)` is shifted by `offset[d]`.
+    pub fn enqueue_nd_range_at(
+        &self,
+        program: &Program,
+        kernel: &Kernel,
+        global: [usize; 3],
+        local: [usize; 3],
+        offset: [u64; 3],
+        wait: &[Event],
+    ) -> Result<Event> {
+        if self.context.device.as_group().is_some() {
+            return self.enqueue_nd_range_split(program, kernel, global, local, offset, wait);
         }
-        let work_dim = if global[2] > 1 {
-            3
-        } else if global[1] > 1 {
-            2
-        } else {
-            1
-        };
+        let work_dim = check_nd_range(global, local)?;
         let mut opts: CompileOptions = self.context.device.compile_options();
         opts.work_dim = work_dim;
         let wgf = program.workgroup_function(&kernel.name, local, &opts)?;
+        let (args, buffers, local_mem) = self.resolve_kernel_args(program, kernel)?;
+        let groups = [global[0] / local[0], global[1] / local[1], global[2] / local[2]];
+        let cmd = Command::NdRange {
+            kernel: kernel.name.clone(),
+            wgf,
+            args,
+            buffers,
+            groups,
+            offset,
+            work_dim,
+            local_mem,
+        };
+        Ok(self.issue(cmd, wait))
+    }
 
-        // Resolve arguments: buffers → global offsets; local sizes →
-        // local offsets; auto-locals appended after user args.
+    /// Enqueue an ND-range kernel co-executed across the members of a
+    /// heterogeneous device group. One artifact is compiled per member
+    /// under that member's own options (and therefore its own
+    /// persistent-cache key: a serial member and a width-8 jit member
+    /// never share a specialisation); the scheduler partitions the
+    /// work-group grid among the members and the returned event
+    /// completes when every member's share has. Fails when the
+    /// context's device is not a `sched::DeviceGroup`.
+    pub fn enqueue_nd_range_split(
+        &self,
+        program: &Program,
+        kernel: &Kernel,
+        global: [usize; 3],
+        local: [usize; 3],
+        offset: [u64; 3],
+        wait: &[Event],
+    ) -> Result<Event> {
+        let group = self.context.device.as_group().ok_or_else(|| {
+            Error::invalid("enqueue_nd_range_split needs a device-group context")
+        })?;
+        let work_dim = check_nd_range(global, local)?;
+        let mut wgfs = Vec::with_capacity(group.members().len());
+        for mut opts in group.member_compile_options() {
+            opts.work_dim = work_dim;
+            wgfs.push(program.workgroup_function(&kernel.name, local, &opts)?);
+        }
+        let (args, buffers, local_mem) = self.resolve_kernel_args(program, kernel)?;
+        let groups = [global[0] / local[0], global[1] / local[1], global[2] / local[2]];
+        let cmd = Command::NdRangeSplit {
+            kernel: kernel.name.clone(),
+            wgfs,
+            args,
+            buffers,
+            groups,
+            offset,
+            work_dim,
+            local_mem,
+        };
+        Ok(self.issue(cmd, wait))
+    }
+
+    /// Resolve kernel arguments: buffers → global offsets; local sizes →
+    /// local offsets; auto-locals appended after user args. Returns the
+    /// resolved values, the referenced buffers (for execute-time
+    /// liveness re-checks), and the local-memory footprint.
+    fn resolve_kernel_args(
+        &self,
+        program: &Program,
+        kernel: &Kernel,
+    ) -> Result<(Vec<VVal>, Vec<Buffer>, usize)> {
         let kfun = program.module.kernel(&kernel.name).unwrap();
         let mut args: Vec<VVal> = Vec::with_capacity(kfun.params.len());
         let mut buffers: Vec<Buffer> = Vec::new();
@@ -334,18 +426,7 @@ impl CommandQueue {
                 KernelArg::F32(v) => VVal::f(*v as f64),
             });
         }
-
-        let groups = [global[0] / local[0], global[1] / local[1], global[2] / local[2]];
-        let cmd = Command::NdRange {
-            kernel: kernel.name.clone(),
-            wgf,
-            args,
-            buffers,
-            groups,
-            work_dim,
-            local_mem: local_off,
-        };
-        Ok(self.issue(cmd, wait))
+        Ok((args, buffers, local_off))
     }
 
     /// Enqueue a host → device write of raw bytes; the queue owns `data`.

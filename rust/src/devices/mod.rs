@@ -128,8 +128,18 @@ pub struct LaunchRequest {
     /// Argument values (buffers already resolved to global offsets,
     /// local pointers to local offsets).
     pub args: Vec<VVal>,
-    /// Number of work-groups per dimension.
+    /// Number of work-groups per dimension *this request executes* — the
+    /// whole grid for a plain launch, a chunk of it for a scheduler
+    /// sub-launch (see [`LaunchRequest::sub_range`]).
     pub groups: [usize; 3],
+    /// Absolute id of the first group this request executes. `[0; 3]`
+    /// for plain launches; scheduler sub-launches shift it so kernels
+    /// observe their true `get_group_id`.
+    pub group_offset: [usize; 3],
+    /// Work-group grid of the *full* launch, reported to kernels via
+    /// `get_num_groups`/`get_global_size`. Equals `groups` for plain
+    /// launches; stays the full grid for sub-launches.
+    pub grid: [usize; 3],
     /// Global offset.
     pub offset: [u64; 3],
     /// Work dimensions used by the launch.
@@ -139,24 +149,79 @@ pub struct LaunchRequest {
 }
 
 impl LaunchRequest {
-    /// Launch context for one work-group.
+    /// A plain (whole-grid) launch: executes every group of `groups`
+    /// with no group offset.
+    pub fn new(
+        wgf: Arc<WorkGroupFunction>,
+        args: Vec<VVal>,
+        groups: [usize; 3],
+        offset: [u64; 3],
+        work_dim: u32,
+        local_mem: usize,
+    ) -> LaunchRequest {
+        LaunchRequest {
+            wgf,
+            args,
+            groups,
+            group_offset: [0; 3],
+            grid: groups,
+            offset,
+            work_dim,
+            local_mem,
+        }
+    }
+
+    /// A sub-launch executing `count` slices of this request's range
+    /// starting `start` slices in along dimension `dim`, running `wgf`
+    /// (each scheduler member supplies its own compiled artifact).
+    /// Kernels inside the sub-launch still observe the full grid and
+    /// their absolute group ids.
+    pub fn sub_range(
+        &self,
+        dim: usize,
+        start: usize,
+        count: usize,
+        wgf: Arc<WorkGroupFunction>,
+    ) -> LaunchRequest {
+        debug_assert!(start + count <= self.groups[dim]);
+        let mut groups = self.groups;
+        groups[dim] = count;
+        let mut group_offset = self.group_offset;
+        group_offset[dim] += start;
+        LaunchRequest {
+            wgf,
+            args: self.args.clone(),
+            groups,
+            group_offset,
+            grid: self.grid,
+            offset: self.offset,
+            work_dim: self.work_dim,
+            local_mem: self.local_mem,
+        }
+    }
+
+    /// Launch context for one work-group (absolute group id).
     pub fn ctx(&self, g: [usize; 3]) -> LaunchCtx {
         LaunchCtx {
             group_id: [g[0] as u64, g[1] as u64, g[2] as u64],
-            num_groups: [self.groups[0] as u64, self.groups[1] as u64, self.groups[2] as u64],
+            num_groups: [self.grid[0] as u64, self.grid[1] as u64, self.grid[2] as u64],
             global_offset: self.offset,
             local_size: self.wgf.local_size,
             work_dim: self.work_dim,
         }
     }
 
-    /// All group ids in row-major order.
+    /// Absolute ids of every group this request executes, row-major.
     pub fn all_groups(&self) -> Vec<[usize; 3]> {
         let mut v = Vec::with_capacity(self.groups.iter().product());
         for gz in 0..self.groups[2] {
             for gy in 0..self.groups[1] {
                 for gx in 0..self.groups[0] {
-                    v.push([gx, gy, gz]);
+                    v.push([
+                        self.group_offset[0] + gx,
+                        self.group_offset[1] + gy,
+                        self.group_offset[2] + gz,
+                    ]);
                 }
             }
         }
@@ -218,6 +283,14 @@ impl LaunchStats {
 
     /// Fold another launch's statistics into this one (worker pools,
     /// multi-pass runs).
+    ///
+    /// Counters here are engine-typed (a serial member contributes no
+    /// gang counters, a jit member retires through `jit_insts`), so a
+    /// cross-engine sum is only meaningful as a *grand total*. When
+    /// launches from different engine kinds are folded together — a
+    /// heterogeneous `sched::DeviceGroup` launch — the per-device,
+    /// per-engine breakdown is preserved separately in
+    /// `sched::SchedStats`; this accumulated blob is just the total row.
     pub fn accumulate(&mut self, other: &LaunchStats) {
         self.workgroups += other.workgroups;
         self.gangs += other.gangs;
@@ -255,6 +328,13 @@ pub trait Device: Send + Sync {
     /// Execute a launch. Devices may be called concurrently from a
     /// queue's worker pool; implementations must be reentrant.
     fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats>;
+    /// Downcast to a heterogeneous device group, if this device is one.
+    /// The host layer uses this to route NDRange launches through the
+    /// multi-device scheduler (`sched::DeviceGroup`) instead of a single
+    /// engine.
+    fn as_group(&self) -> Option<&crate::sched::DeviceGroup> {
+        None
+    }
 }
 
 /// Run one work-group with the chosen engine (shared by basic/threaded),

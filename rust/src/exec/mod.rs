@@ -71,12 +71,27 @@ mod tests {
         I(i64),
     }
 
-    /// Run `src`'s first kernel over `groups` × `local` work-items,
-    /// returning every buffer's final contents.
+    /// Run `src`'s first kernel over `groups` × `local` work-items with
+    /// a zero global offset, returning every buffer's final contents.
     fn run(
         src: &str,
         local: [usize; 3],
         groups: [usize; 3],
+        args: &[Arg],
+        engine: Engine,
+        horizontal: bool,
+    ) -> Vec<Vec<f32>> {
+        run_off(src, local, groups, [0; 3], args, engine, horizontal)
+    }
+
+    /// Like [`run`], with an explicit global work-item offset — every
+    /// engine must honour `global_offset` the same way (scheduler
+    /// sub-launches depend on it).
+    fn run_off(
+        src: &str,
+        local: [usize; 3],
+        groups: [usize; 3],
+        global_offset: [u64; 3],
         args: &[Arg],
         engine: Engine,
         horizontal: bool,
@@ -128,7 +143,7 @@ mod tests {
         let ctx_base = LaunchCtx {
             group_id: [0; 3],
             num_groups: [groups[0] as u64, groups[1] as u64, groups[2] as u64],
-            global_offset: [0; 3],
+            global_offset,
             local_size: local,
             work_dim: 3,
         };
@@ -433,6 +448,35 @@ mod tests {
                 [4, 2, 1],
                 [2, 4, 1],
                 &[Arg::Buf(vec![0.0; w * w]), Arg::I(w as i64)],
+                e,
+                true,
+            );
+            assert_eq!(out[0], expect, "engine {e:?}");
+        }
+    }
+
+    const OFFSET_KERNEL: &str = "__kernel void off(__global float *x) {
+        size_t i = get_global_id(0);
+        x[i] = (float)(i * 2u) + (float)get_global_offset(0);
+    }";
+
+    #[test]
+    fn global_offset_honoured_by_all_engines() {
+        // 2 groups × 4 WIs at offset 16: global ids 16..24, so exactly
+        // x[16..24] is written and both get_global_id and
+        // get_global_offset must reflect the shift. Every engine —
+        // serial, gang, vecgang, bytecode, jit, fiber — must agree;
+        // scheduler sub-launches build on this.
+        let expect: Vec<f32> = (0..32)
+            .map(|j| if (16..24).contains(&j) { (j * 2 + 16) as f32 } else { 0.0 })
+            .collect();
+        for e in all_engines() {
+            let out = run_off(
+                OFFSET_KERNEL,
+                [4, 1, 1],
+                [2, 1, 1],
+                [16, 0, 0],
+                &[Arg::Buf(vec![0.0; 32])],
                 e,
                 true,
             );

@@ -26,6 +26,10 @@
 //!   (SPMD-style offload of AOT-compiled Pallas/XLA kernels).
 //! * [`runtime`] — the PJRT client wrapper used by the `pjrt` device to
 //!   load and execute `artifacts/*.hlo.txt` produced by `python/compile`.
+//! * [`sched`] — the heterogeneous multi-device scheduler: a
+//!   `DeviceGroup` co-executes one NDRange across asymmetric engines
+//!   (static proportional splits or chunked self-scheduling with
+//!   throughput feedback), joined by a single completion event.
 //! * [`cache`] — the persistent kernel-binary cache (the
 //!   `POCL_CACHE_DIR` analog): the `poclbin` serialization format plus a
 //!   content-addressed on-disk store, so built kernels survive the
@@ -50,6 +54,7 @@ pub mod ir;
 pub mod kcc;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sched;
 pub mod suite;
 pub mod testing;
 pub mod vecmath;

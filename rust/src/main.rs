@@ -4,6 +4,7 @@
 //! ```text
 //! poclrs devices                      # Table 1 capability table
 //! poclrs run <App> [device] [--stats] [--opt N]  # run + verify one suite app
+//! poclrs run <App> --devices a,b,c [--ratios r1,r2,r3]  # heterogeneous group run
 //! poclrs compile <file.cl> [LX]       # show compile stats + IR for a kernel
 //! poclrs suite [device]               # run + verify the whole suite
 //! poclrs cache ls                     # list persistent kernel-cache entries
@@ -15,7 +16,14 @@
 //! mid-level optimizer per-pass counters (kcc/opt/), the
 //! specialisation-cache counters (memory/disk hits vs compiles), and the
 //! engine dispatch counters (gangs, diverged, vectorised/uniform/per-lane
-//! and bytecode instruction dispatches) for the run.
+//! and bytecode instruction dispatches) for the run. On a device group
+//! it also prints the per-member scheduler breakdown (groups executed,
+//! chunks pulled, steals, busy time, imbalance ratio).
+//!
+//! `--devices a,b,c` co-executes every launch across the named platform
+//! devices as one heterogeneous group (`sched::DeviceGroup`). Without
+//! `--ratios` the group uses the dynamic chunked self-scheduler;
+//! `--ratios r1,r2,...` pins a static proportional split instead.
 //!
 //! `--opt N` (N = 0/1/2, default 2) selects the optimizer level; it sets
 //! `POCLRS_OPT` before any device is created, so every device's
@@ -30,11 +38,13 @@ use std::sync::Arc;
 
 use poclrs::cache;
 use poclrs::cl::Platform;
+use poclrs::devices::Device;
 use poclrs::kcc::{compile_workgroup, CompileOptions};
+use poclrs::sched::{Dynamic, SchedPolicy, StaticSplit};
 use poclrs::suite::{all_apps, app_by_name, runner, SizeClass};
 
 const USAGE: &str =
-    "usage: poclrs devices | run <App> [device] [--stats] [--opt N] | suite [device] | compile <file.cl> [LX] | cache ls|stats|clear";
+    "usage: poclrs devices | run <App> [device] [--stats] [--opt N] [--devices a,b,c [--ratios r1,r2,...]] | suite [device] | compile <file.cl> [LX] | cache ls|stats|clear";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -63,11 +73,57 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 // them (and every cache key).
                 std::env::set_var("POCLRS_OPT", lvl.as_u32().to_string());
             }
+            let group_names: Option<Vec<String>> =
+                if let Some(i) = rest.iter().position(|a| *a == "--devices") {
+                    let list = rest
+                        .get(i + 1)
+                        .ok_or_else(|| String::from("--devices takes a comma-separated list"))?
+                        .split(',')
+                        .map(str::to_string)
+                        .collect();
+                    rest.drain(i..=i + 1);
+                    Some(list)
+                } else {
+                    None
+                };
+            let ratios: Option<Vec<f64>> =
+                if let Some(i) = rest.iter().position(|a| *a == "--ratios") {
+                    let list = rest
+                        .get(i + 1)
+                        .ok_or_else(|| String::from("--ratios takes a comma-separated list"))?
+                        .split(',')
+                        .map(|s| {
+                            s.parse::<f64>()
+                                .map_err(|_| format!("bad ratio `{s}` (expected a number)"))
+                        })
+                        .collect::<Result<Vec<f64>, String>>()?;
+                    rest.drain(i..=i + 1);
+                    Some(list)
+                } else {
+                    None
+                };
             let name = *rest
                 .first()
                 .ok_or_else(|| String::from("usage: run <App> [device] [--stats]"))?;
-            let dev = rest.get(1).copied().unwrap_or("pthread-gang(8)");
-            let device = platform.find_device(dev)?;
+            let (device, dev) = match &group_names {
+                Some(names) => {
+                    let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+                    let policy: Arc<dyn SchedPolicy> = match &ratios {
+                        Some(r) => Arc::new(StaticSplit::new(r.clone())),
+                        None => Arc::new(Dynamic::new()),
+                    };
+                    let group = platform.group(&refs, policy)?;
+                    let label = group.info().name;
+                    (Arc::new(group) as Arc<dyn Device>, label)
+                }
+                None => {
+                    if ratios.is_some() {
+                        return Err("--ratios requires --devices".into());
+                    }
+                    let dev = rest.get(1).copied().unwrap_or("pthread-gang(8)");
+                    (platform.find_device(dev)?, dev.to_string())
+                }
+            };
             let app = app_by_name(name, SizeClass::Bench)
                 .ok_or_else(|| format!("no app named `{name}`"))?;
             let r = runner::run_and_verify(&app, device.clone())?;
@@ -150,6 +206,27 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     s.jit_gangs,
                     s.jit_fallbacks,
                 );
+                // Per-member scheduler breakdown (device groups only).
+                if let Some(sc) = &r.sched {
+                    println!(
+                        "sched [{}] split-dim={} steals={} imbalance={:.2}",
+                        sc.policy,
+                        sc.split_dim,
+                        sc.steals(),
+                        sc.imbalance(),
+                    );
+                    for d in &sc.devices {
+                        println!(
+                            "  {:<24} groups={:>7} chunks={:>5} steals={:>4} busy={:>10.2?} dispatches={}",
+                            d.name,
+                            d.groups,
+                            d.chunks,
+                            d.steals,
+                            std::time::Duration::from_nanos(d.busy_ns),
+                            d.stats.dispatches(),
+                        );
+                    }
+                }
             }
         }
         Some("suite") => {

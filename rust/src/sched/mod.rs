@@ -1,0 +1,294 @@
+//! Heterogeneous multi-device scheduler: co-executes one NDRange launch
+//! across several platform devices (the EngineCL-style runtime half of
+//! the performance-portability story).
+//!
+//! A [`DeviceGroup`] is itself a [`Device`], so it slots into a
+//! `Context` like any single engine. When the host enqueues an NDRange
+//! on a group, the launch's work-group grid is partitioned along its
+//! slowest-varying used dimension ([`split_dim`]) into contiguous
+//! chunks, each executed by a member device as a sub-launch
+//! ([`LaunchRequest::sub_range`]) against the shared global memory.
+//! Work-groups are independent under the OpenCL execution model, so the
+//! members need no synchronisation beyond the chunk hand-out; the whole
+//! split runs inside one command, joined by a single completion `Event`
+//! on the queue's dependency DAG.
+//!
+//! Partitioning is pluggable through [`SchedPolicy`]:
+//!
+//! * [`StaticSplit`] — one proportional contiguous range per member
+//!   (explicit `--ratios`, profile-seeded, or even).
+//! * [`Dynamic`] — chunked self-scheduling: members pull chunks from a
+//!   shared cursor, with per-member throughput EWMA feedback sizing
+//!   later chunks (so a jit member is not held hostage by a serial
+//!   one); chunks pulled outside a member's even segment count as
+//!   steals.
+//!
+//! Each member compiles *its own* artifact for the kernel under its own
+//! persistent-cache key (`cl/queue.rs::enqueue_nd_range_split` passes
+//! one `WorkGroupFunction` per member), and the per-device, per-engine
+//! statistics breakdown is preserved in [`SchedStats`] rather than
+//! being summed into one cross-engine blob.
+
+pub mod policy;
+pub mod stats;
+
+pub use policy::{Chunk, ChunkSource, Dynamic, SchedPolicy, StaticSplit};
+pub use stats::{DeviceSchedStats, SchedStats};
+
+use std::sync::Arc;
+
+use crate::cl::error::{Error, Result};
+use crate::devices::{Device, DeviceInfo, LaunchRequest, LaunchStats};
+use crate::kcc::{CompileOptions, WorkGroupFunction};
+
+/// The dimension a launch is split along: the slowest-varying used
+/// dimension (highest index — outermost in row-major group order, so
+/// chunks are contiguous in memory-traversal order); dimension 0 for
+/// degenerate single-group grids.
+pub fn split_dim(groups: [usize; 3]) -> usize {
+    (0..3).rev().find(|&d| groups[d] > 1).unwrap_or(0)
+}
+
+/// Shared mutable global memory handed to member workers. Work-groups
+/// are independent; simultaneous writes to the same location are UB in
+/// the source program, mirroring real OpenCL devices (same pattern as
+/// `devices/threaded.rs`).
+struct SharedMem(*mut u8, usize);
+unsafe impl Send for SharedMem {}
+unsafe impl Sync for SharedMem {}
+
+/// A heterogeneous group of devices acting as one logical device.
+pub struct DeviceGroup {
+    name: String,
+    members: Vec<Arc<dyn Device>>,
+    policy: Arc<dyn SchedPolicy>,
+}
+
+impl DeviceGroup {
+    /// Group `members` under `policy`. Fails on an empty member list and
+    /// on nested groups (a group cannot contain another group).
+    pub fn new(
+        name: impl Into<String>,
+        members: Vec<Arc<dyn Device>>,
+        policy: Arc<dyn SchedPolicy>,
+    ) -> Result<DeviceGroup> {
+        if members.is_empty() {
+            return Err(Error::invalid("device group needs at least one member"));
+        }
+        if members.iter().any(|m| m.as_group().is_some()) {
+            return Err(Error::invalid("device groups cannot nest"));
+        }
+        Ok(DeviceGroup { name: name.into(), members, policy })
+    }
+
+    /// Member devices, in scheduling order.
+    pub fn members(&self) -> &[Arc<dyn Device>] {
+        &self.members
+    }
+
+    /// The group's partitioning policy.
+    pub fn policy(&self) -> &Arc<dyn SchedPolicy> {
+        &self.policy
+    }
+
+    /// Compile options per member, in member order. Each member's
+    /// options carry its own engine kind and gang width, so the
+    /// persistent cache keeps one artifact per member (`cache::key`
+    /// folds the full `CompileOptions` into the `SpecKey`).
+    pub fn member_compile_options(&self) -> Vec<CompileOptions> {
+        self.members.iter().map(|m| m.compile_options()).collect()
+    }
+
+    /// Co-execute one launch across the members: partition `req`'s
+    /// range along [`split_dim`] per the group policy, run each chunk
+    /// on its member with that member's own artifact (`wgfs[i]`), and
+    /// return the grand-total launch statistics plus the per-device
+    /// breakdown.
+    pub fn launch_split(
+        &self,
+        global: &mut [u8],
+        req: &LaunchRequest,
+        wgfs: &[Arc<WorkGroupFunction>],
+    ) -> Result<(LaunchStats, SchedStats)> {
+        if wgfs.len() != self.members.len() {
+            return Err(Error::invalid(format!(
+                "device group '{}' expects {} per-member artifacts, got {}",
+                self.name,
+                self.members.len(),
+                wgfs.len()
+            )));
+        }
+        let dim = split_dim(req.groups);
+        let total = req.groups[dim];
+        let mut sched =
+            SchedStats { policy: self.policy.name(), split_dim: dim, devices: Vec::new() };
+
+        if self.members.len() == 1 || total < 2 {
+            // Nothing to split: the first member runs the whole range.
+            let sub = req.sub_range(dim, 0, total, wgfs[0].clone());
+            let t0 = std::time::Instant::now();
+            let stats = self.members[0].launch(global, &sub)?;
+            let busy = t0.elapsed().as_nanos() as u64;
+            sched.devices = self
+                .members
+                .iter()
+                .enumerate()
+                .map(|(i, m)| DeviceSchedStats {
+                    name: m.info().name,
+                    groups: if i == 0 { stats.workgroups } else { 0 },
+                    chunks: usize::from(i == 0),
+                    steals: 0,
+                    busy_ns: if i == 0 { busy } else { 0 },
+                    stats: if i == 0 { stats } else { LaunchStats::default() },
+                })
+                .collect();
+            return Ok((stats, sched));
+        }
+
+        let source = self.policy.plan(total, self.members.len());
+        let shared = SharedMem(global.as_mut_ptr(), global.len());
+        let results: Vec<Result<DeviceSchedStats>> = std::thread::scope(|scope| {
+            let shared = &shared;
+            let source = &*source;
+            let mut handles = Vec::new();
+            for (i, member) in self.members.iter().enumerate() {
+                let wgf = wgfs[i].clone();
+                handles.push(scope.spawn(move || {
+                    let mut row =
+                        DeviceSchedStats { name: member.info().name, ..Default::default() };
+                    let mut rate = 0.0_f64;
+                    while let Some(chunk) = source.next(i, rate) {
+                        let sub = req.sub_range(dim, chunk.start, chunk.len, wgf.clone());
+                        // Each member gets the same full view of global
+                        // memory; chunks are disjoint in group space and
+                        // work-group independence makes concurrent
+                        // access safe for conforming kernels.
+                        let global_view =
+                            unsafe { std::slice::from_raw_parts_mut(shared.0, shared.1) };
+                        let t0 = std::time::Instant::now();
+                        let s = member.launch(global_view, &sub)?;
+                        let dt = t0.elapsed();
+                        row.busy_ns += dt.as_nanos() as u64;
+                        row.groups += s.workgroups;
+                        row.chunks += 1;
+                        row.steals += usize::from(chunk.steal);
+                        row.stats.accumulate(&s);
+                        // EWMA of the member's throughput in
+                        // split-dimension slices per second, fed back to
+                        // size its next chunk.
+                        let inst = chunk.len as f64 / dt.as_secs_f64().max(1e-9);
+                        rate = if rate > 0.0 { 0.6 * inst + 0.4 * rate } else { inst };
+                    }
+                    Ok(row)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("scheduler member panicked")).collect()
+        });
+
+        let mut total_stats = LaunchStats::default();
+        for r in results {
+            let row = r.map_err(|e| Error::exec(format!("device group member failed: {e}")))?;
+            total_stats.accumulate(&row.stats);
+            sched.devices.push(row);
+        }
+        Ok((total_stats, sched))
+    }
+}
+
+impl Device for DeviceGroup {
+    fn info(&self) -> DeviceInfo {
+        let infos: Vec<DeviceInfo> = self.members.iter().map(|m| m.info()).collect();
+        DeviceInfo {
+            name: self.name.clone(),
+            tlp: infos.iter().map(|i| i.tlp).sum(),
+            ilp: "per-member",
+            dlp: "heterogeneous group",
+            global_mem: infos.iter().map(|i| i.global_mem).min().unwrap_or(0),
+            local_mem: infos.iter().map(|i| i.local_mem).min().unwrap_or(0),
+        }
+    }
+
+    /// Shared-artifact fallback options: the widest-ganged member's
+    /// options, so a single artifact carries every form the members can
+    /// consume (lower tiers degrade per region). The split enqueue path
+    /// compiles one artifact per member instead — see
+    /// [`DeviceGroup::member_compile_options`].
+    fn compile_options(&self) -> CompileOptions {
+        self.members
+            .iter()
+            .map(|m| m.compile_options())
+            .max_by_key(|o| o.gang_width)
+            .unwrap_or_default()
+    }
+
+    fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {
+        // Plain-Device path (no per-member artifacts supplied): every
+        // member consumes the request's shared artifact.
+        let wgfs: Vec<Arc<WorkGroupFunction>> = vec![req.wgf.clone(); self.members.len()];
+        self.launch_split(global, req, &wgfs).map(|(stats, _)| stats)
+    }
+
+    fn as_group(&self) -> Option<&DeviceGroup> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{basic::BasicDevice, EngineKind};
+
+    fn serial() -> Arc<dyn Device> {
+        Arc::new(BasicDevice::new(EngineKind::Serial))
+    }
+
+    #[test]
+    fn split_dim_picks_slowest_varying_used_dimension() {
+        assert_eq!(split_dim([8, 1, 1]), 0);
+        assert_eq!(split_dim([8, 4, 1]), 1);
+        assert_eq!(split_dim([8, 4, 2]), 2);
+        assert_eq!(split_dim([8, 1, 2]), 2);
+        assert_eq!(split_dim([1, 1, 1]), 0);
+    }
+
+    #[test]
+    fn empty_group_is_rejected() {
+        let r = DeviceGroup::new("g", Vec::new(), Arc::new(Dynamic::new()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn nested_groups_are_rejected() {
+        let inner =
+            DeviceGroup::new("inner", vec![serial()], Arc::new(Dynamic::new())).unwrap();
+        let r = DeviceGroup::new("outer", vec![Arc::new(inner)], Arc::new(Dynamic::new()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn group_info_aggregates_members() {
+        let g = DeviceGroup::new(
+            "pair",
+            vec![serial(), serial()],
+            Arc::new(StaticSplit::even()),
+        )
+        .unwrap();
+        let info = g.info();
+        assert_eq!(info.name, "pair");
+        assert_eq!(info.tlp, 2);
+        assert!(info.global_mem > 0);
+    }
+
+    #[test]
+    fn group_compile_options_prefer_widest_gang() {
+        let members: Vec<Arc<dyn Device>> = vec![
+            Arc::new(BasicDevice::new(EngineKind::Serial)),
+            Arc::new(BasicDevice::new(EngineKind::GangVector(8))),
+            Arc::new(BasicDevice::new(EngineKind::Bytecode(4))),
+        ];
+        let g = DeviceGroup::new("mix", members, Arc::new(Dynamic::new())).unwrap();
+        assert_eq!(g.compile_options().gang_width, 8);
+        assert_eq!(g.member_compile_options().len(), 3);
+        assert_eq!(g.member_compile_options()[0].gang_width, 0);
+    }
+}

@@ -1,0 +1,348 @@
+//! Partitioning policies: how a launch's split dimension is divided
+//! among the member devices of a [`DeviceGroup`](super::DeviceGroup).
+//!
+//! A policy is consulted once per launch via [`SchedPolicy::plan`],
+//! which returns a [`ChunkSource`] — a shared hand-out of contiguous
+//! slice ranges along the split dimension. Member worker threads pull
+//! chunks concurrently until the source runs dry, so every policy is
+//! expressed as a thread-safe iterator rather than an up-front
+//! assignment; the static policy simply hands each member its whole
+//! range as one chunk.
+
+use std::sync::Mutex;
+
+/// One contiguous range of slices along the split dimension, handed to
+/// a member device as a single sub-launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    /// First slice index (relative to the launch's range).
+    pub start: usize,
+    /// Slice count; always ≥ 1.
+    pub len: usize,
+    /// True when the chunk started outside the pulling member's
+    /// even-split segment — the work-stealing bookkeeping bit.
+    pub steal: bool,
+}
+
+/// A partitioning policy: turns a launch's split-dimension extent into
+/// a per-member chunk hand-out.
+pub trait SchedPolicy: Send + Sync {
+    /// Human-readable policy name, reported through `SchedStats`.
+    fn name(&self) -> String;
+    /// Begin a launch of `total` slices over `members` devices.
+    fn plan(&self, total: usize, members: usize) -> Box<dyn ChunkSource>;
+}
+
+/// A thread-safe chunk hand-out for one launch. Implementations must
+/// cover `0..total` exactly once across all members combined.
+pub trait ChunkSource: Send + Sync {
+    /// Next chunk for member `dev` (`dev < members`), given the member's
+    /// current measured throughput in slices per second (`0.0` before
+    /// its first chunk completes). `None` when no work remains for this
+    /// member.
+    fn next(&self, dev: usize, rate: f64) -> Option<Chunk>;
+}
+
+/// Static proportional split: member `i` receives one contiguous chunk
+/// sized by `ratios[i] / sum(ratios)`. Ratios can come from the CLI
+/// (`--ratios`), from profiling, or default to an even split.
+#[derive(Debug, Clone)]
+pub struct StaticSplit {
+    ratios: Vec<f64>,
+}
+
+impl StaticSplit {
+    /// Split by explicit ratios. Non-finite or negative entries are
+    /// treated as `0` (that member receives no work); an all-zero or
+    /// empty list degrades to an even split. When a launch has more
+    /// members than ratios, the missing ratios default to `1.0`;
+    /// surplus ratios are ignored.
+    pub fn new(ratios: Vec<f64>) -> StaticSplit {
+        let mut ratios: Vec<f64> =
+            ratios.iter().map(|r| if r.is_finite() && *r > 0.0 { *r } else { 0.0 }).collect();
+        if ratios.iter().sum::<f64>() == 0.0 {
+            ratios.clear();
+        }
+        StaticSplit { ratios }
+    }
+
+    /// Even split across all members.
+    pub fn even() -> StaticSplit {
+        StaticSplit { ratios: Vec::new() }
+    }
+}
+
+impl SchedPolicy for StaticSplit {
+    fn name(&self) -> String {
+        if self.ratios.is_empty() {
+            "static[even]".to_string()
+        } else {
+            let parts: Vec<String> = self.ratios.iter().map(|r| format!("{r}")).collect();
+            format!("static[{}]", parts.join(","))
+        }
+    }
+
+    fn plan(&self, total: usize, members: usize) -> Box<dyn ChunkSource> {
+        let mut weights: Vec<f64> = (0..members)
+            .map(|i| self.ratios.get(i).copied().unwrap_or(1.0))
+            .collect();
+        if weights.iter().sum::<f64>() == 0.0 {
+            weights = vec![1.0; members];
+        }
+        let cuts = boundaries(total, &weights);
+        let slots: Vec<Option<Chunk>> = (0..members)
+            .map(|i| {
+                let len = cuts[i + 1] - cuts[i];
+                (len > 0).then_some(Chunk { start: cuts[i], len, steal: false })
+            })
+            .collect();
+        Box::new(StaticSource { slots: Mutex::new(slots) })
+    }
+}
+
+/// Cumulative cut points for a proportional split: `cuts[i]..cuts[i+1]`
+/// is member `i`'s range, `cuts[0] == 0`, `cuts[n] == total`, and the
+/// sequence is monotone, so the ranges tile `0..total` exactly.
+fn boundaries(total: usize, weights: &[f64]) -> Vec<usize> {
+    let sum: f64 = weights.iter().sum();
+    let n = weights.len();
+    let mut cuts = Vec::with_capacity(n + 1);
+    cuts.push(0usize);
+    let mut acc = 0.0;
+    for (i, w) in weights.iter().enumerate() {
+        acc += w;
+        let cut =
+            if i + 1 == n { total } else { (total as f64 * acc / sum).round() as usize };
+        let prev = *cuts.last().expect("cuts is non-empty");
+        cuts.push(cut.clamp(prev, total));
+    }
+    cuts
+}
+
+struct StaticSource {
+    slots: Mutex<Vec<Option<Chunk>>>,
+}
+
+impl ChunkSource for StaticSource {
+    fn next(&self, dev: usize, _rate: f64) -> Option<Chunk> {
+        self.slots.lock().expect("static source poisoned").get_mut(dev)?.take()
+    }
+}
+
+/// Chunked self-scheduling with throughput feedback (the EngineCL-style
+/// dynamic policy): members pull chunks from a shared cursor. Before a
+/// member has produced feedback it receives small starter chunks (a
+/// quarter of its even share); afterwards each grab is half of its
+/// rate-proportional share of the remaining work, so a fast jit member
+/// takes big chunks while a serial member nibbles — and nobody grabs
+/// the whole tail in one piece. Chunks a member pulls from outside its
+/// even-split segment count as steals.
+#[derive(Debug, Clone, Default)]
+pub struct Dynamic {
+    /// Fixed chunk size override: every grab is exactly this many
+    /// slices, disabling the feedback sizing. Useful for deterministic
+    /// tests and for benchmarking the sizing itself.
+    pub chunk: Option<usize>,
+}
+
+impl Dynamic {
+    /// Feedback-sized chunks (the default).
+    pub fn new() -> Dynamic {
+        Dynamic { chunk: None }
+    }
+
+    /// Fixed-size chunks of `size` slices.
+    pub fn fixed(size: usize) -> Dynamic {
+        Dynamic { chunk: Some(size.max(1)) }
+    }
+}
+
+impl SchedPolicy for Dynamic {
+    fn name(&self) -> String {
+        match self.chunk {
+            Some(c) => format!("dynamic[chunk={c}]"),
+            None => "dynamic".to_string(),
+        }
+    }
+
+    fn plan(&self, total: usize, members: usize) -> Box<dyn ChunkSource> {
+        Box::new(DynamicSource {
+            total,
+            members: members.max(1),
+            fixed: self.chunk,
+            state: Mutex::new(DynamicState { next: 0, rates: vec![0.0; members.max(1)] }),
+        })
+    }
+}
+
+struct DynamicState {
+    next: usize,
+    rates: Vec<f64>,
+}
+
+struct DynamicSource {
+    total: usize,
+    members: usize,
+    fixed: Option<usize>,
+    state: Mutex<DynamicState>,
+}
+
+impl ChunkSource for DynamicSource {
+    fn next(&self, dev: usize, rate: f64) -> Option<Chunk> {
+        debug_assert!(dev < self.members);
+        let mut st = self.state.lock().expect("dynamic source poisoned");
+        if st.next >= self.total {
+            return None;
+        }
+        if rate > 0.0 && rate.is_finite() {
+            st.rates[dev] = rate;
+        }
+        let remaining = self.total - st.next;
+        let size = match self.fixed {
+            Some(c) => c,
+            None => {
+                let known: f64 = st.rates.iter().filter(|r| **r > 0.0).sum();
+                let mine = st.rates.get(dev).copied().unwrap_or(0.0);
+                let share = if mine > 0.0 && known > 0.0 {
+                    (remaining as f64 * mine / (2.0 * known)).round() as usize
+                } else {
+                    remaining / (self.members * 4)
+                };
+                share.max(1)
+            }
+        };
+        let size = size.clamp(1, remaining);
+        let start = st.next;
+        st.next += size;
+        // Even-split segment this member would own under a static even
+        // partition; pulling from outside it is a steal.
+        let fair_lo = self.total * dev / self.members;
+        let fair_hi = self.total * (dev + 1) / self.members;
+        let steal = start < fair_lo || start >= fair_hi;
+        Some(Chunk { start, len: size, steal })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain a source by polling members round-robin with the given fake
+    /// rates; returns all chunks handed out.
+    fn drain(src: &dyn ChunkSource, members: usize, rates: &[f64]) -> Vec<(usize, Chunk)> {
+        let mut out = Vec::new();
+        let mut live: Vec<usize> = (0..members).collect();
+        while !live.is_empty() {
+            let mut still = Vec::new();
+            for &d in &live {
+                if let Some(c) = src.next(d, rates.get(d).copied().unwrap_or(0.0)) {
+                    out.push((d, c));
+                    still.push(d);
+                }
+            }
+            live = still;
+        }
+        out
+    }
+
+    /// Every slice of `0..total` covered exactly once.
+    fn assert_exact_cover(total: usize, chunks: &[(usize, Chunk)]) {
+        let mut seen = vec![0usize; total];
+        for (_, c) in chunks {
+            assert!(c.len >= 1, "empty chunk handed out");
+            for s in c.start..c.start + c.len {
+                seen[s] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1), "partition is not an exact cover: {seen:?}");
+    }
+
+    #[test]
+    fn static_split_tiles_exactly() {
+        for (total, ratios) in [
+            (64, vec![1.0, 1.0, 1.0]),
+            (7, vec![1.0, 2.0, 3.0]),
+            (1, vec![5.0, 1.0]),
+            (100, vec![0.0, 1.0]),
+            (13, vec![1.0]),
+        ] {
+            let members = ratios.len();
+            let src = StaticSplit::new(ratios).plan(total, members);
+            assert_exact_cover(total, &drain(&*src, members, &[]));
+        }
+    }
+
+    #[test]
+    fn static_split_sanitises_ratios() {
+        // Negative/NaN entries become 0; an all-zero list degrades to even.
+        let src = StaticSplit::new(vec![-1.0, f64::NAN]).plan(10, 2);
+        let chunks = drain(&*src, 2, &[]);
+        assert_exact_cover(10, &chunks);
+        assert_eq!(chunks.len(), 2, "even fallback gives both members work");
+    }
+
+    #[test]
+    fn static_split_is_proportional() {
+        let src = StaticSplit::new(vec![1.0, 3.0]).plan(100, 2);
+        let chunks = drain(&*src, 2, &[]);
+        let d0: usize = chunks.iter().filter(|(d, _)| *d == 0).map(|(_, c)| c.len).sum();
+        let d1: usize = chunks.iter().filter(|(d, _)| *d == 1).map(|(_, c)| c.len).sum();
+        assert_eq!((d0, d1), (25, 75));
+    }
+
+    #[test]
+    fn static_split_pads_missing_ratios_with_one() {
+        let src = StaticSplit::new(vec![2.0]).plan(40, 3);
+        let chunks = drain(&*src, 3, &[]);
+        assert_exact_cover(40, &chunks);
+        let d0: usize = chunks.iter().filter(|(d, _)| *d == 0).map(|(_, c)| c.len).sum();
+        assert_eq!(d0, 20, "explicit ratio 2 vs two implicit 1s");
+    }
+
+    #[test]
+    fn dynamic_fixed_chunks_tile_exactly() {
+        for chunk in [1, 2, 3, 7, 64, 1000] {
+            let src = Dynamic::fixed(chunk).plan(64, 3);
+            assert_exact_cover(64, &drain(&*src, 3, &[]));
+        }
+    }
+
+    #[test]
+    fn dynamic_feedback_chunks_tile_exactly() {
+        let src = Dynamic::new().plan(257, 4);
+        assert_exact_cover(257, &drain(&*src, 4, &[100.0, 1.0, 50.0, 0.0]));
+    }
+
+    #[test]
+    fn dynamic_feedback_sizes_follow_rates() {
+        // A member reporting 9x the other's throughput must receive the
+        // larger total share.
+        let src = Dynamic::new().plan(1000, 2);
+        let chunks = drain(&*src, 2, &[90.0, 10.0]);
+        let fast: usize = chunks.iter().filter(|(d, _)| *d == 0).map(|(_, c)| c.len).sum();
+        let slow: usize = chunks.iter().filter(|(d, _)| *d == 1).map(|(_, c)| c.len).sum();
+        assert_eq!(fast + slow, 1000);
+        assert!(fast > slow, "fast member got {fast} of 1000, slow got {slow}");
+    }
+
+    #[test]
+    fn dynamic_counts_steals_outside_even_segment() {
+        // One member drains everything: chunks past its even segment are
+        // steals.
+        let src = Dynamic::fixed(10).plan(60, 3);
+        let mut steals = 0;
+        while let Some(c) = src.next(0, 0.0) {
+            steals += usize::from(c.steal);
+        }
+        // Member 0's even segment is 0..20: chunks at 20,30,40,50 are steals.
+        assert_eq!(steals, 4);
+    }
+
+    #[test]
+    fn policy_names_are_descriptive() {
+        assert_eq!(StaticSplit::even().name(), "static[even]");
+        assert_eq!(StaticSplit::new(vec![1.0, 2.0]).name(), "static[1,2]");
+        assert_eq!(Dynamic::new().name(), "dynamic");
+        assert_eq!(Dynamic::fixed(4).name(), "dynamic[chunk=4]");
+    }
+}

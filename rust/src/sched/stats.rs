@@ -1,0 +1,102 @@
+//! Scheduler statistics: the per-device breakdown of a co-executed
+//! launch.
+//!
+//! [`LaunchStats`](crate::devices::LaunchStats) counters are
+//! engine-typed, so summing a serial member's numbers into a jit
+//! member's produces a blob that is only meaningful as a grand total.
+//! [`SchedStats`] keeps the per-device, per-engine rows intact — which
+//! member executed how many groups, how many chunks it pulled, how many
+//! of those were steals, and how long it was busy — and derives the
+//! totals and the balance metrics from them.
+
+use crate::devices::LaunchStats;
+
+/// One member device's share of a co-executed launch.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceSchedStats {
+    /// Member device name.
+    pub name: String,
+    /// Work-groups this member executed.
+    pub groups: usize,
+    /// Chunks this member pulled from the partitioner.
+    pub chunks: usize,
+    /// Chunks pulled from outside this member's even-split segment
+    /// (work-stealing under the dynamic policy; always 0 under static).
+    pub steals: usize,
+    /// Wall-clock nanoseconds this member spent executing sub-launches.
+    pub busy_ns: u64,
+    /// This member's engine-typed launch statistics.
+    pub stats: LaunchStats,
+}
+
+/// Per-device breakdown plus balance metrics for one scheduled launch.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    /// Partitioning policy name (e.g. `static[1,2,3]`, `dynamic`).
+    pub policy: String,
+    /// Grid dimension the launch was split along (slowest-varying used
+    /// dimension).
+    pub split_dim: usize,
+    /// One row per member device, in group member order.
+    pub devices: Vec<DeviceSchedStats>,
+}
+
+impl SchedStats {
+    /// Grand-total launch statistics across all members (engine-typed
+    /// counters summed into one blob — see the per-device rows for the
+    /// meaningful breakdown).
+    pub fn total(&self) -> LaunchStats {
+        let mut t = LaunchStats::default();
+        for d in &self.devices {
+            t.accumulate(&d.stats);
+        }
+        t
+    }
+
+    /// Total work-groups executed across all members.
+    pub fn groups(&self) -> usize {
+        self.devices.iter().map(|d| d.groups).sum()
+    }
+
+    /// Total chunks stolen across all members.
+    pub fn steals(&self) -> usize {
+        self.devices.iter().map(|d| d.steals).sum()
+    }
+
+    /// Imbalance ratio: the busiest member's wall-clock time over the
+    /// mean busy time. `1.0` is a perfectly balanced launch; `n` (the
+    /// member count) means one device did all the work while the rest
+    /// idled.
+    pub fn imbalance(&self) -> f64 {
+        let n = self.devices.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let sum: u64 = self.devices.iter().map(|d| d.busy_ns).sum();
+        if sum == 0 {
+            return 1.0;
+        }
+        let max = self.devices.iter().map(|d| d.busy_ns).max().unwrap_or(0);
+        max as f64 * n as f64 / sum as f64
+    }
+
+    /// Fold another scheduled launch's breakdown into this one
+    /// (multi-pass apps: rows match member-by-member). Breakdown shapes
+    /// that disagree (different group compositions) replace `self` with
+    /// the later launch rather than mixing rows from different members.
+    pub fn accumulate(&mut self, other: &SchedStats) {
+        if self.devices.len() != other.devices.len()
+            || self.devices.iter().zip(&other.devices).any(|(a, b)| a.name != b.name)
+        {
+            *self = other.clone();
+            return;
+        }
+        for (d, o) in self.devices.iter_mut().zip(&other.devices) {
+            d.groups += o.groups;
+            d.chunks += o.chunks;
+            d.steals += o.steals;
+            d.busy_ns += o.busy_ns;
+            d.stats.accumulate(&o.stats);
+        }
+    }
+}

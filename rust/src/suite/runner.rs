@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 use crate::cl::{CommandQueue, Context, Event, Kernel, KernelArg, Program, QueueProperties};
 use crate::cl::error::{Error, Result};
 use crate::devices::{Device, LaunchStats};
+use crate::sched::SchedStats;
 
 use super::{App, BufInit, PassArg};
 
@@ -26,6 +27,9 @@ pub struct RunResult {
     pub kernel_time: Duration,
     /// Aggregate device stats.
     pub stats: LaunchStats,
+    /// Per-device scheduler breakdown, accumulated across passes when
+    /// the device is a heterogeneous group (`None` on single devices).
+    pub sched: Option<SchedStats>,
     /// The program the run built — callers report its specialisation
     /// cache counters and compiled-kernel stats from here instead of
     /// recompiling anything.
@@ -124,14 +128,21 @@ pub fn run_with_program(
     }
 
     let mut stats = LaunchStats::default();
+    let mut sched: Option<SchedStats> = None;
     let mut kernel_time = Duration::ZERO;
     for ev in &kernel_events {
         let s = ev.wait()?;
         stats.accumulate(&s);
         kernel_time += Duration::from_nanos(ev.duration_ns() as u64);
+        if let Some(sc) = ev.sched_stats() {
+            match &mut sched {
+                Some(total) => total.accumulate(&sc),
+                None => sched = Some(sc),
+            }
+        }
     }
     queue.finish()?;
-    Ok(RunResult { buffers: out, kernel_time, stats, program })
+    Ok(RunResult { buffers: out, kernel_time, stats, sched, program })
 }
 
 /// Time the native baseline.

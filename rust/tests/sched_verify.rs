@@ -1,0 +1,200 @@
+//! Heterogeneous scheduler verification: partition-coverage properties
+//! over the `ChunkSource` seam (every work-group handed out exactly
+//! once, no matter the policy, member count, ratios, or interleave), plus
+//! host-API integration tests that a split launch executes every group
+//! exactly once, reports a consistent per-member breakdown, and composes
+//! with user global offsets bit-identically to a single-device run.
+
+use std::sync::Arc;
+
+use poclrs::cl::{CommandQueue, Context, Kernel, KernelArg, Program, QueueProperties};
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::sched::{ChunkSource as _, DeviceGroup, Dynamic, SchedPolicy, StaticSplit};
+use poclrs::suite::{all_apps, runner, SizeClass};
+use poclrs::testing::check;
+
+/// Property: for any total, member count, policy, polling interleave,
+/// and reported throughput rates, draining a plan covers every
+/// work-group index exactly once — the scheduler can never skip or
+/// double-execute a group.
+#[test]
+fn any_partition_covers_every_group_exactly_once() {
+    check(300, |rng| {
+        let total = rng.range(1, 400);
+        let members = rng.range(1, 6);
+        let policy: Arc<dyn SchedPolicy> = match rng.below(4) {
+            0 => {
+                let ratios: Vec<f64> =
+                    (0..members).map(|_| f64::from(rng.f32(0.0, 8.0))).collect();
+                Arc::new(StaticSplit::new(ratios))
+            }
+            1 => Arc::new(StaticSplit::even()),
+            2 => Arc::new(Dynamic::fixed(rng.range(1, 48))),
+            _ => Arc::new(Dynamic::new()),
+        };
+        let src = policy.plan(total, members);
+        let mut cover = vec![0usize; total];
+        // Poll live members in a random interleave with random rates —
+        // the scheduler must tile the range under any concurrency order.
+        let mut live: Vec<usize> = (0..members).collect();
+        while !live.is_empty() {
+            let pick = rng.below(live.len());
+            let dev = live[pick];
+            let rate = f64::from(rng.f32(0.5, 500.0));
+            match src.next(dev, rate) {
+                Some(c) => {
+                    assert!(c.len > 0, "empty chunk from {}", policy.name());
+                    assert!(
+                        c.start + c.len <= total,
+                        "chunk [{}, {}) overruns total {} under {}",
+                        c.start,
+                        c.start + c.len,
+                        total,
+                        policy.name()
+                    );
+                    for slot in cover.iter_mut().skip(c.start).take(c.len) {
+                        *slot += 1;
+                    }
+                }
+                None => {
+                    live.swap_remove(pick);
+                }
+            }
+        }
+        for (g, &n) in cover.iter().enumerate() {
+            assert_eq!(
+                n, 1,
+                "group {g} covered {n} times (total={total}, members={members}, policy={})",
+                policy.name()
+            );
+        }
+    });
+}
+
+/// A group of basic devices over the given engines.
+fn group_of(engines: &[EngineKind], policy: Arc<dyn SchedPolicy>) -> Arc<dyn Device> {
+    let members: Vec<Arc<dyn Device>> = engines
+        .iter()
+        .map(|&e| Arc::new(BasicDevice::new(e)) as Arc<dyn Device>)
+        .collect();
+    Arc::new(DeviceGroup::new("group", members, policy).expect("valid group"))
+}
+
+fn policies() -> Vec<Arc<dyn SchedPolicy>> {
+    vec![
+        Arc::new(Dynamic::fixed(1)),
+        Arc::new(Dynamic::new()),
+        Arc::new(StaticSplit::new(vec![3.0, 1.0, 2.0])),
+        Arc::new(StaticSplit::even()),
+    ]
+}
+
+/// Integration: each work-group increments its own cell once, so any
+/// skipped or doubly-executed group is visible in the output. The
+/// per-member scheduler breakdown must account for every group.
+#[test]
+fn split_launch_executes_every_group_exactly_once() {
+    const SRC: &str = "__kernel void tick(__global float *x) {
+        x[get_group_id(0)] += 1.0f;
+    }";
+    let n = 64usize;
+    for policy in policies() {
+        let pname = policy.name();
+        let device =
+            group_of(&[EngineKind::Serial, EngineKind::Serial, EngineKind::Serial], policy);
+        let ctx = Arc::new(Context::new(device));
+        let q = CommandQueue::new(ctx.clone());
+        let program = Program::build(SRC).unwrap();
+        let buf = ctx.create_buffer(n * 4).unwrap();
+        let up = q.enqueue_write_slice(buf, &vec![0.0f32; n], &[]).unwrap();
+        let mut k = Kernel::new(&program, "tick").unwrap();
+        k.set_arg(0, KernelArg::Buf(buf)).unwrap();
+        let ev = q
+            .enqueue_nd_range(&program, &k, [n, 1, 1], [1, 1, 1], &[up])
+            .unwrap_or_else(|e| panic!("[{pname}] split launch failed: {e}"));
+        let rd = q.enqueue_read_buffer(buf, 0, n * 4, &[ev]).unwrap();
+        let out: Vec<f32> = rd.wait_vec().unwrap();
+        for (g, &v) in out.iter().enumerate() {
+            assert_eq!(v, 1.0, "[{pname}] group {g} executed {v} times");
+        }
+        let sched = ev
+            .sched_stats()
+            .unwrap_or_else(|| panic!("[{pname}] split launch must report scheduler stats"));
+        assert_eq!(sched.devices.len(), 3, "[{pname}] member rows");
+        assert_eq!(sched.groups(), n, "[{pname}] per-member groups sum to the launch");
+        assert_eq!(sched.total().workgroups, n, "[{pname}] stats totals agree");
+        let per: usize = sched.devices.iter().map(|d| d.stats.workgroups).sum();
+        assert_eq!(per, n, "[{pname}] per-member launch stats sum to the total");
+        q.finish().unwrap();
+    }
+}
+
+/// Integration: a split launch with a user global offset must compose
+/// the partition offset with the user's — every work-item observes the
+/// same ids, sizes, and offset as on a single device, bit-identically.
+#[test]
+fn offset_split_launch_matches_single_device() {
+    const SRC: &str = "__kernel void probe(__global float *x) {
+        size_t i = get_global_id(0);
+        x[i] = (float)(get_group_id(0) * 1000u + get_num_groups(0) * 10u)
+             + (float)get_global_offset(0)
+             + (float)get_global_size(0) * 0.5f
+             + (float)get_local_id(0);
+    }";
+    let n = 96usize;
+    let run = |device: Arc<dyn Device>| -> Vec<f32> {
+        let ctx = Arc::new(Context::new(device));
+        let q = CommandQueue::new(ctx.clone());
+        let program = Program::build(SRC).unwrap();
+        let buf = ctx.create_buffer(n * 4).unwrap();
+        let up = q.enqueue_write_slice(buf, &vec![0.0f32; n], &[]).unwrap();
+        let mut k = Kernel::new(&program, "probe").unwrap();
+        k.set_arg(0, KernelArg::Buf(buf)).unwrap();
+        let ev = q
+            .enqueue_nd_range_at(&program, &k, [32, 1, 1], [4, 1, 1], [24, 0, 0], &[up])
+            .unwrap();
+        let rd = q.enqueue_read_buffer(buf, 0, n * 4, &[ev]).unwrap();
+        let out: Vec<f32> = rd.wait_vec().unwrap();
+        q.finish().unwrap();
+        out
+    };
+    let base = run(Arc::new(BasicDevice::new(EngineKind::Serial)));
+    // The offset window must actually have been written.
+    assert!(base[24..56].iter().any(|&v| v != 0.0), "probe kernel wrote its window");
+    let engines =
+        [EngineKind::Serial, EngineKind::GangVector(4), EngineKind::Bytecode(8)];
+    for policy in policies() {
+        let pname = policy.name();
+        let got = run(group_of(&engines, policy));
+        for (j, (a, b)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "[{pname}] x[{j}] = {b}, single-device {a}"
+            );
+        }
+    }
+}
+
+/// Integration: accumulated scheduler stats across a multi-pass suite
+/// app stay consistent — member rows keep their shape and the grand
+/// totals match the aggregate launch stats.
+#[test]
+fn sched_stats_accumulate_consistently_across_passes() {
+    let app = all_apps(SizeClass::Small)
+        .into_iter()
+        .find(|a| a.passes.len() > 1)
+        .expect("the suite has a multi-pass app");
+    let engines =
+        [EngineKind::Serial, EngineKind::GangVector(4), EngineKind::Bytecode(8)];
+    let device = group_of(&engines, Arc::new(Dynamic::new()));
+    let program = Program::build(app.source).unwrap();
+    let r = runner::run_with_program(&app, device, QueueProperties::InOrder, program).unwrap();
+    runner::verify(&app, &r.buffers).unwrap();
+    let sched = r.sched.expect("group run reports scheduler stats");
+    assert_eq!(sched.devices.len(), 3);
+    assert_eq!(sched.groups(), r.stats.workgroups);
+    assert_eq!(sched.total().workgroups, r.stats.workgroups);
+    assert_eq!(sched.total().dispatches(), r.stats.dispatches());
+    assert!(sched.imbalance() >= 1.0, "imbalance is a max/mean ratio");
+}

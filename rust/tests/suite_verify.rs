@@ -8,16 +8,30 @@
 //!
 //! Setting `POCLRS_ENGINE=bytecode` restricts the device matrix to the
 //! bytecode-tier devices; `POCLRS_ENGINE=jit` restricts it to the
-//! template-jit devices (the dedicated CI legs).
+//! template-jit devices; `POCLRS_ENGINE=multidev` restricts it to the
+//! heterogeneous device-group entries (the dedicated CI legs).
 
 use std::sync::Arc;
 
-use poclrs::cl::{Program, QueueProperties};
+use poclrs::cl::{CommandQueue, Context, Kernel, KernelArg, Program, QueueProperties};
 use poclrs::devices::{
     basic::BasicDevice, threaded::ThreadedDevice, ttasim::TtaSimDevice, Device, EngineKind,
 };
 use poclrs::kcc::opt::OptLevel;
+use poclrs::sched::{DeviceGroup, Dynamic, SchedPolicy, StaticSplit};
 use poclrs::suite::{all_apps, runner, App, BufInit, SizeClass};
+
+/// Heterogeneous 3-member group with deliberately uneven engines
+/// (serial, lane-batched vector at width 4, threaded-bytecode at width
+/// 8) under the given partitioning policy.
+fn multidev(policy: Arc<dyn SchedPolicy>) -> Arc<dyn Device> {
+    let members: Vec<Arc<dyn Device>> = vec![
+        Arc::new(BasicDevice::new(EngineKind::Serial)),
+        Arc::new(BasicDevice::new(EngineKind::GangVector(4))),
+        Arc::new(BasicDevice::new(EngineKind::Bytecode(8))),
+    ];
+    Arc::new(DeviceGroup::new("multidev", members, policy).expect("valid group"))
+}
 
 fn devices() -> Vec<(&'static str, Arc<dyn Device>)> {
     let all: Vec<(&'static str, Arc<dyn Device>)> = vec![
@@ -35,12 +49,15 @@ fn devices() -> Vec<(&'static str, Arc<dyn Device>)> {
         ("pthread-gangvector8", Arc::new(ThreadedDevice::new(EngineKind::GangVector(8), 4))),
         ("pthread-bytecode8", Arc::new(ThreadedDevice::new(EngineKind::Bytecode(8), 4))),
         ("pthread-jit8", Arc::new(ThreadedDevice::new(EngineKind::Jit(8), 4))),
+        ("multidev-dynamic", multidev(Arc::new(Dynamic::new()))),
+        ("multidev-static", multidev(Arc::new(StaticSplit::new(vec![1.0, 2.0, 3.0])))),
     ];
-    // The CI bytecode/jit legs run the same matrix restricted to the
-    // tier under test.
+    // The CI bytecode/jit/multidev legs run the same matrix restricted
+    // to the tier under test.
     match std::env::var("POCLRS_ENGINE").as_deref() {
         Ok("bytecode") => all.into_iter().filter(|(name, _)| name.contains("bytecode")).collect(),
         Ok("jit") => all.into_iter().filter(|(name, _)| name.contains("jit")).collect(),
+        Ok("multidev") => all.into_iter().filter(|(name, _)| name.contains("multidev")).collect(),
         _ => all,
     }
 }
@@ -78,6 +95,94 @@ fn all_apps_verify_on_ttasim_both_modes() {
         }
     }
     assert!(failures.is_empty(), "ttasim failures:\n{}", failures.join("\n"));
+}
+
+/// Satellite for the global-offset fix: an offset launch through the
+/// host API must produce the same window of results on every device in
+/// the matrix — including the heterogeneous groups, whose sub-launches
+/// must compose the partition offset with the user's global offset.
+#[test]
+fn global_offset_launches_identical_across_devices() {
+    const SRC: &str = "__kernel void off(__global float *x) {
+        size_t i = get_global_id(0);
+        x[i] = (float)(i * 3u) + (float)get_global_offset(0);
+    }";
+    let n = 64usize;
+    // global [16] at offset 32 with local [8]: ids 32..48 write 3*i+32,
+    // the rest of the buffer stays zero.
+    let expect: Vec<f32> =
+        (0..n).map(|j| if (32..48).contains(&j) { (3 * j + 32) as f32 } else { 0.0 }).collect();
+    for (dname, device) in devices() {
+        let ctx = Arc::new(Context::new(device));
+        let q = CommandQueue::new(ctx.clone());
+        let program = Program::build(SRC).unwrap();
+        let buf = ctx.create_buffer(n * 4).unwrap();
+        let up = q.enqueue_write_slice(buf, &vec![0.0f32; n], &[]).unwrap();
+        let mut k = Kernel::new(&program, "off").unwrap();
+        k.set_arg(0, KernelArg::Buf(buf)).unwrap();
+        let ev = q
+            .enqueue_nd_range_at(&program, &k, [16, 1, 1], [8, 1, 1], [32, 0, 0], &[up])
+            .unwrap_or_else(|e| panic!("{dname}: offset launch failed: {e}"));
+        let rd = q.enqueue_read_buffer(buf, 0, n * 4, &[ev]).unwrap();
+        let out: Vec<f32> = rd.wait_vec().unwrap();
+        assert_eq!(out, expect, "{dname}: offset launch window");
+        q.finish().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Heterogeneous device-group acceptance
+// ---------------------------------------------------------------------
+
+/// Acceptance: suite-wide bit-identical results between a 1-device run
+/// and a 3-member heterogeneous group (uneven engines) under both the
+/// `Static` and `Dynamic` policies, with the scheduler breakdown
+/// accounting for every work-group.
+#[test]
+fn multidev_group_bit_identical_to_single_device_both_policies() {
+    let policies: Vec<Arc<dyn SchedPolicy>> = vec![
+        Arc::new(StaticSplit::new(vec![1.0, 4.0, 2.0])),
+        Arc::new(StaticSplit::even()),
+        Arc::new(Dynamic::fixed(1)),
+        Arc::new(Dynamic::new()),
+    ];
+    for app in all_apps(SizeClass::Small) {
+        let base_dev: Arc<dyn Device> = Arc::new(BasicDevice::new(EngineKind::Serial));
+        let base = runner::run_with_program(
+            &app,
+            base_dev,
+            QueueProperties::InOrder,
+            Program::build(app.source).unwrap(),
+        )
+        .unwrap_or_else(|e| panic!("{} single-device baseline: {e}", app.name));
+        runner::verify(&app, &base.buffers).unwrap();
+        for policy in &policies {
+            let pname = policy.name();
+            let group = multidev(policy.clone());
+            let r = runner::run_with_program(
+                &app,
+                group,
+                QueueProperties::InOrder,
+                Program::build(app.source).unwrap(),
+            )
+            .unwrap_or_else(|e| panic!("{} multidev[{pname}]: {e}", app.name));
+            assert_bit_identical(
+                &base.buffers,
+                &r.buffers,
+                &format!("{} single-device vs multidev[{pname}]", app.name),
+            );
+            let sched = r.sched.as_ref().unwrap_or_else(|| {
+                panic!("{} multidev[{pname}]: group run must report scheduler stats", app.name)
+            });
+            assert_eq!(sched.devices.len(), 3, "{} multidev[{pname}]: member rows", app.name);
+            assert_eq!(
+                sched.groups(),
+                r.stats.workgroups,
+                "{} multidev[{pname}]: per-member groups must sum to the launch total",
+                app.name
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
