@@ -1,0 +1,90 @@
+//! Tracer overhead — median suite-app wall-clock with the tracer
+//! disabled vs enabled, emitting a `BENCH_trace.json` snapshot (the
+//! ISSUE 10 criterion: the disabled tracer costs one relaxed atomic
+//! load per emit point, so the `off` column *is* the product path and
+//! the `on`/`off` ratio bounds what full collection adds).
+//!
+//! Run with `cargo bench --bench bench_trace`; `POCLRS_BENCH_MS` bounds
+//! the per-case sampling budget (default 300 ms).
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Duration;
+
+use poclrs::bench::bench_fn;
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::suite::{app_by_name, runner, SizeClass};
+use poclrs::trace;
+
+struct Row {
+    name: &'static str,
+    off_ms: f64,
+    on_ms: f64,
+    events: usize,
+}
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("POCLRS_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(300),
+    );
+    let apps = ["MatrixMultiplication", "BlackScholes"];
+    let device: Arc<dyn Device> = Arc::new(BasicDevice::new(EngineKind::GangVector(8)));
+
+    println!("== Tracer overhead (gang-vector8) ==\n");
+    let mut rows: Vec<Row> = Vec::new();
+    for name in apps {
+        let Some(app) = app_by_name(name, SizeClass::Bench) else {
+            continue;
+        };
+        if let Err(e) = runner::run_and_verify(&app, device.clone()) {
+            println!("{name:<22} FAILED {e}");
+            continue;
+        }
+        trace::set_enabled(false);
+        let _ = trace::take_events();
+        let off = bench_fn(format!("{name}/trace-off"), 1, 15, budget, || {
+            let _ = runner::run_on_device(&app, device.clone()).unwrap();
+        });
+        trace::set_enabled(true);
+        let _ = trace::take_events();
+        let on = bench_fn(format!("{name}/trace-on"), 1, 15, budget, || {
+            let _ = runner::run_on_device(&app, device.clone()).unwrap();
+            // Draining per iteration bounds buffer growth and charges the
+            // drain to the traced configuration, where it belongs.
+            let _ = trace::take_events();
+        });
+        // One more traced run for the per-run event census.
+        let _ = runner::run_on_device(&app, device.clone()).unwrap();
+        let events = trace::take_events().len();
+        trace::set_enabled(false);
+        println!(
+            "{name:<22} off={:>8.2}ms  on={:>8.2}ms  overhead={:.3}x  events/run={events}",
+            off.ms(),
+            on.ms(),
+            on.ms() / off.ms(),
+        );
+        rows.push(Row { name, off_ms: off.ms(), on_ms: on.ms(), events });
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"trace\",\n  \"apps\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"name\": \"{}\", \"off_ms\": {:.4}, \"on_ms\": {:.4}, \"overhead\": {:.4}, \"events_per_run\": {}}}{}\n",
+            r.name,
+            r.off_ms,
+            r.on_ms,
+            r.on_ms / r.off_ms,
+            r.events,
+            if i + 1 < rows.len() { "," } else { "" },
+        );
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_trace.json", &json) {
+        Ok(()) => println!("\nsnapshot written to BENCH_trace.json"),
+        Err(e) => println!("\ncould not write BENCH_trace.json: {e}"),
+    }
+    println!(
+        "(expectation: the disabled path is the product path — one relaxed\n atomic load per emit point — and full collection stays within a few\n percent on these workloads; the Chrome export itself is off the\n measured path, it only runs at drain time)"
+    );
+}

@@ -96,10 +96,14 @@ impl DiskCache {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .map_err(|e| Error::Io(format!("cannot create cache dir {}: {e}", dir.display())))?;
-        let max_bytes = std::env::var("POCLRS_CACHE_MAX_BYTES")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(DEFAULT_MAX_BYTES);
+        let max_bytes = crate::envcfg::parse_or_warn(
+            "POCLRS_CACHE_MAX_BYTES",
+            std::env::var("POCLRS_CACHE_MAX_BYTES").ok().as_deref(),
+            "a byte count",
+            "using the 256 MiB default",
+            |s| s.parse::<u64>().ok(),
+        )
+        .unwrap_or(DEFAULT_MAX_BYTES);
         Ok(DiskCache { dir, max_bytes, stats: Mutex::new(CacheStats::default()) })
     }
 
@@ -138,19 +142,36 @@ impl DiskCache {
     /// version-mismatched entries are misses; unusable files are removed
     /// so the follow-up write-back replaces them.
     pub fn load(&self, key: CacheKey) -> Option<WorkGroupFunction> {
+        let mut span = crate::trace::enabled()
+            .then(|| crate::trace::span(crate::trace::CAT_CACHE, "disk_load"));
         let path = self.entry_path(key);
         let bytes = match std::fs::read(&path) {
             Ok(b) => b,
             Err(_) => {
                 self.stats.lock().unwrap().misses += 1;
+                crate::trace::metrics::add("cache.disk_misses", 1);
+                if let Some(sp) = span.as_mut() {
+                    sp.arg("outcome", crate::trace::ArgVal::s("miss"));
+                }
                 return None;
             }
         };
-        match poclbin::decode_wgf(&bytes) {
+        let decoded = {
+            let _decode_span = crate::trace::span(crate::trace::CAT_CACHE, "decode");
+            poclbin::decode_wgf(&bytes)
+        };
+        match decoded {
             Ok(wgf) => {
                 let mut s = self.stats.lock().unwrap();
                 s.hits += 1;
                 s.bytes_read += bytes.len() as u64;
+                drop(s);
+                crate::trace::metrics::add("cache.disk_hits", 1);
+                crate::trace::metrics::add("cache.bytes_read", bytes.len() as u64);
+                if let Some(sp) = span.as_mut() {
+                    sp.arg("outcome", crate::trace::ArgVal::s("hit"));
+                    sp.arg("bytes", crate::trace::ArgVal::u(bytes.len() as u64));
+                }
                 Some(wgf)
             }
             Err(_) => {
@@ -159,6 +180,12 @@ impl DiskCache {
                 let mut s = self.stats.lock().unwrap();
                 s.misses += 1;
                 s.rejected += 1;
+                drop(s);
+                crate::trace::metrics::add("cache.disk_misses", 1);
+                crate::trace::metrics::add("cache.rejected", 1);
+                if let Some(sp) = span.as_mut() {
+                    sp.arg("outcome", crate::trace::ArgVal::s("rejected"));
+                }
                 None
             }
         }
@@ -167,7 +194,14 @@ impl DiskCache {
     /// Write (or overwrite) an entry atomically: serialize, write to a
     /// unique tmp file in the cache dir, then rename into place.
     pub fn store(&self, key: CacheKey, wgf: &WorkGroupFunction) -> Result<()> {
+        let mut span = crate::trace::enabled()
+            .then(|| crate::trace::span(crate::trace::CAT_CACHE, "write_back"));
         let bytes = poclbin::encode_wgf(wgf);
+        crate::trace::metrics::add("cache.writes", 1);
+        crate::trace::metrics::add("cache.bytes_written", bytes.len() as u64);
+        if let Some(sp) = span.as_mut() {
+            sp.arg("bytes", crate::trace::ArgVal::u(bytes.len() as u64));
+        }
         let tmp = self.dir.join(format!(
             ".{}-{}-{}.tmp",
             key.hex(),

@@ -314,11 +314,20 @@ impl Context {
         ev.mark_running(self.epoch.elapsed().as_nanos() as u64);
         match cmd.execute(self) {
             Ok(out) => {
+                let exec_span = out.sched.as_ref().and_then(|sc| sc.exec_span()).map(
+                    |(start, end)| {
+                        (
+                            start.saturating_duration_since(self.epoch).as_nanos() as u64,
+                            end.saturating_duration_since(self.epoch).as_nanos() as u64,
+                        )
+                    },
+                );
                 ev.complete_ok(
                     self.epoch.elapsed().as_nanos() as u64,
                     out.stats,
                     out.sched,
                     out.payload,
+                    exec_span,
                 );
                 Ok(ev)
             }

@@ -22,13 +22,22 @@
 //! [`Event::wait_vec`]).
 
 use std::fmt;
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 
 use crate::cl::context::{vec_from_bytes, Scalar};
 use crate::cl::error::{Error, Result};
 use crate::cl::queue::SchedulerShared;
 use crate::devices::LaunchStats;
 use crate::sched::SchedStats;
+use crate::trace;
+
+/// Tracer identity of one command: the async track it renders on (its
+/// queue's track) and its process-unique async-span / flow-arrow id.
+#[derive(Debug, Clone, Copy)]
+struct TraceIds {
+    track: u64,
+    id: u64,
+}
 
 /// Execution status of a command (ordered by lifecycle progress).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -76,6 +85,9 @@ struct EventInner {
     /// flush it (avoids the wait-on-unflushed-queue deadlock). `None` for
     /// events produced by the context's blocking helpers.
     scheduler: Mutex<Option<Weak<SchedulerShared>>>,
+    /// Tracer identity, set once when the owning queue issues the
+    /// command while tracing is enabled.
+    trace: OnceLock<TraceIds>,
 }
 
 /// A live handle onto one enqueued command. Cheap to clone; clones share
@@ -98,7 +110,38 @@ impl Event {
             }),
             cv: Condvar::new(),
             scheduler: Mutex::new(None),
+            trace: OnceLock::new(),
         }))
+    }
+
+    /// Open this command's async trace span on `track` (the owning
+    /// queue's track). No-op unless tracing is enabled.
+    pub(crate) fn trace_begin(&self, track: u64) {
+        if !trace::enabled() {
+            return;
+        }
+        let ids = TraceIds { track, id: trace::next_id() };
+        if self.0.trace.set(ids).is_ok() {
+            trace::async_begin(trace::CAT_QUEUE, self.0.what.clone(), ids.track, ids.id);
+        }
+    }
+
+    /// The flow-arrow id of this command's trace span, if it has one
+    /// (used to draw wait-list edges between command spans).
+    pub(crate) fn trace_id(&self) -> Option<u64> {
+        self.0.trace.get().map(|t| t.id)
+    }
+
+    fn trace_mark(&self, name: &'static str) {
+        if let Some(t) = self.0.trace.get() {
+            trace::async_instant(trace::CAT_QUEUE, name, t.track, t.id);
+        }
+    }
+
+    fn trace_end(&self) {
+        if let Some(t) = self.0.trace.get() {
+            trace::async_end(trace::CAT_QUEUE, self.0.what.clone(), t.track, t.id);
+        }
     }
 
     /// Attach the owning queue's scheduler (for the implicit flush in
@@ -147,34 +190,61 @@ impl Event {
     }
 
     pub(crate) fn mark_submitted(&self, ns: u64) {
-        let mut st = self.0.state.lock().unwrap();
-        if st.status == CommandStatus::Queued {
-            st.status = CommandStatus::Submitted;
-            st.profile.submitted_ns = ns;
+        let newly = {
+            let mut st = self.0.state.lock().unwrap();
+            if st.status == CommandStatus::Queued {
+                st.status = CommandStatus::Submitted;
+                st.profile.submitted_ns = ns;
+                true
+            } else {
+                false
+            }
+        };
+        if newly {
+            self.trace_mark("submitted");
         }
     }
 
     pub(crate) fn mark_running(&self, ns: u64) {
-        let mut st = self.0.state.lock().unwrap();
-        st.status = CommandStatus::Running;
-        st.profile.start_ns = ns;
+        {
+            let mut st = self.0.state.lock().unwrap();
+            st.status = CommandStatus::Running;
+            st.profile.start_ns = ns;
+        }
+        self.trace_mark("running");
     }
 
+    /// Complete the command successfully at `ns`. For split launches,
+    /// `exec_span_ns` carries the union of all member sub-launch spans
+    /// as `(start, end)` queue-relative nanoseconds, so profiling covers
+    /// earliest-member-start → latest-member-end rather than just the
+    /// dispatching worker's return time.
     pub(crate) fn complete_ok(
         &self,
         ns: u64,
         stats: LaunchStats,
         sched: Option<SchedStats>,
         payload: Option<Vec<u8>>,
+        exec_span_ns: Option<(u64, u64)>,
     ) {
         {
             let mut st = self.0.state.lock().unwrap();
             st.status = CommandStatus::Complete;
             st.profile.end_ns = ns;
+            if let Some((start, end)) = exec_span_ns {
+                if start <= end && start >= st.profile.submitted_ns {
+                    st.profile.start_ns = start;
+                    st.profile.end_ns = end.max(st.profile.start_ns);
+                }
+            }
             st.stats = stats;
             st.sched = sched;
             st.payload = payload;
         }
+        // Close the trace span before waking waiters: a woken waiter may
+        // immediately drain the trace buffer, and the async `e` event must
+        // already be there for the span to balance.
+        self.trace_end();
         self.0.cv.notify_all();
     }
 
@@ -185,6 +255,7 @@ impl Event {
             st.profile.end_ns = ns;
             st.error = Some(err);
         }
+        self.trace_end();
         self.0.cv.notify_all();
     }
 

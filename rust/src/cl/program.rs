@@ -170,6 +170,13 @@ impl Program {
         opts: &CompileOptions,
     ) -> Result<Arc<WorkGroupFunction>> {
         let spec = SpecKey { kernel: kernel.to_string(), local, opts: opts.clone() };
+        let mut lookup = crate::trace::enabled().then(|| {
+            crate::trace::span_args(
+                crate::trace::CAT_CACHE,
+                "lookup",
+                vec![("kernel", crate::trace::ArgVal::s(kernel))],
+            )
+        });
         // One lock covers lookup, compile, and insert: counters stay
         // exact and concurrent enqueues never compile the same
         // specialisation twice.
@@ -177,6 +184,10 @@ impl Program {
         if let Some(w) = state.specs.get(&spec) {
             let w = w.clone();
             state.stats.memory_hits += 1;
+            crate::trace::metrics::add("cache.memory_hits", 1);
+            if let Some(sp) = lookup.as_mut() {
+                sp.arg("outcome", crate::trace::ArgVal::s("memory_hit"));
+            }
             return Ok(w);
         }
         if let Some(disk) = &self.disk {
@@ -188,10 +199,17 @@ impl Program {
                 if wgf.name == spec.kernel && wgf.local_size == spec.local {
                     // Jitted code is not part of the on-disk format;
                     // re-lower it from the cached bytecode.
-                    crate::exec::jit::attach(&mut wgf, spec.opts.gang_width);
+                    {
+                        let _jit_span =
+                            crate::trace::span(crate::trace::CAT_COMPILER, "jit_emit");
+                        crate::exec::jit::attach(&mut wgf, spec.opts.gang_width);
+                    }
                     let wgf = Arc::new(wgf);
                     state.stats.disk_hits += 1;
                     state.specs.insert(spec, wgf.clone());
+                    if let Some(sp) = lookup.as_mut() {
+                        sp.arg("outcome", crate::trace::ArgVal::s("disk_hit"));
+                    }
                     return Ok(wgf);
                 }
             }
@@ -200,8 +218,13 @@ impl Program {
             .module
             .kernel(kernel)
             .ok_or_else(|| Error::NotFound(format!("kernel `{kernel}`")))?;
+        if let Some(sp) = lookup.as_mut() {
+            sp.arg("outcome", crate::trace::ArgVal::s("compile"));
+        }
+        drop(lookup);
         let wgf = Arc::new(compile_workgroup(k, local, opts)?);
         state.stats.misses += 1;
+        crate::trace::metrics::add("cache.compile_misses", 1);
         state.specs.insert(spec.clone(), wgf.clone());
         drop(state);
         // Write-back outside the lock; persistence is best-effort (a

@@ -17,7 +17,8 @@
 //! independent transfers and launches overlap.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -29,6 +30,7 @@ use crate::cl::program::{Kernel, KernelArg, Program};
 use crate::exec::value::{SP_GLOBAL, SP_LOCAL};
 use crate::exec::VVal;
 use crate::kcc::CompileOptions;
+use crate::trace;
 
 /// Queue execution mode (`CL_QUEUE_OUT_OF_ORDER_EXEC_MODE_ENABLE` analog).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -175,24 +177,69 @@ fn worker_loop(shared: &SchedulerShared) {
         };
         let Some(job) = job else { return };
         if let Some(dep_err) = job.deps.iter().find_map(Event::error_of) {
+            trace::metrics::add("queue.errors", 1);
             job.event.complete_err(
                 shared.now_ns(),
                 Error::exec(format!("dependency failed: {dep_err}")),
             );
         } else {
             job.event.mark_running(shared.now_ns());
+            let traced = trace::enabled();
+            // The worker-side complete span; the wait-list edges render
+            // as flow arrows into it.
+            let run_span =
+                traced.then(|| trace::span(trace::CAT_QUEUE, format!("run {}", job.event.what())));
+            if traced {
+                for dep in &job.deps {
+                    if let Some(id) = dep.trace_id() {
+                        trace::flow_end(trace::CAT_QUEUE, id);
+                    }
+                }
+            }
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 job.cmd.execute(&shared.ctx)
             }));
+            if traced {
+                // Producing end of this command's own outgoing edges,
+                // anchored inside its run span now that the work is done.
+                if let Some(id) = job.event.trace_id() {
+                    trace::flow_start(trace::CAT_QUEUE, id);
+                }
+            }
+            drop(run_span);
             match result {
                 Ok(Ok(out)) => {
-                    job.event.complete_ok(shared.now_ns(), out.stats, out.sched, out.payload)
+                    trace::metrics::add("queue.commands", 1);
+                    // Split launches report the union of their member
+                    // sub-launch spans; convert to queue-relative ns so
+                    // profiling covers earliest start → latest end.
+                    let exec_span = out.sched.as_ref().and_then(|sc| sc.exec_span()).map(
+                        |(start, end)| {
+                            (
+                                start.saturating_duration_since(shared.epoch).as_nanos() as u64,
+                                end.saturating_duration_since(shared.epoch).as_nanos() as u64,
+                            )
+                        },
+                    );
+                    job.event.complete_ok(
+                        shared.now_ns(),
+                        out.stats,
+                        out.sched,
+                        out.payload,
+                        exec_span,
+                    )
                 }
-                Ok(Err(e)) => job.event.complete_err(shared.now_ns(), e),
-                Err(_) => job.event.complete_err(
-                    shared.now_ns(),
-                    Error::exec(format!("command `{}` panicked", job.event.what())),
-                ),
+                Ok(Err(e)) => {
+                    trace::metrics::add("queue.errors", 1);
+                    job.event.complete_err(shared.now_ns(), e)
+                }
+                Err(_) => {
+                    trace::metrics::add("queue.errors", 1);
+                    job.event.complete_err(
+                        shared.now_ns(),
+                        Error::exec(format!("command `{}` panicked", job.event.what())),
+                    )
+                }
             }
         }
         {
@@ -222,6 +269,11 @@ pub struct CommandQueue {
     shared: Arc<SchedulerShared>,
     workers: Vec<thread::JoinHandle<()>>,
     issued: Mutex<IssueState>,
+    /// Process-unique queue number (worker-thread names, trace track).
+    serial: u64,
+    /// Lazily allocated tracer track carrying this queue's command
+    /// lifecycle async spans.
+    track: OnceLock<u64>,
 }
 
 impl CommandQueue {
@@ -232,6 +284,8 @@ impl CommandQueue {
 
     /// Create a queue with explicit properties.
     pub fn with_properties(context: Arc<Context>, props: QueueProperties) -> CommandQueue {
+        static QUEUE_SERIAL: AtomicU64 = AtomicU64::new(0);
+        let serial = QUEUE_SERIAL.fetch_add(1, Ordering::Relaxed);
         let nworkers = match props {
             QueueProperties::InOrder => 1,
             QueueProperties::OutOfOrder => thread::available_parallelism()
@@ -251,12 +305,23 @@ impl CommandQueue {
             epoch: Instant::now(),
         });
         let workers = (0..nworkers)
-            .map(|_| {
+            .map(|i| {
                 let s = Arc::clone(&shared);
-                thread::spawn(move || worker_loop(&s))
+                thread::Builder::new()
+                    .name(format!("poclrs-q{serial}-w{i}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawn queue worker")
             })
             .collect();
-        CommandQueue { context, props, shared, workers, issued: Mutex::new(IssueState::default()) }
+        CommandQueue {
+            context,
+            props,
+            shared,
+            workers,
+            issued: Mutex::new(IssueState::default()),
+            serial,
+            track: OnceLock::new(),
+        }
     }
 
     /// The queue's execution mode.
@@ -268,6 +333,11 @@ impl CommandQueue {
     fn issue(&self, cmd: Command, wait: &[Event]) -> Event {
         let ev = Event::new(cmd.label(), self.shared.now_ns());
         ev.attach_scheduler(Arc::downgrade(&self.shared));
+        if trace::enabled() {
+            let track =
+                *self.track.get_or_init(|| trace::alloc_track(format!("queue-{}", self.serial)));
+            ev.trace_begin(track);
+        }
         let mut deps: Vec<Event> = wait.to_vec();
         {
             let mut iss = self.issued.lock().unwrap();

@@ -68,6 +68,18 @@ impl Device for BasicDevice {
     }
 
     fn launch(&self, global: &mut [u8], req: &LaunchRequest) -> Result<LaunchStats> {
+        let _launch_span = crate::trace::enabled().then(|| {
+            crate::trace::span_args(
+                crate::trace::CAT_EXEC,
+                format!("launch {}", req.wgf.name),
+                vec![
+                    ("engine", crate::trace::ArgVal::s(format!("{:?}", self.engine))),
+                    ("groups", crate::trace::ArgVal::u(req.groups.iter().product::<usize>() as u64)),
+                ],
+            )
+        });
+        crate::trace::metrics::add("exec.launches", 1);
+        crate::trace::metrics::add("exec.workgroups", req.groups.iter().product::<usize>() as u64);
         let mut stats = LaunchStats::default();
         let mut local = vec![0u8; req.local_mem.max(1)];
         for g in req.all_groups() {

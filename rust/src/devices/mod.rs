@@ -65,23 +65,17 @@ pub fn native_gang_width() -> usize {
 }
 
 /// Parse a `POCLRS_GANG_WIDTH` override. Invalid values (unparsable, or
-/// `0`) are rejected with a one-time stderr warning instead of being
-/// silently ignored, so a typo'd override is diagnosable.
+/// `0`) are rejected with a one-time stderr warning (`crate::envcfg`)
+/// instead of being silently ignored, so a typo'd override is
+/// diagnosable.
 fn gang_width_override(raw: Option<&str>) -> Option<usize> {
-    let raw = raw?;
-    match raw.parse::<usize>() {
-        Ok(w) if w > 0 => Some(w),
-        _ => {
-            static WARN: std::sync::Once = std::sync::Once::new();
-            WARN.call_once(|| {
-                eprintln!(
-                    "poclrs: ignoring invalid POCLRS_GANG_WIDTH={raw:?} \
-                     (expected a positive integer); autodetecting"
-                );
-            });
-            None
-        }
-    }
+    crate::envcfg::parse_or_warn(
+        "POCLRS_GANG_WIDTH",
+        raw,
+        "a positive integer",
+        "autodetecting",
+        |s| s.parse::<usize>().ok().filter(|w| *w > 0),
+    )
 }
 
 /// Compile options for a CPU device running `engine`: the CPU target
@@ -348,6 +342,20 @@ pub fn run_one_group(
     local: &mut [u8],
     ctx: &LaunchCtx,
 ) -> Result<crate::exec::gang::GangStats> {
+    // Per-work-group execution span. Guarded so the disabled path does
+    // no formatting; per-group granularity is the finest the tracer
+    // records, so large grids produce large traces — see docs/tracing.md.
+    let _wg_span = crate::trace::enabled().then(|| {
+        crate::trace::span_args(
+            crate::trace::CAT_EXEC,
+            format!("wg {}", wgf.name),
+            vec![
+                ("gx", crate::trace::ArgVal::u(ctx.group_id[0])),
+                ("gy", crate::trace::ArgVal::u(ctx.group_id[1])),
+                ("gz", crate::trace::ArgVal::u(ctx.group_id[2])),
+            ],
+        )
+    });
     let mut mem = crate::exec::MemoryRefs { global, local };
     match engine {
         EngineKind::Serial => {

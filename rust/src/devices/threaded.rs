@@ -86,6 +86,21 @@ impl Device for ThreadedDevice {
             };
             return basic.launch(global, req);
         }
+        let _launch_span = crate::trace::enabled().then(|| {
+            crate::trace::span_args(
+                crate::trace::CAT_EXEC,
+                format!("launch {}", req.wgf.name),
+                vec![
+                    ("engine", crate::trace::ArgVal::s(format!("{:?}", self.engine))),
+                    ("groups", crate::trace::ArgVal::u(groups.len() as u64)),
+                    ("threads", crate::trace::ArgVal::u(nthreads as u64)),
+                ],
+            )
+        });
+        // The degenerate nthreads==1 path above delegates to a
+        // BasicDevice, which counts these metrics itself.
+        crate::trace::metrics::add("exec.launches", 1);
+        crate::trace::metrics::add("exec.workgroups", groups.len() as u64);
         let shared = SharedMem(global.as_mut_ptr(), global.len());
         let engine = self.engine;
         let results: Vec<Result<LaunchStats>> = std::thread::scope(|scope| {

@@ -1,0 +1,83 @@
+//! Warn-once parsing of `POCLRS_*` environment knobs.
+//!
+//! An invalid value in an environment override should be diagnosable —
+//! a typo'd `POCLRS_OPT=o2` silently running at the default level is a
+//! measurement hazard — but the warning must not repeat on every parse
+//! (options are re-read per compile). This module centralises the
+//! pattern first introduced for `POCLRS_GANG_WIDTH`: parse, and on
+//! failure emit **one** stderr warning per variable per process, then
+//! fall back to the default.
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+/// Variables already warned about in this process.
+fn warned() -> &'static Mutex<HashSet<&'static str>> {
+    static WARNED: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    WARNED.get_or_init(|| Mutex::new(HashSet::new()))
+}
+
+/// Emit a one-time (per variable, per process) stderr warning that
+/// `var`'s value `raw` was ignored. `expected` describes the accepted
+/// form, `fallback` what happens instead.
+pub fn warn_invalid(var: &'static str, raw: &str, expected: &str, fallback: &str) {
+    let mut set = warned().lock().unwrap_or_else(|e| e.into_inner());
+    if set.insert(var) {
+        eprintln!("poclrs: ignoring invalid {var}={raw:?} (expected {expected}); {fallback}");
+    }
+}
+
+/// Parse an environment value with `parse`, warning once (per variable,
+/// per process) when the value is present but invalid. Returns `None`
+/// both for an absent value and for an invalid one — callers supply
+/// their own default either way.
+pub fn parse_or_warn<T>(
+    var: &'static str,
+    raw: Option<&str>,
+    expected: &str,
+    fallback: &str,
+    parse: impl FnOnce(&str) -> Option<T>,
+) -> Option<T> {
+    let raw = raw?;
+    match parse(raw) {
+        Some(v) => Some(v),
+        None => {
+            warn_invalid(var, raw, expected, fallback);
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_values_parse_through() {
+        let v = parse_or_warn("POCLRS_TEST_A", Some("42"), "an integer", "using default", |s| {
+            s.parse::<u32>().ok()
+        });
+        assert_eq!(v, Some(42));
+    }
+
+    #[test]
+    fn absent_and_invalid_values_yield_none() {
+        let absent = parse_or_warn("POCLRS_TEST_B", None, "an integer", "using default", |s| {
+            s.parse::<u32>().ok()
+        });
+        assert_eq!(absent, None);
+        let bad =
+            parse_or_warn("POCLRS_TEST_B", Some("banana"), "an integer", "using default", |s| {
+                s.parse::<u32>().ok()
+            });
+        assert_eq!(bad, None);
+        // A second invalid parse of the same variable must not warn again
+        // (observable only on stderr; here we just assert it still
+        // returns None without panicking).
+        let again =
+            parse_or_warn("POCLRS_TEST_B", Some("banana"), "an integer", "using default", |s| {
+                s.parse::<u32>().ok()
+            });
+        assert_eq!(again, None);
+    }
+}

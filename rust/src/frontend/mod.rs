@@ -12,6 +12,7 @@ use crate::ir::Module;
 /// Compile MiniCL source to an IR module (single-work-item kernels, the
 /// input to the kernel compiler of `kcc`).
 pub fn compile(src: &str) -> Result<Module> {
+    let _span = crate::trace::span(crate::trace::CAT_COMPILER, "frontend");
     let unit = parser::parse(src)?;
     lower::lower_unit(&unit)
 }

@@ -86,14 +86,19 @@ impl Default for OptLevel {
 
 impl OptLevel {
     /// Level from the `POCLRS_OPT` environment variable (`0`/`1`/`2`),
-    /// defaulting to O2. Consulted by `CompileOptions::default()`, so the
-    /// CLI `--opt` flag and the CI O0 matrix leg reach every device.
+    /// defaulting to O2. Invalid values warn once (`crate::envcfg`)
+    /// instead of silently running at O2. Consulted by
+    /// `CompileOptions::default()`, so the CLI `--opt` flag and the CI
+    /// O0 matrix leg reach every device.
     pub fn from_env() -> OptLevel {
-        match std::env::var("POCLRS_OPT").ok().as_deref() {
-            Some("0") => OptLevel::O0,
-            Some("1") => OptLevel::O1,
-            _ => OptLevel::O2,
-        }
+        crate::envcfg::parse_or_warn(
+            "POCLRS_OPT",
+            std::env::var("POCLRS_OPT").ok().as_deref(),
+            "0, 1, or 2",
+            "using O2",
+            |s| s.parse::<u32>().ok().and_then(OptLevel::from_u32),
+        )
+        .unwrap_or_default()
     }
 
     /// Numeric level (for display).
@@ -162,10 +167,18 @@ impl OptStats {
 /// bounds compile time on adversarial inputs.
 const MAX_ITERATIONS: usize = 8;
 
+/// Run `pass` under a tracer span named after it (compiler category);
+/// one span per pass per fixpoint iteration.
+fn traced(name: &'static str, pass: impl FnOnce() -> usize) -> usize {
+    let _t = crate::trace::span(crate::trace::CAT_COMPILER, name);
+    pass()
+}
+
 /// Run the optimizer pipeline on a single-work-item kernel function at
 /// `level`. Returns the per-pass statistics. The function is verified
 /// after the pipeline (and after every iteration in debug builds).
 pub fn run(f: &mut Function, level: OptLevel) -> Result<OptStats> {
+    let _opt_span = crate::trace::span(crate::trace::CAT_COMPILER, "optimize");
     let insts_before = f.inst_count();
     let blocks_before = reachable(f).len();
     let mut s = OptStats {
@@ -180,29 +193,29 @@ pub fn run(f: &mut Function, level: OptLevel) -> Result<OptStats> {
     }
     for _ in 0..MAX_ITERATIONS {
         let mut changed = 0;
-        let n = cfg_simplify::run(f);
+        let n = traced("opt.cfg_simplify", || cfg_simplify::run(f));
         s.cfg_simplified += n;
         changed += n;
-        let n = fold::run(f);
+        let n = traced("opt.fold", || fold::run(f));
         s.folded += n;
         changed += n;
         if level >= OptLevel::O2 {
-            let n = algebraic::run(f);
+            let n = traced("opt.algebraic", || algebraic::run(f));
             s.algebraic += n;
             changed += n;
         }
-        let n = propagate::run(f);
+        let n = traced("opt.propagate", || propagate::run(f));
         s.propagated += n;
         changed += n;
         if level >= OptLevel::O2 {
-            let n = cse::run(f);
+            let n = traced("opt.cse", || cse::run(f));
             s.cse_hits += n;
             changed += n;
-            let n = loadfwd::run(f);
+            let n = traced("opt.loadfwd", || loadfwd::run(f));
             s.loads_forwarded += n;
             changed += n;
         }
-        let n = dce::run(f);
+        let n = traced("opt.dce", || dce::run(f));
         s.dce_removed += n;
         changed += n;
         s.iterations += 1;

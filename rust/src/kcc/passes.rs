@@ -189,6 +189,18 @@ pub fn compile_workgroup(
     local_size: [usize; 3],
     opts: &CompileOptions,
 ) -> Result<WorkGroupFunction> {
+    let _compile_span = crate::trace::enabled().then(|| {
+        crate::trace::span_args(
+            crate::trace::CAT_COMPILER,
+            format!("compile {}", kernel.name),
+            vec![
+                ("wg_size", crate::trace::ArgVal::u(local_size.iter().product::<usize>() as u64)),
+                ("opt_level", crate::trace::ArgVal::u(opts.opt_level.as_u32() as u64)),
+                ("gang_width", crate::trace::ArgVal::u(opts.gang_width as u64)),
+            ],
+        )
+    });
+    crate::trace::metrics::add("compiler.compiles", 1);
     let mut stats = CompileStats::default();
     let mut f = kernel.clone();
 
@@ -198,6 +210,7 @@ pub fn compile_workgroup(
     stats.opt = opt::run(&mut f, opts.opt_level)?;
 
     // Target-independent parallel region formation.
+    let region_span = crate::trace::span(crate::trace::CAT_COMPILER, "region_formation");
     unify_exits(&mut f);
     canonicalize(&mut f);
     if opts.horizontal && !opts.spmd {
@@ -218,10 +231,13 @@ pub fn compile_workgroup(
     if cfg!(debug_assertions) {
         check_regions(&f, &regions).map_err(crate::cl::error::Error::Compile)?;
     }
+    drop(region_span);
+    let privatize_span = crate::trace::span(crate::trace::CAT_COMPILER, "privatize");
     let p = privatize::run(&mut f, &regions, &uni);
     stats.privatized_slots = p.privatized;
     stats.uniform_slots = p.merged_uniform;
     crate::ir::verify::verify(&f)?;
+    drop(privatize_span);
 
     // Export the uniformity analysis on the final region form (§4.6 "kept
     // as metadata"): per-register classification plus a per-region
@@ -241,6 +257,7 @@ pub fn compile_workgroup(
     // uniform, legal regions into pre-resolved, fused bytecode. CPU-only
     // (SPMD/TTA targets never execute through the bytecode engine).
     let bytecode = if opts.target == TargetKind::Cpu && !opts.spmd {
+        let _bc_span = crate::trace::span(crate::trace::CAT_COMPILER, "bytecode_lower");
         let (prog, bstats) =
             crate::exec::bytecode::lower(&reg_fn, &regions, &region_divergent);
         stats.bytecode_regions = bstats.covered_regions;
@@ -252,6 +269,7 @@ pub fn compile_workgroup(
     };
 
     // Target-specific parallel mapping: materialise WI loops.
+    let wiloop_span = crate::trace::span(crate::trace::CAT_COMPILER, "wi_loops");
     let (loop_fn, wstats) = if opts.spmd {
         // SPMD devices run the single-WI function themselves; strip
         // barriers only (the device hardware provides their semantics).
@@ -265,6 +283,7 @@ pub fn compile_workgroup(
     };
     stats.wi_loops = wstats.loops_created;
     stats.peeled_barriers = wstats.peeled;
+    drop(wiloop_span);
 
     let mut wgf = WorkGroupFunction {
         name: kernel.name.clone(),
@@ -280,7 +299,10 @@ pub fn compile_workgroup(
     };
     // Target-specific lowering, stage (b): template-jit the bytecode
     // regions to machine code (x86-64 hosts; no-op elsewhere).
-    crate::exec::jit::attach(&mut wgf, opts.gang_width);
+    {
+        let _jit_span = crate::trace::span(crate::trace::CAT_COMPILER, "jit_emit");
+        crate::exec::jit::attach(&mut wgf, opts.gang_width);
+    }
     Ok(wgf)
 }
 

@@ -42,12 +42,18 @@
 //! * [`bench`] — the measurement harness regenerating every table/figure.
 //! * [`testing`] — a minimal property-testing module (seeded generators)
 //!   used by the test suite.
+//! * [`trace`] — the always-compiled-in runtime tracer and metrics
+//!   registry (the `POCL_TRACING` analog): per-thread span buffers with
+//!   Chrome trace-event export, instrumenting the queue, compiler,
+//!   cache, scheduler, and execution engines.
+//! * [`envcfg`] — warn-once parsing of `POCLRS_*` environment knobs.
 
 pub mod bench;
 pub mod bufalloc;
 pub mod cache;
 pub mod cl;
 pub mod devices;
+pub mod envcfg;
 pub mod exec;
 pub mod frontend;
 pub mod ir;
@@ -57,6 +63,7 @@ pub mod runtime;
 pub mod sched;
 pub mod suite;
 pub mod testing;
+pub mod trace;
 pub mod vecmath;
 
 pub use cl::error::{Error, Result};

@@ -5,8 +5,10 @@
 //! poclrs devices                      # Table 1 capability table
 //! poclrs run <App> [device] [--stats] [--opt N]  # run + verify one suite app
 //! poclrs run <App> --devices a,b,c [--ratios r1,r2,r3]  # heterogeneous group run
+//! poclrs run <App> --trace out.json [--metrics-json m.json]  # traced run
 //! poclrs compile <file.cl> [LX]       # show compile stats + IR for a kernel
 //! poclrs suite [device]               # run + verify the whole suite
+//! poclrs trace check <file.json>      # schema-validate an emitted trace
 //! poclrs cache ls                     # list persistent kernel-cache entries
 //! poclrs cache stats                  # cache directory, size, hit counters
 //! poclrs cache clear                  # drop every cached kernel binary
@@ -29,10 +31,18 @@
 //! `POCLRS_OPT` before any device is created, so every device's
 //! `CompileOptions` — and therefore every cache key — reflects it.
 //!
+//! `--trace FILE` (or the `POCLRS_TRACE=FILE` environment variable, which
+//! also works for `suite` and every other subcommand) enables the runtime
+//! tracer and writes a Chrome trace-event JSON file loadable in Perfetto /
+//! `chrome://tracing`. `--metrics-json FILE` writes a merged metrics
+//! snapshot (launch/compile/cache/sched counters plus trace-derived phase
+//! durations). `trace check <file>` schema-validates an emitted trace.
+//!
 //! Environment: `POCLRS_OPT` sets the optimizer level, `POCLRS_CACHE_DIR`
 //! relocates the persistent kernel cache (default `~/.cache/poclrs`),
-//! `POCLRS_CACHE_MAX_BYTES` caps its size (default 256 MiB), and
-//! `POCLRS_CACHE=0` disables it.
+//! `POCLRS_CACHE_MAX_BYTES` caps its size (default 256 MiB),
+//! `POCLRS_CACHE=0` disables it, and `POCLRS_TRACE=FILE` enables tracing
+//! and names the output file.
 
 use std::sync::Arc;
 
@@ -44,11 +54,14 @@ use poclrs::sched::{Dynamic, SchedPolicy, StaticSplit};
 use poclrs::suite::{all_apps, app_by_name, runner, SizeClass};
 
 const USAGE: &str =
-    "usage: poclrs devices | run <App> [device] [--stats] [--opt N] [--devices a,b,c [--ratios r1,r2,...]] | suite [device] | compile <file.cl> [LX] | cache ls|stats|clear";
+    "usage: poclrs devices | run <App> [device] [--stats] [--opt N] [--trace FILE] [--metrics-json FILE] [--devices a,b,c [--ratios r1,r2,...]] | suite [device] | compile <file.cl> [LX] | trace check <file.json> | cache ls|stats|clear";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let platform = Platform::default_platform();
+    // Set when a subcommand already wrote the trace itself, so the
+    // end-of-main POCLRS_TRACE flush doesn't emit a second (empty) file.
+    let mut trace_written = false;
     match args.first().map(|s| s.as_str()) {
         Some("devices") => {
             println!("platform `{}`\n{}", platform.name, platform.capability_table());
@@ -72,6 +85,40 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 // none has been created yet, so the level reaches all of
                 // them (and every cache key).
                 std::env::set_var("POCLRS_OPT", lvl.as_u32().to_string());
+            }
+            let mut trace_out: Option<String> =
+                if let Some(i) = rest.iter().position(|a| *a == "--trace") {
+                    let path = rest
+                        .get(i + 1)
+                        .ok_or_else(|| String::from("--trace takes an output file path"))?
+                        .to_string();
+                    rest.drain(i..=i + 1);
+                    Some(path)
+                } else {
+                    None
+                };
+            let metrics_out: Option<String> =
+                if let Some(i) = rest.iter().position(|a| *a == "--metrics-json") {
+                    let path = rest
+                        .get(i + 1)
+                        .ok_or_else(|| String::from("--metrics-json takes an output file path"))?
+                        .to_string();
+                    rest.drain(i..=i + 1);
+                    Some(path)
+                } else {
+                    None
+                };
+            if trace_out.is_some() || metrics_out.is_some() {
+                // Enable before any device/queue exists so every span —
+                // including compiles triggered by the first launch — lands
+                // in the buffer.
+                poclrs::trace::set_enabled(true);
+            }
+            if trace_out.is_none() && poclrs::trace::enabled() {
+                // POCLRS_TRACE=FILE without --trace: this arm drains the
+                // buffer (for --metrics-json), so it must also write the
+                // env-requested trace from the same drain.
+                trace_out = poclrs::trace::env_trace_path().map(|p| p.display().to_string());
             }
             let group_names: Option<Vec<String>> =
                 if let Some(i) = rest.iter().position(|a| *a == "--devices") {
@@ -228,6 +275,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     }
                 }
             }
+            if trace_out.is_some() || metrics_out.is_some() {
+                // One drain serves both exporters: the event list feeds the
+                // Chrome JSON verbatim and the phase-duration aggregation.
+                let events = poclrs::trace::take_events();
+                if let Some(path) = &trace_out {
+                    std::fs::write(path, poclrs::trace::chrome::export_string(&events))?;
+                    println!("trace: {} events written to {path}", events.len());
+                    trace_written = true;
+                }
+                if let Some(path) = &metrics_out {
+                    std::fs::write(path, metrics_report(name, &dev, &r, &events))?;
+                    println!("metrics: written to {path}");
+                }
+            }
         }
         Some("suite") => {
             let dev = args.get(1).map(|s| s.as_str()).unwrap_or("pthread-gang(8)");
@@ -250,6 +311,34 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 println!("kernel `{}` @ local [{lx},1,1]: {:?}\n", k.name, wgf.stats);
                 println!("--- region form ---\n{}", poclrs::ir::print::print_function(&wgf.reg_fn));
                 println!("--- WI-loop form ---\n{}", poclrs::ir::print::print_function(&wgf.loop_fn));
+            }
+        }
+        Some("trace") => {
+            let sub = args.get(1).map(|s| s.as_str()).unwrap_or("");
+            match sub {
+                "check" => {
+                    let path = args
+                        .get(2)
+                        .ok_or_else(|| String::from("usage: trace check <file.json>"))?;
+                    let text = std::fs::read_to_string(path)?;
+                    let doc = poclrs::trace::json::parse(&text)
+                        .map_err(|e| format!("{path}: not valid JSON: {e}"))?;
+                    let sum = poclrs::trace::json::validate_chrome_trace(&doc)
+                        .map_err(|e| format!("{path}: schema violation: {e}"))?;
+                    poclrs::trace::json::check_nesting(&doc)
+                        .map_err(|e| format!("{path}: span nesting violation: {e}"))?;
+                    println!(
+                        "{path}: OK — {} events ({} complete spans, {} async spans) on {} threads; categories: {}",
+                        sum.events,
+                        sum.complete,
+                        sum.async_spans,
+                        sum.threads.len(),
+                        sum.cats.iter().cloned().collect::<Vec<_>>().join(","),
+                    );
+                }
+                other => {
+                    eprintln!("unknown trace subcommand `{other}`\n{USAGE}");
+                }
             }
         }
         Some("cache") => {
@@ -295,5 +384,142 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             eprintln!("{USAGE}");
         }
     }
+    // POCLRS_TRACE flush for subcommands that don't drain the buffer
+    // themselves (`suite`, `compile`, ...). `trace check` is excluded so
+    // validating a file never overwrites it.
+    if !trace_written
+        && !matches!(args.first().map(|s| s.as_str()), Some("trace"))
+        && poclrs::trace::enabled()
+    {
+        if let Some(path) = poclrs::trace::env_trace_path() {
+            poclrs::trace::write_chrome(&path)?;
+            eprintln!("poclrs: trace written to {}", path.display());
+        }
+    }
     Ok(())
+}
+
+/// Render the merged metrics snapshot for `--metrics-json`: the run's
+/// [`LaunchStats`](poclrs::devices::LaunchStats), per-specialisation
+/// compile/optimizer counters, program- and disk-cache counters, the
+/// scheduler breakdown (device groups only), the process-wide metric
+/// counters, and per-phase durations aggregated from the trace buffer.
+fn metrics_report(
+    app: &str,
+    device: &str,
+    r: &runner::RunResult,
+    events: &[poclrs::trace::TraceEvent],
+) -> String {
+    use poclrs::trace::chrome::escape;
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let s = &r.stats;
+    let _ = write!(
+        out,
+        "{{\n  \"app\": \"{}\",\n  \"device\": \"{}\",\n  \"kernel_time_ns\": {},\n",
+        escape(app),
+        escape(device),
+        r.kernel_time.as_nanos(),
+    );
+    let _ = write!(
+        out,
+        "  \"launch\": {{\"workgroups\": {}, \"gangs\": {}, \"diverged_gangs\": {}, \"dispatches\": {}, \"vector_insts\": {}, \"uniform_insts\": {}, \"lane_insts\": {}, \"bytecode_insts\": {}, \"jit_insts\": {}}},\n",
+        s.workgroups,
+        s.gangs,
+        s.diverged_gangs,
+        s.dispatches(),
+        s.vector_insts,
+        s.uniform_insts,
+        s.lane_insts,
+        s.bytecode_insts,
+        s.jit_insts,
+    );
+    out.push_str("  \"compile\": [\n");
+    let specs = r.program.cached_specializations();
+    for (i, (spec, wgf)) in specs.iter().enumerate() {
+        let o = &wgf.stats.opt;
+        let _ = write!(
+            out,
+            "    {{\"kernel\": \"{}\", \"local\": [{},{},{}], \"opt_level\": {}, \"regions\": {}, \"uniform_regs\": {}, \"divergent_regions\": {}, \"bytecode_regions\": {}, \"jit_regions\": {}, \"opt\": {{\"insts_before\": {}, \"insts_after\": {}, \"iterations\": {}}}}}{}\n",
+            escape(&spec.kernel),
+            spec.local[0],
+            spec.local[1],
+            spec.local[2],
+            spec.opts.opt_level.as_u32(),
+            wgf.stats.regions,
+            wgf.stats.uniform_regs,
+            wgf.stats.divergent_regions,
+            wgf.stats.bytecode_regions,
+            wgf.stats.jit_regions,
+            o.insts_before,
+            o.insts_after,
+            o.iterations,
+            if i + 1 < specs.len() { "," } else { "" },
+        );
+    }
+    out.push_str("  ],\n");
+    let c = r.program.cache_stats();
+    let _ = write!(
+        out,
+        "  \"program_cache\": {{\"memory_hits\": {}, \"disk_hits\": {}, \"compiles\": {}}},\n",
+        c.memory_hits, c.disk_hits, c.misses,
+    );
+    match cache::default_cache() {
+        Some(disk) => {
+            let d = disk.stats();
+            let _ = write!(
+                out,
+                "  \"disk_cache\": {{\"hits\": {}, \"misses\": {}, \"rejected\": {}, \"writes\": {}, \"bytes_read\": {}, \"bytes_written\": {}, \"evictions\": {}}},\n",
+                d.hits, d.misses, d.rejected, d.writes, d.bytes_read, d.bytes_written, d.evictions,
+            );
+        }
+        None => out.push_str("  \"disk_cache\": null,\n"),
+    }
+    match &r.sched {
+        Some(sc) => {
+            let _ = write!(
+                out,
+                "  \"sched\": {{\"policy\": \"{}\", \"split_dim\": {}, \"steals\": {}, \"imbalance\": {:.4}, \"devices\": [",
+                escape(&sc.policy),
+                sc.split_dim,
+                sc.steals(),
+                sc.imbalance(),
+            );
+            for (i, d) in sc.devices.iter().enumerate() {
+                let _ = write!(
+                    out,
+                    "{}{{\"name\": \"{}\", \"groups\": {}, \"chunks\": {}, \"steals\": {}, \"busy_ns\": {}}}",
+                    if i > 0 { ", " } else { "" },
+                    escape(&d.name),
+                    d.groups,
+                    d.chunks,
+                    d.steals,
+                    d.busy_ns,
+                );
+            }
+            out.push_str("]},\n");
+        }
+        None => out.push_str("  \"sched\": null,\n"),
+    }
+    out.push_str("  \"counters\": {");
+    let snap = poclrs::trace::metrics::global().snapshot();
+    for (i, (k, v)) in snap.iter().enumerate() {
+        let _ = write!(out, "{}\"{}\": {}", if i > 0 { ", " } else { "" }, escape(k), v);
+    }
+    out.push_str("},\n  \"phases\": [\n");
+    let phases = poclrs::trace::metrics::phase_totals(events);
+    for (i, p) in phases.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"cat\": \"{}\", \"name\": \"{}\", \"count\": {}, \"total_ns\": {}, \"max_ns\": {}}}{}\n",
+            escape(p.cat),
+            escape(&p.name),
+            p.count,
+            p.total_ns,
+            p.max_ns,
+            if i + 1 < phases.len() { "," } else { "" },
+        );
+    }
+    out.push_str("  ]\n}\n");
+    out
 }

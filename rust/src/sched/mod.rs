@@ -35,11 +35,12 @@ pub mod stats;
 pub use policy::{Chunk, ChunkSource, Dynamic, SchedPolicy, StaticSplit};
 pub use stats::{DeviceSchedStats, SchedStats};
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::cl::error::{Error, Result};
 use crate::devices::{Device, DeviceInfo, LaunchRequest, LaunchStats};
 use crate::kcc::{CompileOptions, WorkGroupFunction};
+use crate::trace::{self, ArgVal};
 
 /// The dimension a launch is split along: the slowest-varying used
 /// dimension (highest index — outermost in row-major group order, so
@@ -62,6 +63,9 @@ pub struct DeviceGroup {
     name: String,
     members: Vec<Arc<dyn Device>>,
     policy: Arc<dyn SchedPolicy>,
+    /// Lazily allocated tracer tracks, one per member, carrying that
+    /// member's chunk timeline as async spans.
+    tracks: OnceLock<Vec<u64>>,
 }
 
 impl DeviceGroup {
@@ -78,7 +82,17 @@ impl DeviceGroup {
         if members.iter().any(|m| m.as_group().is_some()) {
             return Err(Error::invalid("device groups cannot nest"));
         }
-        Ok(DeviceGroup { name: name.into(), members, policy })
+        Ok(DeviceGroup { name: name.into(), members, policy, tracks: OnceLock::new() })
+    }
+
+    /// One tracer track per member, allocated on first use.
+    fn member_tracks(&self) -> &[u64] {
+        self.tracks.get_or_init(|| {
+            self.members
+                .iter()
+                .map(|m| trace::alloc_track(format!("{}:{}", self.name, m.info().name)))
+                .collect()
+        })
     }
 
     /// Member devices, in scheduling order.
@@ -120,6 +134,19 @@ impl DeviceGroup {
         }
         let dim = split_dim(req.groups);
         let total = req.groups[dim];
+        let traced = trace::enabled();
+        let _split_span = traced.then(|| {
+            trace::span_args(
+                trace::CAT_SCHED,
+                format!("split {}", req.wgf.name),
+                vec![
+                    ("policy", ArgVal::s(self.policy.name())),
+                    ("dim", ArgVal::u(dim as u64)),
+                    ("total", ArgVal::u(total as u64)),
+                ],
+            )
+        });
+        trace::metrics::add("sched.splits", 1);
         let mut sched =
             SchedStats { policy: self.policy.name(), split_dim: dim, devices: Vec::new() };
 
@@ -128,7 +155,8 @@ impl DeviceGroup {
             let sub = req.sub_range(dim, 0, total, wgfs[0].clone());
             let t0 = std::time::Instant::now();
             let stats = self.members[0].launch(global, &sub)?;
-            let busy = t0.elapsed().as_nanos() as u64;
+            let t1 = std::time::Instant::now();
+            let busy = (t1 - t0).as_nanos() as u64;
             sched.devices = self
                 .members
                 .iter()
@@ -139,13 +167,19 @@ impl DeviceGroup {
                     chunks: usize::from(i == 0),
                     steals: 0,
                     busy_ns: if i == 0 { busy } else { 0 },
+                    started: (i == 0).then_some(t0),
+                    ended: (i == 0).then_some(t1),
                     stats: if i == 0 { stats } else { LaunchStats::default() },
                 })
                 .collect();
+            trace::metrics::add("sched.chunks", 1);
             return Ok((stats, sched));
         }
 
         let source = self.policy.plan(total, self.members.len());
+        // One async track per member while tracing: each chunk renders
+        // as an async span on its member's timeline.
+        let tracks: Option<&[u64]> = traced.then(|| self.member_tracks());
         let shared = SharedMem(global.as_mut_ptr(), global.len());
         let results: Vec<Result<DeviceSchedStats>> = std::thread::scope(|scope| {
             let shared = &shared;
@@ -159,6 +193,20 @@ impl DeviceGroup {
                     let mut rate = 0.0_f64;
                     while let Some(chunk) = source.next(i, rate) {
                         let sub = req.sub_range(dim, chunk.start, chunk.len, wgf.clone());
+                        let traced_chunk = tracks.map(|t| {
+                            let id = trace::next_id();
+                            trace::async_begin_args(
+                                trace::CAT_SCHED,
+                                format!("chunk {}", wgf.name),
+                                t[i],
+                                id,
+                                vec![
+                                    ("start", ArgVal::u(chunk.start as u64)),
+                                    ("len", ArgVal::u(chunk.len as u64)),
+                                ],
+                            );
+                            (t[i], id)
+                        });
                         // Each member gets the same full view of global
                         // memory; chunks are disjoint in group space and
                         // work-group independence makes concurrent
@@ -166,12 +214,27 @@ impl DeviceGroup {
                         let global_view =
                             unsafe { std::slice::from_raw_parts_mut(shared.0, shared.1) };
                         let t0 = std::time::Instant::now();
-                        let s = member.launch(global_view, &sub)?;
-                        let dt = t0.elapsed();
+                        let launched = member.launch(global_view, &sub);
+                        let t1 = std::time::Instant::now();
+                        if let Some((track, id)) = traced_chunk {
+                            if chunk.steal {
+                                trace::async_instant(trace::CAT_SCHED, "steal", track, id);
+                            }
+                            trace::async_end(
+                                trace::CAT_SCHED,
+                                format!("chunk {}", wgf.name),
+                                track,
+                                id,
+                            );
+                        }
+                        let s = launched?;
+                        let dt = t1 - t0;
                         row.busy_ns += dt.as_nanos() as u64;
                         row.groups += s.workgroups;
                         row.chunks += 1;
                         row.steals += usize::from(chunk.steal);
+                        row.started = Some(row.started.map_or(t0, |s0| s0.min(t0)));
+                        row.ended = Some(row.ended.map_or(t1, |e0| e0.max(t1)));
                         row.stats.accumulate(&s);
                         // EWMA of the member's throughput in
                         // split-dimension slices per second, fed back to
@@ -188,6 +251,8 @@ impl DeviceGroup {
         let mut total_stats = LaunchStats::default();
         for r in results {
             let row = r.map_err(|e| Error::exec(format!("device group member failed: {e}")))?;
+            trace::metrics::add("sched.chunks", row.chunks as u64);
+            trace::metrics::add("sched.steals", row.steals as u64);
             total_stats.accumulate(&row.stats);
             sched.devices.push(row);
         }

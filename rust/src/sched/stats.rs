@@ -9,6 +9,8 @@
 //! of those were steals, and how long it was busy — and derives the
 //! totals and the balance metrics from them.
 
+use std::time::Instant;
+
 use crate::devices::LaunchStats;
 
 /// One member device's share of a co-executed launch.
@@ -25,6 +27,11 @@ pub struct DeviceSchedStats {
     pub steals: usize,
     /// Wall-clock nanoseconds this member spent executing sub-launches.
     pub busy_ns: u64,
+    /// When this member started its first sub-launch (`None` if it
+    /// never pulled a chunk).
+    pub started: Option<Instant>,
+    /// When this member finished its last sub-launch.
+    pub ended: Option<Instant>,
     /// This member's engine-typed launch statistics.
     pub stats: LaunchStats,
 }
@@ -63,6 +70,17 @@ impl SchedStats {
         self.devices.iter().map(|d| d.steals).sum()
     }
 
+    /// The union of the member execution windows: earliest member start
+    /// to latest member end. `None` when no member recorded a window.
+    /// Event profiling on split launches reports this span, so
+    /// `CL_PROFILING_COMMAND_START/END` cover all sub-launches rather
+    /// than the dispatching worker's bookkeeping.
+    pub fn exec_span(&self) -> Option<(Instant, Instant)> {
+        let start = self.devices.iter().filter_map(|d| d.started).min()?;
+        let end = self.devices.iter().filter_map(|d| d.ended).max()?;
+        Some((start, end.max(start)))
+    }
+
     /// Imbalance ratio: the busiest member's wall-clock time over the
     /// mean busy time. `1.0` is a perfectly balanced launch; `n` (the
     /// member count) means one device did all the work while the rest
@@ -96,6 +114,14 @@ impl SchedStats {
             d.chunks += o.chunks;
             d.steals += o.steals;
             d.busy_ns += o.busy_ns;
+            d.started = match (d.started, o.started) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            d.ended = match (d.ended, o.ended) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
             d.stats.accumulate(&o.stats);
         }
     }

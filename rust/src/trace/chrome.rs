@@ -1,0 +1,198 @@
+//! Chrome trace-event JSON exporter.
+//!
+//! Serialises drained [`TraceEvent`]s into the Chrome trace-event
+//! format's "JSON object" flavour: a top-level object whose
+//! `traceEvents` array holds one object per event. The output loads
+//! directly in Perfetto (<https://ui.perfetto.dev>) and
+//! `chrome://tracing`.
+//!
+//! Layout conventions (checked by [`super::json::validate_chrome_trace`]):
+//!
+//! * Host threads render as threads of process [`HOST_PID`], named via
+//!   `process_name`/`thread_name` metadata (`M`) events.
+//! * Every synthetic track from [`super::alloc_track`] renders as its
+//!   own named "process", carrying the async (`b`/`n`/`e`) spans of one
+//!   command queue or one device-group member.
+//! * Timestamps (`ts`) and durations (`dur`) are microseconds with
+//!   nanosecond precision (three decimal places), per the format spec.
+//! * Flow arrows use the older `s`/`f` phases with `"bp":"e"` binding,
+//!   which both viewers accept.
+
+use std::fmt::Write as _;
+
+use super::{ArgVal, Phase, TraceEvent, HOST_PID};
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format nanoseconds as a microsecond JSON number with ns precision.
+fn micros(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+fn push_arg(out: &mut String, key: &str, val: &ArgVal) {
+    let _ = match val {
+        ArgVal::U64(v) => write!(out, "\"{}\":{v}", escape(key)),
+        ArgVal::I64(v) => write!(out, "\"{}\":{v}", escape(key)),
+        ArgVal::F64(v) => {
+            if v.is_finite() {
+                write!(out, "\"{}\":{v}", escape(key))
+            } else {
+                write!(out, "\"{}\":null", escape(key))
+            }
+        }
+        ArgVal::Str(v) => write!(out, "\"{}\":\"{}\"", escape(key), escape(v)),
+    };
+}
+
+/// A `process_name` or `thread_name` metadata event.
+fn push_meta(out: &mut String, kind: &str, pid: u64, tid: u64, name: &str) {
+    let _ = write!(
+        out,
+        "{{\"ph\":\"M\",\"name\":\"{kind}\",\"pid\":{pid},\"tid\":{tid},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        escape(name)
+    );
+}
+
+fn push_event(out: &mut String, ev: &TraceEvent) {
+    let ph = match ev.phase {
+        Phase::Complete => "X",
+        Phase::Instant => "i",
+        Phase::AsyncBegin => "b",
+        Phase::AsyncInstant => "n",
+        Phase::AsyncEnd => "e",
+        Phase::FlowStart => "s",
+        Phase::FlowEnd => "f",
+    };
+    let _ = write!(
+        out,
+        "{{\"ph\":\"{ph}\",\"cat\":\"{}\",\"name\":\"{}\",\"ts\":{},\"pid\":{},\"tid\":{}",
+        escape(ev.cat),
+        escape(&ev.name),
+        micros(ev.ts_ns),
+        ev.pid,
+        ev.tid
+    );
+    match ev.phase {
+        Phase::Complete => {
+            let _ = write!(out, ",\"dur\":{}", micros(ev.dur_ns));
+        }
+        Phase::Instant => out.push_str(",\"s\":\"t\""),
+        Phase::AsyncBegin | Phase::AsyncInstant | Phase::AsyncEnd | Phase::FlowStart => {
+            let _ = write!(out, ",\"id\":{}", ev.id);
+        }
+        Phase::FlowEnd => {
+            let _ = write!(out, ",\"id\":{},\"bp\":\"e\"", ev.id);
+        }
+    }
+    if !ev.args.is_empty() {
+        out.push_str(",\"args\":{");
+        for (i, (k, v)) in ev.args.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            push_arg(out, k, v);
+        }
+        out.push('}');
+    }
+    out.push('}');
+}
+
+/// Serialise `events` (plus process/thread/track name metadata from the
+/// tracer's registries) as a Chrome trace JSON document.
+pub fn export_string(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 140 + 1024);
+    out.push_str("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n");
+    let mut first = true;
+    let mut sep = |out: &mut String| {
+        if !std::mem::take(&mut first) {
+            out.push_str(",\n");
+        }
+    };
+    sep(&mut out);
+    push_meta(&mut out, "process_name", HOST_PID, 0, "poclrs");
+    for (tid, name) in super::thread_names() {
+        sep(&mut out);
+        push_meta(&mut out, "thread_name", HOST_PID, tid, &name);
+    }
+    for (pid, name) in super::track_names() {
+        sep(&mut out);
+        push_meta(&mut out, "process_name", pid, 0, &name);
+    }
+    for ev in events {
+        sep(&mut out);
+        push_event(&mut out, ev);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::borrow::Cow;
+
+    fn ev(phase: Phase, name: &'static str, ts_ns: u64, dur_ns: u64) -> TraceEvent {
+        TraceEvent {
+            phase,
+            cat: "exec",
+            name: Cow::Borrowed(name),
+            ts_ns,
+            dur_ns,
+            pid: HOST_PID,
+            tid: 3,
+            id: 9,
+            args: vec![("n", ArgVal::u(4)), ("what", ArgVal::s("a\"b"))],
+        }
+    }
+
+    #[test]
+    fn export_is_valid_json_with_expected_fields() {
+        let events =
+            vec![ev(Phase::Complete, "wg", 1_500, 2_250), ev(Phase::AsyncBegin, "cmd", 10, 0)];
+        let text = export_string(&events);
+        let v = crate::trace::json::parse(&text).expect("exporter output parses");
+        let list = v.get("traceEvents").and_then(|t| t.as_array()).expect("traceEvents array");
+        // Metadata first, then our two events.
+        let xs: Vec<_> = list
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 1);
+        assert_eq!(xs[0].get("ts").and_then(|t| t.as_f64()), Some(1.5));
+        assert_eq!(xs[0].get("dur").and_then(|t| t.as_f64()), Some(2.25));
+        assert_eq!(
+            xs[0].get("args").and_then(|a| a.get("what")).and_then(|w| w.as_str()),
+            Some("a\"b")
+        );
+        let bs: Vec<_> = list
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("b"))
+            .collect();
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].get("id").and_then(|i| i.as_f64()), Some(9.0));
+    }
+
+    #[test]
+    fn escape_handles_quotes_and_controls() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+}

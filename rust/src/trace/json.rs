@@ -1,0 +1,549 @@
+//! Minimal JSON parser and Chrome-trace schema validator.
+//!
+//! The crate is dependency-free, so the trace round-trip tooling (the
+//! `poclrs trace check` CLI, `tests/trace_verify.rs`) carries its own
+//! strict recursive-descent JSON parser plus the schema checks the
+//! tracer's exporter promises:
+//!
+//! * every event object has `ph`, `name`, `pid`, `tid` (and `ts` for
+//!   non-metadata phases, `dur` for `X`, `id` for async/flow phases),
+//! * async begin/end events balance per `(pid, cat, id)`,
+//! * complete (`X`) spans nest per `(pid, tid)` — stack discipline.
+
+use std::collections::{BTreeSet, HashMap};
+
+/// A parsed JSON value. Objects preserve key order (and duplicates) as
+/// a `Vec` — ordering stability matters more here than lookup speed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number, as `f64`.
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<JsonValue>),
+    /// An object, as ordered key/value pairs.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Member of an object by key (first match), `None` otherwise.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The elements, if this is an array.
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The key/value pairs, if this is an object.
+    pub fn as_object(&self) -> Option<&[(String, JsonValue)]> {
+        match self {
+            JsonValue::Obj(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.pos)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{word}`")))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected `{}`", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("non-UTF-8 number"))?;
+        text.parse::<f64>()
+            .map(JsonValue::Num)
+            .map_err(|_| format!("bad number `{text}` at byte {start}"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let d = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = (d as char).to_digit(16).ok_or_else(|| self.err("bad \\u escape"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hi = self.hex4()?;
+                        let cp = if (0xD800..0xDC00).contains(&hi) {
+                            // Surrogate pair: a second \uXXXX must follow.
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("lone high surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("bad low surrogate"));
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else if (0xDC00..0xE000).contains(&hi) {
+                            return Err(self.err("lone low surrogate"));
+                        } else {
+                            hi
+                        };
+                        out.push(
+                            char::from_u32(cp).ok_or_else(|| self.err("bad \\u code point"))?,
+                        );
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                Some(b) if b < 0x20 => return Err(self.err("raw control char in string")),
+                Some(b) => {
+                    // Re-assemble UTF-8 multibyte sequences byte-wise.
+                    let len = match b {
+                        0x00..=0x7F => 1,
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => return Err(self.err("bad UTF-8 byte")),
+                    };
+                    let start = self.pos - 1;
+                    let end = start + len;
+                    if end > self.bytes.len() {
+                        return Err(self.err("truncated UTF-8 sequence"));
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| self.err("bad UTF-8 sequence"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => {}
+                Some(b']') => return Ok(JsonValue::Arr(items)),
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => {}
+                Some(b'}') => return Ok(JsonValue::Obj(pairs)),
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document. Strict: trailing garbage is an error.
+pub fn parse(src: &str) -> Result<JsonValue, String> {
+    let mut p = Parser { bytes: src.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing data"));
+    }
+    Ok(v)
+}
+
+/// What a validated trace contained (the `trace check` report).
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// Total events, metadata included.
+    pub events: usize,
+    /// Complete (`X`) spans.
+    pub complete: usize,
+    /// Async spans (balanced `b`/`e` pairs).
+    pub async_spans: usize,
+    /// Distinct non-metadata categories seen.
+    pub cats: BTreeSet<String>,
+    /// Distinct `(pid, tid)` host-thread pairs seen on `X` events.
+    pub threads: BTreeSet<(u64, u64)>,
+}
+
+fn req_num(ev: &JsonValue, key: &str, i: usize) -> Result<f64, String> {
+    ev.get(key)
+        .and_then(JsonValue::as_f64)
+        .ok_or_else(|| format!("event {i}: missing numeric `{key}`"))
+}
+
+fn req_str<'v>(ev: &'v JsonValue, key: &str, i: usize) -> Result<&'v str, String> {
+    ev.get(key)
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| format!("event {i}: missing string `{key}`"))
+}
+
+/// Validate a parsed document against the Chrome trace-event subset the
+/// exporter emits (see module docs). Returns a content summary on
+/// success.
+pub fn validate_chrome_trace(doc: &JsonValue) -> Result<TraceSummary, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(JsonValue::as_array)
+        .ok_or("top level must be an object with a `traceEvents` array")?;
+    let mut sum = TraceSummary { events: events.len(), ..TraceSummary::default() };
+    // (pid, cat, id) -> begin-count minus end-count.
+    let mut open_async: HashMap<(u64, String, u64), i64> = HashMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        if ev.as_object().is_none() {
+            return Err(format!("event {i}: not an object"));
+        }
+        let ph = req_str(ev, "ph", i)?;
+        req_str(ev, "name", i)?;
+        let pid = req_num(ev, "pid", i)? as u64;
+        let tid = req_num(ev, "tid", i)? as u64;
+        if ph == "M" {
+            let kind = req_str(ev, "name", i)?;
+            if !matches!(kind, "process_name" | "thread_name") {
+                return Err(format!("event {i}: unknown metadata `{kind}`"));
+            }
+            ev.get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| format!("event {i}: metadata without args.name"))?;
+            continue;
+        }
+        let ts = req_num(ev, "ts", i)?;
+        if !ts.is_finite() || ts < 0.0 {
+            return Err(format!("event {i}: bad ts {ts}"));
+        }
+        let cat = req_str(ev, "cat", i)?;
+        if cat.is_empty() {
+            return Err(format!("event {i}: empty cat"));
+        }
+        sum.cats.insert(cat.to_string());
+        match ph {
+            "X" => {
+                let dur = req_num(ev, "dur", i)?;
+                if !dur.is_finite() || dur < 0.0 {
+                    return Err(format!("event {i}: bad dur {dur}"));
+                }
+                sum.complete += 1;
+                sum.threads.insert((pid, tid));
+            }
+            "i" => {}
+            "b" | "n" | "e" => {
+                let id = req_num(ev, "id", i)? as u64;
+                let slot = open_async.entry((pid, cat.to_string(), id)).or_insert(0);
+                match ph {
+                    "b" => {
+                        *slot += 1;
+                        sum.async_spans += 1;
+                    }
+                    "e" => {
+                        *slot -= 1;
+                        if *slot < 0 {
+                            return Err(format!(
+                                "event {i}: async end without begin (pid {pid}, id {id})"
+                            ));
+                        }
+                    }
+                    _ => {
+                        if *slot <= 0 {
+                            return Err(format!(
+                                "event {i}: async instant outside a span (pid {pid}, id {id})"
+                            ));
+                        }
+                    }
+                }
+            }
+            "s" | "f" => {
+                req_num(ev, "id", i)?;
+            }
+            other => return Err(format!("event {i}: unknown phase `{other}`")),
+        }
+    }
+    if let Some(((pid, cat, id), n)) = open_async.iter().find(|(_, &n)| n != 0) {
+        return Err(format!(
+            "unbalanced async span: pid {pid}, cat {cat}, id {id} ({n} open)"
+        ));
+    }
+    Ok(sum)
+}
+
+/// Check that complete (`X`) spans obey stack discipline per
+/// `(pid, tid)`: a span that starts inside another must also end inside
+/// it. Timestamp comparisons tolerate the exporter's microsecond
+/// formatting at `EPS`.
+pub fn check_nesting(doc: &JsonValue) -> Result<(), String> {
+    const EPS: f64 = 1e-6;
+    let events = doc
+        .get("traceEvents")
+        .and_then(JsonValue::as_array)
+        .ok_or("top level must be an object with a `traceEvents` array")?;
+    let mut per_thread: HashMap<(u64, u64), Vec<(f64, f64, String)>> = HashMap::new();
+    for ev in events {
+        if ev.get("ph").and_then(JsonValue::as_str) != Some("X") {
+            continue;
+        }
+        let pid = ev.get("pid").and_then(JsonValue::as_f64).unwrap_or(0.0) as u64;
+        let tid = ev.get("tid").and_then(JsonValue::as_f64).unwrap_or(0.0) as u64;
+        let ts = ev.get("ts").and_then(JsonValue::as_f64).unwrap_or(0.0);
+        let dur = ev.get("dur").and_then(JsonValue::as_f64).unwrap_or(0.0);
+        let name = ev.get("name").and_then(JsonValue::as_str).unwrap_or("").to_string();
+        per_thread.entry((pid, tid)).or_default().push((ts, ts + dur, name));
+    }
+    for ((pid, tid), mut spans) in per_thread {
+        // Parents sort before their children: by start ascending, then
+        // by end descending (the longer span encloses).
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
+        let mut stack: Vec<(f64, String)> = Vec::new();
+        for (ts, end, name) in spans {
+            while let Some((top_end, _)) = stack.last() {
+                if *top_end <= ts + EPS {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some((top_end, top_name)) = stack.last() {
+                if end > top_end + EPS {
+                    return Err(format!(
+                        "span `{name}` [{ts}, {end}] overlaps `{top_name}` \
+                         (ends {top_end}) on thread {pid}/{tid}"
+                    ));
+                }
+            }
+            stack.push((end, name));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_arrays_objects() {
+        assert_eq!(parse("null").unwrap(), JsonValue::Null);
+        assert_eq!(parse(" true ").unwrap(), JsonValue::Bool(true));
+        assert_eq!(parse("-1.5e2").unwrap(), JsonValue::Num(-150.0));
+        assert_eq!(parse(r#""a\nbA""#).unwrap(), JsonValue::Str("a\nbA".into()));
+        let v = parse(r#"{"a":[1,2,{"b":"c"}],"d":null}"#).unwrap();
+        assert_eq!(v.get("d"), Some(&JsonValue::Null));
+        let arr = v.get("a").and_then(JsonValue::as_array).unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("b").and_then(JsonValue::as_str), Some("c"));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\":1} extra").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("nul").is_err());
+    }
+
+    #[test]
+    fn roundtrips_utf8_and_surrogates() {
+        assert_eq!(parse("\"π≈3\"").unwrap(), JsonValue::Str("π≈3".into()));
+        assert_eq!(parse(r#""😀""#).unwrap(), JsonValue::Str("😀".into()));
+        assert!(parse(r#""\ud83d""#).is_err(), "lone surrogate rejected");
+    }
+
+    #[test]
+    fn validator_rejects_schema_violations() {
+        // Not a trace document at all.
+        assert!(validate_chrome_trace(&parse("[1,2]").unwrap()).is_err());
+        // Event without a phase.
+        let bad = parse(r#"{"traceEvents":[{"name":"x","pid":1,"tid":1}]}"#).unwrap();
+        assert!(validate_chrome_trace(&bad).is_err());
+        // Async end without a begin.
+        let bad = parse(
+            r#"{"traceEvents":[
+                {"ph":"e","cat":"queue","name":"x","ts":1,"pid":2,"tid":0,"id":5}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&bad).is_err());
+        // Unbalanced async begin.
+        let bad = parse(
+            r#"{"traceEvents":[
+                {"ph":"b","cat":"queue","name":"x","ts":1,"pid":2,"tid":0,"id":5}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&bad).is_err());
+    }
+
+    #[test]
+    fn validator_accepts_a_wellformed_trace() {
+        let good = parse(
+            r#"{"traceEvents":[
+                {"ph":"M","name":"process_name","pid":1,"tid":0,"args":{"name":"p"}},
+                {"ph":"X","cat":"exec","name":"wg","ts":1.0,"dur":2.0,"pid":1,"tid":3},
+                {"ph":"b","cat":"queue","name":"cmd","ts":0.5,"pid":2,"tid":0,"id":7},
+                {"ph":"n","cat":"queue","name":"running","ts":1.0,"pid":2,"tid":0,"id":7},
+                {"ph":"e","cat":"queue","name":"cmd","ts":4.0,"pid":2,"tid":0,"id":7},
+                {"ph":"s","cat":"queue","name":"dep","ts":3.0,"pid":1,"tid":3,"id":7},
+                {"ph":"f","cat":"queue","name":"dep","ts":3.5,"pid":1,"tid":4,"id":7,"bp":"e"}
+            ]}"#,
+        )
+        .unwrap();
+        let sum = validate_chrome_trace(&good).expect("valid");
+        assert_eq!(sum.complete, 1);
+        assert_eq!(sum.async_spans, 1);
+        assert!(sum.cats.contains("exec") && sum.cats.contains("queue"));
+    }
+
+    #[test]
+    fn nesting_check_accepts_stacks_and_rejects_overlap() {
+        let nested = parse(
+            r#"{"traceEvents":[
+                {"ph":"X","cat":"c","name":"outer","ts":0.0,"dur":10.0,"pid":1,"tid":1},
+                {"ph":"X","cat":"c","name":"inner","ts":2.0,"dur":3.0,"pid":1,"tid":1},
+                {"ph":"X","cat":"c","name":"sibling","ts":6.0,"dur":2.0,"pid":1,"tid":1}
+            ]}"#,
+        )
+        .unwrap();
+        check_nesting(&nested).expect("stacked spans nest");
+        let overlap = parse(
+            r#"{"traceEvents":[
+                {"ph":"X","cat":"c","name":"a","ts":0.0,"dur":5.0,"pid":1,"tid":1},
+                {"ph":"X","cat":"c","name":"b","ts":3.0,"dur":5.0,"pid":1,"tid":1}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(check_nesting(&overlap).is_err(), "straddling spans rejected");
+        // Different threads never constrain each other.
+        let cross = parse(
+            r#"{"traceEvents":[
+                {"ph":"X","cat":"c","name":"a","ts":0.0,"dur":5.0,"pid":1,"tid":1},
+                {"ph":"X","cat":"c","name":"b","ts":3.0,"dur":5.0,"pid":1,"tid":2}
+            ]}"#,
+        )
+        .unwrap();
+        check_nesting(&cross).expect("threads are independent");
+    }
+}

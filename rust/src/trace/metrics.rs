@@ -1,0 +1,149 @@
+//! Process-wide metrics registry and trace-derived phase totals.
+//!
+//! Two complementary views feed the `--metrics-json` snapshot:
+//!
+//! * [`MetricsRegistry`] — named monotonic counters bumped from anywhere
+//!   in the runtime via [`add`] (queue commands issued, cache hits,
+//!   scheduler steals, …). Always on: a counter bump is one short
+//!   mutex-protected map update, orders of magnitude below the work it
+//!   counts.
+//! * [`phase_totals`] — aggregates drained complete spans by
+//!   `(category, name)` into count / total / max durations, turning the
+//!   raw trace into the per-phase timing table the autotuning items
+//!   need.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use super::{Phase, TraceEvent};
+
+/// A set of named monotonic `u64` counters.
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry { counters: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Add `delta` to the counter `name`, creating it at zero first.
+    pub fn add(&self, name: &'static str, delta: u64) {
+        let mut map = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        *map.entry(name).or_insert(0) += delta;
+    }
+
+    /// Snapshot all counters, sorted by name.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        let map = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        map.iter().map(|(k, v)| (*k, *v)).collect()
+    }
+
+    /// Clear every counter (tests).
+    pub fn reset(&self) {
+        self.counters.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new()
+    }
+}
+
+/// The process-wide registry every runtime layer reports into.
+pub fn global() -> &'static MetricsRegistry {
+    static G: OnceLock<MetricsRegistry> = OnceLock::new();
+    G.get_or_init(MetricsRegistry::new)
+}
+
+/// Bump a counter on the [`global`] registry.
+pub fn add(name: &'static str, delta: u64) {
+    global().add(name, delta);
+}
+
+/// Aggregated durations of one `(category, name)` span class.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseTotal {
+    /// Span category (`queue`, `compiler`, `cache`, `sched`, `exec`).
+    pub cat: &'static str,
+    /// Span name.
+    pub name: String,
+    /// How many spans of this class were recorded.
+    pub count: u64,
+    /// Sum of their durations, nanoseconds.
+    pub total_ns: u64,
+    /// Longest single span, nanoseconds.
+    pub max_ns: u64,
+}
+
+/// Aggregate complete (`X`) spans by `(category, name)`, sorted by
+/// category then name. Async/instant/flow events carry no duration and
+/// are skipped.
+pub fn phase_totals(events: &[TraceEvent]) -> Vec<PhaseTotal> {
+    let mut map: BTreeMap<(&'static str, &str), (u64, u64, u64)> = BTreeMap::new();
+    for ev in events {
+        if ev.phase != Phase::Complete {
+            continue;
+        }
+        let slot = map.entry((ev.cat, ev.name.as_ref())).or_insert((0, 0, 0));
+        slot.0 += 1;
+        slot.1 += ev.dur_ns;
+        slot.2 = slot.2.max(ev.dur_ns);
+    }
+    map.into_iter()
+        .map(|((cat, name), (count, total_ns, max_ns))| PhaseTotal {
+            cat,
+            name: name.to_string(),
+            count,
+            total_ns,
+            max_ns,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::HOST_PID;
+    use std::borrow::Cow;
+
+    #[test]
+    fn registry_accumulates_and_snapshots_sorted() {
+        let r = MetricsRegistry::new();
+        r.add("b.two", 2);
+        r.add("a.one", 1);
+        r.add("b.two", 3);
+        assert_eq!(r.snapshot(), vec![("a.one", 1), ("b.two", 5)]);
+        r.reset();
+        assert!(r.snapshot().is_empty());
+    }
+
+    #[test]
+    fn phase_totals_aggregate_complete_spans_only() {
+        let mk = |phase, name: &'static str, dur_ns| TraceEvent {
+            phase,
+            cat: crate::trace::CAT_COMPILER,
+            name: Cow::Borrowed(name),
+            ts_ns: 0,
+            dur_ns,
+            pid: HOST_PID,
+            tid: 1,
+            id: 0,
+            args: Vec::new(),
+        };
+        let events = vec![
+            mk(Phase::Complete, "opt.dce", 10),
+            mk(Phase::Complete, "opt.dce", 30),
+            mk(Phase::Complete, "frontend", 5),
+            mk(Phase::Instant, "opt.dce", 99),
+        ];
+        let totals = phase_totals(&events);
+        assert_eq!(totals.len(), 2);
+        let dce = totals.iter().find(|t| t.name == "opt.dce").unwrap();
+        assert_eq!((dce.count, dce.total_ns, dce.max_ns), (2, 40, 30));
+        let fe = totals.iter().find(|t| t.name == "frontend").unwrap();
+        assert_eq!((fe.count, fe.total_ns, fe.max_ns), (1, 5, 5));
+    }
+}

@@ -176,6 +176,51 @@ fn offset_split_launch_matches_single_device() {
     }
 }
 
+/// Integration: on a split launch, the event's profiling span must cover
+/// every member's execution — `start_ns` is the earliest member chunk
+/// start and `end_ns` the latest chunk end, so the span bounds the
+/// busiest member's accumulated busy time and the usual monotonic
+/// profile ordering still holds.
+#[test]
+fn split_launch_profiling_covers_member_spans() {
+    const SRC: &str = "__kernel void spin(__global float *x) {
+        float acc = 0.0f;
+        for (int i = 0; i < 256; i = i + 1) {
+            acc = acc + (float)i * 0.5f;
+        }
+        x[get_group_id(0)] = acc;
+    }";
+    let n = 48usize;
+    let device = group_of(
+        &[EngineKind::Serial, EngineKind::GangVector(4), EngineKind::Bytecode(8)],
+        Arc::new(Dynamic::fixed(4)),
+    );
+    let ctx = Arc::new(Context::new(device));
+    let q = CommandQueue::new(ctx.clone());
+    let program = Program::build(SRC).unwrap();
+    let buf = ctx.create_buffer(n * 4).unwrap();
+    let mut k = Kernel::new(&program, "spin").unwrap();
+    k.set_arg(0, KernelArg::Buf(buf)).unwrap();
+    let ev = q.enqueue_nd_range(&program, &k, [n, 1, 1], [1, 1, 1], &[]).unwrap();
+    ev.wait().unwrap();
+    let p = ev.profile();
+    assert!(p.queued_ns <= p.submitted_ns, "queued before submitted");
+    assert!(p.submitted_ns <= p.start_ns, "submitted before the first chunk starts");
+    assert!(p.start_ns < p.end_ns, "a split launch has a non-empty exec span");
+    let sched = ev.sched_stats().expect("group launch reports scheduler stats");
+    let busiest = sched.devices.iter().map(|d| d.busy_ns).max().unwrap_or(0);
+    assert!(busiest > 0, "members recorded busy time");
+    // Each member runs its chunks sequentially inside [start, end], so
+    // the event span must be at least the busiest member's busy time.
+    assert!(
+        ev.duration_ns() >= u128::from(busiest),
+        "event span {} ns must cover the busiest member's {} ns",
+        ev.duration_ns(),
+        busiest
+    );
+    q.finish().unwrap();
+}
+
 /// Integration: accumulated scheduler stats across a multi-pass suite
 /// app stay consistent — member rows keep their shape and the grand
 /// totals match the aggregate launch stats.

@@ -1,0 +1,118 @@
+//! Tracer verification: an enabled tracer must capture all five runtime
+//! layers (queue, compiler, cache, scheduler, engines) as schema-valid
+//! Chrome trace JSON; complete spans must nest per thread even under
+//! concurrent out-of-order queues; and a disabled tracer must record
+//! nothing at all.
+//!
+//! The tracer is process-global state, so every test here serialises on
+//! one lock, drains residue before its run, and disables collection
+//! before draining its own events.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use poclrs::cl::{Program, QueueProperties};
+use poclrs::devices::{basic::BasicDevice, Device, EngineKind};
+use poclrs::sched::{DeviceGroup, Dynamic};
+use poclrs::suite::{all_apps, runner, SizeClass};
+use poclrs::trace::{self, chrome, json};
+
+/// Tests that toggle the process-global tracer hold this for their whole
+/// body so they never observe each other's events.
+static TRACER: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    TRACER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A two-member heterogeneous group, so launches go through the split
+/// scheduler and the trace covers the `sched` layer too.
+fn group_device() -> Arc<dyn Device> {
+    let members: Vec<Arc<dyn Device>> = vec![
+        Arc::new(BasicDevice::new(EngineKind::Serial)),
+        Arc::new(BasicDevice::new(EngineKind::GangVector(4))),
+    ];
+    Arc::new(DeviceGroup::new("trace-group", members, Arc::new(Dynamic::fixed(4)))
+        .expect("valid group"))
+}
+
+/// Acceptance: one traced suite-app run on a device group produces
+/// Chrome trace JSON that parses, schema-validates, nests, and contains
+/// spans from every one of the five instrumented layers.
+#[test]
+fn suite_run_traces_all_five_layers() {
+    let _g = lock();
+    trace::set_enabled(true);
+    let _ = trace::take_events(); // drop residue from earlier tests
+    let app = all_apps(SizeClass::Small).into_iter().next().expect("suite has apps");
+    let r = runner::run_and_verify(&app, group_device()).expect("traced run verifies");
+    assert!(r.stats.workgroups > 0);
+    trace::set_enabled(false);
+    let events = trace::take_events();
+    assert!(!events.is_empty(), "an enabled tracer records events");
+    let text = chrome::export_string(&events);
+    let doc = json::parse(&text).expect("exporter emits valid JSON");
+    let sum =
+        json::validate_chrome_trace(&doc).expect("exporter emits schema-valid Chrome JSON");
+    json::check_nesting(&doc).expect("complete spans nest per thread");
+    for cat in ["queue", "compiler", "cache", "sched", "exec"] {
+        assert!(
+            sum.cats.contains(cat),
+            "trace covers the `{cat}` layer (categories seen: {:?})",
+            sum.cats
+        );
+    }
+    assert!(sum.complete > 0, "complete spans present");
+    assert!(sum.async_spans > 0, "async queue/sched spans present");
+}
+
+/// Property: spans stay properly nested per thread even when several
+/// out-of-order queues on separate host threads trace concurrently —
+/// per-thread buffering may interleave timestamps across threads, but
+/// never produce overlapping (non-nested) spans within one.
+#[test]
+fn concurrent_out_of_order_queues_keep_spans_nested() {
+    let _g = lock();
+    trace::set_enabled(true);
+    let _ = trace::take_events();
+    let apps: Vec<_> = all_apps(SizeClass::Small).into_iter().take(3).collect();
+    assert!(apps.len() >= 2, "need at least two apps for a concurrent run");
+    std::thread::scope(|s| {
+        for app in &apps {
+            s.spawn(move || {
+                let program = Program::build(app.source).expect("app compiles");
+                let device: Arc<dyn Device> =
+                    Arc::new(BasicDevice::new(EngineKind::GangVector(4)));
+                let r = runner::run_with_program(
+                    app,
+                    device,
+                    QueueProperties::OutOfOrder,
+                    program,
+                )
+                .expect("out-of-order run completes");
+                runner::verify(app, &r.buffers).expect("out-of-order run verifies");
+            });
+        }
+    });
+    trace::set_enabled(false);
+    let events = trace::take_events();
+    let text = chrome::export_string(&events);
+    let doc = json::parse(&text).expect("valid JSON");
+    let sum = json::validate_chrome_trace(&doc).expect("schema-valid under concurrency");
+    json::check_nesting(&doc).expect("per-thread spans nest under concurrent queues");
+    assert!(sum.threads.len() >= 2, "events came from multiple threads");
+}
+
+/// Zero-cost contract: with the tracer disabled, a full run records no
+/// events whatsoever — instrumentation points must bail on the single
+/// atomic check before touching any buffer.
+#[test]
+fn disabled_tracer_records_nothing() {
+    let _g = lock();
+    trace::set_enabled(false);
+    let _ = trace::take_events(); // drop residue from earlier tests
+    let app = all_apps(SizeClass::Small).into_iter().next().expect("suite has apps");
+    let device: Arc<dyn Device> = Arc::new(BasicDevice::new(EngineKind::Serial));
+    let r = runner::run_and_verify(&app, device).expect("untraced run verifies");
+    assert!(r.stats.workgroups > 0);
+    assert!(trace::take_events().is_empty(), "a disabled tracer records no events");
+}
